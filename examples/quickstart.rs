@@ -1,0 +1,88 @@
+//! Quickstart: load the AOT-compiled hierarchical-attention artifact,
+//! run it through PJRT, and cross-check the numbers against the pure-rust
+//! mirror implementation — the smallest end-to-end proof that all three
+//! layers (Pallas kernel → JAX lowering → rust runtime) compose.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::{Context, Result};
+use htransformer::attention::{Attention, Full, H1d};
+use htransformer::runtime::{default_artifacts_dir, Engine, HostTensor, Manifest};
+use htransformer::tensor::Mat;
+use htransformer::util::Rng;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(default_artifacts_dir())
+        .context("run `make artifacts` first")?;
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // pick the L=256 h1d artifact and its quadratic sibling
+    let entry = &manifest.attention["attn_h1d_L256"];
+    let full_entry = &manifest.attention["attn_full_L256"];
+    let (b, h, l, d, nr) = (entry.batch, entry.heads, entry.seq_len, entry.d_head, entry.nr);
+    println!("artifact attn_h1d_L256: [B={b}, H={h}, L={l}, d={d}], Nr={nr}");
+
+    let exe = engine.load(&entry.name, &entry.sig)?;
+    let exe_full = engine.load(&full_entry.name, &full_entry.sig)?;
+    println!(
+        "compiled in {:.0}ms / {:.0}ms",
+        exe.compile_secs * 1e3,
+        exe_full.compile_secs * 1e3
+    );
+
+    // random inputs
+    let mut rng = Rng::new(2024);
+    let n = b * h * l * d;
+    let mk = |rng: &mut Rng| {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        HostTensor::f32(vec![b, h, l, d], v)
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+
+    // run the compiled XLA programs
+    let t0 = std::time::Instant::now();
+    let z_h1d = &exe.run(&[q.clone(), k.clone(), v.clone()])?[0];
+    let t_h1d = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let z_full = &exe_full.run(&[q.clone(), k.clone(), v.clone()])?[0];
+    let t_full = t0.elapsed();
+
+    // mirror in pure rust, head by head
+    let qd = q.as_f32()?;
+    let kd = k.as_f32()?;
+    let vd = v.as_f32()?;
+    let zd = z_h1d.as_f32()?;
+    let zf = z_full.as_f32()?;
+    let rust_h1d = H1d::new(nr);
+    let rust_full = Full;
+    let mut max_diff = 0f32;
+    let mut cos_vs_full = 0f64;
+    for head in 0..(b * h) {
+        let off = head * l * d;
+        let qm = Mat::from_vec(l, d, qd[off..off + l * d].to_vec());
+        let km = Mat::from_vec(l, d, kd[off..off + l * d].to_vec());
+        let vm = Mat::from_vec(l, d, vd[off..off + l * d].to_vec());
+        let z_rust = rust_h1d.forward(&qm, &km, &vm, false);
+        let z_xla = Mat::from_vec(l, d, zd[off..off + l * d].to_vec());
+        max_diff = max_diff.max(z_rust.max_abs_diff(&z_xla));
+        // approximation quality vs exact attention (paper's premise)
+        let z_exact = rust_full.forward(&qm, &km, &vm, false);
+        cos_vs_full += htransformer::attention::mean_row_cosine(&z_xla, &z_exact);
+        // and the XLA full-attention output should match rust full exactly
+        let z_xla_full = Mat::from_vec(l, d, zf[off..off + l * d].to_vec());
+        assert!(
+            z_exact.max_abs_diff(&z_xla_full) < 1e-3,
+            "full-attention mismatch"
+        );
+    }
+    cos_vs_full /= (b * h) as f64;
+
+    println!("xla(h1d)  vs rust(h1d): max |diff| = {max_diff:.2e}  (same algorithm, two stacks)");
+    println!("xla(h1d)  vs exact attention: mean row cosine = {cos_vs_full:.4}");
+    println!("wallclock: h1d {t_h1d:?}  vs full {t_full:?}  at L={l}");
+    assert!(max_diff < 1e-3, "cross-language mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Generic HLO-text runner/bencher — a debugging & perf utility.
+//!
+//!   run_hlo <file.hlo.txt> <in1.f32:1x4x256x32> [...]
+//!       [--bench N]    time N executions (prints min/mean)
+//!       [--dump]       write outputs to /tmp/hlo_out_<i>.f32
+//!
+//! Inputs are raw little-endian f32 files with an explicit shape suffix.
+
+use std::io::Write;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut bench_iters = 0usize;
+    let mut dump = false;
+    if let Some(i) = args.iter().position(|a| a == "--bench") {
+        bench_iters = args[i + 1].parse()?;
+        args.drain(i..=i + 1);
+    }
+    if let Some(i) = args.iter().position(|a| a == "--dump") {
+        dump = true;
+        args.remove(i);
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let t0 = Instant::now();
+    let proto = xla::HloModuleProto::from_text_file(&args[0])?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    eprintln!("compiled in {:?}", t0.elapsed());
+
+    let mut lits = Vec::new();
+    for spec in &args[1..] {
+        let (path, shape) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("input spec must be file:shape"))?;
+        let dims: Vec<i64> = shape.split('x').map(|s| s.parse().unwrap()).collect();
+        let bytes = std::fs::read(path)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        lits.push(xla::Literal::vec1(&data).reshape(&dims)?);
+    }
+
+    if bench_iters > 0 {
+        // warmup
+        for _ in 0..3 {
+            let _ = exe.execute::<xla::Literal>(&lits)?;
+        }
+        let mut min = f64::INFINITY;
+        let mut total = 0.0;
+        for _ in 0..bench_iters {
+            let t = Instant::now();
+            let r = exe.execute::<xla::Literal>(&lits)?;
+            let dt = t.elapsed().as_secs_f64();
+            std::hint::black_box(&r);
+            min = min.min(dt);
+            total += dt;
+        }
+        println!(
+            "bench: min {:.3}ms mean {:.3}ms over {} iters",
+            min * 1e3,
+            total / bench_iters as f64 * 1e3,
+            bench_iters
+        );
+    }
+
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let mut tup = result;
+    let parts = tup.decompose_tuple()?;
+    for (i, p) in parts.iter().enumerate() {
+        let v = p.to_vec::<f32>()?;
+        if dump {
+            let mut f = std::fs::File::create(format!("/tmp/hlo_out_{i}.f32"))?;
+            for x in &v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        println!("out {i}: {} elems", v.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,366 @@
+"""AOT artifact emitter: lower every model/function to HLO *text*.
+
+This is the single build-time bridge between python (L1+L2) and the rust
+coordinator (L3).  Each jitted function is lowered to stablehlo, converted
+to an XlaComputation and dumped as HLO text — NOT ``.serialize()``: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` crate links)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under ``artifacts/``):
+  * ``<model>.<fn>.hlo.txt``  — init / train / eval / fwd programs
+  * ``attn_<variant>_L<len>.hlo.txt`` — attention-only microbench programs
+  * ``manifest.json``         — every artifact's input/output signature,
+    model configs and parameter layouts (parsed by rust/src/runtime).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import hattention, model as M
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+# Scaled-down counterparts of the paper's experiments (see DESIGN.md §4 for
+# the substitution table).  Every LRA task gets a quadratic baseline and an
+# h1d variant with identical parameter counts; the LM gets an Nr ablation.
+
+LRA_TASKS: Dict[str, Dict[str, Any]] = {
+    # task -> generator-facing metadata + model dims
+    "listops": dict(vocab=24, seq_len=512, classes=10, d=64, heads=2, layers=2, ff=256),
+    "text": dict(vocab=256, seq_len=1024, classes=2, d=64, heads=2, layers=2, ff=256),
+    "retrieval": dict(vocab=256, seq_len=512, classes=2, d=64, heads=2, layers=2, ff=256, dual=True),
+    "image": dict(vocab=256, seq_len=1024, classes=10, d=64, heads=2, layers=2, ff=256),
+    "pathfinder": dict(vocab=256, seq_len=1024, classes=2, d=64, heads=2, layers=2, ff=256),
+}
+
+LRA_BATCH = 16
+LM_BATCH = 8
+
+LM_VARIANTS: Dict[str, Dict[str, Any]] = {
+    # Table 2 pair: identical dims, attention differs.
+    "lm_tiny_h1d": dict(attention="h1d", nr=16, d=128, heads=4, layers=2, ff=512,
+                        vocab=4096, seq_len=256),
+    "lm_tiny_full": dict(attention="full", nr=16, d=128, heads=4, layers=2, ff=512,
+                         vocab=4096, seq_len=256),
+    # Nr ablation (paper: "We tried different Nr ... These represent
+    # different inductive bias").
+    "lm_tiny_nr4": dict(attention="h1d", nr=4, d=128, heads=4, layers=2, ff=512,
+                        vocab=4096, seq_len=256),
+    "lm_tiny_nr8": dict(attention="h1d", nr=8, d=128, heads=4, layers=2, ff=512,
+                        vocab=4096, seq_len=256),
+    "lm_tiny_nr32": dict(attention="h1d", nr=32, d=128, heads=4, layers=2, ff=512,
+                         vocab=4096, seq_len=256),
+    # Wider/deeper pair, the "144M vs 53M" axis of Table 2 scaled down.
+    "lm_base_h1d": dict(attention="h1d", nr=16, d=256, heads=4, layers=4, ff=1024,
+                        vocab=8192, seq_len=512),
+    "lm_base_full": dict(attention="full", nr=16, d=256, heads=4, layers=4, ff=1024,
+                         vocab=8192, seq_len=512),
+}
+
+# Attention-only microbench artifacts (scaling figure, §7 complexity):
+ATTN_BENCH_LENS = [128, 256, 512, 1024, 2048, 4096]
+ATTN_BENCH_SHAPE = dict(batch=1, heads=4, d_head=32, nr=16)
+
+
+def _hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print with large constants included.  The default printer
+    # elides big literals as "{...}" and the XLA 0.5.1 text parser on the
+    # rust side silently reads those as ZEROS — corrupting any program
+    # whose lowering constant-folded a mask/iota into a literal (we lost a
+    # day's worth of debugging to a 0.56 max-abs output error from this).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1 text parser rejects newer metadata attributes
+    # (source_end_line etc.), so strip metadata entirely
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(dt)]
+
+
+def _sig(avals: Sequence[Any]) -> List[Dict[str, Any]]:
+    return [
+        {"dtype": _dtype_str(a.dtype), "shape": [int(s) for s in a.shape]}
+        for a in avals
+    ]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only: str | None = None):
+        self.out_dir = out_dir
+        self.only = only
+        self.manifest: Dict[str, Any] = {"version": 1, "models": {}, "attention": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name: str) -> bool:
+        return self.only is None or name.startswith(self.only)
+
+    def emit(self, fname: str, fn, example_args) -> Dict[str, Any]:
+        """Lower fn at the example arg shapes and write HLO text."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = _hlo_text(lowered)
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(
+            jax.eval_shape(fn, *example_args)
+        )
+        flat_in = jax.tree_util.tree_leaves(example_args)
+        print(f"  wrote {fname} ({len(text)} chars, {len(flat_in)} in / {len(out_avals)} out)")
+        return {
+            "file": fname,
+            "inputs": _sig(flat_in),
+            "outputs": _sig(out_avals),
+        }
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: M.ModelConfig):
+    return [_spec(s) for s in M.param_spec(cfg).values()]
+
+
+def emit_model(em: Emitter, name: str, cfg: M.ModelConfig, task: str, batch: int):
+    if not em.want(name):
+        return
+    print(f"model {name} (params={M.count_params(cfg):,})")
+    pspecs = _param_specs(cfg)
+    n_p = len(pspecs)
+    entry: Dict[str, Any] = {
+        "task": task,
+        "batch": batch,
+        "param_count": M.count_params(cfg),
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_len": cfg.max_len,
+            "n_classes": cfg.n_classes,
+            "attention": cfg.attention,
+            "block_size": cfg.block_size,
+            "causal": cfg.causal,
+            "dual_encoder": cfg.dual_encoder,
+        },
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in M.param_spec(cfg).items()
+        ],
+        "artifacts": {},
+    }
+    arts = entry["artifacts"]
+
+    # init: seed -> params
+    def init_fn(seed):
+        return tuple(M.flatten_params(cfg, M.init_params(cfg, seed)))
+
+    arts["init"] = em.emit(f"{name}.init.hlo.txt", init_fn, (_spec((), jnp.int32),))
+
+    seq = cfg.max_len
+    if cfg.n_classes == 0:
+        tokens = _spec((batch, seq), jnp.int32)
+        train = M.make_lm_train_step(cfg)
+
+        def train_fn(*args):
+            ps = list(args[:n_p])
+            ms = list(args[n_p : 2 * n_p])
+            vs = list(args[2 * n_p : 3 * n_p])
+            step, lr, toks = args[3 * n_p : 3 * n_p + 3]
+            np_, nm, nv, loss = train(ps, ms, vs, step, lr, toks)
+            return tuple(np_) + tuple(nm) + tuple(nv) + (loss,)
+
+        train_args = tuple(pspecs * 3) + (_spec((), jnp.int32), _spec((), jnp.float32), tokens)
+        arts["train"] = em.emit(f"{name}.train.hlo.txt", train_fn, train_args)
+
+        def eval_fn(*args):
+            params = M.unflatten_params(cfg, list(args[:n_p]))
+            return M.lm_eval_stats(cfg, params, args[n_p])
+
+        arts["eval"] = em.emit(f"{name}.eval.hlo.txt", eval_fn, tuple(pspecs) + (tokens,))
+
+        def fwd_fn(*args):
+            params = M.unflatten_params(cfg, list(args[:n_p]))
+            return (M.lm_logits(cfg, params, args[n_p]),)
+
+        arts["fwd"] = em.emit(f"{name}.fwd.hlo.txt", fwd_fn, tuple(pspecs) + (tokens,))
+    else:
+        tokens = _spec((batch, seq), jnp.int32)
+        fmask = _spec((batch, seq), jnp.float32)
+        labels = _spec((batch,), jnp.int32)
+        train = M.make_cls_train_step(cfg)
+        if cfg.dual_encoder:
+            extra = (tokens, fmask, labels, tokens, fmask)
+        else:
+            extra = (tokens, fmask, labels)
+
+        def train_fn(*args):
+            ps = list(args[:n_p])
+            ms = list(args[n_p : 2 * n_p])
+            vs = list(args[2 * n_p : 3 * n_p])
+            rest = args[3 * n_p :]
+            np_, nm, nv, loss = train(ps, ms, vs, *rest)
+            return tuple(np_) + tuple(nm) + tuple(nv) + (loss,)
+
+        train_args = tuple(pspecs * 3) + (_spec((), jnp.int32), _spec((), jnp.float32)) + extra
+        arts["train"] = em.emit(f"{name}.train.hlo.txt", train_fn, train_args)
+
+        def eval_fn(*args):
+            params = M.unflatten_params(cfg, list(args[:n_p]))
+            rest = args[n_p:]
+            if cfg.dual_encoder:
+                toks, msk, lab, toks2, msk2 = rest
+                return M.cls_eval_stats(cfg, params, toks, lab, msk, toks2, msk2)
+            toks, msk, lab = rest
+            return M.cls_eval_stats(cfg, params, toks, lab, msk)
+
+        arts["eval"] = em.emit(f"{name}.eval.hlo.txt", eval_fn, tuple(pspecs) + extra)
+
+        def fwd_fn(*args):
+            params = M.unflatten_params(cfg, list(args[:n_p]))
+            rest = args[n_p:]
+            if cfg.dual_encoder:
+                toks, msk, toks2, msk2 = rest
+                return (M.classifier_logits(cfg, params, toks, msk, toks2, msk2),)
+            toks, msk = rest
+            return (M.classifier_logits(cfg, params, toks, msk),)
+
+        fwd_extra = (tokens, fmask, tokens, fmask) if cfg.dual_encoder else (tokens, fmask)
+        arts["fwd"] = em.emit(f"{name}.fwd.hlo.txt", fwd_fn, tuple(pspecs) + fwd_extra)
+
+    em.manifest["models"][name] = entry
+
+
+def emit_attention_benches(em: Emitter):
+    """Attention-only programs for the §7 scaling experiment and the
+    cross-language correctness check in examples/quickstart."""
+    b = ATTN_BENCH_SHAPE["batch"]
+    h = ATTN_BENCH_SHAPE["heads"]
+    d = ATTN_BENCH_SHAPE["d_head"]
+    nr = ATTN_BENCH_SHAPE["nr"]
+    for length in ATTN_BENCH_LENS:
+        spec = _spec((b, h, length, d))
+        for variant in ("h1d", "full"):
+            name = f"attn_{variant}_L{length}"
+            if not em.want(name):
+                continue
+
+            if variant == "h1d":
+
+                def fn(q, k, v):
+                    return (hattention.h1d_attention(q, k, v, block_size=nr),)
+
+            else:
+
+                def fn(q, k, v):
+                    return (hattention.full_attention(q, k, v),)
+
+            info = em.emit(f"{name}.hlo.txt", fn, (spec, spec, spec))
+            info.update(batch=b, heads=h, d_head=d, nr=nr, seq_len=length, variant=variant)
+            em.manifest["attention"][name] = info
+    # One pallas-routed artifact proving the L1 kernel composes end-to-end.
+    name = "attn_h1d_pallas_L512"
+    if em.want(name):
+        spec = _spec((b, h, 512, d))
+
+        def fn(q, k, v):
+            return (hattention.h1d_attention(q, k, v, block_size=nr, use_pallas=True),)
+
+        info = em.emit(f"{name}.hlo.txt", fn, (spec, spec, spec))
+        info.update(batch=b, heads=h, d_head=d, nr=nr, seq_len=512, variant="h1d_pallas")
+        em.manifest["attention"][name] = info
+
+
+def build_model_zoo() -> Dict[str, M.ModelConfig]:
+    zoo: Dict[str, M.ModelConfig] = {}
+    for task, t in LRA_TASKS.items():
+        for attn in ("h1d", "full"):
+            name = f"lra_{task}_{attn}"
+            zoo[name] = M.ModelConfig(
+                name=name,
+                vocab_size=t["vocab"],
+                d_model=t["d"],
+                n_heads=t["heads"],
+                n_layers=t["layers"],
+                d_ff=t["ff"],
+                max_len=t["seq_len"],
+                n_classes=t["classes"],
+                attention=attn,
+                block_size=16,
+                causal=False,
+                dual_encoder=bool(t.get("dual")),
+            )
+    for name, t in LM_VARIANTS.items():
+        zoo[name] = M.ModelConfig(
+            name=name,
+            vocab_size=t["vocab"],
+            d_model=t["d"],
+            n_heads=t["heads"],
+            n_layers=t["layers"],
+            d_ff=t["ff"],
+            max_len=t["seq_len"],
+            n_classes=0,
+            attention=t["attention"],
+            block_size=t["nr"],
+            causal=True,
+        )
+    return zoo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="emit only artifacts with this name prefix")
+    ap.add_argument("--list", action="store_true", help="list model zoo and exit")
+    args = ap.parse_args()
+
+    zoo = build_model_zoo()
+    if args.list:
+        for name, cfg in zoo.items():
+            print(f"{name}: {M.count_params(cfg):,} params, attn={cfg.attention}")
+        return
+
+    em = Emitter(args.out, only=args.only)
+    for name, cfg in zoo.items():
+        task = "lm" if cfg.n_classes == 0 else name.split("_")[1]
+        batch = LM_BATCH if cfg.n_classes == 0 else LRA_BATCH
+        emit_model(em, name, cfg, task, batch)
+    emit_attention_benches(em)
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    # Merge with any existing manifest so --only runs don't clobber others.
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        old.setdefault("models", {}).update(em.manifest["models"])
+        old.setdefault("attention", {}).update(em.manifest["attention"])
+        em.manifest = old
+    with open(manifest_path, "w") as f:
+        json.dump(em.manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

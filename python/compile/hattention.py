@@ -1,0 +1,422 @@
+"""Layer-2: H-Transformer-1D hierarchical attention in JAX.
+
+Implements the algorithm of Zhu & Soricut, "H-Transformer-1D: Fast
+One-Dimensional Hierarchical Attention for Sequences" (ACL 2021):
+
+* level-0: exact block-tridiagonal (encoder) / block-lower-bidiagonal
+  (causal) attention with ``Nr x Nr`` blocks (paper Eq. 19/23);
+* level-l (l >= 1): Q/K coarsened by pair-averaging, V by pair-summing
+  (Eq. 25-27); only super- and sub-diagonal coarse blocks are scored
+  (Eq. 21-22); the bottom-left quadrant of super-diagonal blocks and the
+  top-right quadrant of sub-diagonal blocks are masked out because those
+  interactions are already covered exactly by level l-1 (footnote 4);
+* recombination: coarse partial numerators/denominators are interpolated
+  back to fine resolution by row-duplication (Eq. 37-40, 69, 73) and summed.
+
+The paper computes ``Z = D^{-1} A V`` with raw ``exp`` (Eq. 2-5).  We
+compute exactly the same quantity but carry a per-row running max per
+level and rescale when combining (log-sum-exp style), which is
+float-safe and bit-equivalent in exact arithmetic.
+
+Complexity: O(L * Nr * d) time and O(L * Nr) attention memory — linear in
+the sequence length L (paper section 7).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30  # additive mask value; exp(NEG - m) == 0 in f32 for any finite m
+
+
+class LevelResult(NamedTuple):
+    """Partial attention state produced by one hierarchy level.
+
+    All tensors are at that level's (coarsened) resolution:
+      y: [B, H, Lc, d]   unnormalised weighted value sums, scaled by exp(-m)
+      den: [B, H, Lc]    unnormalised weight sums (the D of Eq. 5), same scale
+      m: [B, H, Lc]      the per-row max logit used for the scaling
+    """
+
+    y: jnp.ndarray
+    den: jnp.ndarray
+    m: jnp.ndarray
+
+
+def num_levels(seq_len: int, block_size: int) -> int:
+    """Number of hierarchy levels M (paper Eq. 32): level 0 plus one coarse
+    level per halving of the block count until fewer than 2 blocks remain."""
+    if seq_len % block_size != 0:
+        raise ValueError(f"seq_len {seq_len} not a multiple of Nr {block_size}")
+    nb = seq_len // block_size
+    if nb & (nb - 1) != 0:
+        raise ValueError(f"block count {nb} must be a power of two")
+    return max(1, int(math.log2(nb)) + 1) if nb > 1 else 1
+
+
+def padded_length(seq_len: int, block_size: int) -> int:
+    """Smallest L' >= seq_len with L' = Nr * 2^m (so the binary tree closes)."""
+    nb = max(1, -(-seq_len // block_size))
+    nb_pow2 = 1 << (nb - 1).bit_length()
+    return block_size * nb_pow2
+
+
+def _blockify(x: jnp.ndarray, nr: int) -> jnp.ndarray:
+    """[B, H, L, d] -> [B, H, L/nr, nr, d]."""
+    b, h, l, d = x.shape
+    return x.reshape(b, h, l // nr, nr, d)
+
+
+def _shift_blocks(xb: jnp.ndarray, direction: int) -> jnp.ndarray:
+    """Shift along the block axis so slot i holds block i+direction.
+
+    direction=-1: slot i holds block i-1 (left neighbour), block 0 zero.
+    direction=+1: slot i holds block i+1 (right neighbour), last block zero.
+    """
+    if direction == 0:
+        return xb
+    zeros = jnp.zeros_like(xb[:, :, :1])
+    if direction < 0:
+        return jnp.concatenate([zeros, xb[:, :, :-1]], axis=2)
+    return jnp.concatenate([xb[:, :, 1:], zeros], axis=2)
+
+
+def _block_validity(nb: int, direction: int) -> jnp.ndarray:
+    """[nb] 1.0 where the neighbour block in `direction` exists."""
+    idx = jnp.arange(nb)
+    if direction < 0:
+        return (idx >= 1).astype(jnp.float32)
+    if direction > 0:
+        return (idx <= nb - 2).astype(jnp.float32)
+    return jnp.ones((nb,), jnp.float32)
+
+
+def _quadrant_mask(nr: int, direction: int) -> jnp.ndarray:
+    """[nr, nr] additive mask removing the overlap quadrant (footnote 4).
+
+    Super-diagonal (direction=+1): bottom-left quadrant already covered by
+    the previous (finer) level.  Sub-diagonal (direction=-1): top-right.
+    """
+    r = jnp.arange(nr)[:, None]
+    c = jnp.arange(nr)[None, :]
+    half = nr // 2
+    if direction > 0:
+        covered = (r >= half) & (c < half)
+    elif direction < 0:
+        covered = (r < half) & (c >= half)
+    else:
+        return jnp.zeros((nr, nr), jnp.float32)
+    return jnp.where(covered, NEG, 0.0)
+
+
+def _causal_mask(nr: int) -> jnp.ndarray:
+    """[nr, nr] additive mask: row attends to cols <= row (within a block)."""
+    r = jnp.arange(nr)[:, None]
+    c = jnp.arange(nr)[None, :]
+    return jnp.where(c <= r, 0.0, NEG)
+
+
+def _level_attention_fused(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    counts: jnp.ndarray,
+    nr: int,
+    level: int,
+    causal: bool,
+    dense: bool = False,
+) -> LevelResult:
+    """Fused variant of the per-level banded attention (§Perf, L2 pass).
+
+    Instead of one einsum/exp/matmul triple per direction (2-3 of each),
+    the neighbour key/value blocks are concatenated along the key axis so
+    each level costs exactly one score einsum [nr, D*nr], one exp and two
+    accumulation einsums — fewer, larger XLA ops (~25% faster end-to-end
+    on the CPU PJRT runtime, see EXPERIMENTS.md §Perf).
+
+    Block-edge validity needs no explicit mask here: `_shift_blocks`
+    fills out-of-range neighbours with zero counts, and the count==0 key
+    mask removes them.
+    """
+    b, h, lc, d = q.shape
+    nb = lc // nr
+    scale = 1.0 / math.sqrt(d)
+
+    qb = _blockify(q, nr)
+    kb = _blockify(k, nr)
+    vb = _blockify(v, nr)
+    cb = counts.reshape(b, 1, nb, nr, 1)
+
+    if causal:
+        directions = (-1, 0) if level == 0 else (-1,)
+    else:
+        directions = (-1, 0, 1) if level == 0 else (-1, 1)
+
+    kn = jnp.concatenate([_shift_blocks(kb, dd) for dd in directions], axis=3)
+    vn = jnp.concatenate([_shift_blocks(vb, dd) for dd in directions], axis=3)
+
+    s = jnp.einsum("bhnid,bhnjd->bhnij", qb, kn) * scale  # [B,H,nb,nr,D*nr]
+
+    # static per-direction masks, concatenated along the key axis
+    adds = []
+    for dd in directions:
+        if level == 0:
+            if causal and dd == 0:
+                adds.append(_causal_mask(nr))
+            else:
+                adds.append(jnp.zeros((nr, nr), jnp.float32))
+        else:
+            adds.append(_quadrant_mask(nr, dd))
+    add = jnp.concatenate(adds, axis=1)  # [nr, D*nr]
+    s = s + add[None, None, None]
+
+    if dense:
+        # no padding anywhere: key validity reduces to the static
+        # neighbour-existence pattern per block, and every valid coarse
+        # key covers exactly 2^level fine tokens (§Perf L2 pass: skips
+        # the runtime count mask + the count-weighted denominator einsum)
+        bv = jnp.concatenate(
+            [jnp.broadcast_to(_block_validity(nb, dd)[:, None], (nb, nr)) for dd in directions],
+            axis=1,
+        )  # [nb, D*nr]
+        s = s + jnp.where(bv > 0, 0.0, NEG)[None, None, :, None, :]
+        m = jnp.maximum(s.max(axis=-1), NEG / 2)
+        w = jnp.exp(s - m[..., None])
+        y = jnp.einsum("bhnij,bhnjd->bhnid", w, vn)
+        den = w.sum(axis=-1) * float(1 << level)
+    else:
+        cn = jnp.concatenate(
+            [_shift_blocks(cb, dd) for dd in directions], axis=3
+        )[:, :, :, :, 0]  # [B,1,nb,D*nr]
+        kv = jnp.where(cn[:, :, :, None, :] > 0, 0.0, NEG)
+        s = s + kv
+        m = jnp.maximum(s.max(axis=-1), NEG / 2)
+        w = jnp.exp(s - m[..., None])
+        y = jnp.einsum("bhnij,bhnjd->bhnid", w, vn)
+        den = jnp.einsum("bhnij,bcnj->bhni", w, cn)
+
+    return LevelResult(
+        y.reshape(b, h, lc, d), den.reshape(b, h, lc), m.reshape(b, h, lc)
+    )
+
+
+def _level_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    counts: jnp.ndarray,
+    nr: int,
+    level: int,
+    causal: bool,
+    use_pallas: bool = False,
+    fused: bool = True,
+    dense: bool = False,
+) -> LevelResult:
+    """Banded block attention at one hierarchy level (the L1 hot spot).
+
+    q, k: [B, H, Lc, d] (k already masked-averaged), v: [B, H, Lc, d]
+    (pair-summed), counts: [B, Lc] number of valid fine tokens under each
+    coarse position (0 marks padding).  Level 0 passes counts in {0, 1}.
+
+    Returns LevelResult at this level's resolution.
+    """
+    if use_pallas:
+        from .kernels.hattn_pallas import banded_block_attention
+
+        return LevelResult(*banded_block_attention(q, k, v, counts, nr, level, causal))
+
+    if fused:
+        return _level_attention_fused(q, k, v, counts, nr, level, causal, dense=dense)
+
+    b, h, lc, d = q.shape
+    nb = lc // nr
+    scale = 1.0 / math.sqrt(d)
+
+    qb = _blockify(q, nr)
+    kb = _blockify(k, nr)
+    vb = _blockify(v, nr)
+    # counts as a [B, 1, nb, nr, 1] "value" so it can be block-shifted like V
+    cb = counts.reshape(b, 1, nb, nr, 1)
+
+    if causal:
+        directions = (-1, 0) if level == 0 else (-1,)
+    else:
+        directions = (-1, 0, 1) if level == 0 else (-1, 1)
+
+    score_list = []
+    vals_list = []
+    cnts_list = []
+    for direction in directions:
+        kn = _shift_blocks(kb, direction)
+        vn = _shift_blocks(vb, direction)
+        cn = _shift_blocks(cb, direction)[:, :, :, :, 0]  # [B,1,nb,nr(k)]
+        s = jnp.einsum("bhnid,bhnjd->bhnij", qb, kn) * scale
+        add = jnp.zeros((nr, nr), jnp.float32)
+        if level == 0:
+            if causal and direction == 0:
+                add = add + _causal_mask(nr)
+        else:
+            add = add + _quadrant_mask(nr, direction)
+        # neighbour-block existence + key validity (count == 0 -> padding)
+        bv = _block_validity(nb, direction).reshape(1, 1, nb, 1, 1)
+        kv = jnp.where(cn[:, :, :, None, :] > 0, 0.0, NEG)
+        s = s + add[None, None, None] + jnp.where(bv > 0, 0.0, NEG) + kv
+        score_list.append(s)
+        vals_list.append(vn)
+        cnts_list.append(cn)
+
+    # Per-row max across all bands for the stable exp.
+    m = functools.reduce(
+        jnp.maximum, [s.max(axis=-1) for s in score_list]
+    )  # [B,H,nb,nr]
+    m = jnp.maximum(m, NEG / 2)  # fully-masked rows: keep exp args finite
+
+    y = jnp.zeros((b, h, nb, nr, d), jnp.float32)
+    den = jnp.zeros((b, h, nb, nr), jnp.float32)
+    for s, vn, cn in zip(score_list, vals_list, cnts_list):
+        w = jnp.exp(s - m[..., None])  # [B,H,nb,nr(q),nr(k)]
+        y = y + jnp.einsum("bhnij,bhnjd->bhnid", w, vn)
+        den = den + jnp.einsum("bhnij,bcnj->bhni", w, cn)
+
+    return LevelResult(
+        y.reshape(b, h, lc, d), den.reshape(b, h, lc), m.reshape(b, h, lc)
+    )
+
+
+def _coarsen(
+    q: jnp.ndarray, ksum: jnp.ndarray, vsum: jnp.ndarray, counts: jnp.ndarray
+):
+    """One binary-tree coarsening step (paper Eq. 25-27).
+
+    q is pair-averaged; ksum/vsum are pair-summed *masked* sums so that the
+    coarse K can be formed as a masked average; counts pair-sum.
+    """
+    b, h, lc, d = q.shape
+    q2 = q.reshape(b, h, lc // 2, 2, d).mean(axis=3)
+    k2 = ksum.reshape(b, h, lc // 2, 2, d).sum(axis=3)
+    v2 = vsum.reshape(b, h, lc // 2, 2, d).sum(axis=3)
+    c2 = counts.reshape(b, lc // 2, 2).sum(axis=2)
+    return q2, k2, v2, c2
+
+
+def _interpolate(x: jnp.ndarray, factor: int, axis: int) -> jnp.ndarray:
+    """Piecewise-constant interpolation P^(l) (Eq. 38-40): row duplication."""
+    return jnp.repeat(x, factor, axis=axis)
+
+
+def h1d_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_size: int = 16,
+    causal: bool = False,
+    mask: Optional[jnp.ndarray] = None,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Hierarchical 1D attention (the paper's Algorithm 1).
+
+    Args:
+      q, k, v: [B, H, L, d] float arrays.
+      block_size: Nr, the numerical rank / level-0 block size (paper's only
+        model hyper-parameter).  Must be even (quadrant masks) unless the
+        sequence fits in one or two blocks.
+      causal: decoder (lower-triangular) attention if True.
+      mask: optional [B, L] validity mask (1 = real token, 0 = padding).
+      use_pallas: route the per-level banded block attention through the
+        Pallas L1 kernel (interpret mode) instead of plain jnp einsums.
+
+    Returns:
+      [B, H, L, d] attention output Z = D^{-1} A V with the hierarchical
+      approximation of A.
+    """
+    b, h, l, d = q.shape
+    nr = block_size
+    lp = padded_length(l, nr)
+
+    # dense fast path: no user mask and no padding => key validity is a
+    # static pattern and counts are the constant 2^level (§Perf L2 pass)
+    dense = mask is None and lp == l
+    if mask is None:
+        mask = jnp.ones((b, l), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    if lp != l:
+        pad = lp - l
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    nb0 = lp // nr
+    levels = num_levels(lp, nr)
+    if levels > 1 and nr % 2 != 0:
+        raise ValueError("block_size must be even when coarse levels exist")
+
+    mk = mask[:, None, :, None]
+    ksum = k * mk  # masked K (numerator of the masked average)
+    vsum = v * mk
+    counts = mask  # [B, L]
+
+    results = []
+    qc, kc_sum, vc_sum, cc = q, ksum, vsum, counts
+    for level in range(levels):
+        if level > 0:
+            qc, kc_sum, vc_sum, cc = _coarsen(qc, kc_sum, vc_sum, counts=cc)
+        kc = kc_sum / jnp.maximum(cc[:, None, :, None], 1.0)
+        results.append(
+            _level_attention(
+                qc, kc, vc_sum, cc, nr, level, causal,
+                use_pallas=use_pallas, dense=dense,
+            )
+        )
+
+    # Interpolate coarse partials to fine resolution and combine with a
+    # shared per-fine-row rescale (exactly Eq. 69/73, but float-safe).
+    y_f = []
+    den_f = []
+    m_f = []
+    for level, res in enumerate(results):
+        f = 1 << level
+        y_f.append(_interpolate(res.y, f, axis=2))
+        den_f.append(_interpolate(res.den, f, axis=2))
+        m_f.append(_interpolate(res.m, f, axis=2))
+
+    m_tot = functools.reduce(jnp.maximum, m_f)  # [B,H,L,]
+    y = jnp.zeros_like(y_f[0])
+    den = jnp.zeros_like(den_f[0])
+    for yl, dl, ml in zip(y_f, den_f, m_f):
+        w = jnp.exp(ml - m_tot)
+        y = y + yl * w[..., None]
+        den = den + dl * w
+    z = y / jnp.maximum(den, 1e-30)[..., None]
+    return z[:, :, :l, :]
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Standard O(L^2) scaled dot-product attention (paper Eq. 1) — the
+    quadratic baseline used throughout the benchmarks."""
+    b, h, l, d = q.shape
+    s = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(d)
+    if mask is not None:
+        s = s + jnp.where(mask[:, None, None, :] > 0, 0.0, NEG)
+    if causal:
+        r = jnp.arange(l)
+        causal_ok = r[:, None] >= r[None, :]  # query i attends keys j <= i
+        s = s + jnp.where(causal_ok, 0.0, NEG)[None, None]
+    s = s - s.max(axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    den = w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhij,bhjd->bhid", w / jnp.maximum(den, 1e-30), v)

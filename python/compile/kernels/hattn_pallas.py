@@ -1,0 +1,186 @@
+"""Layer-1: Pallas banded block-attention kernel.
+
+This is the compute hot-spot of H-Transformer-1D: at every hierarchy
+level, each query block of ``Nr`` rows attends to (at most) three
+neighbouring key/value blocks — the block-tridiagonal band at level 0
+and the super/sub-diagonal band at coarse levels (paper Eq. 21-23).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+``(batch*heads, block)``; BlockSpec stages the ``Nr x d`` query tile and
+its 2-3 neighbouring ``Nr x d`` key/value tiles through VMEM; each
+``Nr x Nr`` score tile is one MXU matmul; the overlap-quadrant, causal
+and validity masks are iota-generated in-register, so no mask tensors
+ever touch HBM.  VMEM footprint per program is
+``(1 + 2*bands) * Nr * d * 4B + bands * Nr^2 * 4B`` — about 120 KiB for
+``Nr = d = 64``, far below the ~16 MiB VMEM budget, leaving room for
+double-buffering the sequential grid dimension.
+
+The kernel MUST run with ``interpret=True`` here: real TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+Correctness is pinned against the pure-numpy oracle in ``ref.py`` and
+the jnp path in ``hattention.py`` by the pytest suite.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _directions(level: int, causal: bool):
+    if causal:
+        return (-1, 0) if level == 0 else (-1,)
+    return (-1, 0, 1) if level == 0 else (-1, 1)
+
+
+def _band_kernel(*refs, nr: int, d: int, nb: int, level: int, causal: bool):
+    """Kernel body. refs = [q, k_b0..k_bn, v_b0.., c_b0.., y, den, m]."""
+    dirs = _directions(level, causal)
+    nd = len(dirs)
+    q_ref = refs[0]
+    k_refs = refs[1 : 1 + nd]
+    v_refs = refs[1 + nd : 1 + 2 * nd]
+    c_refs = refs[1 + 2 * nd : 1 + 3 * nd]
+    y_ref, den_ref, m_ref = refs[1 + 3 * nd :]
+
+    i = pl.program_id(1)
+    q = q_ref[0]  # [nr, d]
+    scale = 1.0 / math.sqrt(d)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (nr, nr), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (nr, nr), 1)
+    half = nr // 2
+
+    scores = []
+    for direction, k_ref, c_ref in zip(dirs, k_refs, c_refs):
+        k = k_ref[0]  # [nr, d]
+        c = c_ref[0]  # [nr]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        # static masks for this (level, direction)
+        if level == 0:
+            if causal and direction == 0:
+                s = jnp.where(cols <= rows, s, NEG)
+        else:
+            if direction > 0:  # super-diagonal: drop bottom-left quadrant
+                s = jnp.where((rows >= half) & (cols < half), NEG, s)
+            else:  # sub-diagonal: drop top-right quadrant
+                s = jnp.where((rows < half) & (cols >= half), NEG, s)
+        # neighbour-block existence (block index is clamped in the spec,
+        # so out-of-range neighbours alias a real block and must be cut)
+        if direction < 0:
+            s = jnp.where(i >= 1, s, NEG)
+        elif direction > 0:
+            s = jnp.where(i <= nb - 2, s, NEG)
+        # key validity: zero fine-token count under a coarse key = padding
+        s = jnp.where((c > 0)[None, :], s, NEG)
+        scores.append(s)
+
+    m = functools.reduce(jnp.maximum, [s.max(axis=1) for s in scores])
+    m = jnp.maximum(m, NEG / 2)
+
+    y = jnp.zeros((nr, d), jnp.float32)
+    den = jnp.zeros((nr,), jnp.float32)
+    for s, v_ref, c_ref in zip(scores, v_refs, c_refs):
+        w = jnp.exp(s - m[:, None])
+        y = y + jnp.dot(w, v_ref[0], preferred_element_type=jnp.float32)
+        den = den + jnp.dot(w, c_ref[0], preferred_element_type=jnp.float32)
+
+    y_ref[0] = y
+    den_ref[0] = den
+    m_ref[0] = m
+
+
+def banded_block_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    counts: jnp.ndarray,
+    nr: int,
+    level: int,
+    causal: bool,
+):
+    """One hierarchy level of banded block attention via Pallas.
+
+    Args:
+      q, k, v: [B, H, Lc, d] (k masked-averaged, v pair-summed upstream).
+      counts: [B, Lc] valid-token counts under each coarse position.
+      nr: block size, level: hierarchy level (0 = finest), causal: decoder.
+
+    Returns:
+      (y, den, m): [B,H,Lc,d], [B,H,Lc], [B,H,Lc] — the same LevelResult
+      triple the jnp path produces.
+    """
+    b, h, lc, d = q.shape
+    nb = lc // nr
+    bh = b * h
+
+    qf = q.reshape(bh, lc, d)
+    kf = k.reshape(bh, lc, d)
+    vf = v.reshape(bh, lc, d)
+    cf = jnp.broadcast_to(counts[:, None, :], (b, h, lc)).reshape(bh, lc)
+
+    dirs = _directions(level, causal)
+
+    def qi(s, i):
+        return (s, i, 0)
+
+    def k_spec(direction):
+        def idx(s, i):
+            j = jnp.clip(i + direction, 0, nb - 1)
+            return (s, j, 0)
+
+        return pl.BlockSpec((1, nr, d), idx)
+
+    def c_spec(direction):
+        def idx(s, i):
+            j = jnp.clip(i + direction, 0, nb - 1)
+            return (s, j)
+
+        return pl.BlockSpec((1, nr), idx)
+
+    in_specs = [pl.BlockSpec((1, nr, d), qi)]
+    args = [qf]
+    for direction in dirs:
+        in_specs.append(k_spec(direction))
+        args.append(kf)
+    for direction in dirs:
+        in_specs.append(k_spec(direction))
+        args.append(vf)
+    for direction in dirs:
+        in_specs.append(c_spec(direction))
+        args.append(cf)
+
+    out_specs = [
+        pl.BlockSpec((1, nr, d), qi),
+        pl.BlockSpec((1, nr), lambda s, i: (s, i)),
+        pl.BlockSpec((1, nr), lambda s, i: (s, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, lc, d), jnp.float32),
+        jax.ShapeDtypeStruct((bh, lc), jnp.float32),
+        jax.ShapeDtypeStruct((bh, lc), jnp.float32),
+    ]
+
+    kernel = functools.partial(
+        _band_kernel, nr=nr, d=d, nb=nb, level=level, causal=causal
+    )
+    y, den, m = pl.pallas_call(
+        kernel,
+        grid=(bh, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+
+    return (
+        y.reshape(b, h, lc, d),
+        den.reshape(b, h, lc),
+        m.reshape(b, h, lc),
+    )

@@ -1,0 +1,153 @@
+"""Pure-numpy float64 oracles for the hierarchical attention.
+
+Two independent reference implementations used by the test suite:
+
+* :func:`full_attention_ref` — the standard O(L^2) softmax attention
+  (paper Eq. 1), the ground truth that h1d *approximates*.
+* :func:`h1d_attention_ref` — the hierarchical attention computed the
+  *slow, explicit* way: the approximate attention matrix of paper
+  Eq. (55)-(57) is materialised at fine resolution (coarse blocks
+  expanded by the T^(l) expansion operators of Appendix A.3/A.4, i.e.
+  piecewise-constant kron with a ones block), then normalised.  This is
+  O(L^2) time/memory but shares no code with the fast blocked
+  implementation in hattention.py, so agreement between the two is a
+  strong correctness signal.
+
+Everything here is numpy/float64 — deliberately a different numerical
+stack from the jax/float32 production path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def _padded_length(seq_len: int, nr: int) -> int:
+    nb = max(1, -(-seq_len // nr))
+    nb_pow2 = 1 << (nb - 1).bit_length()
+    return nr * nb_pow2
+
+
+def _num_levels(lp: int, nr: int) -> int:
+    nb = lp // nr
+    return max(1, int(math.log2(nb)) + 1) if nb > 1 else 1
+
+
+def _allowed(lc: int, nr: int, level: int, causal: bool) -> np.ndarray:
+    """Boolean [lc, lc] matrix of entries this level is responsible for."""
+    a = np.arange(lc)
+    bi = (a // nr)[:, None]
+    bj = (a // nr)[None, :]
+    rloc = (a % nr)[:, None]
+    cloc = (a % nr)[None, :]
+    half = nr // 2
+    if level == 0:
+        if causal:
+            return (bj == bi - 1) | ((bj == bi) & (a[None, :] <= a[:, None]))
+        return np.abs(bi - bj) <= 1
+    # Coarse level: super/sub-diagonal blocks minus the quadrant already
+    # covered by the finer level (paper footnote 4).
+    sup = (bj == bi + 1) & ~((rloc >= half) & (cloc < half))
+    sub = (bj == bi - 1) & ~((rloc < half) & (cloc >= half))
+    return sub if causal else (sub | sup)
+
+
+def h1d_weight_matrix(
+    q: np.ndarray,
+    k: np.ndarray,
+    nr: int,
+    causal: bool = False,
+    mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Explicit fine-resolution unnormalised weight matrix W ~ A of Eq. 16.
+
+    q, k: [B, H, L, d].  Returns [B, H, Lp, Lp] with Lp the padded length.
+    Entry (i, j) holds exp(S~) of whichever level covers (i, j) —
+    expanded piecewise-constantly for coarse levels — and 0 for padding.
+    """
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    b, h, l, d = q.shape
+    lp = _padded_length(l, nr)
+    if mask is None:
+        mask = np.ones((b, l))
+    mask = np.asarray(mask, np.float64)
+    if lp != l:
+        pad = lp - l
+        q = np.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = np.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        mask = np.pad(mask, ((0, 0), (0, pad)))
+
+    levels = _num_levels(lp, nr)
+    scale = 1.0 / math.sqrt(d)
+
+    w = np.zeros((b, h, lp, lp))
+    qc = q
+    ksum = k * mask[:, None, :, None]
+    counts = mask.copy()
+    for level in range(levels):
+        if level > 0:
+            bb, hh, lc, dd = qc.shape
+            qc = qc.reshape(bb, hh, lc // 2, 2, dd).mean(axis=3)
+            ksum = ksum.reshape(bb, hh, lc // 2, 2, dd).sum(axis=3)
+            counts = counts.reshape(bb, lc // 2, 2).sum(axis=2)
+        kc = ksum / np.maximum(counts[:, None, :, None], 1.0)
+        s = np.einsum("bhid,bhjd->bhij", qc, kc) * scale
+        lc = qc.shape[2]
+        allowed = _allowed(lc, nr, level, causal)
+        allowed = allowed[None, None] & (counts[:, None, None, :] > 0)
+        wc = np.exp(s) * allowed
+        f = 1 << level
+        w += np.repeat(np.repeat(wc, f, axis=2), f, axis=3)
+    # zero out padded keys at fine resolution (redundant with the coarse
+    # count masking for fully-padded groups, but exact for partial groups)
+    w *= mask[:, None, None, :]
+    return w
+
+
+def h1d_attention_ref(
+    q: np.ndarray,
+    k: np.ndarray,
+    v: np.ndarray,
+    nr: int,
+    causal: bool = False,
+    mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Dense-constructed hierarchical attention output (float64)."""
+    b, h, l, d = np.asarray(q).shape
+    w = h1d_weight_matrix(q, k, nr, causal=causal, mask=mask)
+    lp = w.shape[-1]
+    v64 = np.asarray(v, np.float64)
+    if lp != l:
+        v64 = np.pad(v64, ((0, 0), (0, 0), (0, lp - l), (0, 0)))
+    num = np.einsum("bhij,bhjd->bhid", w, v64)
+    den = w.sum(axis=-1, keepdims=True)
+    z = num / np.maximum(den, 1e-300)
+    return z[:, :, :l, :]
+
+
+def full_attention_ref(
+    q: np.ndarray,
+    k: np.ndarray,
+    v: np.ndarray,
+    causal: bool = False,
+    mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Standard softmax attention in float64 (paper Eq. 1)."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    b, h, l, d = q.shape
+    s = np.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(d)
+    neg = -1e30
+    if mask is not None:
+        mask = np.asarray(mask, np.float64)
+        s = s + np.where(mask[:, None, None, :] > 0, 0.0, neg)
+    if causal:
+        r = np.arange(l)
+        s = s + np.where(r[:, None] >= r[None, :], 0.0, neg)[None, None]
+    s = s - s.max(axis=-1, keepdims=True)
+    w = np.exp(s)
+    return np.einsum("bhij,bhjd->bhid", w / w.sum(axis=-1, keepdims=True), v)

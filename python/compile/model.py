@@ -1,0 +1,356 @@
+"""Layer-2: Transformer models with pluggable (full | h1d) attention.
+
+Pure-jax (no flax) so the whole train/eval/init surface lowers cleanly to
+HLO text for the rust runtime.  The attention is a drop-in choice between
+the quadratic baseline (paper Table 1/2 "Transformer baseline") and the
+hierarchical attention of this paper — mirroring the paper's claim that
+h1d is a drop-in replacement for the standard multi-head attention API.
+
+Model zoo (driven by ModelConfig):
+  * decoder LM (causal)         — One-Billion-Word experiments (Table 2)
+  * encoder classifier          — LRA ListOps / Text / Image / Pathfinder
+  * dual-encoder retrieval      — LRA Retrieval (two-document scoring)
+
+Everything is deterministic (no dropout) so training is reproducible from
+the seed artifact alone; the paper's experiments are about the attention
+inductive bias, which is unaffected.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hattention
+
+
+class ModelConfig(NamedTuple):
+    """Hyper-parameters for one model variant (recorded in the manifest)."""
+
+    name: str = "model"
+    vocab_size: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    max_len: int = 512
+    n_classes: int = 0  # 0 => language model head (tied embeddings)
+    attention: str = "h1d"  # "full" | "h1d"
+    block_size: int = 16  # Nr, the paper's single model hyper-parameter
+    causal: bool = False
+    dual_encoder: bool = False  # LRA Retrieval: encode two sequences
+    use_pallas: bool = False  # route h1d through the L1 pallas kernel
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+Params = Dict[str, jnp.ndarray]
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Ordered name -> shape map; the canonical flattening used by the
+    manifest and by the rust parameter store."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    spec: Dict[str, Tuple[int, ...]] = {}
+    spec["embed"] = (v, d)
+    spec["pos"] = (cfg.max_len, d)
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        spec[p + "ln1_scale"] = (d,)
+        spec[p + "ln1_bias"] = (d,)
+        spec[p + "wq"] = (d, d)
+        spec[p + "wk"] = (d, d)
+        spec[p + "wv"] = (d, d)
+        spec[p + "wo"] = (d, d)
+        spec[p + "ln2_scale"] = (d,)
+        spec[p + "ln2_bias"] = (d,)
+        spec[p + "ff_w1"] = (d, f)
+        spec[p + "ff_b1"] = (f,)
+        spec[p + "ff_w2"] = (f, d)
+        spec[p + "ff_b2"] = (d,)
+    spec["ln_f_scale"] = (d,)
+    spec["ln_f_bias"] = (d,)
+    if cfg.n_classes > 0:
+        feat = 4 * d if cfg.dual_encoder else d
+        spec["cls_w1"] = (feat, d)
+        spec["cls_b1"] = (d,)
+        spec["cls_w2"] = (d, cfg.n_classes)
+        spec["cls_b2"] = (cfg.n_classes,)
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: jnp.ndarray) -> Params:
+    """Deterministic init from an int32 seed (exported as an artifact)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    params: Params = {}
+    for (name, shape), k in zip(spec.items(), keys):
+        if name.endswith(("_bias", "_b1", "_b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("embed", "pos"):
+            params[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+        else:
+            std = 1.0 / math.sqrt(shape[0])
+            params[name] = jax.random.normal(k, shape, jnp.float32) * std
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params):
+    return [params[n] for n in param_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    names = list(param_spec(cfg))
+    assert len(names) == len(flat)
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attend(cfg: ModelConfig, q, k, v, mask):
+    """Multi-head attention dispatch — the drop-in point the paper describes."""
+    if cfg.attention == "full":
+        return hattention.full_attention(q, k, v, causal=cfg.causal, mask=mask)
+    if cfg.attention == "h1d":
+        return hattention.h1d_attention(
+            q,
+            k,
+            v,
+            block_size=cfg.block_size,
+            causal=cfg.causal,
+            mask=mask,
+            use_pallas=cfg.use_pallas,
+        )
+    raise ValueError(f"unknown attention {cfg.attention!r}")
+
+
+def _split_heads(x, n_heads):
+    b, l, d = x.shape
+    return x.reshape(b, l, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def encode(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Token ids [B, L] -> contextual features [B, L, D] (pre-head)."""
+    b, l = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:l][None]
+    if mask is not None:
+        x = x * mask[:, :, None]
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        h = _layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(h @ params[p + "wq"], cfg.n_heads)
+        k = _split_heads(h @ params[p + "wk"], cfg.n_heads)
+        v = _split_heads(h @ params[p + "wv"], cfg.n_heads)
+        a = _attend(cfg, q, k, v, mask)
+        x = x + _merge_heads(a) @ params[p + "wo"]
+        h = _layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        h = jax.nn.gelu(h @ params[p + "ff_w1"] + params[p + "ff_b1"])
+        x = x + h @ params[p + "ff_w2"] + params[p + "ff_b2"]
+    return _layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+
+
+def lm_logits(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Decoder LM: next-token logits via tied output embedding."""
+    x = encode(cfg, params, tokens)
+    return x @ params["embed"].T
+
+
+def _masked_mean_pool(x, mask):
+    if mask is None:
+        return x.mean(axis=1)
+    num = (x * mask[:, :, None]).sum(axis=1)
+    den = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return num / den
+
+
+def classifier_logits(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+    tokens2: Optional[jnp.ndarray] = None,
+    mask2: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Encoder classifier (LRA).  Dual-encoder path for Retrieval uses the
+    standard LRA feature combination [z1, z2, z1*z2, z1-z2]."""
+    z1 = _masked_mean_pool(encode(cfg, params, tokens, mask), mask)
+    if cfg.dual_encoder:
+        assert tokens2 is not None
+        z2 = _masked_mean_pool(encode(cfg, params, tokens2, mask2), mask2)
+        feat = jnp.concatenate([z1, z2, z1 * z2, z1 - z2], axis=-1)
+    else:
+        feat = z1
+    h = jax.nn.gelu(feat @ params["cls_w1"] + params["cls_b1"])
+    return h @ params["cls_w2"] + params["cls_b2"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross entropy over non-pad positions.
+
+    tokens: [B, L] int32; position t predicts token t+1; id 0 is PAD and
+    is excluded from the loss.
+    """
+    logits = lm_logits(cfg, params, tokens)  # [B, L, V]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    valid = (targets != 0).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def lm_eval_stats(cfg: ModelConfig, params: Params, tokens: jnp.ndarray):
+    """(sum nll, token count) for exact corpus-level perplexity in rust."""
+    logits = lm_logits(cfg, params, tokens)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    valid = (targets != 0).astype(jnp.float32)
+    return (nll * valid).sum(), valid.sum()
+
+
+def cls_loss(
+    cfg: ModelConfig,
+    params: Params,
+    tokens,
+    labels,
+    mask=None,
+    tokens2=None,
+    mask2=None,
+):
+    logits = classifier_logits(cfg, params, tokens, mask, tokens2, mask2)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def cls_eval_stats(
+    cfg: ModelConfig, params: Params, tokens, labels, mask=None, tokens2=None, mask2=None
+):
+    """(sum nll, correct count) over the batch."""
+    logits = classifier_logits(cfg, params, tokens, mask, tokens2, mask2)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = (logits.argmax(axis=-1) == labels).astype(jnp.float32)
+    return nll.sum(), correct.sum()
+
+
+# ---------------------------------------------------------------------------
+# Adam optimizer + train steps (exported as single fused HLO programs)
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+
+def adam_update(flat_params, flat_m, flat_v, grads, step, lr):
+    """Adam with global-norm gradient clipping; step is 1-based int32."""
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    clip = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(flat_params, flat_m, flat_v, grads):
+        g = g * clip
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        p = p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS)
+        new_p.append(p)
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v
+
+
+def make_lm_train_step(cfg: ModelConfig):
+    """Returns f(flat_params, flat_m, flat_v, step, lr, tokens) ->
+    (flat_params', flat_m', flat_v', loss)."""
+
+    def step_fn(flat_params, flat_m, flat_v, step, lr, tokens):
+        def loss_fn(flat):
+            return lm_loss(cfg, unflatten_params(cfg, flat), tokens)
+
+        loss, grads = jax.value_and_grad(loss_fn)(list(flat_params))
+        new_p, new_m, new_v = adam_update(flat_params, flat_m, flat_v, grads, step, lr)
+        return new_p, new_m, new_v, loss
+
+    return step_fn
+
+
+def make_cls_train_step(cfg: ModelConfig):
+    """Classifier train step; dual-encoder variants take a second sequence."""
+
+    if cfg.dual_encoder:
+
+        def step_fn(
+            flat_params, flat_m, flat_v, step, lr, tokens, mask, labels, tokens2, mask2
+        ):
+            def loss_fn(flat):
+                return cls_loss(
+                    cfg, unflatten_params(cfg, flat), tokens, labels, mask, tokens2, mask2
+                )
+
+            loss, grads = jax.value_and_grad(loss_fn)(list(flat_params))
+            new_p, new_m, new_v = adam_update(flat_params, flat_m, flat_v, grads, step, lr)
+            return new_p, new_m, new_v, loss
+
+    else:
+
+        def step_fn(flat_params, flat_m, flat_v, step, lr, tokens, mask, labels):
+            def loss_fn(flat):
+                return cls_loss(cfg, unflatten_params(cfg, flat), tokens, labels, mask)
+
+            loss, grads = jax.value_and_grad(loss_fn)(list(flat_params))
+            new_p, new_m, new_v = adam_update(flat_params, flat_m, flat_v, grads, step, lr)
+            return new_p, new_m, new_v, loss
+
+    return step_fn
+
+
+def count_params(cfg: ModelConfig) -> int:
+    total = 0
+    for shape in param_spec(cfg).values():
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total

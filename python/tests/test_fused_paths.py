@@ -1,0 +1,83 @@
+"""The perf pass (EXPERIMENTS.md §Perf) added two specialised code paths
+for the per-level banded attention: a fused-band variant and a dense
+(no-padding) fast path.  All variants must be numerically equivalent."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hattention import LevelResult, _level_attention
+
+RNG = np.random.default_rng(3)
+
+
+def rand(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def run_variant(q, k, v, counts, nr, level, causal, **kw):
+    r = _level_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(counts),
+        nr, level, causal, **kw
+    )
+    return tuple(np.asarray(x) for x in r)
+
+
+@pytest.mark.parametrize("level", [0, 1])
+@pytest.mark.parametrize("causal", [False, True])
+def test_fused_equals_unfused(level, causal):
+    b, h, lc, d, nr = 2, 2, 48, 8, 4
+    q, k, v = rand((b, h, lc, d)), rand((b, h, lc, d)), rand((b, h, lc, d))
+    counts = np.full((b, lc), float(1 << level), np.float32)
+    a = run_variant(q, k, v, counts, nr, level, causal, fused=False)
+    bb = run_variant(q, k, v, counts, nr, level, causal, fused=True)
+    for x, y in zip(a, bb):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("level", [0, 1, 2])
+@pytest.mark.parametrize("causal", [False, True])
+def test_dense_equals_masked_with_full_counts(level, causal):
+    b, h, lc, d, nr = 1, 2, 64, 8, 8
+    q, k, v = rand((b, h, lc, d)), rand((b, h, lc, d)), rand((b, h, lc, d))
+    counts = np.full((b, lc), float(1 << level), np.float32)
+    a = run_variant(q, k, v, counts, nr, level, causal, fused=True, dense=False)
+    bb = run_variant(q, k, v, counts, nr, level, causal, fused=True, dense=True)
+    for x, y in zip(a, bb):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+def test_partial_counts_use_masked_path_semantics():
+    """With padding (counts containing zeros) the masked path must zero
+    those keys' contributions; the dense path is only legal for full
+    counts — verify they differ exactly when padding exists."""
+    b, h, lc, d, nr = 1, 1, 32, 4, 4
+    q, k, v = rand((b, h, lc, d)), rand((b, h, lc, d)), rand((b, h, lc, d))
+    counts = np.ones((b, lc), np.float32)
+    counts[:, 24:] = 0.0
+    masked = run_variant(q, k, v, counts, nr, 0, False, fused=True, dense=False)
+    unfused = run_variant(q, k, v, counts, nr, 0, False, fused=False)
+    for x, y in zip(masked, unfused):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nr=st.sampled_from([2, 4, 8]),
+    nblocks=st.integers(2, 8),
+    level=st.integers(0, 2),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_fused_unfused_agree(nr, nblocks, level, causal, seed):
+    rng = np.random.default_rng(seed)
+    lc = nr * nblocks
+    q = rng.standard_normal((1, 2, lc, 4)).astype(np.float32)
+    k = rng.standard_normal((1, 2, lc, 4)).astype(np.float32)
+    v = rng.standard_normal((1, 2, lc, 4)).astype(np.float32)
+    counts = np.full((1, lc), float(1 << level), np.float32)
+    a = run_variant(q, k, v, counts, nr, level, causal, fused=False)
+    bb = run_variant(q, k, v, counts, nr, level, causal, fused=True)
+    for x, y in zip(a, bb):
+        np.testing.assert_allclose(x, y, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,179 @@
+"""Correctness of the blocked jnp hierarchical attention vs the dense
+numpy oracle, plus algebraic invariants.  This is the core L2 signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hattention import (
+    full_attention,
+    h1d_attention,
+    num_levels,
+    padded_length,
+)
+from compile.kernels.ref import full_attention_ref, h1d_attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def run_h1d(q, k, v, nr, causal=False, mask=None, use_pallas=False):
+    out = h1d_attention(
+        jnp.asarray(q),
+        jnp.asarray(k),
+        jnp.asarray(v),
+        block_size=nr,
+        causal=causal,
+        mask=None if mask is None else jnp.asarray(mask),
+        use_pallas=use_pallas,
+    )
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# fixed-case agreement with the oracle
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (B, H, L, d, nr, causal)
+    (2, 2, 32, 8, 4, False),
+    (2, 2, 32, 8, 4, True),
+    (1, 1, 64, 16, 8, False),
+    (1, 1, 64, 16, 8, True),
+    (1, 2, 48, 8, 4, False),   # padding: 48 -> 64
+    (1, 1, 100, 8, 4, True),   # padding: 100 -> 128
+    (1, 1, 16, 8, 8, False),   # exactly two blocks: no coarse level
+    (2, 1, 8, 4, 8, True),     # single block
+    (1, 1, 256, 8, 2, False),  # deep hierarchy (7 levels)
+]
+
+
+@pytest.mark.parametrize("b,h,l,d,nr,causal", CASES)
+def test_blocked_matches_dense_oracle(b, h, l, d, nr, causal):
+    q, k, v = rand((b, h, l, d)), rand((b, h, l, d)), rand((b, h, l, d))
+    z = run_h1d(q, k, v, nr, causal)
+    zr = h1d_attention_ref(q, k, v, nr, causal=causal)
+    np.testing.assert_allclose(z, zr, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,l,d,nr,causal", [c for c in CASES if c[2] <= 2 * c[4]])
+def test_exact_when_band_covers_sequence(b, h, l, d, nr, causal):
+    """L <= 2*Nr: the tridiagonal band covers everything => h1d == full."""
+    q, k, v = rand((b, h, l, d)), rand((b, h, l, d)), rand((b, h, l, d))
+    z = run_h1d(q, k, v, nr, causal)
+    zf = full_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(z, zf, rtol=2e-4, atol=2e-5)
+
+
+def test_full_attention_matches_numpy_ref():
+    q, k, v = rand((2, 2, 24, 8)), rand((2, 2, 24, 8)), rand((2, 2, 24, 8))
+    for causal in (False, True):
+        z = np.asarray(
+            full_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal)
+        )
+        zr = full_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(z, zr, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def test_rows_are_normalised():
+    """With V = ones the output must be exactly ones (weights sum to 1)."""
+    q, k = rand((1, 2, 64, 8)), rand((1, 2, 64, 8))
+    v = np.ones((1, 2, 64, 8), np.float32)
+    for causal in (False, True):
+        z = run_h1d(q, k, v, 8, causal)
+        np.testing.assert_allclose(z, 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_causal_is_independent_of_future():
+    q = rand((1, 1, 64, 8))
+    k1, v1 = rand((1, 1, 64, 8)), rand((1, 1, 64, 8))
+    k2, v2 = k1.copy(), v1.copy()
+    k2[:, :, 48:, :] += 7.0
+    v2[:, :, 48:, :] -= 3.0
+    z1 = run_h1d(q, k1, v1, 8, causal=True)
+    z2 = run_h1d(q, k2, v2, 8, causal=True)
+    np.testing.assert_array_equal(z1[:, :, :48], z2[:, :, :48])
+
+
+def test_mask_excludes_padded_keys():
+    """Output for valid rows must match the oracle under the same mask."""
+    b, h, l, d, nr = 1, 1, 64, 8, 8
+    q, k, v = rand((b, h, l, d)), rand((b, h, l, d)), rand((b, h, l, d))
+    mask = np.ones((b, l), np.float32)
+    mask[:, 40:] = 0.0
+    z = run_h1d(q, k, v, nr, mask=mask)
+    zr = h1d_attention_ref(q, k, v, nr, mask=mask)
+    np.testing.assert_allclose(z[:, :, :40], zr[:, :, :40], rtol=2e-4, atol=2e-5)
+
+
+def test_numerical_stability_large_logits():
+    """Raw exp of Eq. 3 would overflow at scale 100; ours must not."""
+    q = rand((1, 1, 32, 8)) * 100.0
+    k = rand((1, 1, 32, 8)) * 100.0
+    v = rand((1, 1, 32, 8))
+    z = run_h1d(q, k, v, 4)
+    assert np.isfinite(z).all()
+
+
+def test_helpers():
+    assert padded_length(100, 4) == 128
+    assert padded_length(128, 4) == 128
+    assert padded_length(3, 8) == 8
+    assert num_levels(128, 4) == 6  # 32 blocks -> levels 0..5
+    assert num_levels(8, 8) == 1
+    with pytest.raises(ValueError):
+        num_levels(100, 8)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    nr=st.sampled_from([2, 4, 8]),
+    nblocks=st.integers(1, 9),
+    d=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_blocked_vs_oracle(b, h, nr, nblocks, d, causal, seed):
+    l = nr * nblocks
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, l, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, l, d)).astype(np.float32)
+    v = rng.standard_normal((b, h, l, d)).astype(np.float32)
+    z = run_h1d(q, k, v, nr, causal)
+    zr = h1d_attention_ref(q, k, v, nr, causal=causal)
+    np.testing.assert_allclose(z, zr, rtol=3e-4, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    l=st.integers(3, 70),
+    nr=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_ragged_lengths_with_mask(l, nr, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((1, 1, l, 4)).astype(np.float32)
+    k = rng.standard_normal((1, 1, l, 4)).astype(np.float32)
+    v = rng.standard_normal((1, 1, l, 4)).astype(np.float32)
+    valid = max(1, l - (seed % l))
+    mask = np.zeros((1, l), np.float32)
+    mask[:, :valid] = 1.0
+    z = run_h1d(q, k, v, nr, mask=mask)
+    zr = h1d_attention_ref(q, k, v, nr, mask=mask)
+    np.testing.assert_allclose(z[:, :, :valid], zr[:, :, :valid], rtol=3e-4, atol=3e-5)

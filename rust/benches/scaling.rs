@@ -1,0 +1,123 @@
+//! Experiment F-C (paper §7): the O(dL) run-time / memory claim.
+//!
+//! Two measurements:
+//!  1. compiled XLA artifacts (the production path): h1d vs full
+//!     attention forward latency at L = 128..4096;
+//!  2. the pure-rust attention zoo (full, local, low-rank, block-sparse,
+//!     h1d) for the baseline-family comparison.
+//!
+//! Expected shape: full grows ~4x per L doubling, h1d ~2x; h1d overtakes
+//! full somewhere around L of a few hundred on both stacks; attention
+//! memory is O(L^2) vs O(L·Nr).
+
+use htransformer::attention::{Attention, BlockSparse, Full, H1d, LocalWindow, LowRank};
+use htransformer::runtime::{default_artifacts_dir, Engine, HostTensor, Manifest};
+use htransformer::tensor::Mat;
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::Rng;
+use std::time::Duration;
+
+fn xla_scaling() -> anyhow::Result<()> {
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let mut engine = Engine::cpu()?;
+    println!("== compiled XLA artifacts (B=1, H=4, d=32, Nr=16) ==");
+    let mut t = Table::new(&["L", "full fwd", "h1d fwd", "full/h1d", "HLO compile full/h1d"]);
+    let budget = Duration::from_millis(400);
+    for l in [128usize, 256, 512, 1024, 2048, 4096] {
+        let h1d_name = format!("attn_h1d_L{l}");
+        let full_name = format!("attn_full_L{l}");
+        let (Some(eh), Some(ef)) = (
+            manifest.attention.get(&h1d_name),
+            manifest.attention.get(&full_name),
+        ) else {
+            continue;
+        };
+        let exe_h = engine.load(&h1d_name, &eh.sig)?;
+        let exe_f = engine.load(&full_name, &ef.sig)?;
+        let n = eh.batch * eh.heads * l * eh.d_head;
+        let mut rng = Rng::new(l as u64);
+        let mk = |rng: &mut Rng| {
+            let mut v = vec![0f32; n];
+            rng.fill_normal(&mut v, 1.0);
+            HostTensor::f32(vec![eh.batch, eh.heads, l, eh.d_head], v)
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let inputs = [q, k, v];
+        let mf = bench_for("full", 1, budget, || {
+            exe_f.run(&inputs).expect("full fwd");
+        });
+        let mh = bench_for("h1d", 1, budget, || {
+            exe_h.run(&inputs).expect("h1d fwd");
+        });
+        t.row(&[
+            l.to_string(),
+            fmt_time(mf.min_s),
+            fmt_time(mh.min_s),
+            format!("{:.2}x", mf.min_s / mh.min_s),
+            format!("{:.1}s/{:.1}s", exe_f.compile_secs, exe_h.compile_secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn rust_scaling() {
+    println!("\n== pure-rust attention zoo (single head, d=32) ==");
+    let d = 32;
+    let algos: Vec<Box<dyn Attention>> = vec![
+        Box::new(Full),
+        Box::new(LocalWindow::new(16)),
+        Box::new(LowRank::new(32, 7)),
+        Box::new(BlockSparse::new(8, 4, 4, 7)),
+        Box::new(H1d::new(16)),
+    ];
+    let mut t = Table::new(&[
+        "L", "full", "local", "lowrank", "blocksparse", "h1d", "h1d mem", "full mem",
+    ]);
+    let budget = Duration::from_millis(300);
+    let mut prev_h1d = 0f64;
+    let mut prev_full = 0f64;
+    let mut growth = Vec::new();
+    for l in [128usize, 256, 512, 1024, 2048, 4096] {
+        let mut rng = Rng::new(l as u64);
+        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let mut cells = vec![l.to_string()];
+        let mut this_h1d = 0f64;
+        let mut this_full = 0f64;
+        for algo in &algos {
+            let m = bench_for(algo.name(), 1, budget, || {
+                std::hint::black_box(algo.forward(&q, &k, &v, false));
+            });
+            if algo.name() == "h1d" {
+                this_h1d = m.min_s;
+            }
+            if algo.name() == "full" {
+                this_full = m.min_s;
+            }
+            cells.push(fmt_time(m.min_s));
+        }
+        cells.push(format!("{}KB", algos[4].attn_memory_bytes(l, d) / 1024));
+        cells.push(format!("{}KB", algos[0].attn_memory_bytes(l, d) / 1024));
+        t.row(&cells);
+        if prev_h1d > 0.0 {
+            growth.push((l, this_full / prev_full, this_h1d / prev_h1d));
+        }
+        prev_h1d = this_h1d;
+        prev_full = this_full;
+    }
+    t.print();
+    println!("\nper-doubling growth (ideal: full 4.0x, h1d 2.0x):");
+    for (l, gf, gh) in growth {
+        println!("  L {:>4} -> {:>4}: full {gf:.2}x   h1d {gh:.2}x", l / 2, l);
+    }
+}
+
+fn main() {
+    println!("### Scaling bench — paper §7 linear-complexity claim ###\n");
+    if let Err(e) = xla_scaling() {
+        println!("(xla scaling skipped: {e:#} — run `make artifacts`)");
+    }
+    rust_scaling();
+}

@@ -1,0 +1,130 @@
+//! Block-sparse attention (BigBird-style, Zaheer et al. 2020; the
+//! previous-best row of Table 1): each query attends a local window,
+//! a few global tokens, and a few random blocks.
+
+use super::Attention;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct BlockSparse {
+    pub window: usize,
+    pub n_global: usize,
+    pub n_random: usize,
+    pub seed: u64,
+}
+
+impl BlockSparse {
+    pub fn new(window: usize, n_global: usize, n_random: usize, seed: u64) -> Self {
+        Self {
+            window,
+            n_global,
+            n_random,
+            seed,
+        }
+    }
+
+    /// Sorted, deduplicated key set for query i.
+    fn key_set(&self, i: usize, l: usize, causal: bool, rng: &mut Rng) -> Vec<usize> {
+        let mut keys: Vec<usize> = Vec::new();
+        let lo = i.saturating_sub(self.window);
+        let hi = if causal { i } else { (i + self.window).min(l - 1) };
+        keys.extend(lo..=hi);
+        for g in 0..self.n_global.min(l) {
+            if !causal || g <= i {
+                keys.push(g);
+            }
+        }
+        for _ in 0..self.n_random {
+            let j = rng.usize_below(l);
+            if !causal || j <= i {
+                keys.push(j);
+            }
+        }
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+}
+
+impl Attention for BlockSparse {
+    fn name(&self) -> &'static str {
+        "blocksparse"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+        let (l, d) = (q.rows, q.cols);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut z = Mat::zeros(l, d);
+        let mut rng = Rng::new(self.seed);
+        for i in 0..l {
+            let keys = self.key_set(i, l, causal, &mut rng);
+            let mut scores: Vec<f32> = keys
+                .iter()
+                .map(|&j| {
+                    let mut s = 0.0f32;
+                    for t in 0..d {
+                        s += q.at(i, t) * k.at(j, t);
+                    }
+                    s * scale
+                })
+                .collect();
+            let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            for (w, &j) in scores.iter().zip(&keys) {
+                let w = w * inv;
+                for t in 0..d {
+                    *z.at_mut(i, t) += w * v.at(j, t);
+                }
+            }
+        }
+        z
+    }
+
+    fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
+        l * (2 * self.window + 1 + self.n_global + self.n_random) * 4
+    }
+
+    fn flops(&self, l: usize, d: usize) -> usize {
+        2 * l * (2 * self.window + 1 + self.n_global + self.n_random) * d * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Attention;
+
+    #[test]
+    fn causal_never_attends_future() {
+        let mut rng = Rng::new(8);
+        let l = 32;
+        let q = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let mut v = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let algo = BlockSparse::new(4, 2, 3, 11);
+        let z1 = algo.forward(&q, &k, &v, true);
+        for t in 0..4 {
+            *v.at_mut(l - 1, t) += 50.0;
+        }
+        let z2 = algo.forward(&q, &k, &v, true);
+        // every row except the last must be unchanged
+        for i in 0..l - 1 {
+            for t in 0..4 {
+                assert_eq!(z1.at(i, t), z2.at(i, t), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_tokens_reach_everywhere() {
+        let algo = BlockSparse::new(1, 2, 0, 3);
+        let mut rng = Rng::new(9);
+        let keys = algo.key_set(60, 64, false, &mut rng);
+        assert!(keys.contains(&0) && keys.contains(&1));
+    }
+}

@@ -1,0 +1,72 @@
+//! Standard O(L^2) scaled dot-product attention (paper Eq. 1) — the
+//! quadratic baseline ("Transformer" rows of Tables 1 and 2).
+
+use super::Attention;
+use crate::tensor::ops::{matmul, matmul_nt, softmax_rows, NEG_MASK};
+use crate::tensor::Mat;
+
+pub struct Full;
+
+impl Attention for Full {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+        let d = q.cols;
+        let mut s = matmul_nt(q, k);
+        s.scale(1.0 / (d as f32).sqrt());
+        if causal {
+            for i in 0..s.rows {
+                for j in (i + 1)..s.cols {
+                    *s.at_mut(i, j) = NEG_MASK;
+                }
+            }
+        }
+        softmax_rows(&mut s);
+        matmul(&s, v)
+    }
+
+    fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
+        l * l * 4
+    }
+
+    fn flops(&self, l: usize, d: usize) -> usize {
+        2 * l * l * d * 2 // scores + weighted sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let mut rng = Rng::new(3);
+        let q = Mat::from_fn(12, 4, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(12, 4, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(12, 4, |_, _| rng.normal_f32());
+        let z = Full.forward(&q, &k, &v, false);
+        // outputs bounded by V's column ranges
+        for j in 0..4 {
+            let vmin = (0..12).map(|i| v.at(i, j)).fold(f32::INFINITY, f32::min);
+            let vmax = (0..12).map(|i| v.at(i, j)).fold(f32::NEG_INFINITY, f32::max);
+            for i in 0..12 {
+                assert!(z.at(i, j) >= vmin - 1e-5 && z.at(i, j) <= vmax + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_first_value() {
+        let mut rng = Rng::new(4);
+        let q = Mat::from_fn(6, 3, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(6, 3, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(6, 3, |_, _| rng.normal_f32());
+        let z = Full.forward(&q, &k, &v, true);
+        for j in 0..3 {
+            assert!((z.at(0, j) - v.at(0, j)).abs() < 1e-5);
+        }
+    }
+}

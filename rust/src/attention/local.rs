@@ -1,0 +1,102 @@
+//! Sliding-window local attention (Parmar et al. 2018; the "Local
+//! Attention" row of Table 1): each query attends to keys within a fixed
+//! window radius — O(L·w) time/memory, but no long-range information.
+
+use super::Attention;
+use crate::tensor::Mat;
+
+pub struct LocalWindow {
+    pub radius: usize,
+}
+
+impl LocalWindow {
+    pub fn new(radius: usize) -> Self {
+        Self { radius }
+    }
+}
+
+impl Attention for LocalWindow {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+        let (l, d) = (q.rows, q.cols);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut z = Mat::zeros(l, d);
+        let mut weights = vec![0.0f32; 2 * self.radius + 1];
+        for i in 0..l {
+            let lo = i.saturating_sub(self.radius);
+            let hi = if causal { i } else { (i + self.radius).min(l - 1) };
+            // scores
+            let mut mx = f32::NEG_INFINITY;
+            for j in lo..=hi {
+                let mut s = 0.0f32;
+                for t in 0..d {
+                    s += q.at(i, t) * k.at(j, t);
+                }
+                let s = s * scale;
+                weights[j - lo] = s;
+                mx = mx.max(s);
+            }
+            let mut sum = 0.0f32;
+            for j in lo..=hi {
+                let w = (weights[j - lo] - mx).exp();
+                weights[j - lo] = w;
+                sum += w;
+            }
+            let inv = 1.0 / sum;
+            for j in lo..=hi {
+                let w = weights[j - lo] * inv;
+                for t in 0..d {
+                    *z.at_mut(i, t) += w * v.at(j, t);
+                }
+            }
+        }
+        z
+    }
+
+    fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
+        l * (2 * self.radius + 1) * 4
+    }
+
+    fn flops(&self, l: usize, d: usize) -> usize {
+        2 * l * (2 * self.radius + 1) * d * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{Attention, Full};
+    use crate::util::Rng;
+
+    #[test]
+    fn radius_covering_sequence_matches_full() {
+        let mut rng = Rng::new(5);
+        let l = 16;
+        let q = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let zl = LocalWindow::new(l).forward(&q, &k, &v, false);
+        let zf = Full.forward(&q, &k, &v, false);
+        assert!(zl.max_abs_diff(&zf) < 1e-4);
+    }
+
+    #[test]
+    fn far_tokens_do_not_influence() {
+        let mut rng = Rng::new(6);
+        let l = 64;
+        let q = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let mut v = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let algo = LocalWindow::new(4);
+        let z1 = algo.forward(&q, &k, &v, false);
+        // perturb a value far from row 0
+        *v.at_mut(l - 1, 0) += 100.0;
+        let z2 = algo.forward(&q, &k, &v, false);
+        for t in 0..4 {
+            assert_eq!(z1.at(0, t), z2.at(0, t));
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Low-rank projected attention (Linformer-style, Wang et al. 2020; the
+//! "Linformer" row of Table 1): K and V are projected from L rows down to
+//! r rows by a fixed projection, so attention costs O(L·r).
+//!
+//! This is the "standard low-rank approximation" the paper contrasts
+//! with its *hierarchical* low-rank structure (section 4.1): a single
+//! global rank-r factorisation, which the Eq. (11)-(13) example shows can
+//! fail where the H-Matrix succeeds.
+
+use super::Attention;
+use crate::tensor::ops::{matmul, matmul_nt, softmax_rows};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+pub struct LowRank {
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl LowRank {
+    pub fn new(rank: usize, seed: u64) -> Self {
+        Self { rank, seed }
+    }
+
+    /// Fixed non-negative row-normalised projection [rank, l] — a soft
+    /// pooling so that constant values are preserved.
+    fn projection(&self, l: usize) -> Mat {
+        let mut rng = Rng::new(self.seed ^ (l as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut e = Mat::from_fn(self.rank.min(l), l, |_, _| rng.f32() + 1e-3);
+        for i in 0..e.rows {
+            let row = e.row_mut(i);
+            let s: f32 = row.iter().sum();
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+        e
+    }
+}
+
+impl Attention for LowRank {
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+
+    /// Note: like Linformer, the projected form has no exact causal
+    /// variant; `causal` is ignored (documented limitation, the scaling
+    /// benches use encoder mode).
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _causal: bool) -> Mat {
+        let d = q.cols;
+        let e = self.projection(k.rows);
+        let kp = matmul(&e, k); // [r, d]
+        let vp = matmul(&e, v); // [r, d]
+        let mut s = matmul_nt(q, &kp); // [l, r]
+        s.scale(1.0 / (d as f32).sqrt());
+        softmax_rows(&mut s);
+        matmul(&s, &vp)
+    }
+
+    fn attn_memory_bytes(&self, l: usize, d: usize) -> usize {
+        let r = self.rank;
+        l * r * 4 + 2 * r * d * 4
+    }
+
+    fn flops(&self, l: usize, d: usize) -> usize {
+        let r = self.rank;
+        2 * r * l * d * 2 + 2 * l * r * d * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Attention;
+
+    #[test]
+    fn preserves_constant_values() {
+        let mut rng = Rng::new(7);
+        let l = 32;
+        let q = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, 4, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, 4, |_, j| j as f32 + 1.0);
+        let z = LowRank::new(8, 1).forward(&q, &k, &v, false);
+        for i in 0..l {
+            for j in 0..4 {
+                assert!((z.at(i, j) - (j as f32 + 1.0)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn projection_is_row_stochastic() {
+        let lr = LowRank::new(4, 9);
+        let e = lr.projection(64);
+        for i in 0..e.rows {
+            let s: f32 = e.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Pure-rust attention zoo: the paper's h1d attention plus the baseline
+//! families it is compared against in the literature (full quadratic,
+//! sliding-window local, low-rank projection, block-sparse).
+//!
+//! These CPU implementations serve three roles:
+//!  1. baselines for the §7 complexity/scaling benches (who wins, where
+//!     the crossover falls);
+//!  2. an independent mirror of the h1d math for property tests (the
+//!     python oracle cross-checks the jax path; this crate cross-checks
+//!     the compiled artifacts through the runtime);
+//!  3. documentation-by-code of the algorithm for rust readers.
+//!
+//! All implementations are single-head `[L, d]`; multi-head batching is a
+//! loop at the call site (the hot path lives in the XLA artifacts, not
+//! here).
+
+pub mod blocksparse;
+pub mod full;
+pub mod h1d;
+pub mod local;
+pub mod lowrank;
+
+use crate::tensor::Mat;
+
+/// A single-head attention algorithm.
+pub trait Attention {
+    fn name(&self) -> &'static str;
+
+    /// Z = normalise(weights(Q, K)) @ V, with optional causal masking.
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat;
+
+    /// Attention-state memory in bytes for sequence length `l` — the
+    /// quantity the paper's O(L) memory claim is about (excludes Q/K/V/Z
+    /// themselves, which are O(Ld) for every algorithm).
+    fn attn_memory_bytes(&self, l: usize, d: usize) -> usize;
+
+    /// Approximate FLOPs for one forward call (score + weighted sum).
+    fn flops(&self, l: usize, d: usize) -> usize;
+}
+
+pub use blocksparse::BlockSparse;
+pub use full::Full;
+pub use h1d::H1d;
+pub use local::LocalWindow;
+pub use lowrank::LowRank;
+
+/// Cosine similarity between two outputs, averaged over rows — the
+/// approximation-quality metric used by the approx_quality bench.
+pub fn mean_row_cosine(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut total = 0.0f64;
+    for i in 0..a.rows {
+        let (ra, rb) = (a.row(i), b.row(i));
+        let dot: f64 = ra.iter().zip(rb).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let na: f64 = ra.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = rb.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        if na > 0.0 && nb > 0.0 {
+            total += dot / (na * nb);
+        }
+    }
+    total / a.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    /// All algorithms must produce convex combinations of V rows: with
+    /// V = const vector, output rows are that vector.
+    #[test]
+    fn all_algorithms_preserve_constant_values() {
+        let mut rng = Rng::new(42);
+        let l = 64;
+        let d = 8;
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = Mat::from_fn(l, d, |_, j| j as f32);
+        let algos: Vec<Box<dyn Attention>> = vec![
+            Box::new(Full),
+            Box::new(LocalWindow::new(8)),
+            Box::new(H1d::new(8)),
+            Box::new(BlockSparse::new(8, 2, 2, 7)),
+        ];
+        for algo in &algos {
+            for causal in [false, true] {
+                let z = algo.forward(&q, &k, &v, causal);
+                for i in 0..l {
+                    for j in 0..d {
+                        assert!(
+                            (z.at(i, j) - j as f32).abs() < 1e-3,
+                            "{} causal={causal} row {i} col {j}: {}",
+                            algo.name(),
+                            z.at(i, j)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cosine_of_identical_is_one() {
+        let mut rng = Rng::new(1);
+        let a = rand_mat(&mut rng, 10, 4);
+        assert!((mean_row_cosine(&a, &a) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,190 @@
+//! Checkpointing: params + optimizer state + step, in a simple
+//! self-describing binary format.
+//!
+//! Layout: magic `HTXCKPT1` | u64 header_len | JSON header | raw tensor
+//! data (little-endian, in header order).  The JSON header carries the
+//! step, model name and per-tensor dtype/shape so a checkpoint is
+//! loadable without the manifest.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{DType, HostTensor};
+use crate::util::json::{num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"HTXCKPT1";
+
+pub struct Checkpoint {
+    pub model: String,
+    pub step: i32,
+    pub tensors: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut header_items = Vec::new();
+        for (name, t) in &self.tensors {
+            header_items.push(obj(vec![
+                ("name", s(name)),
+                (
+                    "dtype",
+                    s(match t.dtype() {
+                        DType::F32 => "f32",
+                        DType::I32 => "i32",
+                    }),
+                ),
+                (
+                    "shape",
+                    Json::Arr(t.shape().iter().map(|&d| num(d as f64)).collect()),
+                ),
+            ]));
+        }
+        let header = obj(vec![
+            ("model", s(&self.model)),
+            ("step", num(self.step as f64)),
+            ("tensors", Json::Arr(header_items)),
+        ])
+        .to_string();
+
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {:?}", tmp))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for (_, t) in &self.tensors {
+                match t {
+                    HostTensor::F32 { data, .. } => {
+                        for x in data {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                    HostTensor::I32 { data, .. } => {
+                        for x in data {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path.as_ref()).context("atomic rename")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an HTX checkpoint (bad magic)");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+
+        let model = header
+            .get("model")
+            .and_then(|m| m.as_str())
+            .unwrap_or("")
+            .to_string();
+        let step = header.get("step").and_then(|v| v.as_i64()).unwrap_or(0) as i32;
+        let mut tensors = Vec::new();
+        for item in header
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .context("header tensors")?
+        {
+            let name = item
+                .get("name")
+                .and_then(|n| n.as_str())
+                .context("tensor name")?
+                .to_string();
+            let shape: Vec<usize> = item
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .context("tensor shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect();
+            let n: usize = shape.iter().product();
+            let dtype = item.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32");
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let t = match dtype {
+                "f32" => HostTensor::f32(
+                    shape,
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                "i32" => HostTensor::i32(
+                    shape,
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                other => bail!("bad dtype {other}"),
+            };
+            tensors.push((name, t));
+        }
+        Ok(Checkpoint {
+            model,
+            step,
+            tensors,
+        })
+    }
+
+    /// Index tensors by name.
+    pub fn by_name(&self) -> BTreeMap<&str, &HostTensor> {
+        self.tensors
+            .iter()
+            .map(|(n, t)| (n.as_str(), t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ckpt = Checkpoint {
+            model: "lm_tiny_h1d".into(),
+            step: 123,
+            tensors: vec![
+                (
+                    "embed".into(),
+                    HostTensor::f32(vec![2, 3], vec![1.5, -2.0, 0.0, 3.25, 4.0, -0.5]),
+                ),
+                ("steps".into(), HostTensor::i32(vec![2], vec![7, -9])),
+            ],
+        };
+        let path = std::env::temp_dir().join(format!("htx_ckpt_test_{}.bin", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.model, "lm_tiny_h1d");
+        assert_eq!(loaded.step, 123);
+        assert_eq!(loaded.tensors.len(), 2);
+        assert_eq!(loaded.tensors[0].1, ckpt.tensors[0].1);
+        assert_eq!(loaded.tensors[1].1, ckpt.tensors[1].1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("htx_ckpt_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

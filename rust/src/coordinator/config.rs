@@ -1,0 +1,159 @@
+//! Run-configuration files: a strict key = value format (a TOML subset —
+//! the vendor set has no toml/serde crates) so experiments are
+//! reproducible from checked-in configs rather than ad-hoc flags.
+//!
+//! ```text
+//! # comment
+//! model = "lm_tiny_h1d"
+//! steps = 300
+//! lr = 1e-3
+//! schedule = "cosine"     # constant | cosine | invsqrt
+//! seed = 42
+//! eval_every = 50
+//! checkpoint = "runs/lm_tiny.ckpt"
+//! ```
+//!
+//! CLI flags override file values (`htx train --config run.toml --lr 2e-3`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::TrainOptions;
+use crate::util::cli::Args;
+
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub values: BTreeMap<String, String>,
+}
+
+impl RunConfig {
+    pub fn parse(text: &str) -> Result<RunConfig> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = k.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                bail!("line {}: bad key {key:?}", lineno + 1);
+            }
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key.to_string(), val);
+        }
+        Ok(RunConfig { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn pick<'a>(&'a self, args: &'a Args, key: &str) -> Option<&'a str> {
+        // CLI flag wins over file value
+        args.get(key).or_else(|| self.get(key))
+    }
+
+    /// Resolve model name + TrainOptions from file + CLI overrides.
+    pub fn train_options(&self, args: &Args) -> Result<(String, TrainOptions)> {
+        let model = self
+            .pick(args, "model")
+            .context("`model` required (config file or --model)")?
+            .to_string();
+        let parse_usize = |key: &str, default: usize| -> Result<usize> {
+            match self.pick(args, key) {
+                None => Ok(default),
+                Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
+            }
+        };
+        let parse_f64 = |key: &str, default: f64| -> Result<f64> {
+            match self.pick(args, key) {
+                None => Ok(default),
+                Some(v) => v.parse().with_context(|| format!("bad {key}: {v:?}")),
+            }
+        };
+        let steps = parse_usize("steps", 200)?;
+        let lr = parse_f64("lr", 1e-3)?;
+        let schedule = self.pick(args, "schedule").unwrap_or("cosine");
+        let opts = TrainOptions {
+            steps,
+            schedule: LrSchedule::parse(schedule, steps, lr),
+            seed: parse_usize("seed", 42)? as u64,
+            log_every: parse_usize("log_every", 10)?,
+            eval_every: parse_usize("eval_every", 0)?,
+            eval_batches: parse_usize("eval_batches", 4)?,
+            checkpoint_path: self
+                .pick(args, "checkpoint")
+                .map(std::path::PathBuf::from),
+            verbose: true,
+        };
+        Ok((model, opts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment: table-2 tiny pair
+model = "lm_tiny_h1d"
+steps = 300
+lr = 1e-3
+schedule = "cosine"
+eval_every = 50   # trailing comment
+checkpoint = "runs/lm.ckpt"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = RunConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("model"), Some("lm_tiny_h1d"));
+        assert_eq!(c.get("steps"), Some("300"));
+        assert_eq!(c.get("checkpoint"), Some("runs/lm.ckpt"));
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let c = RunConfig::parse(SAMPLE).unwrap();
+        let args = Args::parse(&["train".into(), "--steps".into(), "5".into()]);
+        let (model, opts) = c.train_options(&args).unwrap();
+        assert_eq!(model, "lm_tiny_h1d");
+        assert_eq!(opts.steps, 5); // CLI wins
+        assert_eq!(opts.eval_every, 50); // file value survives
+        assert_eq!(
+            opts.checkpoint_path.as_deref(),
+            Some(std::path::Path::new("runs/lm.ckpt"))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(RunConfig::parse("model lm_tiny").is_err());
+        assert!(RunConfig::parse("bad key! = 3").is_err());
+        assert!(RunConfig::parse("steps = abc")
+            .unwrap()
+            .train_options(&Args::default())
+            .is_err());
+    }
+
+    #[test]
+    fn missing_model_is_an_error() {
+        let c = RunConfig::parse("steps = 3").unwrap();
+        assert!(c.train_options(&Args::default()).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Training/serving metrics: named counters, gauges, timers and latency
+//! histograms with a periodic log-line renderer.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::stats::{Histogram, Welford};
+
+#[derive(Default)]
+pub struct Metrics {
+    started: Option<Instant>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, Welford>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Some(Instant::now()),
+            ..Default::default()
+        }
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn time(&mut self, name: &str, secs: f64) {
+        self.timers.entry(name.to_string()).or_default().push(secs);
+    }
+
+    pub fn latency(&mut self, name: &str, secs: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::log_spaced(1e-6, 60.0, 48))
+            .record(secs);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn mean_time(&self, name: &str) -> f64 {
+        self.timers.get(name).map(|w| w.mean()).unwrap_or(0.0)
+    }
+
+    pub fn quantile(&self, name: &str, q: f64) -> f64 {
+        self.hists.get(name).map(|h| h.quantile(q)).unwrap_or(0.0)
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Throughput of a counter per wall-clock second.
+    pub fn rate(&self, name: &str) -> f64 {
+        let e = self.elapsed();
+        if e > 0.0 {
+            self.counter(name) as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary for periodic logging.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (k, v) in &self.counters {
+            parts.push(format!("{k}={v}"));
+        }
+        for (k, v) in &self.gauges {
+            parts.push(format!("{k}={v:.4}"));
+        }
+        for (k, w) in &self.timers {
+            parts.push(format!("{k}_mean={:.1}ms", w.mean() * 1e3));
+        }
+        for (k, h) in &self.hists {
+            parts.push(format!(
+                "{k}_p50={:.1}ms p99={:.1}ms",
+                h.quantile(0.5) * 1e3,
+                h.quantile(0.99) * 1e3
+            ));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.inc("steps", 1);
+        m.inc("steps", 2);
+        m.gauge("loss", 3.25);
+        assert_eq!(m.counter("steps"), 3);
+        let s = m.summary();
+        assert!(s.contains("steps=3"));
+        assert!(s.contains("loss=3.25"));
+    }
+
+    #[test]
+    fn timers_average() {
+        let mut m = Metrics::new();
+        m.time("step", 0.1);
+        m.time("step", 0.3);
+        assert!((m.mean_time("step") - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.latency("req", i as f64 / 1000.0);
+        }
+        assert!(m.quantile("req", 0.5) > 0.0);
+        assert!(m.quantile("req", 0.99) >= m.quantile("req", 0.5));
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the framework around the paper's attention.
+//!
+//! * `trainer` — threaded data pipeline + AOT train-step driver
+//! * `server` — inference service with a dynamic batcher
+//! * `schedule` — learning-rate schedules (runtime scalars, no recompiles)
+//! * `metrics` — counters/timers/latency histograms
+//! * `checkpoint` — self-describing binary param/optimizer snapshots
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod schedule;
+pub mod server;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::RunConfig;
+pub use metrics::Metrics;
+pub use schedule::LrSchedule;
+pub use trainer::{
+    spawn_cls_source, spawn_lm_source, spawn_source_for, BatchChannel, EvalResult, TrainOptions,
+    TrainReport, Trainer,
+};

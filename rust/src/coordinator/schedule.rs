@@ -1,0 +1,117 @@
+//! Learning-rate schedules driven from the rust side: the AOT train-step
+//! artifact takes `lr` as a runtime scalar, so scheduling stays a pure
+//! coordinator concern (no recompilation to change schedule).
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant {
+        lr: f64,
+    },
+    /// Linear warmup to `peak` over `warmup` steps, then cosine decay to
+    /// `floor` at `total` steps.
+    WarmupCosine {
+        warmup: usize,
+        total: usize,
+        peak: f64,
+        floor: f64,
+    },
+    /// Linear warmup then inverse-sqrt decay (the original Transformer
+    /// schedule, used by the paper's Flax baseline).
+    WarmupInvSqrt {
+        warmup: usize,
+        peak: f64,
+    },
+}
+
+impl LrSchedule {
+    /// Learning rate at 1-based step `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        let t = t.max(1);
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::WarmupCosine {
+                warmup,
+                total,
+                peak,
+                floor,
+            } => {
+                if t <= warmup {
+                    peak * t as f64 / warmup.max(1) as f64
+                } else if t >= total {
+                    floor
+                } else {
+                    let frac = (t - warmup) as f64 / (total - warmup).max(1) as f64;
+                    floor + 0.5 * (peak - floor) * (1.0 + (std::f64::consts::PI * frac).cos())
+                }
+            }
+            LrSchedule::WarmupInvSqrt { warmup, peak } => {
+                if t <= warmup {
+                    peak * t as f64 / warmup.max(1) as f64
+                } else {
+                    peak * (warmup as f64 / t as f64).sqrt()
+                }
+            }
+        }
+    }
+
+    pub fn parse(spec: &str, steps: usize, peak: f64) -> LrSchedule {
+        match spec {
+            "constant" => LrSchedule::Constant { lr: peak },
+            "invsqrt" => LrSchedule::WarmupInvSqrt {
+                warmup: (steps / 10).max(10),
+                peak,
+            },
+            _ => LrSchedule::WarmupCosine {
+                warmup: (steps / 10).max(10),
+                total: steps,
+                peak,
+                floor: peak * 0.05,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::WarmupCosine {
+            warmup: 100,
+            total: 1000,
+            peak: 1.0,
+            floor: 0.0,
+        };
+        assert!((s.at(50) - 0.5).abs() < 1e-9);
+        assert!((s.at(100) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::WarmupCosine {
+            warmup: 10,
+            total: 100,
+            peak: 1.0,
+            floor: 0.1,
+        };
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+        assert!(s.at(55) < 1.0 && s.at(55) > 0.1);
+        // monotone decreasing after warmup
+        let mut prev = s.at(10);
+        for t in 11..=100 {
+            let cur = s.at(t);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn invsqrt_halves_at_4x_warmup() {
+        let s = LrSchedule::WarmupInvSqrt {
+            warmup: 100,
+            peak: 2.0,
+        };
+        assert!((s.at(400) - 1.0).abs() < 1e-9);
+    }
+}

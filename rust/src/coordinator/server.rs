@@ -1,0 +1,290 @@
+//! Inference server: request queue → dynamic batcher → PJRT worker.
+//!
+//! The worker thread owns the Engine (xla types are !Send) and the model
+//! parameters; callers submit token sequences from any thread and get a
+//! oneshot receiver for the result.  The batcher groups requests up to
+//! the artifact's static batch size, waiting at most `max_wait` after
+//! the first request arrives — the standard latency/throughput knob —
+//! and pads partial batches (the model's mask keeps padding inert).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::{Engine, HostTensor, Manifest};
+
+pub struct ServeOptions {
+    pub max_wait: Duration,
+    pub seed: i32,
+    /// load parameters from a checkpoint instead of fresh init
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(5),
+            seed: 42,
+            checkpoint: None,
+        }
+    }
+}
+
+/// A single inference request: one token sequence (padded server-side).
+struct Request {
+    tokens: Vec<i32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Result<Response, String>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// logits for this sequence: [seq_len, n_out] (LM) or [n_classes] (cls)
+    pub logits: Vec<f32>,
+    pub queue_secs: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub exec_mean: f64,
+}
+
+pub struct ServerHandle {
+    tx: Option<mpsc::Sender<Request>>,
+    worker: Option<thread::JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    ready: Arc<AtomicBool>,
+    pub seq_len: usize,
+}
+
+impl ServerHandle {
+    /// Submit one sequence; returns a receiver for the response.
+    pub fn submit(&self, tokens: Vec<i32>) -> mpsc::Receiver<Result<Response, String>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            tokens,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        if let Some(q) = &self.tx {
+            // a send error means the worker died; the caller sees a closed rx
+            let _ = q.send(req);
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        self.submit(tokens)
+            .recv()
+            .context("server worker gone")?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::SeqCst)
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if self.is_ready() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        self.is_ready()
+    }
+
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Start serving a model's `fwd` artifact.
+pub fn start(
+    artifacts_dir: std::path::PathBuf,
+    model_name: String,
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
+    // validate the model exists before spawning (nice error for callers)
+    let manifest = Manifest::load(&artifacts_dir)?;
+    let entry = manifest.model(&model_name)?;
+    if entry.config.dual_encoder {
+        bail!("serving dual-encoder models is not supported");
+    }
+    let seq_len = entry.config.max_len;
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let stats = Arc::new(Mutex::new(ServerStats::default()));
+    let ready = Arc::new(AtomicBool::new(false));
+    let stats_w = stats.clone();
+    let ready_w = ready.clone();
+
+    let worker = thread::Builder::new()
+        .name("htx-server".into())
+        .spawn(move || {
+            if let Err(e) = worker_loop(
+                artifacts_dir,
+                &model_name,
+                opts,
+                rx,
+                stats_w,
+                ready_w,
+            ) {
+                eprintln!("server worker error: {e:#}");
+            }
+        })
+        .context("spawning server worker")?;
+
+    Ok(ServerHandle {
+        tx: Some(tx),
+        worker: Some(worker),
+        stats,
+        ready,
+        seq_len,
+    })
+}
+
+fn worker_loop(
+    artifacts_dir: std::path::PathBuf,
+    model_name: &str,
+    opts: ServeOptions,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<Mutex<ServerStats>>,
+    ready: Arc<AtomicBool>,
+) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir)?;
+    let model = manifest.model(model_name)?.clone();
+    let mut engine = Engine::cpu()?;
+    let fwd_sig = model.artifacts.get("fwd").context("no fwd artifact")?;
+    let fwd = engine.load(&format!("{model_name}.fwd"), fwd_sig)?;
+    let init_sig = model.artifacts.get("init").context("no init artifact")?;
+    let init = engine.load(&format!("{model_name}.init"), init_sig)?;
+
+    let mut params = init.run(&[HostTensor::scalar_i32(opts.seed)])?;
+    if let Some(ck) = &opts.checkpoint {
+        let ckpt = crate::coordinator::checkpoint::Checkpoint::load(ck)?;
+        let by_name = ckpt.by_name();
+        for (i, (name, _)) in model.params.iter().enumerate() {
+            if let Some(t) = by_name.get(format!("p.{name}").as_str()) {
+                params[i] = (*t).clone();
+            }
+        }
+    }
+
+    let is_lm = model.task == "lm";
+    let batch = model.batch;
+    let seq = model.config.max_len;
+    let mut metrics = Metrics::new();
+    ready.store(true, Ordering::SeqCst);
+
+    loop {
+        // block for the first request; drain/wait for more up to max_wait
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // all senders dropped: shutdown
+        };
+        let mut group = vec![first];
+        let deadline = Instant::now() + opts.max_wait;
+        while group.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => group.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // assemble the padded batch
+        let mut tokens = vec![0i32; batch * seq];
+        let mut mask = vec![0f32; batch * seq];
+        for (b, req) in group.iter().enumerate() {
+            for (i, &t) in req.tokens.iter().take(seq).enumerate() {
+                tokens[b * seq + i] = t;
+                mask[b * seq + i] = 1.0;
+            }
+        }
+        let tok_t = HostTensor::i32(vec![batch, seq], tokens);
+        let mask_t = HostTensor::f32(vec![batch, seq], mask);
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.push(&tok_t);
+        if !is_lm {
+            inputs.push(&mask_t);
+        }
+
+        let t0 = Instant::now();
+        let result = fwd.run_refs(&inputs);
+        let exec = t0.elapsed().as_secs_f64();
+        metrics.time("exec", exec);
+
+        // publish stats *before* releasing responses so callers that read
+        // stats after their response see this batch accounted for
+        metrics.inc("served", group.len() as u64);
+        metrics.inc("batches", 1);
+        for req in &group {
+            metrics.latency("latency", req.submitted.elapsed().as_secs_f64());
+        }
+        {
+            let mut s = stats.lock().unwrap();
+            s.served = metrics.counter("served");
+            s.batches = metrics.counter("batches");
+            s.mean_batch_fill = s.served as f64 / (s.batches as f64 * batch as f64);
+            s.p50_latency = metrics.quantile("latency", 0.5);
+            s.p99_latency = metrics.quantile("latency", 0.99);
+            s.exec_mean = metrics.mean_time("exec");
+        }
+
+        match result {
+            Ok(out) => {
+                let logits = &out[0];
+                let data = logits.as_f32().unwrap_or(&[]);
+                let per_row = data.len() / batch;
+                for (b, req) in group.iter().enumerate() {
+                    let q = req.submitted.elapsed().as_secs_f64();
+                    let _ = req.resp.send(Ok(Response {
+                        logits: data[b * per_row..(b + 1) * per_row].to_vec(),
+                        queue_secs: q,
+                        batch_size: group.len(),
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in &group {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}

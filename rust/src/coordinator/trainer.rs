@@ -1,0 +1,398 @@
+//! Training orchestrator: drives AOT-compiled train-step programs with a
+//! threaded data pipeline, LR scheduling, metrics, eval and checkpoints.
+//!
+//! Threading model: xla types are !Send, so the `Trainer` (and its
+//! `Engine`) live on the caller's thread; data generation runs on
+//! background worker threads feeding a bounded channel of `HostTensor`
+//! batches (which are Send).  Python is never involved — batches are
+//! produced by the rust generators in `crate::data`.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::schedule::LrSchedule;
+use crate::data;
+use crate::data::lm::LmCorpus;
+use crate::runtime::{Engine, Executable, HostTensor, Manifest, ModelEntry};
+use crate::util::Rng;
+
+/// Task-specific tail inputs for one step (everything after params/m/v/
+/// step/lr in the train artifact signature).
+pub type BatchTensors = Vec<HostTensor>;
+
+/// A prefetching batch source backed by a worker thread.
+pub struct BatchChannel {
+    rx: mpsc::Receiver<BatchTensors>,
+    _worker: thread::JoinHandle<()>,
+}
+
+impl BatchChannel {
+    pub fn recv(&self) -> Result<BatchTensors> {
+        self.rx.recv().context("data worker hung up")
+    }
+}
+
+/// Spawn an LM batch producer: tokens [B, L] from the synthetic corpus.
+pub fn spawn_lm_source(
+    vocab_size: usize,
+    batch: usize,
+    seq_len: usize,
+    seed: u64,
+    depth: usize,
+) -> BatchChannel {
+    let (tx, rx) = mpsc::sync_channel(depth);
+    let worker = thread::spawn(move || {
+        let corpus = LmCorpus::new(vocab_size);
+        let mut rng = Rng::new(seed);
+        loop {
+            let b = corpus.batch(&mut rng, batch, seq_len);
+            let t = HostTensor::i32(vec![batch, seq_len], b.tokens);
+            if tx.send(vec![t]).is_err() {
+                return; // trainer dropped
+            }
+        }
+    });
+    BatchChannel {
+        rx,
+        _worker: worker,
+    }
+}
+
+/// Spawn a classification batch producer for an LRA task:
+/// [tokens, mask, labels] (+ [tokens2, mask2] for dual-encoder tasks).
+pub fn spawn_cls_source(
+    task: String,
+    batch: usize,
+    seq_len: usize,
+    seed: u64,
+    depth: usize,
+) -> BatchChannel {
+    let (tx, rx) = mpsc::sync_channel(depth);
+    let worker = thread::spawn(move || {
+        let gen = data::make_task(&task, seq_len);
+        let mut rng = Rng::new(seed);
+        loop {
+            let b = gen.batch(&mut rng, batch);
+            let mut out = vec![
+                HostTensor::i32(vec![batch, seq_len], b.tokens),
+                HostTensor::f32(vec![batch, seq_len], b.mask),
+                HostTensor::i32(vec![batch], b.labels),
+            ];
+            if let (Some(t2), Some(m2)) = (b.tokens2, b.mask2) {
+                out.push(HostTensor::i32(vec![batch, seq_len], t2));
+                out.push(HostTensor::f32(vec![batch, seq_len], m2));
+            }
+            if tx.send(out).is_err() {
+                return;
+            }
+        }
+    });
+    BatchChannel {
+        rx,
+        _worker: worker,
+    }
+}
+
+/// Spawn the right source for a manifest model.
+pub fn spawn_source_for(model: &ModelEntry, seed: u64, depth: usize) -> BatchChannel {
+    if model.task == "lm" {
+        spawn_lm_source(
+            model.config.vocab_size,
+            model.batch,
+            model.config.max_len,
+            seed,
+            depth,
+        )
+    } else {
+        spawn_cls_source(
+            model.task.clone(),
+            model.batch,
+            model.config.max_len,
+            seed,
+            depth,
+        )
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 100,
+            schedule: LrSchedule::Constant { lr: 1e-3 },
+            seed: 42,
+            log_every: 10,
+            eval_every: 0,
+            eval_batches: 4,
+            checkpoint_path: None,
+            verbose: true,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub evals: Vec<(usize, EvalResult)>,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub final_loss: f32,
+}
+
+/// Eval output: LM reports (perplexity); classifiers (loss, accuracy).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub mean_nll: f64,
+    /// accuracy for classifiers; exp(mean_nll)=ppl is derived for LMs
+    pub accuracy: f64,
+}
+
+impl EvalResult {
+    pub fn perplexity(&self) -> f64 {
+        self.mean_nll.exp()
+    }
+}
+
+/// The training driver for one model.
+pub struct Trainer {
+    pub model: ModelEntry,
+    engine: Engine,
+    train_exe: std::rc::Rc<Executable>,
+    eval_exe: std::rc::Rc<Executable>,
+    pub params: Vec<HostTensor>,
+    pub opt_m: Vec<HostTensor>,
+    pub opt_v: Vec<HostTensor>,
+    pub step: usize,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    pub fn new(manifest: &Manifest, model_name: &str, seed: i32) -> Result<Trainer> {
+        let model = manifest.model(model_name)?.clone();
+        let mut engine = Engine::cpu()?;
+        let init_sig = model
+            .artifacts
+            .get("init")
+            .context("model has no init artifact")?;
+        let train_sig = model
+            .artifacts
+            .get("train")
+            .context("model has no train artifact")?;
+        let eval_sig = model
+            .artifacts
+            .get("eval")
+            .context("model has no eval artifact")?;
+        let init_exe = engine.load(&format!("{model_name}.init"), init_sig)?;
+        let train_exe = engine.load(&format!("{model_name}.train"), train_sig)?;
+        let eval_exe = engine.load(&format!("{model_name}.eval"), eval_sig)?;
+
+        // initialise parameters on-device from the seed
+        let params = init_exe.run(&[HostTensor::scalar_i32(seed)])?;
+        if params.len() != model.params.len() {
+            bail!(
+                "init produced {} tensors, manifest lists {}",
+                params.len(),
+                model.params.len()
+            );
+        }
+        let opt_m: Vec<HostTensor> = train_exe.sig.inputs[..params.len()]
+            .iter()
+            .map(HostTensor::zeros_like_spec)
+            .collect();
+        let opt_v = opt_m.clone();
+
+        Ok(Trainer {
+            model,
+            engine,
+            train_exe,
+            eval_exe,
+            params,
+            opt_m,
+            opt_v,
+            step: 0,
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.model.param_count
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn train_step(&mut self, batch: &[HostTensor], lr: f32) -> Result<f32> {
+        self.step += 1;
+        let np = self.params.len();
+        let step_t = HostTensor::scalar_i32(self.step as i32);
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(3 * np + 2 + batch.len());
+        inputs.extend(self.params.iter());
+        inputs.extend(self.opt_m.iter());
+        inputs.extend(self.opt_v.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.extend(batch.iter());
+
+        let t0 = Instant::now();
+        let mut out = self.train_exe.run_refs(&inputs)?;
+        self.metrics.time("train_step", t0.elapsed().as_secs_f64());
+
+        if out.len() != 3 * np + 1 {
+            bail!("train step returned {} outputs, expected {}", out.len(), 3 * np + 1);
+        }
+        let loss = out.pop().unwrap().scalar_value_f32()?;
+        let v_new: Vec<HostTensor> = out.drain(2 * np..).collect();
+        let m_new: Vec<HostTensor> = out.drain(np..).collect();
+        self.params = out;
+        self.opt_m = m_new;
+        self.opt_v = v_new;
+        self.metrics.inc("steps", 1);
+        self.metrics.gauge("loss", loss as f64);
+        Ok(loss)
+    }
+
+    /// Evaluate over `n_batches` from `src`.
+    pub fn evaluate(&mut self, src: &BatchChannel, n_batches: usize) -> Result<EvalResult> {
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..n_batches {
+            let batch = src.recv()?;
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(self.params.len() + batch.len());
+            inputs.extend(self.params.iter());
+            inputs.extend(batch.iter());
+            let out = self.eval_exe.run_refs(&inputs)?;
+            sum += out[0].scalar_value_f32()? as f64;
+            count += out[1].scalar_value_f32()? as f64;
+        }
+        // LM: (nll_sum, token_count); classifier: (nll_sum, correct_count)
+        if self.model.task == "lm" {
+            Ok(EvalResult {
+                mean_nll: sum / count.max(1.0),
+                accuracy: 0.0,
+            })
+        } else {
+            let total = (n_batches * self.model.batch) as f64;
+            Ok(EvalResult {
+                mean_nll: sum / total,
+                accuracy: count / total,
+            })
+        }
+    }
+
+    /// Full training run with logging/eval/checkpointing.
+    pub fn run(
+        &mut self,
+        train_src: &BatchChannel,
+        eval_src: Option<&BatchChannel>,
+        opts: &TrainOptions,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        let t0 = Instant::now();
+        let mut last_loss = f32::NAN;
+        for s in 1..=opts.steps {
+            let batch = train_src.recv()?;
+            let lr = opts.schedule.at(s) as f32;
+            let loss = self.train_step(&batch, lr)?;
+            last_loss = loss;
+            if s % opts.log_every == 0 || s == 1 || s == opts.steps {
+                report.losses.push((s, loss));
+                if opts.verbose {
+                    let sps = s as f64 / t0.elapsed().as_secs_f64();
+                    println!(
+                        "step {s:>6} | loss {loss:>8.4} | lr {lr:.2e} | {:.2} steps/s",
+                        sps
+                    );
+                }
+            }
+            if opts.eval_every > 0 && s % opts.eval_every == 0 {
+                if let Some(es) = eval_src {
+                    let ev = self.evaluate(es, opts.eval_batches)?;
+                    if opts.verbose {
+                        if self.model.task == "lm" {
+                            println!("  eval @ {s}: ppl {:.3}", ev.perplexity());
+                        } else {
+                            println!(
+                                "  eval @ {s}: loss {:.4} acc {:.3}",
+                                ev.mean_nll, ev.accuracy
+                            );
+                        }
+                    }
+                    report.evals.push((s, ev));
+                }
+            }
+        }
+        if let Some(path) = &opts.checkpoint_path {
+            self.save_checkpoint(path)?;
+        }
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        report.steps_per_sec = opts.steps as f64 / report.wall_secs;
+        report.final_loss = last_loss;
+        Ok(report)
+    }
+
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let mut tensors = Vec::new();
+        for ((name, _), t) in self.model.params.iter().zip(&self.params) {
+            tensors.push((format!("p.{name}"), t.clone()));
+        }
+        for ((name, _), t) in self.model.params.iter().zip(&self.opt_m) {
+            tensors.push((format!("m.{name}"), t.clone()));
+        }
+        for ((name, _), t) in self.model.params.iter().zip(&self.opt_v) {
+            tensors.push((format!("v.{name}"), t.clone()));
+        }
+        Checkpoint {
+            model: self.model.name.clone(),
+            step: self.step as i32,
+            tensors,
+        }
+        .save(path)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let ckpt = Checkpoint::load(path)?;
+        if ckpt.model != self.model.name {
+            bail!(
+                "checkpoint is for model {:?}, trainer is {:?}",
+                ckpt.model,
+                self.model.name
+            );
+        }
+        let by_name = ckpt.by_name();
+        for (i, (name, _)) in self.model.params.iter().enumerate() {
+            let p = by_name
+                .get(format!("p.{name}").as_str())
+                .with_context(|| format!("checkpoint missing p.{name}"))?;
+            self.params[i] = (*p).clone();
+            if let Some(m) = by_name.get(format!("m.{name}").as_str()) {
+                self.opt_m[i] = (*m).clone();
+            }
+            if let Some(v) = by_name.get(format!("v.{name}").as_str()) {
+                self.opt_v[i] = (*v).clone();
+            }
+        }
+        self.step = ckpt.step as usize;
+        Ok(())
+    }
+
+    /// Borrow the engine for ad-hoc artifact execution (benches).
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}

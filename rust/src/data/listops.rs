@@ -1,0 +1,277 @@
+//! ListOps generator (Nangia & Bowman 2018) — the LRA task that "tests
+//! the ability to reason hierarchically" (paper §8.1).
+//!
+//! Expressions are bracketed prefix operators over digits, e.g.
+//! `[MAX 4 [MIN 2 3] 0 9]`; the label is the value of the expression
+//! (0..9, ten classes).  Operators: MAX, MIN, MED (median, floor) and
+//! SM (sum modulo 10) — the original task's operator set.
+//!
+//! The generator builds random trees under a token budget, so labels are
+//! exact by construction (the expression is *evaluated*, not sampled).
+
+use super::{ClsTask, Example};
+use crate::util::Rng;
+
+// token ids (0 = PAD is reserved by the models)
+pub const PAD: i32 = 0;
+pub const OPEN_MAX: i32 = 1;
+pub const OPEN_MIN: i32 = 2;
+pub const OPEN_MED: i32 = 3;
+pub const OPEN_SM: i32 = 4;
+pub const CLOSE: i32 = 5;
+pub const DIGIT0: i32 = 6; // digits are 6..=15
+pub const VOCAB: usize = 16;
+
+#[derive(Clone, Debug)]
+pub enum Node {
+    Leaf(u8),
+    Op(OpKind, Vec<Node>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Max,
+    Min,
+    Med,
+    SumMod,
+}
+
+impl OpKind {
+    fn open_token(&self) -> i32 {
+        match self {
+            OpKind::Max => OPEN_MAX,
+            OpKind::Min => OPEN_MIN,
+            OpKind::Med => OPEN_MED,
+            OpKind::SumMod => OPEN_SM,
+        }
+    }
+}
+
+impl Node {
+    pub fn eval(&self) -> u8 {
+        match self {
+            Node::Leaf(v) => *v,
+            Node::Op(op, args) => {
+                let mut vals: Vec<u8> = args.iter().map(|a| a.eval()).collect();
+                match op {
+                    OpKind::Max => *vals.iter().max().unwrap(),
+                    OpKind::Min => *vals.iter().min().unwrap(),
+                    OpKind::Med => {
+                        vals.sort_unstable();
+                        vals[(vals.len() - 1) / 2]
+                    }
+                    OpKind::SumMod => {
+                        (vals.iter().map(|&v| v as u32).sum::<u32>() % 10) as u8
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn tokens(&self, out: &mut Vec<i32>) {
+        match self {
+            Node::Leaf(v) => out.push(DIGIT0 + *v as i32),
+            Node::Op(op, args) => {
+                out.push(op.open_token());
+                for a in args {
+                    a.tokens(out);
+                }
+                out.push(CLOSE);
+            }
+        }
+    }
+
+    pub fn token_len(&self) -> usize {
+        match self {
+            Node::Leaf(_) => 1,
+            Node::Op(_, args) => 2 + args.iter().map(|a| a.token_len()).sum::<usize>(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        match self {
+            Node::Leaf(_) => 0,
+            Node::Op(_, args) => 1 + args.iter().map(|a| a.depth()).max().unwrap_or(0),
+        }
+    }
+}
+
+pub struct ListOps {
+    pub seq_len: usize,
+    pub max_depth: usize,
+    pub max_args: usize,
+}
+
+impl ListOps {
+    pub fn new(seq_len: usize) -> Self {
+        Self {
+            seq_len,
+            max_depth: 10,
+            max_args: 5,
+        }
+    }
+
+    /// Sample a tree whose token serialisation fits in `budget`.
+    pub fn gen_tree(&self, rng: &mut Rng, budget: usize, depth: usize) -> Node {
+        // an op node needs at least 2 (brackets) + 2 leaves worth of budget
+        if depth >= self.max_depth || budget < 6 || rng.chance(0.25) {
+            return Node::Leaf(rng.below(10) as u8);
+        }
+        let op = *rng.choice(&[OpKind::Max, OpKind::Min, OpKind::Med, OpKind::SumMod]);
+        let n_args = 2 + rng.usize_below(self.max_args - 1);
+        let mut remaining = budget - 2;
+        let mut args = Vec::with_capacity(n_args);
+        for i in 0..n_args {
+            let slots_left = n_args - i;
+            // leave at least one token per remaining arg
+            let arg_budget = if slots_left == 1 {
+                remaining
+            } else {
+                let max_share = remaining.saturating_sub(slots_left - 1);
+                1 + rng.usize_below(max_share.max(1))
+            };
+            let a = self.gen_tree(rng, arg_budget.max(1), depth + 1);
+            remaining = remaining.saturating_sub(a.token_len());
+            args.push(a);
+            if remaining == 0 && i + 1 < n_args {
+                args.push(Node::Leaf(rng.below(10) as u8));
+                break;
+            }
+        }
+        Node::Op(op, args)
+    }
+}
+
+impl ClsTask for ListOps {
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+
+    fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        // aim for expressions that use most of the budget (long-context)
+        let budget = self.seq_len * 3 / 4 + rng.usize_below(self.seq_len / 4);
+        let tree = loop {
+            let t = self.gen_tree(rng, budget, 0);
+            if matches!(t, Node::Op(..)) {
+                break t;
+            }
+        };
+        let mut tokens = Vec::with_capacity(tree.token_len());
+        tree.tokens(&mut tokens);
+        tokens.truncate(self.seq_len);
+        Example::single(tokens, tree.eval() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn eval_known_expressions() {
+        // [MAX 4 [MIN 2 3] 0 9] = 9
+        let t = Node::Op(
+            OpKind::Max,
+            vec![
+                Node::Leaf(4),
+                Node::Op(OpKind::Min, vec![Node::Leaf(2), Node::Leaf(3)]),
+                Node::Leaf(0),
+                Node::Leaf(9),
+            ],
+        );
+        assert_eq!(t.eval(), 9);
+        // [SM 5 6 7] = 18 % 10 = 8
+        let t = Node::Op(
+            OpKind::SumMod,
+            vec![Node::Leaf(5), Node::Leaf(6), Node::Leaf(7)],
+        );
+        assert_eq!(t.eval(), 8);
+        // [MED 3 1 9] = 3
+        let t = Node::Op(
+            OpKind::Med,
+            vec![Node::Leaf(3), Node::Leaf(1), Node::Leaf(9)],
+        );
+        assert_eq!(t.eval(), 3);
+    }
+
+    #[test]
+    fn med_of_even_count_takes_lower() {
+        let t = Node::Op(
+            OpKind::Med,
+            vec![Node::Leaf(1), Node::Leaf(2), Node::Leaf(3), Node::Leaf(4)],
+        );
+        assert_eq!(t.eval(), 2);
+    }
+
+    #[test]
+    fn serialisation_is_balanced() {
+        forall(
+            40,
+            |r| r.next_u64(),
+            |&seed| {
+                let gen = ListOps::new(256);
+                let mut rng = Rng::new(seed);
+                let tree = gen.gen_tree(&mut rng, 200, 0);
+                let mut toks = Vec::new();
+                tree.tokens(&mut toks);
+                if toks.len() != tree.token_len() {
+                    return Err(format!("len {} != {}", toks.len(), tree.token_len()));
+                }
+                let mut depth = 0i32;
+                for &t in &toks {
+                    if (OPEN_MAX..=OPEN_SM).contains(&t) {
+                        depth += 1;
+                    } else if t == CLOSE {
+                        depth -= 1;
+                        if depth < 0 {
+                            return Err("unbalanced".into());
+                        }
+                    }
+                }
+                if depth != 0 {
+                    return Err(format!("depth {depth}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn trees_respect_budget() {
+        let gen = ListOps::new(512);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let tree = gen.gen_tree(&mut rng, 400, 0);
+            assert!(
+                tree.token_len() <= 440,
+                "tree of {} tokens exceeds budget by too much",
+                tree.token_len()
+            );
+        }
+    }
+
+    #[test]
+    fn labels_span_classes() {
+        let gen = ListOps::new(256);
+        let mut rng = Rng::new(6);
+        let mut seen = [false; 10];
+        for _ in 0..300 {
+            let ex = gen.sample(&mut rng);
+            seen[ex.label as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8, "{seen:?}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Language-modelling corpus — One-Billion-Word surrogate (Table 2).
+//!
+//! A synthetic "language" with enough structure that perplexity is a
+//! meaningful, model-separating metric: a first-order template grammar
+//! over part-of-speech classes (DET → ADJ* → NOUN → VERB → ...) where
+//! each class owns a Zipf-distributed word inventory, plus topic
+//! persistence — a document-level topic biases noun/verb choice, so a
+//! model that carries long-range context (the paper's claim) achieves
+//! measurably lower perplexity than one that cannot.
+//!
+//! Token ids: 0 = PAD, 1 = BOS, 2 = EOS(.), words start at 3.
+
+use crate::util::rng::zipf_cdf;
+use crate::util::Rng;
+
+use super::LmBatch;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const FIRST_WORD: i32 = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Pos {
+    Det,
+    Adj,
+    Noun,
+    Verb,
+    Adv,
+    Prep,
+    End,
+}
+
+/// Per-class word inventory carved out of the vocab space.
+struct ClassWords {
+    base: i32,
+    cdf: Vec<f64>,
+}
+
+pub struct LmCorpus {
+    pub vocab_size: usize,
+    pub n_topics: usize,
+    det: ClassWords,
+    adj: ClassWords,
+    noun: ClassWords,
+    verb: ClassWords,
+    adv: ClassWords,
+    prep: ClassWords,
+    /// words per topic within noun/verb inventories
+    topic_span: usize,
+}
+
+impl LmCorpus {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size >= 512, "vocab too small for the grammar");
+        let budget = vocab_size as i32 - FIRST_WORD;
+        // carve the vocab: small closed classes, large open classes
+        let n_det = 8;
+        let n_prep = 16;
+        let n_adv = (budget / 16).max(8);
+        let n_adj = (budget / 8).max(16);
+        let open = budget - n_det - n_prep - n_adv - n_adj;
+        let n_noun = open / 2;
+        let n_verb = open - n_noun;
+        let mut base = FIRST_WORD;
+        let mut make = |n: i32, s: f64| {
+            let cw = ClassWords {
+                base,
+                cdf: zipf_cdf(n as usize, s),
+            };
+            base += n;
+            cw
+        };
+        let det = make(n_det, 1.0);
+        let prep = make(n_prep, 1.0);
+        let adv = make(n_adv, 1.1);
+        let adj = make(n_adj, 1.1);
+        let noun = make(n_noun, 1.05);
+        let verb = make(n_verb, 1.05);
+        Self {
+            vocab_size,
+            n_topics: 8,
+            det,
+            adj,
+            noun,
+            verb,
+            adv,
+            prep,
+            topic_span: (n_noun as usize) / 8,
+        }
+    }
+
+    fn draw(&self, cw: &ClassWords, rng: &mut Rng) -> i32 {
+        cw.base + rng.zipf(&cw.cdf) as i32
+    }
+
+    /// Topic-conditioned draw: restrict to the topic's slice of the
+    /// inventory with high probability.
+    fn draw_topical(&self, cw: &ClassWords, topic: usize, rng: &mut Rng) -> i32 {
+        if rng.chance(0.7) {
+            let span = self.topic_span.min(cw.cdf.len());
+            let lo = (topic * span) % cw.cdf.len().max(1);
+            cw.base + ((lo + rng.usize_below(span.max(1))) % cw.cdf.len()) as i32
+        } else {
+            self.draw(cw, rng)
+        }
+    }
+
+    /// Generate one sentence of word ids (no BOS/EOS).
+    fn sentence(&self, topic: usize, rng: &mut Rng, out: &mut Vec<i32>) {
+        let mut pos = Pos::Det;
+        let mut clauses = 0;
+        loop {
+            match pos {
+                Pos::Det => {
+                    out.push(self.draw(&self.det, rng));
+                    pos = if rng.chance(0.4) { Pos::Adj } else { Pos::Noun };
+                }
+                Pos::Adj => {
+                    out.push(self.draw(&self.adj, rng));
+                    pos = if rng.chance(0.2) { Pos::Adj } else { Pos::Noun };
+                }
+                Pos::Noun => {
+                    out.push(self.draw_topical(&self.noun, topic, rng));
+                    pos = if clauses == 0 {
+                        Pos::Verb
+                    } else if rng.chance(0.5) {
+                        Pos::Verb
+                    } else {
+                        Pos::End
+                    };
+                }
+                Pos::Verb => {
+                    out.push(self.draw_topical(&self.verb, topic, rng));
+                    clauses += 1;
+                    pos = if rng.chance(0.3) {
+                        Pos::Adv
+                    } else if rng.chance(0.5) && clauses < 3 {
+                        Pos::Prep
+                    } else {
+                        Pos::End
+                    };
+                }
+                Pos::Adv => {
+                    out.push(self.draw(&self.adv, rng));
+                    pos = if rng.chance(0.4) && clauses < 3 {
+                        Pos::Prep
+                    } else {
+                        Pos::End
+                    };
+                }
+                Pos::Prep => {
+                    out.push(self.draw(&self.prep, rng));
+                    pos = Pos::Det;
+                }
+                Pos::End => {
+                    out.push(EOS);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Fill a [batch, seq_len] token matrix: each row is a fresh document
+    /// (BOS + topic-coherent sentences), truncated/padded to seq_len.
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq_len: usize) -> LmBatch {
+        let mut tokens = vec![PAD; batch * seq_len];
+        for b in 0..batch {
+            let topic = rng.usize_below(self.n_topics);
+            let mut doc = vec![BOS];
+            while doc.len() < seq_len {
+                self.sentence(topic, rng, &mut doc);
+            }
+            doc.truncate(seq_len);
+            tokens[b * seq_len..(b + 1) * seq_len].copy_from_slice(&doc);
+        }
+        LmBatch {
+            tokens,
+            batch,
+            seq_len,
+        }
+    }
+
+    /// Entropy ceiling sanity metric: fraction of tokens that are EOS.
+    pub fn eos_rate(&self, rng: &mut Rng, n: usize) -> f64 {
+        let b = self.batch(rng, 1, n);
+        b.tokens.iter().filter(|&&t| t == EOS).count() as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = LmCorpus::new(4096);
+        let mut rng = Rng::new(60);
+        let b = c.batch(&mut rng, 4, 256);
+        assert_eq!(b.tokens.len(), 4 * 256);
+        for &t in &b.tokens {
+            assert!((0..4096).contains(&t), "token {t}");
+        }
+        // rows start with BOS
+        for row in 0..4 {
+            assert_eq!(b.tokens[row * 256], BOS);
+        }
+    }
+
+    #[test]
+    fn sentences_terminate() {
+        let c = LmCorpus::new(4096);
+        let mut rng = Rng::new(61);
+        for _ in 0..100 {
+            let mut out = Vec::new();
+            c.sentence(0, &mut rng, &mut out);
+            assert!(out.len() >= 3, "sentence too short: {out:?}");
+            assert!(out.len() < 200, "runaway sentence");
+            assert_eq!(*out.last().unwrap(), EOS);
+        }
+    }
+
+    #[test]
+    fn topics_bias_word_choice() {
+        let c = LmCorpus::new(4096);
+        let mut rng = Rng::new(62);
+        // distributions over nouns differ between topics
+        let sample_nouns = |topic: usize, rng: &mut Rng| {
+            let mut counts = std::collections::HashMap::new();
+            for _ in 0..500 {
+                let w = c.draw_topical(&c.noun, topic, rng);
+                *counts.entry(w).or_insert(0usize) += 1;
+            }
+            counts
+        };
+        let a = sample_nouns(0, &mut rng);
+        let b = sample_nouns(3, &mut rng);
+        let shared: usize = a
+            .iter()
+            .filter_map(|(w, &n)| b.get(w).map(|&m| n.min(m)))
+            .sum();
+        assert!(
+            shared < 350,
+            "topic distributions too similar: {shared}/500 overlap"
+        );
+    }
+
+    #[test]
+    fn deterministic_batches() {
+        let c = LmCorpus::new(1024);
+        let b1 = c.batch(&mut Rng::new(63), 2, 128);
+        let b2 = c.batch(&mut Rng::new(63), 2, 128);
+        assert_eq!(b1.tokens, b2.tokens);
+    }
+}

@@ -1,0 +1,177 @@
+//! Pathfinder (LRA) — long-range spatial connectivity, synthetic but
+//! *exact*: "images consisting of two small circles and dash-line paths
+//! that either connect the two circles or not" (paper §8.1).
+//!
+//! The generator draws several smooth random-walk paths on an NxN grid,
+//! marks two endpoints with circles, and labels the image by whether the
+//! two circles terminate the *same* path — exact by construction, no
+//! heuristic labelling.  Dashing removes local continuity so the model
+//! must integrate evidence along the whole path.
+
+use super::{ClsTask, Example};
+use crate::util::Rng;
+
+pub struct Pathfinder {
+    pub side: usize,
+    pub seq_len: usize,
+    pub n_paths: usize,
+}
+
+const INK: i32 = 255;
+const CIRCLE: i32 = 180;
+
+impl Pathfinder {
+    pub fn new(seq_len: usize) -> Self {
+        let side = (seq_len as f64).sqrt().round() as usize;
+        assert_eq!(side * side, seq_len, "pathfinder seq_len must be a square");
+        Self {
+            side,
+            seq_len,
+            n_paths: 3,
+        }
+    }
+
+    /// Smooth random walk of `steps` cells with momentum; returns cells.
+    fn gen_path(&self, rng: &mut Rng, steps: usize) -> Vec<(usize, usize)> {
+        let n = self.side as f64;
+        let mut x = 2.0 + rng.f64() * (n - 4.0);
+        let mut y = 2.0 + rng.f64() * (n - 4.0);
+        let mut angle = rng.f64() * std::f64::consts::TAU;
+        let mut cells = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            cells.push((
+                (y.clamp(0.0, n - 1.0)) as usize,
+                (x.clamp(0.0, n - 1.0)) as usize,
+            ));
+            angle += (rng.f64() - 0.5) * 0.9;
+            x += angle.cos();
+            y += angle.sin();
+            // reflect at borders
+            if x < 1.0 || x > n - 2.0 {
+                angle = std::f64::consts::PI - angle;
+                x = x.clamp(1.0, n - 2.0);
+            }
+            if y < 1.0 || y > n - 2.0 {
+                angle = -angle;
+                y = y.clamp(1.0, n - 2.0);
+            }
+        }
+        cells.dedup();
+        cells
+    }
+
+    fn draw_dashed(&self, img: &mut [i32], cells: &[(usize, usize)], rng: &mut Rng) {
+        // dash pattern: ~3 on, ~2 off, with jitter
+        let mut on = true;
+        let mut run = 0usize;
+        let mut limit = 3;
+        for &(r, c) in cells {
+            if on {
+                img[r * self.side + c] = INK;
+            }
+            run += 1;
+            if run >= limit {
+                run = 0;
+                on = !on;
+                limit = if on { 2 + rng.usize_below(3) } else { 1 + rng.usize_below(2) };
+            }
+        }
+    }
+
+    fn draw_circle(&self, img: &mut [i32], center: (usize, usize)) {
+        let (cr, cc) = (center.0 as i64, center.1 as i64);
+        for dr in -2i64..=2 {
+            for dc in -2i64..=2 {
+                let d2 = dr * dr + dc * dc;
+                if (2..=6).contains(&d2) {
+                    let (r, c) = (cr + dr, cc + dc);
+                    if r >= 0 && c >= 0 && (r as usize) < self.side && (c as usize) < self.side {
+                        img[r as usize * self.side + c as usize] = CIRCLE;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ClsTask for Pathfinder {
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let label = rng.usize_below(2);
+        let steps = self.side * 2;
+        let paths: Vec<Vec<(usize, usize)>> = (0..self.n_paths)
+            .map(|_| loop {
+                let p = self.gen_path(rng, steps);
+                if p.len() >= self.side {
+                    break p;
+                }
+            })
+            .collect();
+        let mut img = vec![0i32; self.seq_len];
+        for p in &paths {
+            self.draw_dashed(&mut img, p, rng);
+        }
+        // endpoints: positive = two ends of path 0; negative = end of
+        // path 0 and end of path 1
+        let (e1, e2) = if label == 1 {
+            (paths[0][0], *paths[0].last().unwrap())
+        } else {
+            (paths[0][0], *paths[1].last().unwrap())
+        };
+        self.draw_circle(&mut img, e1);
+        self.draw_circle(&mut img, e2);
+        Example::single(img, label as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_contains_ink_and_circles() {
+        let t = Pathfinder::new(1024);
+        let mut rng = Rng::new(50);
+        let ex = t.sample(&mut rng);
+        let ink = ex.tokens.iter().filter(|&&p| p == INK).count();
+        let circ = ex.tokens.iter().filter(|&&p| p == CIRCLE).count();
+        assert!(ink > 30, "ink={ink}");
+        assert!(circ > 10, "circle px={circ}");
+    }
+
+    #[test]
+    fn paths_stay_in_bounds() {
+        let t = Pathfinder::new(1024);
+        let mut rng = Rng::new(51);
+        for _ in 0..20 {
+            let p = t.gen_path(&mut rng, 64);
+            for &(r, c) in &p {
+                assert!(r < 32 && c < 32);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_deterministic_with_seed() {
+        let t = Pathfinder::new(1024);
+        let a = t.sample(&mut Rng::new(52));
+        let b = t.sample(&mut Rng::new(52));
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.label, b.label);
+    }
+}

@@ -1,0 +1,151 @@
+//! Document retrieval (LRA "Retrieval") — dual-encoder document-pair
+//! matching, synthetic surrogate.
+//!
+//! Each document embeds a "topic signature": a handful of rare topic
+//! words scattered through an otherwise generic byte stream.  A pair is
+//! positive iff both documents carry the same topic.  Scoring requires
+//! each encoder to aggregate its document's scattered topic evidence
+//! into the pooled representation — the long-range compositional skill
+//! the LRA task measures.
+
+use super::{ClsTask, Example};
+use crate::util::rng::zipf_cdf;
+use crate::util::Rng;
+
+pub struct Retrieval {
+    pub seq_len: usize,
+    cdf: Vec<f64>,
+}
+
+const N_TOPICS: usize = 12;
+const TOPIC_WORDS: usize = 6;
+const TOPIC_RATE: f64 = 0.08;
+const VOCAB_WORDS: usize = 400;
+const SPACE: i32 = 32;
+
+impl Retrieval {
+    pub fn new(seq_len: usize) -> Self {
+        Self {
+            seq_len,
+            cdf: zipf_cdf(VOCAB_WORDS, 1.15),
+        }
+    }
+
+    fn word_bytes(id: usize) -> Vec<i32> {
+        // deterministic word scheme (independent of text_cls so topic
+        // words are disjoint from that task's vocabulary)
+        let mut h = (id as u64).wrapping_mul(0xD1B54A32D192ED03) | 1;
+        let len = 3 + (h % 3) as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            h ^= h >> 29;
+            h = h.wrapping_mul(0x94D049BB133111EB);
+            out.push(b'a' as i32 + (h % 26) as i32);
+        }
+        out
+    }
+
+    fn gen_doc(&self, rng: &mut Rng, topic: usize) -> Vec<i32> {
+        let mut tokens: Vec<i32> = Vec::with_capacity(self.seq_len);
+        while tokens.len() < self.seq_len {
+            let word_id = if rng.chance(TOPIC_RATE) {
+                VOCAB_WORDS + topic * TOPIC_WORDS + rng.usize_below(TOPIC_WORDS)
+            } else {
+                rng.zipf(&self.cdf)
+            };
+            tokens.extend(Self::word_bytes(word_id));
+            tokens.push(SPACE);
+        }
+        tokens.truncate(self.seq_len);
+        tokens
+    }
+}
+
+impl ClsTask for Retrieval {
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let label = rng.usize_below(2);
+        let t1 = rng.usize_below(N_TOPICS);
+        let t2 = if label == 1 {
+            t1
+        } else {
+            // different topic
+            let mut t = rng.usize_below(N_TOPICS - 1);
+            if t >= t1 {
+                t += 1;
+            }
+            t
+        };
+        let doc1 = self.gen_doc(rng, t1);
+        let doc2 = self.gen_doc(rng, t2);
+        Example {
+            tokens: doc1,
+            label: label as i32,
+            tokens2: Some(doc2),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_have_two_documents() {
+        let t = Retrieval::new(256);
+        let mut rng = Rng::new(30);
+        let ex = t.sample(&mut rng);
+        assert!(ex.tokens2.is_some());
+        assert_eq!(ex.tokens.len(), 256);
+        assert_eq!(ex.tokens2.as_ref().unwrap().len(), 256);
+    }
+
+    #[test]
+    fn positive_pairs_share_topic_words() {
+        let t = Retrieval::new(512);
+        let mut rng = Rng::new(31);
+        // a positive pair should share more distinct words than a
+        // negative pair, on average
+        let mut pos_overlap = 0usize;
+        let mut neg_overlap = 0usize;
+        let mut n_pos = 0usize;
+        let mut n_neg = 0usize;
+        for _ in 0..40 {
+            let ex = t.sample(&mut rng);
+            let set1: std::collections::HashSet<&[i32]> =
+                ex.tokens.split(|&b| b == SPACE).collect();
+            let d2 = ex.tokens2.as_ref().unwrap();
+            let set2: std::collections::HashSet<&[i32]> =
+                d2.split(|&b| b == SPACE).collect();
+            let overlap = set1.intersection(&set2).count();
+            if ex.label == 1 {
+                pos_overlap += overlap;
+                n_pos += 1;
+            } else {
+                neg_overlap += overlap;
+                n_neg += 1;
+            }
+        }
+        let pos_avg = pos_overlap as f64 / n_pos.max(1) as f64;
+        let neg_avg = neg_overlap as f64 / n_neg.max(1) as f64;
+        assert!(
+            pos_avg > neg_avg,
+            "positive pairs should overlap more: {pos_avg} vs {neg_avg}"
+        );
+    }
+}

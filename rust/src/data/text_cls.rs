@@ -1,0 +1,136 @@
+//! Byte-level text classification (LRA "Text") — synthetic surrogate.
+//!
+//! The LRA Text task is byte-level IMDB: the classifier must integrate a
+//! weak sentiment signal scattered over a long character sequence.  The
+//! surrogate preserves that structure: documents are byte streams of
+//! "words" from a shared vocabulary; a class-dependent set of *signal
+//! words* is sprinkled at low rate throughout, and — crucially — a
+//! matched sentinel pair (one near the start, one near the end) agrees
+//! with the class.  A model with only local attention sees the sprinkled
+//! words; only long-range attention can combine the sentinels, which is
+//! what separates the full/h1d models from local baselines.
+
+use super::{ClsTask, Example};
+use crate::util::rng::zipf_cdf;
+use crate::util::Rng;
+
+pub struct TextCls {
+    pub seq_len: usize,
+    cdf: Vec<f64>,
+}
+
+const VOCAB_WORDS: usize = 500;
+const SIGNAL_RATE: f64 = 0.05;
+const SPACE: i32 = 32;
+
+impl TextCls {
+    pub fn new(seq_len: usize) -> Self {
+        Self {
+            seq_len,
+            cdf: zipf_cdf(VOCAB_WORDS, 1.2),
+        }
+    }
+
+    /// Deterministic "word" for an id: 2-5 lowercase bytes.
+    fn word_bytes(id: usize) -> Vec<i32> {
+        let mut h = (id as u64).wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let len = 2 + (h % 4) as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51AFD7ED558CCD);
+            out.push(b'a' as i32 + (h % 26) as i32);
+        }
+        out
+    }
+
+    /// Class-specific signal word ids (disjoint per class).
+    fn signal_word(class: usize, idx: usize) -> usize {
+        VOCAB_WORDS + class * 8 + (idx % 8)
+    }
+
+    /// Sentinel word id for a class.
+    fn sentinel(class: usize) -> usize {
+        VOCAB_WORDS + 100 + class
+    }
+}
+
+impl ClsTask for TextCls {
+    fn name(&self) -> &'static str {
+        "text"
+    }
+
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let class = rng.usize_below(2);
+        let mut tokens: Vec<i32> = Vec::with_capacity(self.seq_len);
+        // leading sentinel word in the first ~5% of the document
+        let lead_at = rng.usize_below(self.seq_len / 20 + 1);
+        let tail_at = self.seq_len - self.seq_len / 20
+            + rng.usize_below(self.seq_len / 40 + 1);
+        let mut emitted_lead = false;
+        let mut emitted_tail = false;
+        while tokens.len() < self.seq_len {
+            let pos = tokens.len();
+            let word_id = if !emitted_lead && pos >= lead_at {
+                emitted_lead = true;
+                Self::sentinel(class)
+            } else if !emitted_tail && pos >= tail_at {
+                emitted_tail = true;
+                Self::sentinel(class)
+            } else if rng.chance(SIGNAL_RATE) {
+                Self::signal_word(class, rng.usize_below(8))
+            } else {
+                rng.zipf(&self.cdf)
+            };
+            tokens.extend(Self::word_bytes(word_id));
+            tokens.push(SPACE);
+        }
+        tokens.truncate(self.seq_len);
+        Example::single(tokens, class as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_are_printable_ascii() {
+        let t = TextCls::new(512);
+        let mut rng = Rng::new(21);
+        let ex = t.sample(&mut rng);
+        for &b in &ex.tokens {
+            assert!(b == SPACE || (b'a' as i32..=b'z' as i32).contains(&b));
+        }
+    }
+
+    #[test]
+    fn word_bytes_deterministic_and_distinct() {
+        assert_eq!(TextCls::word_bytes(5), TextCls::word_bytes(5));
+        // sentinels for the two classes differ
+        assert_ne!(
+            TextCls::word_bytes(TextCls::sentinel(0)),
+            TextCls::word_bytes(TextCls::sentinel(1))
+        );
+    }
+
+    #[test]
+    fn documents_fill_budget() {
+        let t = TextCls::new(1024);
+        let mut rng = Rng::new(22);
+        let ex = t.sample(&mut rng);
+        assert_eq!(ex.tokens.len(), 1024);
+    }
+}

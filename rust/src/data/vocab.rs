@@ -1,0 +1,169 @@
+//! Word-level vocabulary / tokenizer for text corpora.
+//!
+//! The One-Billion-Word benchmark tokenises at the word level with a
+//! frequency-cut vocabulary and an <unk> id.  This module provides the
+//! same machinery for the rust-side corpus pipeline: build a vocab from
+//! a token stream by frequency, encode/decode, and persist to a simple
+//! text format — so checkpointed LMs can be served against a stable id
+//! mapping.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+pub const FIRST_FREE_ID: i32 = 4;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from word frequencies: keep the `max_size - 4` most frequent
+    /// words (ties broken lexicographically for determinism).
+    pub fn build<'a, I: IntoIterator<Item = &'a str>>(words: I, max_size: usize) -> Vocab {
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for w in words {
+            *freq.entry(w).or_insert(0) += 1;
+        }
+        let mut ranked: Vec<(&str, u64)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        ranked.truncate(max_size.saturating_sub(FIRST_FREE_ID as usize));
+
+        let mut id_to_word: Vec<String> =
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(), "<unk>".into()];
+        id_to_word.extend(ranked.iter().map(|(w, _)| w.to_string()));
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Vocab {
+            word_to_id,
+            id_to_word,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.is_empty()
+    }
+
+    pub fn encode_word(&self, w: &str) -> i32 {
+        self.word_to_id.get(w).copied().unwrap_or(UNK_ID)
+    }
+
+    pub fn decode(&self, id: i32) -> &str {
+        self.id_to_word
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Encode a whitespace-tokenised sentence with BOS/EOS framing.
+    pub fn encode_sentence(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS_ID];
+        out.extend(text.split_whitespace().map(|w| self.encode_word(w)));
+        out.push(EOS_ID);
+        out
+    }
+
+    pub fn decode_ids(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i >= FIRST_FREE_ID)
+            .map(|&i| self.decode(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Persist: one word per line, line number = id.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating vocab {:?}", path.as_ref()))?;
+        for w in &self.id_to_word {
+            writeln!(f, "{w}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Vocab> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening vocab {:?}", path.as_ref()))?;
+        let id_to_word: Vec<String> = std::io::BufReader::new(f)
+            .lines()
+            .collect::<std::io::Result<_>>()?;
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Ok(Vocab {
+            word_to_id,
+            id_to_word,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_by_frequency_with_specials() {
+        let text = "the cat sat on the mat the cat";
+        let v = Vocab::build(text.split_whitespace(), 8);
+        assert_eq!(v.decode(PAD_ID), "<pad>");
+        assert_eq!(v.decode(UNK_ID), "<unk>");
+        // "the" is most frequent => first free id
+        assert_eq!(v.encode_word("the"), FIRST_FREE_ID);
+        assert_eq!(v.encode_word("cat"), FIRST_FREE_ID + 1);
+        assert_eq!(v.encode_word("zebra"), UNK_ID);
+        assert_eq!(v.len(), 8);
+    }
+
+    #[test]
+    fn frequency_cut_replaces_rare_words_with_unk() {
+        let text = "a a a b b c d e f g";
+        let v = Vocab::build(text.split_whitespace(), 6); // 4 specials + 2 words
+        assert_eq!(v.encode_word("a"), FIRST_FREE_ID);
+        assert_eq!(v.encode_word("b"), FIRST_FREE_ID + 1);
+        assert_eq!(v.encode_word("g"), UNK_ID);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::build("alpha beta gamma alpha".split_whitespace(), 16);
+        let ids = v.encode_sentence("alpha gamma beta");
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(v.decode_ids(&ids), "alpha gamma beta");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let v = Vocab::build("x y z x y x".split_whitespace(), 10);
+        let path = std::env::temp_dir().join(format!("htx_vocab_{}.txt", std::process::id()));
+        v.save(&path).unwrap();
+        let l = Vocab::load(&path).unwrap();
+        assert_eq!(l.len(), v.len());
+        assert_eq!(l.encode_word("x"), v.encode_word("x"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let a = Vocab::build("b a".split_whitespace(), 8);
+        let b = Vocab::build("a b".split_whitespace(), 8);
+        assert_eq!(a.encode_word("a"), b.encode_word("a"));
+    }
+}

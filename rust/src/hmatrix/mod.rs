@@ -1,0 +1,15 @@
+//! Numerical-analysis substrate: the H-Matrix machinery the paper's
+//! attention is derived from (§4, Appendix A).
+//!
+//! * `svd` — one-sided Jacobi SVD + the paper's numerical-rank definition
+//! * `rankmap` — hierarchical block partition (Eq. 9) + rank maps (Eq. 13)
+//!   + storage accounting (footnote 3)
+//! * `operators` — restriction/interpolation/expansion matrices
+//!   (Appendix A.1-A.4) with the identities the fast path relies on
+//! * `toeplitz` — the worked Eq. (11)-(13) example, reproduced exactly
+
+pub mod apply;
+pub mod operators;
+pub mod rankmap;
+pub mod svd;
+pub mod toeplitz;

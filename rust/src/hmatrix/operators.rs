@@ -1,0 +1,126 @@
+//! Multigrid operators: restriction R^(l), interpolation P^(l) and the
+//! expansion matrices T^(l) of paper Appendix A.1-A.4.
+//!
+//! These are never materialised on the hot path (coarsening is a strided
+//! sum, interpolation a row-repeat — exactly as the paper notes in
+//! A.6), but the explicit forms are built here to *prove* the identities
+//! the fast path relies on: P^(l) = (R^(l-1))^T (Eq. 42), the T^(l)
+//! product form (Eq. 45/46), and the rank-2 factored block approximation
+//! (Eq. 49-51).
+
+use crate::tensor::ops::matmul;
+use crate::tensor::Mat;
+
+/// Piecewise-constant restriction matrix of shape [n/2, n] (Eq. 34-36).
+pub fn restriction(n: usize) -> Mat {
+    assert!(n % 2 == 0);
+    Mat::from_fn(n / 2, n, |i, j| {
+        if j == 2 * i || j == 2 * i + 1 {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Piecewise-constant interpolation matrix of shape [n, n/2] (Eq. 38-40).
+pub fn interpolation(n: usize) -> Mat {
+    assert!(n % 2 == 0);
+    Mat::from_fn(n, n / 2, |i, j| if i / 2 == j { 1.0 } else { 0.0 })
+}
+
+/// Expansion matrix T^(l) of shape [block, 2] (Eq. 43-46): two stacked
+/// ones-vectors of length block/2.
+pub fn expansion(block: usize) -> Mat {
+    assert!(block % 2 == 0);
+    let half = block / 2;
+    Mat::from_fn(block, 2, |i, j| {
+        if (i < half && j == 0) || (i >= half && j == 1) {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Rank-2 approximation of an off-diagonal block from its coarse 2x2
+/// counterpart (Eq. 49-50): T a~ T^T — piecewise-constant expansion of
+/// the coarse entries.
+pub fn expand_coarse_block(coarse: &Mat, block: usize) -> Mat {
+    assert_eq!(coarse.rows, 2);
+    assert_eq!(coarse.cols, 2);
+    let t = expansion(block);
+    matmul(&matmul(&t, coarse), &t.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_is_restriction_transpose() {
+        // Eq. 42: P^(l) = (R^(l-1))^T
+        for n in [4usize, 8, 16] {
+            let r = restriction(n);
+            let p = interpolation(n);
+            assert_eq!(p, r.transpose());
+        }
+    }
+
+    #[test]
+    fn restriction_then_interpolation_preserves_piecewise_constant() {
+        let x = Mat::from_vec(8, 1, vec![2.0, 2.0, 5.0, 5.0, -1.0, -1.0, 0.5, 0.5]);
+        let r = restriction(8);
+        let p = interpolation(8);
+        // (P * 0.5 R) x = x for pairwise-constant x (R sums pairs; the
+        // 0.5 is the averaging of Eq. 14)
+        let mut coarse = matmul(&r, &x);
+        coarse.scale(0.5);
+        let back = matmul(&p, &coarse);
+        assert!(back.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn expansion_product_form() {
+        // Eq. 45: T^(l) = prod of interpolations; for a block of 8,
+        // T = P8 * P4 where P8: 8x4, P4: 4x2
+        let t = expansion(8);
+        let prod = matmul(&interpolation(8), &interpolation(4));
+        assert_eq!(t, prod);
+    }
+
+    #[test]
+    fn expansion_has_full_column_rank() {
+        for block in [2usize, 4, 8, 16] {
+            let t = expansion(block);
+            let sv = crate::hmatrix::svd::singular_values(&t);
+            assert!(sv[1] > 0.5, "block {block}: sv={sv:?}");
+        }
+    }
+
+    #[test]
+    fn expand_coarse_matches_eq50() {
+        // Eq. 50: expanding [[a11,a12],[a21,a22]] over a 4-block gives the
+        // 4x4 matrix of repeated entries
+        let coarse = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let fine = expand_coarse_block(&coarse, 4);
+        let expect = Mat::from_vec(
+            4,
+            4,
+            vec![
+                1.0, 1.0, 2.0, 2.0, //
+                1.0, 1.0, 2.0, 2.0, //
+                3.0, 3.0, 4.0, 4.0, //
+                3.0, 3.0, 4.0, 4.0,
+            ],
+        );
+        assert_eq!(fine, expect);
+    }
+
+    #[test]
+    fn expanded_block_has_rank_two() {
+        let coarse = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 5.0]);
+        let fine = expand_coarse_block(&coarse, 8);
+        assert_eq!(crate::hmatrix::svd::numerical_rank(&fine, 1e-6), 2);
+    }
+}

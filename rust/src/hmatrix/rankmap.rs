@@ -1,0 +1,191 @@
+//! Hierarchical block partition + numerical-rank maps (paper §4.1).
+//!
+//! Reproduces the machinery behind Eq. (9)-(13): partition a matrix into
+//! the two-level (or M-level) H-Matrix block hierarchy, compute each
+//! block's numerical rank at a tolerance, and account for the storage a
+//! hierarchical representation needs (footnote 3's 192-entry count).
+
+use super::svd::numerical_rank;
+use crate::tensor::Mat;
+
+/// One block in the hierarchy: level, block-row, block-col, and its
+/// position in the underlying matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockInfo {
+    pub level: usize,
+    pub bi: usize,
+    pub bj: usize,
+    pub r0: usize,
+    pub c0: usize,
+    pub size: usize,
+    pub rank: usize,
+}
+
+/// The H-Matrix block structure of paper Eq. (9): diagonal blocks at
+/// level 0, super/sub-diagonal off-diagonal blocks at each level.
+///
+/// `base` is the level-0 block size; levels double the block size until
+/// two blocks remain.  For the paper's 16x16 example with base=4 this
+/// yields the 4x4/8x8 hierarchy of Eq. (9).
+pub fn hierarchy_blocks(n: usize, base: usize) -> Vec<(usize, usize, usize, usize)> {
+    // returns (level, block_size, r0, c0) for every stored block
+    let mut out = Vec::new();
+    assert!(n % base == 0);
+    let nb0 = n / base;
+    assert!(nb0.is_power_of_two());
+    // level-0 diagonal blocks
+    for i in 0..nb0 {
+        out.push((0, base, i * base, i * base));
+    }
+    // off-diagonal blocks per level: at level l the block size is
+    // base*2^l and we keep super/sub-diagonal pairs that are NOT covered
+    // by finer levels — i.e. block pairs (2i, 2i+1) of the next-coarser
+    // grouping, exactly the structure of Eq. (9)/(52)-(54).
+    let mut size = base;
+    let mut nb = nb0;
+    let mut level = 0;
+    while nb >= 2 {
+        for i in (0..nb).step_by(2) {
+            out.push((level, size, i * size, (i + 1) * size)); // super
+            out.push((level, size, (i + 1) * size, i * size)); // sub
+        }
+        size *= 2;
+        nb /= 2;
+        level += 1;
+    }
+    out
+}
+
+/// Numerical rank of every block in the hierarchy at tolerance eps.
+pub fn rank_map(a: &Mat, base: usize, eps: f64) -> Vec<BlockInfo> {
+    assert_eq!(a.rows, a.cols);
+    hierarchy_blocks(a.rows, base)
+        .into_iter()
+        .map(|(level, size, r0, c0)| {
+            let blk = a.block(r0, r0 + size, c0, c0 + size);
+            BlockInfo {
+                level,
+                bi: r0 / size,
+                bj: c0 / size,
+                r0,
+                c0,
+                size,
+                rank: numerical_rank(&blk, eps),
+            }
+        })
+        .collect()
+}
+
+/// Storage (number of scalar entries) for the H-Matrix representation
+/// with the given rank map: diagonal blocks stored dense, off-diagonal
+/// blocks stored in rank-r factored form (2 * size * rank entries).
+pub fn hmatrix_storage(blocks: &[BlockInfo]) -> usize {
+    blocks
+        .iter()
+        .map(|b| {
+            if b.r0 == b.c0 {
+                b.size * b.size
+            } else {
+                2 * b.size * b.rank
+            }
+        })
+        .sum()
+}
+
+/// Dense storage for comparison.
+pub fn dense_storage(n: usize) -> usize {
+    n * n
+}
+
+/// Render the two-level rank map in the paper's Eq. (13) layout
+/// (only for the 16x16, base-4 case used by the rankmap bench).
+pub fn render_rank_map_16(blocks: &[BlockInfo]) -> String {
+    // collect ranks: diag level-0 (4 blocks of 4), off-diag level-0
+    // pairs, level-1 blocks of 8
+    let mut grid = [[String::new(), String::new(), String::new(), String::new()],
+                    [String::new(), String::new(), String::new(), String::new()],
+                    [String::new(), String::new(), String::new(), String::new()],
+                    [String::new(), String::new(), String::new(), String::new()]];
+    for b in blocks {
+        match (b.level, b.size) {
+            (0, 4) => grid[b.r0 / 4][b.c0 / 4] = b.rank.to_string(),
+            (1, 8) => {
+                // level-1 blocks span two grid cells; mark the corner
+                grid[b.r0 / 4][b.c0 / 4] = format!("{}*", b.rank);
+            }
+            _ => {}
+        }
+    }
+    let mut out = String::new();
+    for row in &grid {
+        out.push_str(&format!(
+            "[ {:>3} {:>3} {:>3} {:>3} ]\n",
+            row[0], row[1], row[2], row[3]
+        ));
+    }
+    out.push_str("(N* marks the top-left corner of an 8x8 level-1 block)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_level_hierarchy_block_count() {
+        // 16x16 base 4: 4 diagonal + 4 level-0 off-diag + 2 level-1
+        let blocks = hierarchy_blocks(16, 4);
+        let diag = blocks.iter().filter(|(_, _, r, c)| r == c).count();
+        assert_eq!(diag, 4);
+        let l0_off = blocks
+            .iter()
+            .filter(|(lvl, _, r, c)| *lvl == 0 && r != c)
+            .count();
+        assert_eq!(l0_off, 4);
+        let l1 = blocks.iter().filter(|(lvl, _, _, _)| *lvl == 1).count();
+        assert_eq!(l1, 2);
+    }
+
+    #[test]
+    fn blocks_tile_disjointly() {
+        // every stored block must be inside the matrix, and off-diagonal
+        // blocks at different levels must not overlap
+        let n = 32;
+        let blocks = hierarchy_blocks(n, 4);
+        let mut covered = vec![vec![false; n]; n];
+        for (_, size, r0, c0) in &blocks {
+            for i in *r0..r0 + size {
+                for j in *c0..c0 + size {
+                    assert!(!covered[i][j], "overlap at ({i},{j})");
+                    covered[i][j] = true;
+                }
+            }
+        }
+        // the union must be the full tridiagonal-band-closure = everything
+        for i in 0..n {
+            for j in 0..n {
+                assert!(covered[i][j], "hole at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_footnote3_shape() {
+        // with the Eq. (13) rank map (diag rank 4 dense, all off-diag rank
+        // 2), storage = 4*16 + 4*(2*4*2) + 2*(2*8*2) = 64 + 64 + 64 = 192
+        let blocks: Vec<BlockInfo> = hierarchy_blocks(16, 4)
+            .into_iter()
+            .map(|(level, size, r0, c0)| BlockInfo {
+                level,
+                bi: r0 / size,
+                bj: c0 / size,
+                r0,
+                c0,
+                size,
+                rank: if r0 == c0 { 4 } else { 2 },
+            })
+            .collect();
+        assert_eq!(hmatrix_storage(&blocks), 192);
+        assert_eq!(dense_storage(16), 256);
+    }
+}

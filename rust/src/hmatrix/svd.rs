@@ -1,0 +1,138 @@
+//! One-sided Jacobi SVD for small dense matrices.
+//!
+//! Needed for the numerical-rank experiments (paper §4.1, Eq. 7-13):
+//! given a matrix block, compute its singular values and the numerical
+//! rank at a tolerance.  One-sided Jacobi is simple, numerically robust
+//! and plenty fast for the block sizes involved (<= a few hundred).
+
+use crate::tensor::Mat;
+
+/// Singular values of `a` in descending order (f64 precision).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    // Work on columns of A (m x n, m >= n: transpose if needed).
+    let (m, n) = (a.rows, a.cols);
+    let a = if m >= n { a.clone() } else { a.transpose() };
+    let (m, n) = (a.rows, a.cols);
+    // column-major working copy in f64
+    let mut u: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
+        .collect();
+
+    let eps = 1e-14;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    app += u[p][i] * u[p][i];
+                    aqq += u[q][i] * u[q][i];
+                    apq += u[p][i] * u[q][i];
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) off-diagonal of A^T A
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[p][i];
+                    let uq = u[q][i];
+                    u[p][i] = c * up - s * uq;
+                    u[q][i] = s * up + c * uq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-30 {
+            break;
+        }
+    }
+
+    let mut sv: Vec<f64> = u
+        .iter()
+        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Numerical rank at tolerance eps: the paper's definition (§4.1) — the
+/// smallest r such that the tail sum of singular values is below eps.
+pub fn numerical_rank(a: &Mat, eps: f64) -> usize {
+    let sv = singular_values(a);
+    let mut tail: f64 = sv.iter().sum();
+    for (r, &s) in sv.iter().enumerate() {
+        if tail < eps {
+            return r;
+        }
+        tail -= s;
+    }
+    sv.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_singular_values_are_ones() {
+        let sv = singular_values(&Mat::eye(5));
+        for s in sv {
+            assert!((s - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // outer product has exactly one nonzero singular value
+        let u = [1.0f32, 2.0, -1.0, 0.5];
+        let v = [3.0f32, -1.0, 2.0];
+        let a = Mat::from_fn(4, 3, |i, j| u[i] * v[j]);
+        let sv = singular_values(&a);
+        assert!(sv[0] > 1.0);
+        assert!(sv[1] < 1e-10, "sv={sv:?}");
+        assert_eq!(numerical_rank(&a, 1e-6), 1);
+    }
+
+    #[test]
+    fn diag_matrix_recovers_entries() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f32 } else { 0.0 });
+        let sv = singular_values(&a);
+        let expect = [4.0, 3.0, 2.0, 1.0];
+        for (s, e) in sv.iter().zip(expect) {
+            assert!((s - e).abs() < 1e-8, "sv={sv:?}");
+        }
+    }
+
+    #[test]
+    fn frobenius_norm_preserved() {
+        let mut rng = Rng::new(17);
+        let a = Mat::from_fn(8, 6, |_, _| rng.normal_f32());
+        let sv = singular_values(&a);
+        let fro2: f64 = sv.iter().map(|s| s * s).sum();
+        let direct: f64 = a.frobenius_norm().powi(2);
+        assert!((fro2 - direct).abs() / direct < 1e-8);
+    }
+
+    #[test]
+    fn rank_threshold_monotone_in_eps() {
+        let mut rng = Rng::new(18);
+        let a = Mat::from_fn(10, 10, |_, _| rng.normal_f32());
+        let r_tight = numerical_rank(&a, 1e-8);
+        let r_loose = numerical_rank(&a, 1.0);
+        assert!(r_loose <= r_tight);
+    }
+
+    #[test]
+    fn wide_matrix_handled_by_transpose() {
+        let mut rng = Rng::new(19);
+        let a = Mat::from_fn(3, 9, |_, _| rng.normal_f32());
+        let sv = singular_values(&a);
+        assert_eq!(sv.len(), 3);
+        assert!(sv[0] >= sv[1] && sv[1] >= sv[2]);
+    }
+}

@@ -1,0 +1,24 @@
+//! # H-Transformer-1D
+//!
+//! A production-grade reproduction of **"H-Transformer-1D: Fast
+//! One-Dimensional Hierarchical Attention for Sequences"** (Zhu &
+//! Soricut, ACL 2021) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas)** — the banded block-attention kernel
+//!   (`python/compile/kernels/hattn_pallas.py`), the per-level hot spot.
+//! * **Layer 2 (JAX)** — the hierarchical attention algorithm and the
+//!   transformer model zoo (`python/compile/`), AOT-lowered to HLO text.
+//! * **Layer 3 (this crate)** — the coordinator: PJRT runtime, training
+//!   orchestrator, inference server, data generators, benchmarks and the
+//!   numerical-analysis substrate, with python never on the request path.
+//!
+//! See `DESIGN.md` for the experiment index (paper tables/figures →
+//! modules → benches) and `EXPERIMENTS.md` for measured results.
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod hmatrix;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

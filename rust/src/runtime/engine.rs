@@ -1,0 +1,142 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client and runs them with signature checking.
+//!
+//! All xla types are !Send, so an `Engine` must stay on the thread that
+//! created it — the coordinator wraps it in a dedicated runtime thread
+//! (see `coordinator::rt_thread`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::ArtifactSig;
+use super::tensor_host::HostTensor;
+
+/// A compiled artifact with its signature.
+pub struct Executable {
+    pub name: String,
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with full input validation; outputs are decomposed from the
+    /// return tuple and validated against the manifest signature.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Like `run` but borrows inputs — avoids cloning large parameter
+    /// tensors on the training hot loop.
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.sig.inputs).enumerate() {
+            if !t.matches(spec) {
+                bail!(
+                    "{}: input {i} mismatch: got {:?} {:?}, want {:?} {:?}",
+                    self.name,
+                    t.dtype(),
+                    t.shape(),
+                    spec.dtype,
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        // aot.py lowers with return_tuple=True: decompose
+        let parts = tuple
+            .decompose_tuple()
+            .with_context(|| format!("decomposing {} output tuple", self.name))?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.sig.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.sig.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// Owns the PJRT client and an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str, sig: &ArtifactSig) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&sig.file)
+            .with_context(|| format!("parsing HLO text {:?}", sig.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compiled = std::rc::Rc::new(Executable {
+            name: name.to_string(),
+            sig: sig.clone(),
+            exe,
+            compile_secs: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Load an artifact file that is not in the manifest (ad-hoc sig).
+    pub fn load_file(&mut self, path: &Path, sig: ArtifactSig) -> Result<std::rc::Rc<Executable>> {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow!("bad path"))?
+            .to_string();
+        self.load(&name, &sig)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,327 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! this runtime.  The manifest records, for every AOT-lowered program,
+//! the exact input/output tensor signatures plus model configuration and
+//! parameter layout, so the rust side can validate every buffer it feeds
+//! the compiled executable without ever importing python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One AOT-lowered program: HLO file + its signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSig {
+    fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let file = dir.join(
+            j.get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("missing file"))?,
+        );
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactSig {
+            file,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Model hyper-parameters (mirrors python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub n_classes: usize,
+    pub attention: String,
+    pub block_size: usize,
+    pub causal: bool,
+    pub dual_encoder: bool,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        Ok(ModelCfg {
+            vocab_size: u("vocab_size")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            n_layers: u("n_layers")?,
+            d_ff: u("d_ff")?,
+            max_len: u("max_len")?,
+            n_classes: u("n_classes")?,
+            attention: j
+                .get("attention")
+                .and_then(|v| v.as_str())
+                .unwrap_or("h1d")
+                .to_string(),
+            block_size: u("block_size")?,
+            causal: j.get("causal").and_then(|v| v.as_bool()).unwrap_or(false),
+            dual_encoder: j
+                .get("dual_encoder")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// One model in the zoo: config, parameter layout, artifact programs.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub task: String,
+    pub batch: usize,
+    pub param_count: usize,
+    pub config: ModelCfg,
+    /// canonical parameter flattening: (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+/// Attention-only microbench artifact.
+#[derive(Clone, Debug)]
+pub struct AttnEntry {
+    pub name: String,
+    pub sig: ArtifactSig,
+    pub batch: usize,
+    pub heads: usize,
+    pub d_head: usize,
+    pub seq_len: usize,
+    pub nr: usize,
+    pub variant: String,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub attention: BTreeMap<String, AttnEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        if let Some(m) = root.get("models").and_then(|m| m.as_obj()) {
+            for (name, entry) in m {
+                let params = entry
+                    .get("params")
+                    .and_then(|p| p.as_arr())
+                    .ok_or_else(|| anyhow!("{name}: missing params"))?
+                    .iter()
+                    .map(|p| {
+                        let pname = p
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .ok_or_else(|| anyhow!("param name"))?
+                            .to_string();
+                        let shape = p
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow!("param shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok((pname, shape))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let artifacts = entry
+                    .get("artifacts")
+                    .and_then(|a| a.as_obj())
+                    .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+                    .iter()
+                    .map(|(k, v)| Ok((k.clone(), ArtifactSig::from_json(&dir, v)?)))
+                    .collect::<Result<BTreeMap<_, _>>>()?;
+                models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        name: name.clone(),
+                        task: entry
+                            .get("task")
+                            .and_then(|t| t.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        batch: entry.get("batch").and_then(|b| b.as_usize()).unwrap_or(1),
+                        param_count: entry
+                            .get("param_count")
+                            .and_then(|p| p.as_usize())
+                            .unwrap_or(0),
+                        config: ModelCfg::from_json(
+                            entry.get("config").ok_or_else(|| anyhow!("config"))?,
+                        )?,
+                        params,
+                        artifacts,
+                    },
+                );
+            }
+        }
+
+        let mut attention = BTreeMap::new();
+        if let Some(m) = root.get("attention").and_then(|m| m.as_obj()) {
+            for (name, entry) in m {
+                let u = |k: &str| entry.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                attention.insert(
+                    name.clone(),
+                    AttnEntry {
+                        name: name.clone(),
+                        sig: ArtifactSig::from_json(&dir, entry)?,
+                        batch: u("batch"),
+                        heads: u("heads"),
+                        d_head: u("d_head"),
+                        seq_len: u("seq_len"),
+                        nr: u("nr"),
+                        variant: entry
+                            .get("variant")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            models,
+            attention,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "models": {
+            "m1": {
+              "task": "lm", "batch": 8, "param_count": 42,
+              "config": {"vocab_size": 100, "d_model": 16, "n_heads": 2,
+                         "n_layers": 1, "d_ff": 32, "max_len": 64,
+                         "n_classes": 0, "attention": "h1d",
+                         "block_size": 8, "causal": true,
+                         "dual_encoder": false},
+              "params": [{"name": "embed", "shape": [100, 16]}],
+              "artifacts": {
+                "init": {"file": "m1.init.hlo.txt",
+                         "inputs": [{"dtype": "i32", "shape": []}],
+                         "outputs": [{"dtype": "f32", "shape": [100, 16]}]}
+              }
+            }
+          },
+          "attention": {
+            "attn_h1d_L128": {"file": "attn_h1d_L128.hlo.txt",
+              "inputs": [{"dtype": "f32", "shape": [1, 4, 128, 32]}],
+              "outputs": [{"dtype": "f32", "shape": [1, 4, 128, 32]}],
+              "batch": 1, "heads": 4, "d_head": 32, "seq_len": 128,
+              "nr": 16, "variant": "h1d"}
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_models_and_attention() {
+        let dir = std::env::temp_dir().join(format!("htx_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(fake_manifest().as_bytes()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let m1 = m.model("m1").unwrap();
+        assert_eq!(m1.config.vocab_size, 100);
+        assert!(m1.config.causal);
+        assert_eq!(m1.params[0].0, "embed");
+        let a = &m.attention["attn_h1d_L128"];
+        assert_eq!(a.seq_len, 128);
+        assert_eq!(a.sig.inputs[0].shape, vec![1, 4, 128, 32]);
+        assert!(m.model("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: the bridge from AOT artifacts (HLO text emitted once by
+//! `python/compile/aot.py`) to executable programs on the rust hot path.
+//!
+//! * `manifest` — typed view of `artifacts/manifest.json`
+//! * `tensor_host` — `HostTensor`, the Send-able value type crossing the
+//!   coordinator↔runtime boundary
+//! * `engine` — PJRT client + compile cache + checked execution
+//!
+//! Interchange format is HLO *text*: jax >= 0.5 serialises protos with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor_host;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSig, AttnEntry, DType, Manifest, ModelEntry, TensorSpec};
+pub use tensor_host::HostTensor;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HTX_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,177 @@
+//! Host-side tensors and their conversion to/from XLA literals.
+//!
+//! `HostTensor` is the only value type that crosses the coordinator ↔
+//! runtime boundary, keeping all xla-sys types (which are !Send) confined
+//! to the runtime thread.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros_like_spec(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.element_count()],
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: vec![0; spec.element_count()],
+            },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    /// Convert to an xla Literal (runtime thread only).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert from an xla Literal given the expected spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_invariant() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let spec = TensorSpec {
+            dtype: DType::I32,
+            shape: vec![4],
+        };
+        assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).matches(&spec));
+        assert!(!HostTensor::f32(vec![4], vec![0.0; 4]).matches(&spec));
+        let z = HostTensor::zeros_like_spec(&spec);
+        assert_eq!(z.as_i32().unwrap(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // exercised only when the PJRT shared object is loadable; literal
+        // construction itself does not need a client.
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec {
+            dtype: DType::F32,
+            shape: vec![2, 2],
+        };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(t, back);
+    }
+}

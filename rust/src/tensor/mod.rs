@@ -1,0 +1,135 @@
+//! Dense row-major f32 matrices — the substrate for the pure-rust
+//! attention implementations and the H-Matrix machinery.
+//!
+//! Deliberately small: the heavy training math runs inside AOT-compiled
+//! XLA programs; this module exists for (a) CPU baselines in the
+//! complexity benches, (b) the numerical-analysis experiments (SVD, rank
+//! maps), and (c) mirrors of the attention algorithms used in property
+//! tests.  The matmul microkernel is cache-blocked and unrolled over k —
+//! enough to make the O(L^2) baselines honest without SIMD intrinsics.
+
+pub mod ops;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Submatrix copy: rows [r0, r1), cols [c0, c1).
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.data[(i - r0) * (c1 - c0)..(i - r0 + 1) * (c1 - c0)]
+                .copy_from_slice(&self.data[i * self.cols + c0..i * self.cols + c1]);
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_extracts_submatrix() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.rows, 2);
+        assert_eq!(b.cols, 2);
+        assert_eq!(b.data, vec![6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_is_identity() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.at(0, 0), 1.0);
+        assert_eq!(i3.at(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Matrix operations: cache-blocked matmul, softmax, elementwise helpers.
+
+use super::Mat;
+
+/// C = A @ B (cache-blocked, k-unrolled).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    const BI: usize = 32;
+    const BK: usize = 64;
+    for i0 in (0..m).step_by(BI) {
+        let i1 = (i0 + BI).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T — the attention-score shape (avoids materialising B^T).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// In-place row softmax with max-subtraction; entries equal to `NEG_MASK`
+/// or below are treated as -inf (weight 0).
+pub const NEG_MASK: f32 = -1e30;
+
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if mx <= NEG_MASK {
+            for x in row.iter_mut() {
+                *x = 0.0;
+            }
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            if *x <= NEG_MASK {
+                *x = 0.0;
+            } else {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+        }
+        if sum > 0.0 {
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+}
+
+pub fn add_assign(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// Pair-average rows: [2n, d] -> [n, d] (paper Eq. 25/26).
+pub fn coarsen_avg(x: &Mat) -> Mat {
+    assert_eq!(x.rows % 2, 0);
+    let n = x.rows / 2;
+    Mat::from_fn(n, x.cols, |i, j| 0.5 * (x.at(2 * i, j) + x.at(2 * i + 1, j)))
+}
+
+/// Pair-sum rows: [2n, d] -> [n, d] (paper Eq. 27, V coarsening).
+pub fn coarsen_sum(x: &Mat) -> Mat {
+    assert_eq!(x.rows % 2, 0);
+    let n = x.rows / 2;
+    Mat::from_fn(n, x.cols, |i, j| x.at(2 * i, j) + x.at(2 * i + 1, j))
+}
+
+/// Piecewise-constant interpolation: duplicate each row `factor` times
+/// (the P^(l) operators of paper Eq. 38-40).
+pub fn interpolate_rows(x: &Mat, factor: usize) -> Mat {
+    Mat::from_fn(x.rows * factor, x.cols, |i, j| x.at(i / factor, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        let mut rng = crate::util::Rng::new(1);
+        let a = Mat::from_fn(37, 53, |_, _| rng.normal_f32());
+        let b = Mat::from_fn(53, 29, |_, _| rng.normal_f32());
+        let c1 = matmul(&a, &b);
+        let c2 = naive_matmul(&a, &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let mut rng = crate::util::Rng::new(2);
+        let a = Mat::from_fn(10, 8, |_, _| rng.normal_f32());
+        let b = Mat::from_fn(12, 8, |_, _| rng.normal_f32());
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Mat::from_fn(4, 7, |i, j| (i as f32) - (j as f32) * 0.3);
+        softmax_rows(&mut m);
+        for i in 0..m.rows {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_fully_masked_rows() {
+        let mut m = Mat::from_vec(1, 3, vec![NEG_MASK, NEG_MASK, NEG_MASK]);
+        softmax_rows(&mut m);
+        assert_eq!(m.data, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn coarsen_and_interpolate_are_adjoint_ish() {
+        // restriction then interpolation reproduces a piecewise-constant
+        // signal exactly (multigrid sanity property)
+        let x = Mat::from_vec(4, 1, vec![3.0, 3.0, 7.0, 7.0]);
+        let c = coarsen_avg(&x);
+        assert_eq!(c.data, vec![3.0, 7.0]);
+        let up = interpolate_rows(&c, 2);
+        assert_eq!(up.data, x.data);
+    }
+
+    #[test]
+    fn coarsen_sum_doubles_mass() {
+        let x = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(coarsen_sum(&x).data, vec![3.0, 7.0]);
+    }
+}

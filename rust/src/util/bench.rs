@@ -1,0 +1,173 @@
+//! Tiny benchmark harness (the vendor set has no criterion).
+//!
+//! Provides warmed-up wall-clock measurement with mean/std/min and
+//! a fixed-width table printer used by every `benches/` target so the
+//! regenerated paper tables share one look.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Welford;
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: u32,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Measure `f` after `warmup` unrecorded calls; records `iters` calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::default();
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        w.push(dt);
+        if dt < min {
+            min = dt;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_s: w.mean(),
+        std_s: w.std(),
+        min_s: min,
+        iters,
+    }
+}
+
+/// Measure until `budget` wall time is spent (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, warmup: u32, budget: Duration, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::default();
+    let mut min = f64::INFINITY;
+    let start = Instant::now();
+    let mut iters = 0u32;
+    while iters < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        w.push(dt);
+        if dt < min {
+            min = dt;
+        }
+        iters += 1;
+        if iters >= 1_000_000 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_s: w.mean(),
+        std_s: w.std(),
+        min_s: min,
+        iters,
+    }
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            out.push('|');
+            for (c, w) in cells.iter().zip(widths) {
+                out.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers, &widths);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut calls = 0u32;
+        let m = bench("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.iters, 5);
+        assert!(m.min_s <= m.mean_s);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(&["h1d".into(), "20.25".into()]);
+        let s = t.to_string();
+        assert!(s.contains("model"));
+        assert!(s.contains("20.25"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,17 @@
+//! From-scratch substrate: PRNG, JSON, CLI parsing, thread pool, bench
+//! harness, property testing and statistics.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no rand / serde / clap / tokio / criterion / proptest), so these are
+//! deliberately self-contained implementations with their own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Rng;

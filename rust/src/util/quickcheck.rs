@@ -1,0 +1,185 @@
+//! Mini property-based testing harness (no proptest in the vendor set).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs and,
+//! on failure, greedily shrinks via the input's `Shrink` implementation
+//! before panicking with the minimal counterexample.  Deterministic: the
+//! seed is fixed per call site unless overridden with `HTX_QC_SEED`.
+
+use super::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[..self.len() - 1].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for sx in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+fn seed() -> u64 {
+    std::env::var("HTX_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` on `cases` inputs from `gen`; shrink failures.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed());
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 200 {
+                progress = false;
+                rounds += 1;
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {}):\n  input: {best:?}\n  error: {best_msg}",
+                seed()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall(
+            50,
+            |r| r.below(1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall(
+            50,
+            |r| r.below(1000) + 500,
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v: Vec<usize> = vec![5, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration tests over the compiled artifacts.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! visible marker) when the artifacts directory is absent so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use htransformer::attention::{Attention, H1d};
+use htransformer::coordinator::{
+    schedule::LrSchedule, spawn_cls_source, spawn_lm_source, TrainOptions, Trainer,
+};
+use htransformer::runtime::{Engine, HostTensor, Manifest};
+use htransformer::tensor::Mat;
+use htransformer::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = htransformer::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_is_complete() {
+    let Some(m) = manifest() else { return };
+    // every model must carry the four artifact programs
+    for (name, entry) in &m.models {
+        for art in ["init", "train", "eval", "fwd"] {
+            let sig = entry
+                .artifacts
+                .get(art)
+                .unwrap_or_else(|| panic!("{name} missing {art}"));
+            assert!(sig.file.exists(), "{name}.{art} file missing");
+            assert!(!sig.inputs.is_empty());
+            assert!(!sig.outputs.is_empty());
+        }
+        // param list matches the init outputs
+        let init = &entry.artifacts["init"];
+        assert_eq!(init.outputs.len(), entry.params.len(), "{name}");
+        for ((pname, pshape), spec) in entry.params.iter().zip(&init.outputs) {
+            assert_eq!(pshape, &spec.shape, "{name}.{pname}");
+        }
+    }
+    // scaling artifacts exist in h1d/full pairs
+    for l in [128usize, 256, 512, 1024, 2048, 4096] {
+        assert!(m.attention.contains_key(&format!("attn_h1d_L{l}")));
+        assert!(m.attention.contains_key(&format!("attn_full_L{l}")));
+    }
+}
+
+#[test]
+fn no_artifact_contains_elided_constants() {
+    // regression for the {...} constant-elision bug: the 0.5.1 text
+    // parser reads elided literals as zeros, silently corrupting math
+    let Some(m) = manifest() else { return };
+    for entry in m.attention.values() {
+        let text = std::fs::read_to_string(&entry.sig.file).unwrap();
+        assert!(
+            !text.contains("{...}"),
+            "{:?} contains elided constants",
+            entry.sig.file
+        );
+    }
+}
+
+#[test]
+fn h1d_artifact_matches_rust_mirror() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("pjrt client");
+    let entry = &m.attention["attn_h1d_L128"];
+    let exe = engine.load(&entry.name, &entry.sig).expect("compile");
+    let (b, h, l, d, nr) = (entry.batch, entry.heads, entry.seq_len, entry.d_head, entry.nr);
+    let n = b * h * l * d;
+    let mut rng = Rng::new(99);
+    let mk = |rng: &mut Rng| {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+    let (qd, kd, vd) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let out = exe
+        .run(&[
+            HostTensor::f32(vec![b, h, l, d], qd.clone()),
+            HostTensor::f32(vec![b, h, l, d], kd.clone()),
+            HostTensor::f32(vec![b, h, l, d], vd.clone()),
+        ])
+        .expect("execute");
+    let zd = out[0].as_f32().unwrap();
+    let algo = H1d::new(nr);
+    for head in 0..(b * h) {
+        let off = head * l * d;
+        let qm = Mat::from_vec(l, d, qd[off..off + l * d].to_vec());
+        let km = Mat::from_vec(l, d, kd[off..off + l * d].to_vec());
+        let vm = Mat::from_vec(l, d, vd[off..off + l * d].to_vec());
+        let z_rust = algo.forward(&qm, &km, &vm, false);
+        let z_xla = Mat::from_vec(l, d, zd[off..off + l * d].to_vec());
+        assert!(
+            z_rust.max_abs_diff(&z_xla) < 1e-3,
+            "head {head}: {}",
+            z_rust.max_abs_diff(&z_xla)
+        );
+    }
+}
+
+#[test]
+fn lm_trainer_reduces_loss() {
+    let Some(m) = manifest() else { return };
+    let mut trainer = Trainer::new(&m, "lm_tiny_h1d", 3).expect("trainer");
+    let src = spawn_lm_source(
+        trainer.model.config.vocab_size,
+        trainer.model.batch,
+        trainer.model.config.max_len,
+        5,
+        2,
+    );
+    let opts = TrainOptions {
+        steps: 8,
+        schedule: LrSchedule::Constant { lr: 1e-3 },
+        verbose: false,
+        log_every: 1,
+        ..Default::default()
+    };
+    let report = trainer.run(&src, None, &opts).expect("train");
+    let first = report.losses.first().unwrap().1;
+    let last = report.losses.last().unwrap().1;
+    assert!(
+        last < first,
+        "loss should decrease over 8 steps: {first} -> {last}"
+    );
+}
+
+#[test]
+fn cls_trainer_round_trips_checkpoint() {
+    let Some(m) = manifest() else { return };
+    let mut trainer = Trainer::new(&m, "lra_listops_h1d", 3).expect("trainer");
+    let src = spawn_cls_source("listops".into(), trainer.model.batch, 512, 5, 2);
+    let opts = TrainOptions {
+        steps: 2,
+        schedule: LrSchedule::Constant { lr: 1e-3 },
+        verbose: false,
+        log_every: 1,
+        ..Default::default()
+    };
+    trainer.run(&src, None, &opts).expect("train");
+    let path = std::env::temp_dir().join(format!("htx_it_ckpt_{}.bin", std::process::id()));
+    trainer.save_checkpoint(&path).expect("save");
+
+    let mut restored = Trainer::new(&m, "lra_listops_h1d", 99).expect("trainer2");
+    restored.load_checkpoint(&path).expect("load");
+    assert_eq!(restored.step, 2);
+    // params identical after restore
+    for (a, b) in trainer.params.iter().zip(&restored.params) {
+        assert_eq!(a, b);
+    }
+    // and the restored trainer can continue training
+    let src2 = spawn_cls_source("listops".into(), restored.model.batch, 512, 6, 2);
+    let batch = src2.recv().unwrap();
+    restored.train_step(&batch, 1e-3).expect("step after restore");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let mut trainer = Trainer::new(&m, "lm_tiny_h1d", 11).expect("trainer");
+    let src1 = spawn_lm_source(4096, trainer.model.batch, 256, 123, 2);
+    let e1 = trainer.evaluate(&src1, 2).expect("eval1");
+    let src2 = spawn_lm_source(4096, trainer.model.batch, 256, 123, 2);
+    let e2 = trainer.evaluate(&src2, 2).expect("eval2");
+    assert_eq!(e1.mean_nll, e2.mean_nll);
+}
+
+#[test]
+fn pallas_artifact_composes() {
+    // the L1 kernel routed through pallas_call must load + run + agree
+    // with the rust mirror — proving the L1 path composes into L3
+    let Some(m) = manifest() else { return };
+    let Some(entry) = m.attention.get("attn_h1d_pallas_L512") else {
+        return;
+    };
+    let mut engine = Engine::cpu().expect("client");
+    let exe = engine.load(&entry.name, &entry.sig).expect("compile pallas artifact");
+    let (b, h, l, d, nr) = (entry.batch, entry.heads, entry.seq_len, entry.d_head, entry.nr);
+    let n = b * h * l * d;
+    let mut rng = Rng::new(7);
+    let mk = |rng: &mut Rng| {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+    let (qd, kd, vd) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let out = exe
+        .run(&[
+            HostTensor::f32(vec![b, h, l, d], qd.clone()),
+            HostTensor::f32(vec![b, h, l, d], kd.clone()),
+            HostTensor::f32(vec![b, h, l, d], vd.clone()),
+        ])
+        .expect("execute");
+    let zd = out[0].as_f32().unwrap();
+    let algo = H1d::new(nr);
+    let off = 0;
+    let qm = Mat::from_vec(l, d, qd[off..l * d].to_vec());
+    let km = Mat::from_vec(l, d, kd[off..l * d].to_vec());
+    let vm = Mat::from_vec(l, d, vd[off..l * d].to_vec());
+    let z_rust = algo.forward(&qm, &km, &vm, false);
+    let z_xla = Mat::from_vec(l, d, zd[off..l * d].to_vec());
+    assert!(z_rust.max_abs_diff(&z_xla) < 1e-3);
+}
