@@ -5,7 +5,7 @@
 //!   cargo run --release --example lm_tiny -- [--model lm_tiny_h1d]
 //!       [--steps 300] [--lr 1e-3] [--eval-every 50] [--ckpt out.bin]
 //!
-//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+//! The end-to-end run indexed in DESIGN.md used the defaults.
 
 use anyhow::{Context, Result};
 use htransformer::coordinator::{

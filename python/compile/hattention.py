@@ -137,7 +137,7 @@ def _level_attention_fused(
     the neighbour key/value blocks are concatenated along the key axis so
     each level costs exactly one score einsum [nr, D*nr], one exp and two
     accumulation einsums — fewer, larger XLA ops (~25% faster end-to-end
-    on the CPU PJRT runtime, see EXPERIMENTS.md §Perf).
+    on the CPU PJRT runtime, see DESIGN.md's experiment index).
 
     Block-edge validity needs no explicit mask here: `_shift_blocks`
     fills out-of-range neighbours with zero counts, and the count==0 key

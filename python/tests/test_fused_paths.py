@@ -1,4 +1,4 @@
-"""The perf pass (EXPERIMENTS.md §Perf) added two specialised code paths
+"""The perf pass (indexed in DESIGN.md) added two specialised code paths
 for the per-level banded attention: a fused-band variant and a dense
 (no-padding) fast path.  All variants must be numerically equivalent."""
 

@@ -5,19 +5,25 @@
 //! Nr trades accuracy for speed/memory: larger blocks mean more exact
 //! near-field attention (and more compute); smaller blocks coarsen
 //! sooner.  The paper settled on Nr=16 for the 1BW LM.
+//!
+//! The training table needs `--features xla` + `make artifacts`; the
+//! raw-cost sweep runs the CPU mirror through the batched workspace API
+//! at a multi-head shape.
 
+#[cfg(feature = "xla")]
 mod common;
 
-use common::{bench_steps, train_and_eval};
-use htransformer::attention::{Attention, H1d};
-use htransformer::runtime::{default_artifacts_dir, Manifest};
-use htransformer::tensor::Mat;
+use htransformer::attention::{Attention, AttnWorkspace, H1d};
+use htransformer::tensor::{Batch, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::Rng;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    println!("### Nr ablation — inductive-bias strength vs cost ###\n");
+#[cfg(feature = "xla")]
+fn training_table() -> anyhow::Result<()> {
+    use common::{bench_steps, train_and_eval};
+    use htransformer::runtime::{default_artifacts_dir, Manifest};
+
     let manifest = Manifest::load(default_artifacts_dir())?;
     let steps = bench_steps(80);
 
@@ -39,27 +45,45 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
     t.print();
+    Ok(())
+}
 
-    println!("\n== raw attention cost vs Nr (pure rust, L=2048, d=32) ==");
-    let mut t2 = Table::new(&["Nr", "fwd time", "memory"]);
-    let l = 2048;
-    let d = 32;
+fn raw_cost_table() {
+    let (b, h, l, d) = (1usize, 8usize, 2048usize, 32usize);
+    let mut ws = AttnWorkspace::parallel();
+    println!(
+        "\n== raw attention cost vs Nr (batched, B={b} H={h} L={l} d={d}, {} threads) ==",
+        ws.threads()
+    );
+    let mut t = Table::new(&["Nr", "fwd time (8 heads)", "memory (8 heads)"]);
     let mut rng = Rng::new(3);
-    let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-    let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-    let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+    let qkv = Qkv::new(
+        Batch::random(b, h, l, d, &mut rng),
+        Batch::random(b, h, l, d, &mut rng),
+        Batch::random(b, h, l, d, &mut rng),
+    );
     for nr in [4usize, 8, 16, 32, 64] {
         let algo = H1d::new(nr);
         let m = bench_for("h1d", 1, Duration::from_millis(300), || {
-            std::hint::black_box(algo.forward(&q, &k, &v, false));
+            std::hint::black_box(algo.forward_batch(&mut ws, &qkv, false));
         });
-        t2.row(&[
+        t.row(&[
             nr.to_string(),
             fmt_time(m.min_s),
-            format!("{}KB", algo.attn_memory_bytes(l, d) / 1024),
+            format!("{}KB", b * h * algo.attn_memory_bytes(l, d) / 1024),
         ]);
     }
-    t2.print();
+    t.print();
     println!("\ncost scales ~linearly with Nr (paper §7: 5 d L Nr).");
-    Ok(())
+}
+
+fn main() {
+    println!("### Nr ablation — inductive-bias strength vs cost ###\n");
+    #[cfg(feature = "xla")]
+    if let Err(e) = training_table() {
+        println!("(training table skipped: {e:#} — run `make artifacts`)");
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("(training table skipped: needs the xla feature, see rust/Cargo.toml, + `make artifacts`)");
+    raw_cost_table();
 }

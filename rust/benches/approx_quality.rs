@@ -8,9 +8,14 @@
 //! (adversarial for the hierarchy), quality degrades; larger Nr recovers
 //! it.  The low-rank baseline shows the opposite profile on
 //! diagonal-dominant inputs (the Eq. 11-13 argument).
+//!
+//! All forwards run through the batched workspace API (single-head
+//! bundles), so this bench doubles as a smoke test of that path.
 
-use htransformer::attention::{mean_row_cosine, Attention, Full, H1d, LocalWindow, LowRank};
-use htransformer::tensor::Mat;
+use htransformer::attention::{
+    mean_row_cosine, Attention, AttnWorkspace, Full, H1d, LocalWindow, LowRank,
+};
+use htransformer::tensor::{Mat, Qkv};
 use htransformer::util::bench::Table;
 use htransformer::util::Rng;
 
@@ -29,11 +34,18 @@ fn structured_qk(l: usize, d: usize, locality: f32, rng: &mut Rng) -> (Mat, Mat)
     (q, k)
 }
 
+/// Single-head forward through the workspace-reuse batched path.
+fn fwd(ws: &mut AttnWorkspace, algo: &dyn Attention, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let qkv = Qkv::from_mats(q, k, v);
+    algo.forward_batch(ws, &qkv, false).head_mat(0)
+}
+
 fn main() {
     println!("### Approximation-quality bench — paper §5 inductive bias ###\n");
     let l = 512;
     let d = 32;
     let mut rng = Rng::new(11);
+    let mut ws = AttnWorkspace::serial();
     let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
 
     println!("mean row cosine vs exact attention (L={l}, d={d}):");
@@ -42,7 +54,7 @@ fn main() {
     ]);
     for &loc in &[1.0f32, 0.75, 0.5, 0.25, 0.0] {
         let (q, k) = structured_qk(l, d, loc, &mut rng);
-        let exact = Full.forward(&q, &k, &v, false);
+        let exact = fwd(&mut ws, &Full, &q, &k, &v);
         let mut cells = vec![format!("{loc:.2}")];
         for algo in [
             Box::new(H1d::new(8)) as Box<dyn Attention>,
@@ -51,7 +63,7 @@ fn main() {
             Box::new(LocalWindow::new(16)),
             Box::new(LowRank::new(32, 7)),
         ] {
-            let z = algo.forward(&q, &k, &v, false);
+            let z = fwd(&mut ws, algo.as_ref(), &q, &k, &v);
             cells.push(format!("{:.4}", mean_row_cosine(&z, &exact)));
         }
         t.row(&cells);
@@ -63,19 +75,19 @@ fn main() {
     let q = Mat::from_fn(l2, d, |_, _| rng.normal_f32());
     let k = Mat::from_fn(l2, d, |_, _| rng.normal_f32());
     let v2 = Mat::from_fn(l2, d, |_, _| rng.normal_f32());
-    let exact = Full.forward(&q, &k, &v2, false);
-    let z = H1d::new(16).forward(&q, &k, &v2, false);
+    let exact = fwd(&mut ws, &Full, &q, &k, &v2);
+    let z = fwd(&mut ws, &H1d::new(16), &q, &k, &v2);
     let cos = mean_row_cosine(&z, &exact);
     println!("  L={l2}, Nr=16: cosine = {cos:.8}");
     assert!(cos > 0.999999);
 
     println!("\nNr sweep on diagonal-dominant inputs (locality=0.75):");
     let (q, k) = structured_qk(l, d, 0.75, &mut rng);
-    let exact = Full.forward(&q, &k, &v, false);
+    let exact = fwd(&mut ws, &Full, &q, &k, &v);
     let mut t2 = Table::new(&["Nr", "cosine", "flops vs full"]);
     for nr in [2usize, 4, 8, 16, 32, 64, 128] {
         let algo = H1d::new(nr);
-        let z = algo.forward(&q, &k, &v, false);
+        let z = fwd(&mut ws, &algo, &q, &k, &v);
         t2.row(&[
             nr.to_string(),
             format!("{:.4}", mean_row_cosine(&z, &exact)),
@@ -91,9 +103,9 @@ fn main() {
     let mut rng = Rng::new(29);
     for &loc in &[1.0f32, 0.75, 0.5] {
         let (q, k) = structured_qk(l, d, loc, &mut rng);
-        let exact = Full.forward(&q, &k, &v, false);
-        let with = H1d::new(16).forward(&q, &k, &v, false);
-        let without = H1d::without_overlap_masks(16).forward(&q, &k, &v, false);
+        let exact = fwd(&mut ws, &Full, &q, &k, &v);
+        let with = fwd(&mut ws, &H1d::new(16), &q, &k, &v);
+        let without = fwd(&mut ws, &H1d::without_overlap_masks(16), &q, &k, &v);
         t3.row(&[
             format!("{loc:.2}"),
             format!("{:.4}", mean_row_cosine(&with, &exact)),

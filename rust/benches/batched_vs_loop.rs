@@ -1,0 +1,90 @@
+//! Bench: batched workspace execution vs the old per-head loop — the
+//! refactor's speedup is measured here, not asserted.
+//!
+//! The per-head loop is what multi-head attention looked like before
+//! the `[B, H, L, d]` API: fresh allocations per head, one head at a
+//! time on one core. The batched path reuses one `AttnWorkspace` and
+//! fans `(batch, head)` pairs across the thread pool.
+//!
+//! Acceptance target (ISSUE 1): batched >= 2x the per-head loop at
+//! B·H >= 8 on a multi-core host.
+
+use htransformer::attention::{
+    Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
+};
+use htransformer::tensor::{Batch, Qkv};
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::threadpool::default_threads;
+use htransformer::util::Rng;
+use std::time::Duration;
+
+/// The pre-refactor semantics: loop heads through the single-head path.
+fn loop_forward(algo: &dyn Attention, qkv: &Qkv, causal: bool) -> Batch {
+    let (b, h, l, d) = qkv.dims();
+    let mut out = Batch::zeros(b, h, l, d);
+    for n in 0..qkv.q.n_heads() {
+        let z = algo.forward(
+            &qkv.q.head_mat(n),
+            &qkv.k.head_mat(n),
+            &qkv.v.head_mat(n),
+            causal,
+        );
+        out.set_head(n, &z);
+    }
+    out
+}
+
+fn random_qkv(rng: &mut Rng, b: usize, h: usize, l: usize, d: usize) -> Qkv {
+    Qkv::new(
+        Batch::random(b, h, l, d, rng),
+        Batch::random(b, h, l, d, rng),
+        Batch::random(b, h, l, d, rng),
+    )
+}
+
+fn main() {
+    let threads = default_threads();
+    println!("### Batched multi-head attention vs per-head loop ({threads} threads) ###\n");
+    let budget = Duration::from_millis(400);
+    let shapes = [(2usize, 4usize, 512usize, 32usize), (4, 4, 1024, 32)];
+    let mut worst: Option<(String, f64)> = None;
+    for (b, h, l, d) in shapes {
+        println!("== B={b} H={h} L={l} d={d} (B·H = {}) ==", b * h);
+        let mut rng = Rng::new((b * h * l) as u64);
+        let qkv = random_qkv(&mut rng, b, h, l, d);
+        let mut ws = AttnWorkspace::parallel();
+        let algos: Vec<Box<dyn Attention>> = vec![
+            Box::new(Full),
+            Box::new(LocalWindow::new(16)),
+            Box::new(LowRank::new(32, 7)),
+            Box::new(BlockSparse::new(8, 4, 4, 7)),
+            Box::new(H1d::new(16)),
+        ];
+        let mut t = Table::new(&["algorithm", "per-head loop", "batched", "speedup"]);
+        for algo in &algos {
+            let ml = bench_for(algo.name(), 1, budget, || {
+                std::hint::black_box(loop_forward(algo.as_ref(), &qkv, false));
+            });
+            let mb = bench_for(algo.name(), 1, budget, || {
+                std::hint::black_box(algo.forward_batch(&mut ws, &qkv, false));
+            });
+            let speedup = ml.min_s / mb.min_s;
+            t.row(&[
+                algo.name().to_string(),
+                fmt_time(ml.min_s),
+                fmt_time(mb.min_s),
+                format!("{speedup:.2}x"),
+            ]);
+            let key = format!("{} @ L={l}", algo.name());
+            if worst.as_ref().map(|(_, s)| speedup < *s).unwrap_or(true) {
+                worst = Some((key, speedup));
+            }
+        }
+        t.print();
+        println!();
+    }
+    if let Some((name, s)) = worst {
+        println!("worst speedup: {s:.2}x ({name})");
+    }
+    println!("acceptance target: batched >= 2x the per-head loop at B·H >= 8 on a multi-core host.");
+}

@@ -4,17 +4,28 @@
 //! perplexity at the same parameter count (and beat the 5x-larger
 //! Transformer-XL at convergence).
 //!
+//! The perplexity table trains through the XLA artifacts (`--features
+//! xla` + `make artifacts`). The decoder-attention table below runs the
+//! CPU mirror causally through the batched workspace API — the
+//! long-context cost story behind Table 2's speed column.
+//!
 //! Knobs: HTX_BENCH_STEPS (default 80), HTX_BENCH_BASE=1 to include the
 //! larger lm_base pair (slower).
 
+#[cfg(feature = "xla")]
 mod common;
 
-use common::{bench_steps, train_and_eval};
-use htransformer::runtime::{default_artifacts_dir, Manifest};
-use htransformer::util::bench::Table;
+use htransformer::attention::{Attention, AttnWorkspace, Full, H1d};
+use htransformer::tensor::{Batch, Qkv};
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::Rng;
+use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    println!("### Table 2 bench — LM perplexity vs params ###\n");
+#[cfg(feature = "xla")]
+fn perplexity_table() -> anyhow::Result<()> {
+    use common::{bench_steps, train_and_eval};
+    use htransformer::runtime::{default_artifacts_dir, Manifest};
+
     let manifest = Manifest::load(default_artifacts_dir())?;
     let steps = bench_steps(80);
     let mut models = vec!["lm_tiny_full", "lm_tiny_h1d"];
@@ -44,4 +55,52 @@ fn main() -> anyhow::Result<()> {
          synthetic corpus; raise HTX_BENCH_STEPS to tighten it."
     );
     Ok(())
+}
+
+/// Causal (decoder) attention cost at LM context lengths, batched.
+fn causal_attention_table() {
+    let (b, h, d) = (4usize, 4usize, 32usize);
+    let mut ws = AttnWorkspace::parallel();
+    println!(
+        "\n== causal attention cost at LM context lengths (B={b} H={h} d={d}, {} threads) ==",
+        ws.threads()
+    );
+    let mut t = Table::new(&["L", "full (causal)", "h1d Nr=16 (causal)", "full/h1d"]);
+    let budget = Duration::from_millis(250);
+    for l in [256usize, 1024, 2048] {
+        let mut rng = Rng::new(l as u64);
+        let qkv = Qkv::new(
+            Batch::random(b, h, l, d, &mut rng),
+            Batch::random(b, h, l, d, &mut rng),
+            Batch::random(b, h, l, d, &mut rng),
+        );
+        let full = Full;
+        let h1d = H1d::new(16);
+        let mf = bench_for("full", 1, budget, || {
+            std::hint::black_box(full.forward_batch(&mut ws, &qkv, true));
+        });
+        let mh = bench_for("h1d", 1, budget, || {
+            std::hint::black_box(h1d.forward_batch(&mut ws, &qkv, true));
+        });
+        t.row(&[
+            l.to_string(),
+            fmt_time(mf.min_s),
+            fmt_time(mh.min_s),
+            format!("{:.2}x", mf.min_s / mh.min_s),
+        ]);
+    }
+    t.print();
+    println!("\nh1d's causal band (2 directions) is cheaper than the encoder band (3),");
+    println!("while full attention still pays the whole L x L triangle.");
+}
+
+fn main() {
+    println!("### Table 2 bench — LM perplexity vs params ###\n");
+    #[cfg(feature = "xla")]
+    if let Err(e) = perplexity_table() {
+        println!("(perplexity table skipped: {e:#} — run `make artifacts`)");
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("(perplexity table skipped: needs the xla feature, see rust/Cargo.toml, + `make artifacts`)");
+    causal_attention_table();
 }

@@ -6,16 +6,28 @@
 //! h1d is competitive with (or better than) full attention at equal
 //! parameter count while running faster at long L.
 //!
+//! The accuracy table trains through the XLA artifacts (`--features
+//! xla` + `make artifacts`). The throughput table below it runs the CPU
+//! mirror of the same attention cores through the batched workspace API
+//! at the LRA sequence lengths — the speed half of Table 1 without any
+//! artifacts.
+//!
 //! Knobs: HTX_BENCH_STEPS (default 60), HTX_BENCH_TASKS (csv subset).
 
+#[cfg(feature = "xla")]
 mod common;
 
-use common::{bench_steps, train_and_eval};
-use htransformer::runtime::{default_artifacts_dir, Manifest};
-use htransformer::util::bench::Table;
+use htransformer::attention::{Attention, AttnWorkspace, Full, H1d};
+use htransformer::tensor::{Batch, Qkv};
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::Rng;
+use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    println!("### Table 1 bench — LRA accuracy, h1d vs full ###\n");
+#[cfg(feature = "xla")]
+fn accuracy_table() -> anyhow::Result<()> {
+    use common::{bench_steps, train_and_eval};
+    use htransformer::runtime::{default_artifacts_dir, Manifest};
+
     let manifest = Manifest::load(default_artifacts_dir())?;
     let steps = bench_steps(60);
     let chance = [
@@ -77,4 +89,52 @@ fn main() -> anyhow::Result<()> {
         println!(" raise HTX_BENCH_STEPS for sharper separations.)");
     }
     Ok(())
+}
+
+/// The speed half of Table 1 on the CPU mirror: encoder-mode attention
+/// cores at the LRA sequence lengths, batched across B·H = 8 heads.
+fn attention_throughput() {
+    let (b, h, d) = (2usize, 4usize, 32usize);
+    let mut ws = AttnWorkspace::parallel();
+    println!(
+        "\n== attention-core throughput at LRA lengths (B={b} H={h} d={d}, {} threads) ==",
+        ws.threads()
+    );
+    let mut t = Table::new(&["L", "full", "h1d Nr=16", "full/h1d"]);
+    let budget = Duration::from_millis(250);
+    for l in [512usize, 1024, 2048] {
+        let mut rng = Rng::new(l as u64);
+        let qkv = Qkv::new(
+            Batch::random(b, h, l, d, &mut rng),
+            Batch::random(b, h, l, d, &mut rng),
+            Batch::random(b, h, l, d, &mut rng),
+        );
+        let full = Full;
+        let h1d = H1d::new(16);
+        let mf = bench_for("full", 1, budget, || {
+            std::hint::black_box(full.forward_batch(&mut ws, &qkv, false));
+        });
+        let mh = bench_for("h1d", 1, budget, || {
+            std::hint::black_box(h1d.forward_batch(&mut ws, &qkv, false));
+        });
+        t.row(&[
+            l.to_string(),
+            fmt_time(mf.min_s),
+            fmt_time(mh.min_s),
+            format!("{:.2}x", mf.min_s / mh.min_s),
+        ]);
+    }
+    t.print();
+    println!("\nthe full/h1d gap at growing L is the speed story behind Table 1.");
+}
+
+fn main() {
+    println!("### Table 1 bench — LRA accuracy, h1d vs full ###\n");
+    #[cfg(feature = "xla")]
+    if let Err(e) = accuracy_table() {
+        println!("(accuracy table skipped: {e:#} — run `make artifacts`)");
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("(accuracy table skipped: needs the xla feature, see rust/Cargo.toml, + `make artifacts`)");
+    attention_throughput();
 }

@@ -1,23 +1,28 @@
 //! Experiment F-C (paper §7): the O(dL) run-time / memory claim.
 //!
 //! Two measurements:
-//!  1. compiled XLA artifacts (the production path): h1d vs full
-//!     attention forward latency at L = 128..4096;
+//!  1. compiled XLA artifacts (the production path, `--features xla`):
+//!     h1d vs full attention forward latency at L = 128..4096;
 //!  2. the pure-rust attention zoo (full, local, low-rank, block-sparse,
-//!     h1d) for the baseline-family comparison.
+//!     h1d) through the batched `[B, H, L, d]` workspace API for the
+//!     baseline-family comparison.
 //!
 //! Expected shape: full grows ~4x per L doubling, h1d ~2x; h1d overtakes
 //! full somewhere around L of a few hundred on both stacks; attention
 //! memory is O(L^2) vs O(L·Nr).
 
-use htransformer::attention::{Attention, BlockSparse, Full, H1d, LocalWindow, LowRank};
-use htransformer::runtime::{default_artifacts_dir, Engine, HostTensor, Manifest};
-use htransformer::tensor::Mat;
+use htransformer::attention::{
+    Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
+};
+use htransformer::tensor::{Batch, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::Rng;
 use std::time::Duration;
 
+#[cfg(feature = "xla")]
 fn xla_scaling() -> anyhow::Result<()> {
+    use htransformer::runtime::{default_artifacts_dir, Engine, HostTensor, Manifest};
+
     let manifest = Manifest::load(default_artifacts_dir())?;
     let mut engine = Engine::cpu()?;
     println!("== compiled XLA artifacts (B=1, H=4, d=32, Nr=16) ==");
@@ -62,7 +67,7 @@ fn xla_scaling() -> anyhow::Result<()> {
 }
 
 fn rust_scaling() {
-    println!("\n== pure-rust attention zoo (single head, d=32) ==");
+    println!("\n== pure-rust attention zoo via forward_batch (B=1, H=1, d=32) ==");
     let d = 32;
     let algos: Vec<Box<dyn Attention>> = vec![
         Box::new(Full),
@@ -71,6 +76,7 @@ fn rust_scaling() {
         Box::new(BlockSparse::new(8, 4, 4, 7)),
         Box::new(H1d::new(16)),
     ];
+    let mut ws = AttnWorkspace::serial(); // one head: measure the core, not the pool
     let mut t = Table::new(&[
         "L", "full", "local", "lowrank", "blocksparse", "h1d", "h1d mem", "full mem",
     ]);
@@ -80,15 +86,17 @@ fn rust_scaling() {
     let mut growth = Vec::new();
     for l in [128usize, 256, 512, 1024, 2048, 4096] {
         let mut rng = Rng::new(l as u64);
-        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let qkv = Qkv::new(
+            Batch::random(1, 1, l, d, &mut rng),
+            Batch::random(1, 1, l, d, &mut rng),
+            Batch::random(1, 1, l, d, &mut rng),
+        );
         let mut cells = vec![l.to_string()];
         let mut this_h1d = 0f64;
         let mut this_full = 0f64;
         for algo in &algos {
             let m = bench_for(algo.name(), 1, budget, || {
-                std::hint::black_box(algo.forward(&q, &k, &v, false));
+                std::hint::black_box(algo.forward_batch(&mut ws, &qkv, false));
             });
             if algo.name() == "h1d" {
                 this_h1d = m.min_s;
@@ -112,12 +120,16 @@ fn rust_scaling() {
     for (l, gf, gh) in growth {
         println!("  L {:>4} -> {:>4}: full {gf:.2}x   h1d {gh:.2}x", l / 2, l);
     }
+    println!("\n(multi-head batched-vs-loop speedups: `cargo bench --bench batched_vs_loop`)");
 }
 
 fn main() {
     println!("### Scaling bench — paper §7 linear-complexity claim ###\n");
+    #[cfg(feature = "xla")]
     if let Err(e) = xla_scaling() {
         println!("(xla scaling skipped: {e:#} — run `make artifacts`)");
     }
+    #[cfg(not(feature = "xla"))]
+    println!("(xla scaling skipped: the artifact path needs the xla feature, see rust/Cargo.toml)");
     rust_scaling();
 }

@@ -2,8 +2,9 @@
 //! previous-best row of Table 1): each query attends a local window,
 //! a few global tokens, and a few random blocks.
 
-use super::Attention;
-use crate::tensor::Mat;
+use super::workspace::HeadScratch;
+use super::{Attention, AttnWorkspace};
+use crate::tensor::{Batch, Mat, Qkv};
 use crate::util::Rng;
 
 pub struct BlockSparse {
@@ -25,24 +26,91 @@ impl BlockSparse {
 
     /// Sorted, deduplicated key set for query i.
     fn key_set(&self, i: usize, l: usize, causal: bool, rng: &mut Rng) -> Vec<usize> {
-        let mut keys: Vec<usize> = Vec::new();
-        let lo = i.saturating_sub(self.window);
-        let hi = if causal { i } else { (i + self.window).min(l - 1) };
-        keys.extend(lo..=hi);
-        for g in 0..self.n_global.min(l) {
-            if !causal || g <= i {
-                keys.push(g);
-            }
-        }
-        for _ in 0..self.n_random {
-            let j = rng.usize_below(l);
-            if !causal || j <= i {
-                keys.push(j);
-            }
-        }
-        keys.sort_unstable();
-        keys.dedup();
+        let mut keys = Vec::new();
+        key_set_into(
+            self.window,
+            self.n_global,
+            self.n_random,
+            i,
+            l,
+            causal,
+            rng,
+            &mut keys,
+        );
         keys
+    }
+}
+
+/// Build query `i`'s sorted, deduplicated key set into a reused buffer.
+/// Always draws exactly `n_random` samples so the RNG stream advances
+/// identically whatever the causal filter keeps.
+#[allow(clippy::too_many_arguments)]
+fn key_set_into(
+    window: usize,
+    n_global: usize,
+    n_random: usize,
+    i: usize,
+    l: usize,
+    causal: bool,
+    rng: &mut Rng,
+    keys: &mut Vec<usize>,
+) {
+    keys.clear();
+    let lo = i.saturating_sub(window);
+    let hi = if causal { i } else { (i + window).min(l - 1) };
+    keys.extend(lo..=hi);
+    for g in 0..n_global.min(l) {
+        if !causal || g <= i {
+            keys.push(g);
+        }
+    }
+    for _ in 0..n_random {
+        let j = rng.usize_below(l);
+        if !causal || j <= i {
+            keys.push(j);
+        }
+    }
+    keys.sort_unstable();
+    keys.dedup();
+}
+
+/// One head of block-sparse attention out of scratch buffers (`idx` =
+/// key set, `f2` = that set's scores).
+pub(crate) fn blocksparse_head(
+    window: usize,
+    n_global: usize,
+    n_random: usize,
+    seed: u64,
+    causal: bool,
+    s: &mut HeadScratch,
+) {
+    let (l, d) = (s.qin.rows, s.qin.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    s.out.reset(l, d);
+    let mut rng = Rng::new(seed);
+    for i in 0..l {
+        key_set_into(window, n_global, n_random, i, l, causal, &mut rng, &mut s.idx);
+        s.f2.clear();
+        for &j in &s.idx {
+            let mut sc = 0.0f32;
+            for t in 0..d {
+                sc += s.qin.at(i, t) * s.kin.at(j, t);
+            }
+            s.f2.push(sc * scale);
+        }
+        let mx = s.f2.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for sc in s.f2.iter_mut() {
+            *sc = (*sc - mx).exp();
+            sum += *sc;
+        }
+        let inv = 1.0 / sum;
+        for (w, &j) in s.f2.iter().zip(&s.idx) {
+            let w = w * inv;
+            for t in 0..d {
+                *s.out.at_mut(i, t) += w * s.vin.at(j, t);
+            }
+        }
     }
 }
 
@@ -52,37 +120,25 @@ impl Attention for BlockSparse {
     }
 
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
-        let (l, d) = (q.rows, q.cols);
-        let scale = 1.0 / (d as f32).sqrt();
-        let mut z = Mat::zeros(l, d);
-        let mut rng = Rng::new(self.seed);
-        for i in 0..l {
-            let keys = self.key_set(i, l, causal, &mut rng);
-            let mut scores: Vec<f32> = keys
-                .iter()
-                .map(|&j| {
-                    let mut s = 0.0f32;
-                    for t in 0..d {
-                        s += q.at(i, t) * k.at(j, t);
-                    }
-                    s * scale
-                })
-                .collect();
-            let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let mut sum = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - mx).exp();
-                sum += *s;
-            }
-            let inv = 1.0 / sum;
-            for (w, &j) in scores.iter().zip(&keys) {
-                let w = w * inv;
-                for t in 0..d {
-                    *z.at_mut(i, t) += w * v.at(j, t);
-                }
-            }
-        }
-        z
+        let mut s = HeadScratch::default();
+        s.load_mats(q, k, v);
+        blocksparse_head(
+            self.window,
+            self.n_global,
+            self.n_random,
+            self.seed,
+            causal,
+            &mut s,
+        );
+        s.out
+    }
+
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
+        let (window, n_global, n_random, seed) =
+            (self.window, self.n_global, self.n_random, self.seed);
+        ws.run_heads(qkv, move |s| {
+            blocksparse_head(window, n_global, n_random, seed, causal, s)
+        })
     }
 
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {

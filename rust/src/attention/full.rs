@@ -1,11 +1,32 @@
 //! Standard O(L^2) scaled dot-product attention (paper Eq. 1) — the
 //! quadratic baseline ("Transformer" rows of Tables 1 and 2).
+//!
+//! The batched path keeps one `[L, L]` score block per `(batch, head)`
+//! scratch alive in the workspace, so its workspace footprint is
+//! O(B·H·L²) — the memory cost the paper's O(L) structure removes.
 
-use super::Attention;
-use crate::tensor::ops::{matmul, matmul_nt, softmax_rows, NEG_MASK};
-use crate::tensor::Mat;
+use super::workspace::HeadScratch;
+use super::{Attention, AttnWorkspace};
+use crate::tensor::ops::{matmul_into, matmul_nt_into, softmax_rows, NEG_MASK};
+use crate::tensor::{Batch, Mat, Qkv};
 
 pub struct Full;
+
+/// One head of exact attention out of scratch buffers (`sa` = scores).
+pub(crate) fn full_head(causal: bool, s: &mut HeadScratch) {
+    let d = s.qin.cols;
+    matmul_nt_into(&s.qin, &s.kin, &mut s.sa);
+    s.sa.scale(1.0 / (d as f32).sqrt());
+    if causal {
+        for i in 0..s.sa.rows {
+            for j in (i + 1)..s.sa.cols {
+                *s.sa.at_mut(i, j) = NEG_MASK;
+            }
+        }
+    }
+    softmax_rows(&mut s.sa);
+    matmul_into(&s.sa, &s.vin, &mut s.out);
+}
 
 impl Attention for Full {
     fn name(&self) -> &'static str {
@@ -13,18 +34,14 @@ impl Attention for Full {
     }
 
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
-        let d = q.cols;
-        let mut s = matmul_nt(q, k);
-        s.scale(1.0 / (d as f32).sqrt());
-        if causal {
-            for i in 0..s.rows {
-                for j in (i + 1)..s.cols {
-                    *s.at_mut(i, j) = NEG_MASK;
-                }
-            }
-        }
-        softmax_rows(&mut s);
-        matmul(&s, v)
+        let mut s = HeadScratch::default();
+        s.load_mats(q, k, v);
+        full_head(causal, &mut s);
+        s.out
+    }
+
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
+        ws.run_heads(qkv, move |s| full_head(causal, s))
     }
 
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {

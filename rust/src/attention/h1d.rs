@@ -10,9 +10,15 @@
 //! Run time and attention memory are O(L · Nr · d) / O(L · Nr) — linear
 //! in L (paper section 7) — which the scaling bench verifies empirically
 //! against the quadratic baseline.
+//!
+//! The whole algorithm runs out of a [`HeadScratch`]: padded Q/K/V,
+//! the coarsening pyramid, token counts and the per-level results are
+//! workspace buffers, so batched execution repeats `forward` at
+//! production shapes without allocating (see `attention::workspace`).
 
-use super::Attention;
-use crate::tensor::Mat;
+use super::workspace::{ensure_levels, HeadScratch, LevelBuf};
+use super::{Attention, AttnWorkspace};
+use crate::tensor::{Batch, Mat, Qkv};
 
 const NEG: f32 = -1e30;
 
@@ -26,8 +32,15 @@ pub struct H1d {
 }
 
 impl H1d {
+    /// `nr` must be even (and at least 2): the coarse levels split each
+    /// block into half-quadrants, so an odd `nr` can never run once the
+    /// sequence spans more than one block. Enforced here so invalid
+    /// configs fail at construction, not mid-forward.
     pub fn new(nr: usize) -> Self {
-        assert!(nr >= 1);
+        assert!(
+            nr >= 2 && nr % 2 == 0,
+            "Nr must be an even block size >= 2 (got {nr})"
+        );
         Self {
             nr,
             overlap_masks: true,
@@ -36,23 +49,131 @@ impl H1d {
 
     /// Ablation variant without the overlap-quadrant masks (double counts).
     pub fn without_overlap_masks(nr: usize) -> Self {
+        assert!(
+            nr >= 2 && nr % 2 == 0,
+            "Nr must be an even block size >= 2 (got {nr})"
+        );
         Self {
             nr,
             overlap_masks: false,
         }
     }
-
-    fn padded_len(&self, l: usize) -> usize {
-        let nb = l.div_ceil(self.nr).max(1);
-        self.nr * nb.next_power_of_two()
-    }
 }
 
-/// Per-level partial result at that level's resolution.
-struct Level {
-    y: Mat,         // [lc, d] exp-weighted value sums (scaled by exp(-m))
-    den: Vec<f32>,  // [lc] exp-weight sums
-    m: Vec<f32>,    // [lc] row max logit
+fn padded_len(l: usize, nr: usize) -> usize {
+    let nb = l.div_ceil(nr).max(1);
+    nr * nb.next_power_of_two()
+}
+
+/// The full hierarchical forward for one head, out of scratch buffers:
+/// reads `qin`/`kin`/`vin`, leaves `[L, d]` in `out`. Buffer roles are
+/// documented on [`HeadScratch`].
+pub(crate) fn h1d_head(nr: usize, overlap_masks: bool, causal: bool, s: &mut HeadScratch) {
+    let (l, d) = (s.qin.rows, s.qin.cols);
+    debug_assert_eq!(s.kin.rows, l);
+    debug_assert_eq!(s.vin.rows, l);
+    let lp = padded_len(l, nr);
+    let nb0 = lp / nr;
+    let levels = if nb0 > 1 {
+        (nb0.trailing_zeros() as usize) + 1
+    } else {
+        1
+    };
+    debug_assert!(levels == 1 || nr % 2 == 0);
+
+    // padded working copies (zero rows beyond l); counts mark real tokens
+    s.sa.reset(lp, d); // Q
+    s.sb.reset(lp, d); // K sums (already zero where padded)
+    s.sc.reset(lp, d); // V sums
+    for i in 0..l {
+        s.sa.row_mut(i).copy_from_slice(s.qin.row(i));
+        s.sb.row_mut(i).copy_from_slice(s.kin.row(i));
+        s.sc.row_mut(i).copy_from_slice(s.vin.row(i));
+    }
+    s.f1.clear();
+    s.f1.resize(lp, 0.0);
+    for x in &mut s.f1[..l] {
+        *x = 1.0;
+    }
+
+    let scale = 1.0 / (d as f32).sqrt();
+    ensure_levels(&mut s.levels, levels);
+
+    for level in 0..levels {
+        if level > 0 {
+            // coarsen: Q average, K/V masked sums, counts sum
+            let lc = s.sa.rows / 2;
+            s.ta.reset(lc, d);
+            s.tb.reset(lc, d);
+            s.tc.reset(lc, d);
+            s.f2.clear();
+            s.f2.resize(lc, 0.0);
+            for i in 0..lc {
+                for t in 0..d {
+                    *s.ta.at_mut(i, t) = 0.5 * (s.sa.at(2 * i, t) + s.sa.at(2 * i + 1, t));
+                    *s.tb.at_mut(i, t) = s.sb.at(2 * i, t) + s.sb.at(2 * i + 1, t);
+                    *s.tc.at_mut(i, t) = s.sc.at(2 * i, t) + s.sc.at(2 * i + 1, t);
+                }
+                s.f2[i] = s.f1[2 * i] + s.f1[2 * i + 1];
+            }
+            std::mem::swap(&mut s.sa, &mut s.ta);
+            std::mem::swap(&mut s.sb, &mut s.tb);
+            std::mem::swap(&mut s.sc, &mut s.tc);
+            std::mem::swap(&mut s.f1, &mut s.f2);
+        }
+        // masked-average K at this level
+        let lc = s.sa.rows;
+        s.sd.reset(lc, d);
+        for i in 0..lc {
+            let c = s.f1[i].max(1.0);
+            for t in 0..d {
+                *s.sd.at_mut(i, t) = s.sb.at(i, t) / c;
+            }
+        }
+        level_attention_into(
+            &s.sa,
+            &s.sd,
+            &s.sc,
+            &s.f1,
+            nr,
+            level,
+            causal,
+            scale,
+            overlap_masks,
+            &mut s.f3,
+            &mut s.levels[level],
+        );
+    }
+
+    // recombine: interpolate to fine resolution with a shared rescale
+    s.out.reset(l, d);
+    s.f4.clear();
+    s.f4.resize(d, 0.0);
+    for i in 0..l {
+        // total max across levels for this fine row
+        let mut m_tot = NEG;
+        for (level, res) in s.levels[..levels].iter().enumerate() {
+            let ci = i >> level;
+            m_tot = m_tot.max(res.m[ci]);
+        }
+        let mut den = 0.0f32;
+        for x in &mut s.f4 {
+            *x = 0.0;
+        }
+        for (level, res) in s.levels[..levels].iter().enumerate() {
+            let ci = i >> level;
+            let w = (res.m[ci] - m_tot).exp();
+            den += res.den[ci] * w;
+            let row = res.y.row(ci);
+            for t in 0..d {
+                s.f4[t] += row[t] * w;
+            }
+        }
+        let inv = 1.0 / den.max(1e-30);
+        for t in 0..d {
+            *s.out.at_mut(i, t) = s.f4[t] * inv;
+        }
+    }
 }
 
 impl Attention for H1d {
@@ -61,99 +182,18 @@ impl Attention for H1d {
     }
 
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
-        let (l, d) = (q.rows, q.cols);
+        let l = q.rows;
         assert_eq!(k.rows, l);
         assert_eq!(v.rows, l);
-        let nr = self.nr;
-        let lp = self.padded_len(l);
-        let nb0 = lp / nr;
-        let levels = if nb0 > 1 {
-            (nb0.trailing_zeros() as usize) + 1
-        } else {
-            1
-        };
-        if levels > 1 {
-            assert!(nr % 2 == 0, "Nr must be even when coarse levels exist");
-        }
+        let mut s = HeadScratch::default();
+        s.load_mats(q, k, v);
+        h1d_head(self.nr, self.overlap_masks, causal, &mut s);
+        s.out
+    }
 
-        // padded copies; counts mark real tokens
-        let pad_mat = |x: &Mat| -> Mat {
-            let mut out = Mat::zeros(lp, d);
-            for i in 0..l {
-                out.row_mut(i).copy_from_slice(x.row(i));
-            }
-            out
-        };
-        let mut qc = pad_mat(q);
-        let mut ksum = pad_mat(k); // k rows are already zero where padded
-        let mut vsum = pad_mat(v);
-        let mut counts: Vec<f32> = (0..lp).map(|i| if i < l { 1.0 } else { 0.0 }).collect();
-
-        let scale = 1.0 / (d as f32).sqrt();
-        let mut results: Vec<Level> = Vec::with_capacity(levels);
-
-        for level in 0..levels {
-            if level > 0 {
-                // coarsen: Q average, K/V masked sums, counts sum
-                let lc = qc.rows / 2;
-                let mut q2 = Mat::zeros(lc, d);
-                let mut k2 = Mat::zeros(lc, d);
-                let mut v2 = Mat::zeros(lc, d);
-                let mut c2 = vec![0.0f32; lc];
-                for i in 0..lc {
-                    for t in 0..d {
-                        *q2.at_mut(i, t) = 0.5 * (qc.at(2 * i, t) + qc.at(2 * i + 1, t));
-                        *k2.at_mut(i, t) = ksum.at(2 * i, t) + ksum.at(2 * i + 1, t);
-                        *v2.at_mut(i, t) = vsum.at(2 * i, t) + vsum.at(2 * i + 1, t);
-                    }
-                    c2[i] = counts[2 * i] + counts[2 * i + 1];
-                }
-                qc = q2;
-                ksum = k2;
-                vsum = v2;
-                counts = c2;
-            }
-            // masked-average K at this level
-            let lc = qc.rows;
-            let mut kc = ksum.clone();
-            for i in 0..lc {
-                let c = counts[i].max(1.0);
-                for t in 0..d {
-                    *kc.at_mut(i, t) /= c;
-                }
-            }
-            results.push(level_attention(
-                &qc, &kc, &vsum, &counts, nr, level, causal, scale,
-                self.overlap_masks,
-            ));
-        }
-
-        // recombine: interpolate to fine resolution with a shared rescale
-        let mut z = Mat::zeros(l, d);
-        for i in 0..l {
-            // total max across levels for this fine row
-            let mut m_tot = NEG;
-            for (level, res) in results.iter().enumerate() {
-                let ci = i >> level;
-                m_tot = m_tot.max(res.m[ci]);
-            }
-            let mut den = 0.0f32;
-            let mut acc = vec![0.0f32; d];
-            for (level, res) in results.iter().enumerate() {
-                let ci = i >> level;
-                let w = (res.m[ci] - m_tot).exp();
-                den += res.den[ci] * w;
-                let row = res.y.row(ci);
-                for t in 0..d {
-                    acc[t] += row[t] * w;
-                }
-            }
-            let inv = 1.0 / den.max(1e-30);
-            for t in 0..d {
-                *z.at_mut(i, t) = acc[t] * inv;
-            }
-        }
-        z
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
+        let (nr, overlap_masks) = (self.nr, self.overlap_masks);
+        ws.run_heads(qkv, move |s| h1d_head(nr, overlap_masks, causal, s))
     }
 
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
@@ -168,9 +208,11 @@ impl Attention for H1d {
     }
 }
 
-/// Banded block attention at one level (mirror of the Pallas kernel).
+/// Banded block attention at one level (mirror of the Pallas kernel),
+/// writing into a reusable [`LevelBuf`]; `sbuf` is the `Nr × Nr` score
+/// scratch for one (block, direction) pair.
 #[allow(clippy::too_many_arguments)]
-fn level_attention(
+fn level_attention_into(
     q: &Mat,
     k: &Mat,
     v: &Mat,
@@ -180,7 +222,9 @@ fn level_attention(
     causal: bool,
     scale: f32,
     overlap_masks: bool,
-) -> Level {
+    sbuf: &mut Vec<f32>,
+    lvl: &mut LevelBuf,
+) {
     let lc = q.rows;
     let d = q.cols;
     let nb = lc / nr;
@@ -198,12 +242,17 @@ fn level_attention(
         &[-1, 1]
     };
 
-    let mut y = Mat::zeros(lc, d);
-    let mut den = vec![0.0f32; lc];
-    let mut m = vec![NEG / 2.0; lc];
+    lvl.y.reset(lc, d);
+    lvl.den.clear();
+    lvl.den.resize(lc, 0.0);
+    lvl.m.clear();
+    lvl.m.resize(lc, NEG / 2.0);
+    let (y, den, m) = (&mut lvl.y, &mut lvl.den, &mut lvl.m);
 
     // scores buffer for one (block, direction): nr x nr
-    let mut s = vec![0.0f32; nr * nr];
+    sbuf.clear();
+    sbuf.resize(nr * nr, 0.0);
+    let s = &mut sbuf[..];
     for bi in 0..nb {
         // pass 1: row maxes over all directions
         for &dir in dirs {
@@ -303,8 +352,6 @@ fn level_attention(
             }
         }
     }
-
-    Level { y, den, m }
 }
 
 #[cfg(test)]
@@ -337,6 +384,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "even block size")]
+    fn odd_nr_fails_at_construction() {
+        H1d::new(7);
+    }
+
+    #[test]
+    #[should_panic(expected = "even block size")]
+    fn nr_below_two_fails_at_construction() {
+        H1d::new(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "even block size")]
+    fn odd_nr_fails_for_ablation_constructor_too() {
+        H1d::without_overlap_masks(5);
     }
 
     #[test]
@@ -459,5 +524,17 @@ mod tests {
                 assert!((z.at(i, 0) - 1.0).abs() < 1e-4, "L={l} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn forward_reuses_a_caller_invisible_scratch_consistently() {
+        // two calls on the same inputs are bitwise identical (the scratch
+        // path is deterministic and fully reset per call)
+        let mut rng = Rng::new(15);
+        let q = rand_mat(&mut rng, 48, 8);
+        let k = rand_mat(&mut rng, 48, 8);
+        let v = rand_mat(&mut rng, 48, 8);
+        let algo = H1d::new(8);
+        assert_eq!(algo.forward(&q, &k, &v, true), algo.forward(&q, &k, &v, true));
     }
 }

@@ -2,8 +2,9 @@
 //! Attention" row of Table 1): each query attends to keys within a fixed
 //! window radius — O(L·w) time/memory, but no long-range information.
 
-use super::Attention;
-use crate::tensor::Mat;
+use super::workspace::HeadScratch;
+use super::{Attention, AttnWorkspace};
+use crate::tensor::{Batch, Mat, Qkv};
 
 pub struct LocalWindow {
     pub radius: usize,
@@ -15,45 +16,59 @@ impl LocalWindow {
     }
 }
 
+/// One head of windowed attention out of scratch buffers (`f1` holds
+/// the window's unnormalised weights).
+pub(crate) fn local_head(radius: usize, causal: bool, s: &mut HeadScratch) {
+    let (l, d) = (s.qin.rows, s.qin.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    s.out.reset(l, d);
+    s.f1.clear();
+    s.f1.resize(2 * radius + 1, 0.0);
+    for i in 0..l {
+        let lo = i.saturating_sub(radius);
+        let hi = if causal { i } else { (i + radius).min(l - 1) };
+        // scores
+        let mut mx = f32::NEG_INFINITY;
+        for j in lo..=hi {
+            let mut sc = 0.0f32;
+            for t in 0..d {
+                sc += s.qin.at(i, t) * s.kin.at(j, t);
+            }
+            let sc = sc * scale;
+            s.f1[j - lo] = sc;
+            mx = mx.max(sc);
+        }
+        let mut sum = 0.0f32;
+        for j in lo..=hi {
+            let w = (s.f1[j - lo] - mx).exp();
+            s.f1[j - lo] = w;
+            sum += w;
+        }
+        let inv = 1.0 / sum;
+        for j in lo..=hi {
+            let w = s.f1[j - lo] * inv;
+            for t in 0..d {
+                *s.out.at_mut(i, t) += w * s.vin.at(j, t);
+            }
+        }
+    }
+}
+
 impl Attention for LocalWindow {
     fn name(&self) -> &'static str {
         "local"
     }
 
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
-        let (l, d) = (q.rows, q.cols);
-        let scale = 1.0 / (d as f32).sqrt();
-        let mut z = Mat::zeros(l, d);
-        let mut weights = vec![0.0f32; 2 * self.radius + 1];
-        for i in 0..l {
-            let lo = i.saturating_sub(self.radius);
-            let hi = if causal { i } else { (i + self.radius).min(l - 1) };
-            // scores
-            let mut mx = f32::NEG_INFINITY;
-            for j in lo..=hi {
-                let mut s = 0.0f32;
-                for t in 0..d {
-                    s += q.at(i, t) * k.at(j, t);
-                }
-                let s = s * scale;
-                weights[j - lo] = s;
-                mx = mx.max(s);
-            }
-            let mut sum = 0.0f32;
-            for j in lo..=hi {
-                let w = (weights[j - lo] - mx).exp();
-                weights[j - lo] = w;
-                sum += w;
-            }
-            let inv = 1.0 / sum;
-            for j in lo..=hi {
-                let w = weights[j - lo] * inv;
-                for t in 0..d {
-                    *z.at_mut(i, t) += w * v.at(j, t);
-                }
-            }
-        }
-        z
+        let mut s = HeadScratch::default();
+        s.load_mats(q, k, v);
+        local_head(self.radius, causal, &mut s);
+        s.out
+    }
+
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
+        let radius = self.radius;
+        ws.run_heads(qkv, move |s| local_head(radius, causal, s))
     }
 
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {

@@ -7,9 +7,10 @@
 //! global rank-r factorisation, which the Eq. (11)-(13) example shows can
 //! fail where the H-Matrix succeeds.
 
-use super::Attention;
-use crate::tensor::ops::{matmul, matmul_nt, softmax_rows};
-use crate::tensor::Mat;
+use super::workspace::HeadScratch;
+use super::{Attention, AttnWorkspace};
+use crate::tensor::ops::{matmul_into, matmul_nt_into, softmax_rows};
+use crate::tensor::{Batch, Mat, Qkv};
 use crate::util::Rng;
 
 pub struct LowRank {
@@ -25,17 +26,41 @@ impl LowRank {
     /// Fixed non-negative row-normalised projection [rank, l] — a soft
     /// pooling so that constant values are preserved.
     fn projection(&self, l: usize) -> Mat {
-        let mut rng = Rng::new(self.seed ^ (l as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        let mut e = Mat::from_fn(self.rank.min(l), l, |_, _| rng.f32() + 1e-3);
-        for i in 0..e.rows {
-            let row = e.row_mut(i);
-            let s: f32 = row.iter().sum();
-            for x in row.iter_mut() {
-                *x /= s;
-            }
-        }
+        let mut e = Mat::default();
+        projection_into(self.rank, self.seed, l, &mut e);
         e
     }
+}
+
+/// Build the fixed `[min(rank, l), l]` projection into a reused matrix.
+fn projection_into(rank: usize, seed: u64, l: usize, e: &mut Mat) {
+    let mut rng = Rng::new(seed ^ (l as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    e.reset(rank.min(l), l);
+    for i in 0..e.rows {
+        for j in 0..e.cols {
+            *e.at_mut(i, j) = rng.f32() + 1e-3;
+        }
+    }
+    for i in 0..e.rows {
+        let row = e.row_mut(i);
+        let s: f32 = row.iter().sum();
+        for x in row.iter_mut() {
+            *x /= s;
+        }
+    }
+}
+
+/// One head of projected attention out of scratch buffers
+/// (`sa` = projection E, `sb`/`sc` = projected K/V, `sd` = scores).
+pub(crate) fn lowrank_head(rank: usize, seed: u64, s: &mut HeadScratch) {
+    let d = s.qin.cols;
+    projection_into(rank, seed, s.kin.rows, &mut s.sa);
+    matmul_into(&s.sa, &s.kin, &mut s.sb); // [r, d]
+    matmul_into(&s.sa, &s.vin, &mut s.sc); // [r, d]
+    matmul_nt_into(&s.qin, &s.sb, &mut s.sd); // [l, r]
+    s.sd.scale(1.0 / (d as f32).sqrt());
+    softmax_rows(&mut s.sd);
+    matmul_into(&s.sd, &s.sc, &mut s.out);
 }
 
 impl Attention for LowRank {
@@ -47,14 +72,15 @@ impl Attention for LowRank {
     /// variant; `causal` is ignored (documented limitation, the scaling
     /// benches use encoder mode).
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, _causal: bool) -> Mat {
-        let d = q.cols;
-        let e = self.projection(k.rows);
-        let kp = matmul(&e, k); // [r, d]
-        let vp = matmul(&e, v); // [r, d]
-        let mut s = matmul_nt(q, &kp); // [l, r]
-        s.scale(1.0 / (d as f32).sqrt());
-        softmax_rows(&mut s);
-        matmul(&s, &vp)
+        let mut s = HeadScratch::default();
+        s.load_mats(q, k, v);
+        lowrank_head(self.rank, self.seed, &mut s);
+        s.out
+    }
+
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, _causal: bool) -> Batch {
+        let (rank, seed) = (self.rank, self.seed);
+        ws.run_heads(qkv, move |s| lowrank_head(rank, seed, s))
     }
 
     fn attn_memory_bytes(&self, l: usize, d: usize) -> usize {

@@ -10,24 +10,54 @@
 //!     the compiled artifacts through the runtime);
 //!  3. documentation-by-code of the algorithm for rust readers.
 //!
-//! All implementations are single-head `[L, d]`; multi-head batching is a
-//! loop at the call site (the hot path lives in the XLA artifacts, not
-//! here).
+//! Every algorithm exposes two entry points: the legacy single-head
+//! `[L, d]` `forward`, and the batched multi-head `[B, H, L, d]`
+//! `forward_batch`, which runs the same per-head kernels out of an
+//! [`AttnWorkspace`] — padded copies, level pyramids, counts and score
+//! blocks all live in the workspace and are reused call-to-call, and
+//! the `(batch, head)` pairs are dispatched across the crate's thread
+//! pool. The production hot path is still the XLA artifacts; this is
+//! its CPU mirror at production shapes.
 
 pub mod blocksparse;
 pub mod full;
 pub mod h1d;
 pub mod local;
 pub mod lowrank;
+pub mod workspace;
 
-use crate::tensor::Mat;
+use crate::tensor::{Batch, Mat, Qkv};
 
-/// A single-head attention algorithm.
+pub use workspace::{AttnWorkspace, HeadScratch, LevelBuf};
+
+/// An attention algorithm (single-head core + batched execution).
 pub trait Attention {
     fn name(&self) -> &'static str;
 
     /// Z = normalise(weights(Q, K)) @ V, with optional causal masking.
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat;
+
+    /// Batched multi-head forward over `[B, H, L, d]` inputs. The
+    /// default implementation is the reference semantics — a per-head
+    /// loop over `forward` — and allocates per head; real
+    /// implementations override it to reuse `ws` and run heads in
+    /// parallel. Either way the result must match the loop to within
+    /// float-accumulation noise (see `tests/batch_parity.rs`).
+    fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
+        let _ = ws;
+        let (b, h, l, d) = qkv.dims();
+        let mut out = Batch::zeros(b, h, l, d);
+        for n in 0..qkv.q.n_heads() {
+            let z = self.forward(
+                &qkv.q.head_mat(n),
+                &qkv.k.head_mat(n),
+                &qkv.v.head_mat(n),
+                causal,
+            );
+            out.set_head(n, &z);
+        }
+        out
+    }
 
     /// Attention-state memory in bytes for sequence length `l` — the
     /// quantity the paper's O(L) memory claim is about (excludes Q/K/V/Z
@@ -46,8 +76,14 @@ pub use lowrank::LowRank;
 
 /// Cosine similarity between two outputs, averaged over rows — the
 /// approximation-quality metric used by the approx_quality bench.
+/// Empty inputs yield 0.0 (a debug assert flags the misuse in dev
+/// builds) instead of the 0/0 = NaN a bare mean would produce.
 pub fn mean_row_cosine(a: &Mat, b: &Mat) -> f64 {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    if a.rows == 0 {
+        debug_assert!(a.rows > 0, "mean_row_cosine over an empty matrix");
+        return 0.0;
+    }
     let mut total = 0.0f64;
     for i in 0..a.rows {
         let (ra, rb) = (a.row(i), b.row(i));
@@ -108,5 +144,50 @@ mod tests {
         let mut rng = Rng::new(1);
         let a = rand_mat(&mut rng, 10, 4);
         assert!((mean_row_cosine(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty matrix")]
+    fn cosine_of_empty_flags_misuse_in_debug() {
+        let a = Mat::zeros(0, 4);
+        mean_row_cosine(&a, &a);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn cosine_of_empty_is_zero_in_release() {
+        let a = Mat::zeros(0, 4);
+        assert_eq!(mean_row_cosine(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn default_forward_batch_loops_single_head() {
+        use crate::tensor::{Batch, Qkv};
+        // a struct relying on the trait's default forward_batch
+        struct CopyV;
+        impl Attention for CopyV {
+            fn name(&self) -> &'static str {
+                "copyv"
+            }
+            fn forward(&self, _q: &Mat, _k: &Mat, v: &Mat, _causal: bool) -> Mat {
+                v.clone()
+            }
+            fn attn_memory_bytes(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+            fn flops(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+        }
+        let mut rng = Rng::new(2);
+        let qkv = Qkv::new(
+            Batch::random(2, 2, 6, 3, &mut rng),
+            Batch::random(2, 2, 6, 3, &mut rng),
+            Batch::random(2, 2, 6, 3, &mut rng),
+        );
+        let mut ws = AttnWorkspace::serial();
+        let out = CopyV.forward_batch(&mut ws, &qkv, false);
+        assert_eq!(out, qkv.v);
     }
 }

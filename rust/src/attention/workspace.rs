@@ -1,0 +1,302 @@
+//! The batched-attention execution arena.
+//!
+//! `AttnWorkspace` owns everything a `forward_batch` call needs besides
+//! its inputs and its output: one [`HeadScratch`] per `(batch, head)`
+//! pair — padded Q/K/V copies, coarsening pyramids, real-token counts,
+//! score blocks and per-head output staging — plus an optional
+//! [`ThreadPool`] that the `(batch, head)` pairs are dispatched across.
+//! All scratch buffers are resized in place, so a second call at the
+//! same shape performs **zero heap allocations inside the workspace**
+//! ([`AttnWorkspace::capacity_snapshot`] makes that testable).
+//!
+//! Ownership across threads is handled without unsafe code: each job
+//! receives its `HeadScratch` *by value* through the pool and hands it
+//! back as the job's result ([`ThreadPool::map`] preserves order), so a
+//! scratch's heap buffers survive call-to-call even though the structs
+//! travel through the pool's channels.
+
+use crate::tensor::{Batch, Mat, Qkv};
+use crate::util::threadpool::ThreadPool;
+
+/// One attention level's partial result at that level's resolution
+/// (mirror of the `Level` triple in the paper's recombination, Eq. 69/73).
+#[derive(Debug, Default)]
+pub struct LevelBuf {
+    /// `[lc, d]` exp-weighted value sums (scaled by `exp(-m)`).
+    pub y: Mat,
+    /// `[lc]` exp-weight sums.
+    pub den: Vec<f32>,
+    /// `[lc]` row max logit.
+    pub m: Vec<f32>,
+}
+
+/// Grow a level pyramid to at least `n` levels (existing levels keep
+/// their allocations; extra stale levels are left in place and simply
+/// not read by shallower calls).
+pub(crate) fn ensure_levels(levels: &mut Vec<LevelBuf>, n: usize) {
+    while levels.len() < n {
+        levels.push(LevelBuf::default());
+    }
+}
+
+/// Per-`(batch, head)` scratch: every buffer any algorithm in the zoo
+/// needs, reused across calls. Field roles by algorithm:
+///
+/// | field      | h1d                      | full        | local     | blocksparse | lowrank        |
+/// |------------|--------------------------|-------------|-----------|-------------|----------------|
+/// | `sa`       | padded/coarsened Q       | scores      | —         | —           | projection E   |
+/// | `sb`       | padded/coarsened K sums  | —           | —         | —           | projected K    |
+/// | `sc`       | padded/coarsened V sums  | —           | —         | —           | projected V    |
+/// | `sd`       | masked-average K         | —           | —         | —           | scores         |
+/// | `ta`..`tc` | next-level coarsening    | —           | —         | —           | —              |
+/// | `f1`       | token counts             | —           | weights   | —           | —              |
+/// | `f2`       | next-level counts        | —           | —         | scores      | —              |
+/// | `f3`       | score block (`Nr × Nr`)  | —           | —         | —           | —              |
+/// | `f4`       | recombine accumulator    | —           | —         | —           | —              |
+/// | `idx`      | —                        | —           | —         | key set     | —              |
+/// | `levels`   | level pyramid            | —           | —         | —           | —              |
+#[derive(Debug, Default)]
+pub struct HeadScratch {
+    /// Flat `(batch, head)` index this scratch was last loaded with.
+    pub n: usize,
+    pub qin: Mat,
+    pub kin: Mat,
+    pub vin: Mat,
+    /// `[L, d]` per-head output staging, copied into the result batch.
+    pub out: Mat,
+    pub sa: Mat,
+    pub sb: Mat,
+    pub sc: Mat,
+    pub sd: Mat,
+    pub ta: Mat,
+    pub tb: Mat,
+    pub tc: Mat,
+    pub f1: Vec<f32>,
+    pub f2: Vec<f32>,
+    pub f3: Vec<f32>,
+    pub f4: Vec<f32>,
+    pub idx: Vec<usize>,
+    pub levels: Vec<LevelBuf>,
+}
+
+impl HeadScratch {
+    /// Load the single-head inputs (used by the legacy `[L, d]` path).
+    pub fn load_mats(&mut self, q: &Mat, k: &Mat, v: &Mat) {
+        self.qin.copy_from_slice_2d(q.rows, q.cols, &q.data);
+        self.kin.copy_from_slice_2d(k.rows, k.cols, &k.data);
+        self.vin.copy_from_slice_2d(v.rows, v.cols, &v.data);
+    }
+
+    /// Load head `n` of a batched input bundle.
+    pub fn load_head(&mut self, qkv: &Qkv, n: usize) {
+        let (_, _, l, d) = qkv.dims();
+        self.n = n;
+        self.qin.copy_from_slice_2d(l, d, qkv.q.head(n));
+        self.kin.copy_from_slice_2d(l, d, qkv.k.head(n));
+        self.vin.copy_from_slice_2d(l, d, qkv.v.head(n));
+    }
+
+    /// `(pointer, capacity)` of every heap buffer this scratch owns.
+    /// Stable across calls at a fixed shape — the reuse invariant.
+    pub fn buffer_snapshot(&self) -> Vec<(usize, usize)> {
+        let mats = [
+            &self.qin, &self.kin, &self.vin, &self.out, &self.sa, &self.sb, &self.sc,
+            &self.sd, &self.ta, &self.tb, &self.tc,
+        ];
+        let mut out: Vec<(usize, usize)> = mats
+            .iter()
+            .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+            .collect();
+        for v in [&self.f1, &self.f2, &self.f3, &self.f4] {
+            out.push((v.as_ptr() as usize, v.capacity()));
+        }
+        out.push((self.idx.as_ptr() as usize, self.idx.capacity()));
+        out.push((self.levels.as_ptr() as usize, self.levels.capacity()));
+        for lb in &self.levels {
+            out.push((lb.y.data.as_ptr() as usize, lb.y.data.capacity()));
+            out.push((lb.den.as_ptr() as usize, lb.den.capacity()));
+            out.push((lb.m.as_ptr() as usize, lb.m.capacity()));
+        }
+        out
+    }
+}
+
+/// Reusable batched-attention workspace; see the module docs.
+pub struct AttnWorkspace {
+    pool: Option<ThreadPool>,
+    slots: Vec<HeadScratch>,
+}
+
+impl AttnWorkspace {
+    /// Workspace dispatching heads across `threads` workers
+    /// (`threads <= 1` means run on the calling thread).
+    pub fn new(threads: usize) -> Self {
+        let pool = if threads > 1 {
+            Some(ThreadPool::new(threads))
+        } else {
+            None
+        };
+        Self {
+            pool,
+            slots: Vec::new(),
+        }
+    }
+
+    /// Single-threaded workspace.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Workspace sized to the host's available parallelism.
+    pub fn parallel() -> Self {
+        Self::new(crate::util::threadpool::default_threads())
+    }
+
+    /// Worker-thread count (1 when running on the calling thread).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.size()).unwrap_or(1)
+    }
+
+    /// Drop all cached scratch (frees memory; the next call re-grows).
+    pub fn clear(&mut self) {
+        self.slots.clear();
+    }
+
+    /// `(pointer, capacity)` of every scratch buffer, in slot order.
+    /// Equal snapshots before/after a call prove the call allocated
+    /// nothing inside the workspace.
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        self.slots
+            .iter()
+            .flat_map(|s| s.buffer_snapshot())
+            .collect()
+    }
+
+    /// Grow-only: slots beyond the current head count keep their grown
+    /// buffers, so a workspace alternating between head counts (e.g. a
+    /// variable batch fill) never re-allocates the larger arena.
+    fn ensure_slots(&mut self, n: usize) {
+        while self.slots.len() < n {
+            self.slots.push(HeadScratch::default());
+        }
+    }
+
+    /// Run `kernel` over every `(batch, head)` pair of `qkv`, in
+    /// parallel when a pool is attached. The kernel reads
+    /// `qin`/`kin`/`vin` and must leave its result in `out` as `[L, d]`.
+    pub fn run_heads<F>(&mut self, qkv: &Qkv, kernel: F) -> Batch
+    where
+        F: Fn(&mut HeadScratch) + Send + Sync + 'static,
+    {
+        let (b, h, l, d) = qkv.dims();
+        let n = b * h;
+        self.ensure_slots(n);
+        for i in 0..n {
+            self.slots[i].load_head(qkv, i);
+        }
+        let mut out = Batch::zeros(b, h, l, d);
+        match &self.pool {
+            Some(pool) if n > 1 => {
+                // Move the active scratches through the pool and back;
+                // their heap buffers never move or reallocate. Idle
+                // slots (from an earlier larger call) sit out the trip.
+                let mut active = std::mem::take(&mut self.slots);
+                let idle = active.split_off(n);
+                let mut done = pool.map(active, move |mut s: HeadScratch| {
+                    kernel(&mut s);
+                    s
+                });
+                for s in &done {
+                    debug_assert_eq!((s.out.rows, s.out.cols), (l, d));
+                    out.head_mut(s.n).copy_from_slice(&s.out.data);
+                }
+                done.extend(idle);
+                self.slots = done;
+            }
+            _ => {
+                for s in &mut self.slots[..n] {
+                    kernel(&mut *s);
+                    debug_assert_eq!((s.out.rows, s.out.cols), (l, d));
+                    out.head_mut(s.n).copy_from_slice(&s.out.data);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Toy kernel: out = 2 * qin + vin, elementwise.
+    fn toy_kernel(s: &mut HeadScratch) {
+        let (l, d) = (s.qin.rows, s.qin.cols);
+        s.out.reset(l, d);
+        for i in 0..l * d {
+            s.out.data[i] = 2.0 * s.qin.data[i] + s.vin.data[i];
+        }
+    }
+
+    fn toy_qkv(rng: &mut Rng, b: usize, h: usize, l: usize, d: usize) -> Qkv {
+        Qkv::new(
+            Batch::random(b, h, l, d, rng),
+            Batch::random(b, h, l, d, rng),
+            Batch::random(b, h, l, d, rng),
+        )
+    }
+
+    #[test]
+    fn run_heads_routes_heads_in_order() {
+        let mut rng = Rng::new(7);
+        let qkv = toy_qkv(&mut rng, 2, 3, 5, 4);
+        for mut ws in [AttnWorkspace::serial(), AttnWorkspace::new(4)] {
+            let out = ws.run_heads(&qkv, toy_kernel);
+            for n in 0..qkv.q.n_heads() {
+                for (o, (q, v)) in out
+                    .head(n)
+                    .iter()
+                    .zip(qkv.q.head(n).iter().zip(qkv.v.head(n)))
+                {
+                    assert_eq!(*o, 2.0 * *q + *v, "head {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let mut rng = Rng::new(8);
+        let qkv = toy_qkv(&mut rng, 2, 4, 9, 3);
+        let a = AttnWorkspace::serial().run_heads(&qkv, toy_kernel);
+        let b = AttnWorkspace::new(3).run_heads(&qkv, toy_kernel);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn second_call_at_same_shape_reuses_every_buffer() {
+        let mut rng = Rng::new(9);
+        let qkv = toy_qkv(&mut rng, 1, 4, 16, 4);
+        let mut ws = AttnWorkspace::new(2);
+        let _ = ws.run_heads(&qkv, toy_kernel);
+        let snap = ws.capacity_snapshot();
+        assert!(!snap.is_empty());
+        let _ = ws.run_heads(&qkv, toy_kernel);
+        assert_eq!(ws.capacity_snapshot(), snap);
+    }
+
+    #[test]
+    fn shape_changes_resize_then_stabilise() {
+        let mut rng = Rng::new(10);
+        let small = toy_qkv(&mut rng, 1, 2, 8, 4);
+        let big = toy_qkv(&mut rng, 1, 2, 32, 4);
+        let mut ws = AttnWorkspace::serial();
+        let _ = ws.run_heads(&small, toy_kernel);
+        let _ = ws.run_heads(&big, toy_kernel);
+        let snap = ws.capacity_snapshot();
+        // shrinking back reuses the grown buffers: snapshot is stable
+        let _ = ws.run_heads(&small, toy_kernel);
+        assert_eq!(ws.capacity_snapshot(), snap);
+    }
+}

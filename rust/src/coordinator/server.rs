@@ -204,6 +204,12 @@ fn worker_loop(
     let batch = model.batch;
     let seq = model.config.max_len;
     let mut metrics = Metrics::new();
+    // Assembly workspace (same reuse discipline as attention's
+    // AttnWorkspace): the padded token/mask buffers are allocated once
+    // and threaded through the HostTensor wrappers each batch, so the
+    // steady-state loop performs no per-batch buffer allocation.
+    let mut tokens = vec![0i32; batch * seq];
+    let mut mask = vec![0f32; batch * seq];
     ready.store(true, Ordering::SeqCst);
 
     loop {
@@ -226,17 +232,17 @@ fn worker_loop(
             }
         }
 
-        // assemble the padded batch
-        let mut tokens = vec![0i32; batch * seq];
-        let mut mask = vec![0f32; batch * seq];
+        // assemble the padded batch into the reused buffers
+        tokens.fill(0);
+        mask.fill(0.0);
         for (b, req) in group.iter().enumerate() {
             for (i, &t) in req.tokens.iter().take(seq).enumerate() {
                 tokens[b * seq + i] = t;
                 mask[b * seq + i] = 1.0;
             }
         }
-        let tok_t = HostTensor::i32(vec![batch, seq], tokens);
-        let mask_t = HostTensor::f32(vec![batch, seq], mask);
+        let tok_t = HostTensor::i32(vec![batch, seq], std::mem::take(&mut tokens));
+        let mask_t = HostTensor::f32(vec![batch, seq], std::mem::take(&mut mask));
         let mut inputs: Vec<&HostTensor> = params.iter().collect();
         inputs.push(&tok_t);
         if !is_lm {
@@ -247,6 +253,14 @@ fn worker_loop(
         let result = fwd.run_refs(&inputs);
         let exec = t0.elapsed().as_secs_f64();
         metrics.time("exec", exec);
+        drop(inputs);
+        // recover the assembly buffers for the next batch (no realloc)
+        if let HostTensor::I32 { data, .. } = tok_t {
+            tokens = data;
+        }
+        if let HostTensor::F32 { data, .. } = mask_t {
+            mask = data;
+        }
 
         // publish stats *before* releasing responses so callers that read
         // stats after their response see this batch accounted for

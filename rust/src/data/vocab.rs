@@ -8,10 +8,8 @@
 //! mapping.
 
 use std::collections::HashMap;
-use std::io::{BufRead, Write};
+use std::io::{self, BufRead, Write};
 use std::path::Path;
-
-use anyhow::{Context, Result};
 
 pub const PAD_ID: i32 = 0;
 pub const BOS_ID: i32 = 1;
@@ -87,21 +85,21 @@ impl Vocab {
     }
 
     /// Persist: one word per line, line number = id.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
         let mut f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating vocab {:?}", path.as_ref()))?;
+            .map_err(|e| with_path("creating vocab", path.as_ref(), e))?;
         for w in &self.id_to_word {
             writeln!(f, "{w}")?;
         }
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<Vocab> {
+    pub fn load(path: impl AsRef<Path>) -> io::Result<Vocab> {
         let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening vocab {:?}", path.as_ref()))?;
-        let id_to_word: Vec<String> = std::io::BufReader::new(f)
+            .map_err(|e| with_path("opening vocab", path.as_ref(), e))?;
+        let id_to_word: Vec<String> = io::BufReader::new(f)
             .lines()
-            .collect::<std::io::Result<_>>()?;
+            .collect::<io::Result<_>>()?;
         let word_to_id = id_to_word
             .iter()
             .enumerate()
@@ -112,6 +110,11 @@ impl Vocab {
             id_to_word,
         })
     }
+}
+
+/// Keep the failing path in the error message (anyhow-free context).
+fn with_path(what: &str, path: &Path, e: io::Error) -> io::Error {
+    io::Error::new(e.kind(), format!("{what} {path:?}: {e}"))
 }
 
 #[cfg(test)]

@@ -8,17 +8,27 @@
 //!   (`python/compile/kernels/hattn_pallas.py`), the per-level hot spot.
 //! * **Layer 2 (JAX)** — the hierarchical attention algorithm and the
 //!   transformer model zoo (`python/compile/`), AOT-lowered to HLO text.
-//! * **Layer 3 (this crate)** — the coordinator: PJRT runtime, training
-//!   orchestrator, inference server, data generators, benchmarks and the
-//!   numerical-analysis substrate, with python never on the request path.
+//! * **Layer 3 (this crate)** — two tiers:
+//!   - the always-on CPU core: the **batched multi-head attention zoo**
+//!     (`attention` — every algorithm runs `[B, H, L, d]` batches out of
+//!     a reusable [`attention::AttnWorkspace`], with `(batch, head)`
+//!     pairs dispatched across `util::threadpool`), the `tensor`
+//!     substrate, the synthetic `data` generators and the `hmatrix`
+//!     numerical-analysis machinery;
+//!   - the **`xla` feature tier**: PJRT `runtime`, training/serving
+//!     `coordinator` and the CLI's artifact-backed subcommands. These
+//!     need the vendored `xla` bindings, so they are compiled out of
+//!     CPU-only builds (see `rust/Cargo.toml`).
 //!
-//! See `DESIGN.md` for the experiment index (paper tables/figures →
-//! modules → benches) and `EXPERIMENTS.md` for measured results.
+//! See `DESIGN.md` (repo root) for the layer map and the experiment
+//! index (paper tables/figures → modules → benches).
 
 pub mod attention;
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod data;
 pub mod hmatrix;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tensor;
 pub mod util;

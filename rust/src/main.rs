@@ -1,168 +1,64 @@
 //! `htx` — the H-Transformer-1D coordinator CLI.
 //!
-//! Subcommands:
+//! CPU-only subcommands (always available):
+//!   rankmap                   reproduce the paper's Eq. (11)-(13) example
+//!   scaling [--heads H]       batched attention scaling table (§7)
+//!
+//! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
 //!   train   --model NAME      train a model on its synthetic task
 //!   eval    --model NAME      evaluate (fresh init or --checkpoint)
 //!   serve   --model NAME      demo the batching inference server
-//!   rankmap                   reproduce the paper's Eq. (11)-(13) example
-//!   scaling                   pure-rust attention scaling table (§7)
 //!
-//! All heavy math runs in AOT-compiled XLA artifacts (`make artifacts`);
-//! python is never on this binary's path.
+//! All heavy math runs in AOT-compiled XLA artifacts; python is never on
+//! this binary's path. The CPU subcommands run the crate's own batched
+//! attention mirror through its workspace-reuse API.
 
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
-
-use htransformer::attention::{Attention, BlockSparse, Full, H1d, LocalWindow, LowRank};
-use htransformer::coordinator::{
-    self, schedule::LrSchedule, spawn_source_for, TrainOptions, Trainer,
+use htransformer::attention::{
+    Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
 };
 use htransformer::hmatrix::toeplitz;
-use htransformer::runtime::{default_artifacts_dir, Manifest};
-use htransformer::tensor::Mat;
+use htransformer::tensor::{Batch, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::Rng;
 
 fn main() {
     let args = Args::from_env();
-    let result = match args.subcommand.as_deref() {
-        Some("list") => cmd_list(&args),
-        Some("train") => cmd_train(&args),
-        Some("eval") => cmd_eval(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("rankmap") => cmd_rankmap(),
-        Some("scaling") => cmd_scaling(&args),
+    let result: Result<(), String> = match args.subcommand.as_deref() {
+        Some("rankmap") => {
+            cmd_rankmap();
+            Ok(())
+        }
+        Some("scaling") => {
+            cmd_scaling(&args);
+            Ok(())
+        }
+        #[cfg(feature = "xla")]
+        Some("list") => xla_cmds::cmd_list(&args).map_err(|e| format!("{e:#}")),
+        #[cfg(feature = "xla")]
+        Some("train") => xla_cmds::cmd_train(&args).map_err(|e| format!("{e:#}")),
+        #[cfg(feature = "xla")]
+        Some("eval") => xla_cmds::cmd_eval(&args).map_err(|e| format!("{e:#}")),
+        #[cfg(feature = "xla")]
+        Some("serve") => xla_cmds::cmd_serve(&args).map_err(|e| format!("{e:#}")),
         other => {
             eprintln!(
-                "usage: htx <list|train|eval|serve|rankmap|scaling> [flags]\n\
-                 (got {other:?}; see README.md)"
+                "usage: htx <rankmap|scaling|list|train|eval|serve> [flags]\n\
+                 (got {other:?}; list/train/eval/serve need --features xla; see README.md)"
             );
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn manifest(args: &Args) -> Result<Manifest> {
-    let dir = args
-        .get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(default_artifacts_dir);
-    Manifest::load(dir)
-}
-
-fn cmd_list(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    let mut t = Table::new(&["model", "task", "attention", "Nr", "params", "L", "batch"]);
-    for (name, e) in &m.models {
-        t.row(&[
-            name.clone(),
-            e.task.clone(),
-            e.config.attention.clone(),
-            e.config.block_size.to_string(),
-            format!("{}", e.param_count),
-            e.config.max_len.to_string(),
-            e.batch.to_string(),
-        ]);
-    }
-    t.print();
-    println!("\nattention microbench artifacts: {}", m.attention.len());
-    Ok(())
-}
-
-fn cmd_train(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    // config file (if any) provides defaults; CLI flags override
-    let cfg = match args.get("config") {
-        Some(path) => coordinator::RunConfig::load(path)?,
-        None => coordinator::RunConfig::default(),
-    };
-    let (model, opts) = cfg.train_options(args)?;
-    let model = model.as_str();
-    let mut trainer = Trainer::new(&m, model, opts.seed as i32)?;
-    println!(
-        "training {model} ({} params, attention={}, Nr={}) for {} steps",
-        trainer.n_params(),
-        trainer.model.config.attention,
-        trainer.model.config.block_size,
-        opts.steps
-    );
-    let train_src = spawn_source_for(&trainer.model, opts.seed, 4);
-    let eval_src = spawn_source_for(&trainer.model, opts.seed ^ 0xE7A1, 2);
-    let report = trainer.run(&train_src, Some(&eval_src), &opts)?;
-    println!(
-        "done: final loss {:.4}, {:.2} steps/s ({:.1}s wall)",
-        report.final_loss, report.steps_per_sec, report.wall_secs
-    );
-    Ok(())
-}
-
-fn cmd_eval(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    let model = args.get("model").context("--model required")?;
-    let mut trainer = Trainer::new(&m, model, args.u64_or("seed", 42) as i32)?;
-    if let Some(ck) = args.get("checkpoint") {
-        trainer.load_checkpoint(std::path::Path::new(ck))?;
-        println!("loaded checkpoint at step {}", trainer.step);
-    }
-    let src = spawn_source_for(&trainer.model, args.u64_or("seed", 7), 2);
-    let ev = trainer.evaluate(&src, args.usize_or("batches", 8))?;
-    if trainer.model.task == "lm" {
-        println!("eval: nll {:.4}, perplexity {:.3}", ev.mean_nll, ev.perplexity());
-    } else {
-        println!("eval: loss {:.4}, accuracy {:.3}", ev.mean_nll, ev.accuracy);
-    }
-    Ok(())
-}
-
-fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get("model").context("--model required")?.to_string();
-    let dir = args
-        .get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(default_artifacts_dir);
-    let n_requests = args.usize_or("requests", 64);
-    let opts = coordinator::server::ServeOptions {
-        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
-        seed: args.u64_or("seed", 42) as i32,
-        checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
-    };
-    let handle = coordinator::server::start(dir, model.clone(), opts)?;
-    if !handle.wait_ready(Duration::from_secs(120)) {
-        bail!("server failed to become ready");
-    }
-    println!("serving {model}; firing {n_requests} requests...");
-    let seq = handle.seq_len;
-    let mut rng = Rng::new(1);
-    let mut receivers = Vec::new();
-    for _ in 0..n_requests {
-        let toks: Vec<i32> = (0..seq).map(|_| 2 + rng.below(100) as i32).collect();
-        receivers.push(handle.submit(toks));
-    }
-    for rx in receivers {
-        rx.recv().context("response")?.map_err(anyhow::Error::msg)?;
-    }
-    let s = handle.stats();
-    println!(
-        "served {} requests in {} batches (fill {:.2}); p50 {:.1}ms p99 {:.1}ms exec {:.1}ms",
-        s.served,
-        s.batches,
-        s.mean_batch_fill,
-        s.p50_latency * 1e3,
-        s.p99_latency * 1e3,
-        s.exec_mean * 1e3
-    );
-    handle.shutdown();
-    Ok(())
-}
-
-fn cmd_rankmap() -> Result<()> {
+fn cmd_rankmap() {
     let demo = toeplitz::run_demo();
     println!("Eq. (11)-(13) reproduction (16x16 Toeplitz attention matrix)");
     println!(
@@ -186,11 +82,11 @@ fn cmd_rankmap() -> Result<()> {
         demo.dense_storage,
         demo.dense_storage as f64 / demo.hier_storage as f64
     );
-    Ok(())
 }
 
-fn cmd_scaling(args: &Args) -> Result<()> {
+fn cmd_scaling(args: &Args) {
     let d = args.usize_or("d", 32);
+    let heads = args.usize_or("heads", 1);
     let budget = Duration::from_millis(args.u64_or("budget-ms", 300));
     let lens = [128usize, 256, 512, 1024, 2048, 4096];
     let algos: Vec<Box<dyn Attention>> = vec![
@@ -200,24 +96,162 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         Box::new(BlockSparse::new(8, 4, 4, 7)),
         Box::new(H1d::new(16)),
     ];
-    let mut t = Table::new(&["L", "full", "local", "lowrank", "blocksparse", "h1d", "h1d mem", "full mem"]);
+    let mut ws = if heads > 1 {
+        AttnWorkspace::parallel()
+    } else {
+        AttnWorkspace::serial()
+    };
+    println!(
+        "batched attention scaling (B=1, H={heads}, d={d}, {} worker thread(s))",
+        ws.threads()
+    );
+    let mut t = Table::new(&[
+        "L", "full", "local", "lowrank", "blocksparse", "h1d", "h1d mem", "full mem",
+    ]);
     for &l in &lens {
         let mut rng = Rng::new(l as u64);
-        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
-        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let qkv = Qkv::new(
+            Batch::random(1, heads, l, d, &mut rng),
+            Batch::random(1, heads, l, d, &mut rng),
+            Batch::random(1, heads, l, d, &mut rng),
+        );
         let mut cells = vec![l.to_string()];
         for algo in &algos {
             let meas = bench_for(algo.name(), 1, budget, || {
-                std::hint::black_box(algo.forward(&q, &k, &v, false));
+                std::hint::black_box(algo.forward_batch(&mut ws, &qkv, false));
             });
             cells.push(fmt_time(meas.min_s));
         }
-        cells.push(format!("{}KB", algos[4].attn_memory_bytes(l, d) / 1024));
-        cells.push(format!("{}KB", algos[0].attn_memory_bytes(l, d) / 1024));
+        cells.push(format!("{}KB", heads * algos[4].attn_memory_bytes(l, d) / 1024));
+        cells.push(format!("{}KB", heads * algos[0].attn_memory_bytes(l, d) / 1024));
         t.row(&cells);
     }
     t.print();
     println!("\nh1d should scale ~linearly in L; full ~quadratically (paper §7).");
-    Ok(())
+}
+
+#[cfg(feature = "xla")]
+mod xla_cmds {
+    use std::time::Duration;
+
+    use anyhow::{bail, Context, Result};
+
+    use htransformer::coordinator::{self, spawn_source_for, Trainer};
+    use htransformer::runtime::{default_artifacts_dir, Manifest};
+    use htransformer::util::bench::Table;
+    use htransformer::util::cli::Args;
+    use htransformer::util::Rng;
+
+    fn manifest(args: &Args) -> Result<Manifest> {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(default_artifacts_dir);
+        Manifest::load(dir)
+    }
+
+    pub fn cmd_list(args: &Args) -> Result<()> {
+        let m = manifest(args)?;
+        let mut t = Table::new(&["model", "task", "attention", "Nr", "params", "L", "batch"]);
+        for (name, e) in &m.models {
+            t.row(&[
+                name.clone(),
+                e.task.clone(),
+                e.config.attention.clone(),
+                e.config.block_size.to_string(),
+                format!("{}", e.param_count),
+                e.config.max_len.to_string(),
+                e.batch.to_string(),
+            ]);
+        }
+        t.print();
+        println!("\nattention microbench artifacts: {}", m.attention.len());
+        Ok(())
+    }
+
+    pub fn cmd_train(args: &Args) -> Result<()> {
+        let m = manifest(args)?;
+        // config file (if any) provides defaults; CLI flags override
+        let cfg = match args.get("config") {
+            Some(path) => coordinator::RunConfig::load(path)?,
+            None => coordinator::RunConfig::default(),
+        };
+        let (model, opts) = cfg.train_options(args)?;
+        let model = model.as_str();
+        let mut trainer = Trainer::new(&m, model, opts.seed as i32)?;
+        println!(
+            "training {model} ({} params, attention={}, Nr={}) for {} steps",
+            trainer.n_params(),
+            trainer.model.config.attention,
+            trainer.model.config.block_size,
+            opts.steps
+        );
+        let train_src = spawn_source_for(&trainer.model, opts.seed, 4);
+        let eval_src = spawn_source_for(&trainer.model, opts.seed ^ 0xE7A1, 2);
+        let report = trainer.run(&train_src, Some(&eval_src), &opts)?;
+        println!(
+            "done: final loss {:.4}, {:.2} steps/s ({:.1}s wall)",
+            report.final_loss, report.steps_per_sec, report.wall_secs
+        );
+        Ok(())
+    }
+
+    pub fn cmd_eval(args: &Args) -> Result<()> {
+        let m = manifest(args)?;
+        let model = args.get("model").context("--model required")?;
+        let mut trainer = Trainer::new(&m, model, args.u64_or("seed", 42) as i32)?;
+        if let Some(ck) = args.get("checkpoint") {
+            trainer.load_checkpoint(std::path::Path::new(ck))?;
+            println!("loaded checkpoint at step {}", trainer.step);
+        }
+        let src = spawn_source_for(&trainer.model, args.u64_or("seed", 7), 2);
+        let ev = trainer.evaluate(&src, args.usize_or("batches", 8))?;
+        if trainer.model.task == "lm" {
+            println!("eval: nll {:.4}, perplexity {:.3}", ev.mean_nll, ev.perplexity());
+        } else {
+            println!("eval: loss {:.4}, accuracy {:.3}", ev.mean_nll, ev.accuracy);
+        }
+        Ok(())
+    }
+
+    pub fn cmd_serve(args: &Args) -> Result<()> {
+        let model = args.get("model").context("--model required")?.to_string();
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(default_artifacts_dir);
+        let n_requests = args.usize_or("requests", 64);
+        let opts = coordinator::server::ServeOptions {
+            max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
+            seed: args.u64_or("seed", 42) as i32,
+            checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+        };
+        let handle = coordinator::server::start(dir, model.clone(), opts)?;
+        if !handle.wait_ready(Duration::from_secs(120)) {
+            bail!("server failed to become ready");
+        }
+        println!("serving {model}; firing {n_requests} requests...");
+        let seq = handle.seq_len;
+        let mut rng = Rng::new(1);
+        let mut receivers = Vec::new();
+        for _ in 0..n_requests {
+            let toks: Vec<i32> = (0..seq).map(|_| 2 + rng.below(100) as i32).collect();
+            receivers.push(handle.submit(toks));
+        }
+        for rx in receivers {
+            rx.recv().context("response")?.map_err(anyhow::Error::msg)?;
+        }
+        let s = handle.stats();
+        println!(
+            "served {} requests in {} batches (fill {:.2}); p50 {:.1}ms p99 {:.1}ms exec {:.1}ms",
+            s.served,
+            s.batches,
+            s.mean_batch_fill,
+            s.p50_latency * 1e3,
+            s.p99_latency * 1e3,
+            s.exec_mean * 1e3
+        );
+        handle.shutdown();
+        Ok(())
+    }
 }

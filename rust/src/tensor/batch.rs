@@ -1,0 +1,205 @@
+//! Batched multi-head tensors: the `[B, H, L, d]` substrate shared by
+//! the attention zoo, the benches and the parity tests.
+//!
+//! A `Batch` is a single contiguous row-major buffer holding `B * H`
+//! heads of `[L, d]` data — the same layout the AOT-compiled XLA
+//! attention artifacts use for their inputs, so a `Batch` round-trips
+//! to the runtime's host tensors without reshuffling. Per-head views
+//! are plain slices (`head`/`head_mut`); `head_mat` copies one head out
+//! into a [`Mat`] for code that still works one head at a time.
+
+use super::Mat;
+
+/// Row-major `[B, H, L, d]` f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub b: usize,
+    pub h: usize,
+    pub l: usize,
+    pub d: usize,
+    pub data: Vec<f32>,
+}
+
+impl Batch {
+    pub fn zeros(b: usize, h: usize, l: usize, d: usize) -> Self {
+        Self {
+            b,
+            h,
+            l,
+            d,
+            data: vec![0.0; b * h * l * d],
+        }
+    }
+
+    pub fn from_vec(b: usize, h: usize, l: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), b * h * l * d, "shape/data mismatch");
+        Self { b, h, l, d, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize, usize, usize) -> f32>(
+        b: usize,
+        h: usize,
+        l: usize,
+        d: usize,
+        mut f: F,
+    ) -> Self {
+        let mut data = Vec::with_capacity(b * h * l * d);
+        for bi in 0..b {
+            for hi in 0..h {
+                for i in 0..l {
+                    for j in 0..d {
+                        data.push(f(bi, hi, i, j));
+                    }
+                }
+            }
+        }
+        Self { b, h, l, d, data }
+    }
+
+    /// Standard-normal batch (bench/test helper).
+    pub fn random(b: usize, h: usize, l: usize, d: usize, rng: &mut crate::util::Rng) -> Self {
+        let mut data = vec![0.0f32; b * h * l * d];
+        rng.fill_normal(&mut data, 1.0);
+        Self { b, h, l, d, data }
+    }
+
+    /// Lift a single `[L, d]` matrix into a `[1, 1, L, d]` batch.
+    pub fn from_mat(m: &Mat) -> Self {
+        Self {
+            b: 1,
+            h: 1,
+            l: m.rows,
+            d: m.cols,
+            data: m.data.clone(),
+        }
+    }
+
+    /// Number of `[L, d]` heads (`B * H`).
+    pub fn n_heads(&self) -> usize {
+        self.b * self.h
+    }
+
+    /// Elements per head (`L * d`).
+    pub fn head_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    /// Borrow head `n` (flat index over `B * H`, batch-major).
+    pub fn head(&self, n: usize) -> &[f32] {
+        debug_assert!(n < self.n_heads());
+        let hl = self.head_len();
+        &self.data[n * hl..(n + 1) * hl]
+    }
+
+    pub fn head_mut(&mut self, n: usize) -> &mut [f32] {
+        debug_assert!(n < self.n_heads());
+        let hl = self.head_len();
+        &mut self.data[n * hl..(n + 1) * hl]
+    }
+
+    /// Copy head `n` out into an `[L, d]` matrix.
+    pub fn head_mat(&self, n: usize) -> Mat {
+        Mat::from_vec(self.l, self.d, self.head(n).to_vec())
+    }
+
+    /// Overwrite head `n` from an `[L, d]` matrix.
+    pub fn set_head(&mut self, n: usize, m: &Mat) {
+        assert_eq!((m.rows, m.cols), (self.l, self.d), "head shape mismatch");
+        self.head_mut(n).copy_from_slice(&m.data);
+    }
+
+    #[inline]
+    pub fn at(&self, bi: usize, hi: usize, i: usize, j: usize) -> f32 {
+        debug_assert!(bi < self.b && hi < self.h && i < self.l && j < self.d);
+        self.data[((bi * self.h + hi) * self.l + i) * self.d + j]
+    }
+
+    pub fn max_abs_diff(&self, other: &Batch) -> f32 {
+        assert_eq!(
+            (self.b, self.h, self.l, self.d),
+            (other.b, other.h, other.l, other.d)
+        );
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Query/key/value triple with identical `[B, H, L, d]` shape — the
+/// input bundle of [`crate::attention::Attention::forward_batch`].
+#[derive(Clone, Debug)]
+pub struct Qkv {
+    pub q: Batch,
+    pub k: Batch,
+    pub v: Batch,
+}
+
+impl Qkv {
+    pub fn new(q: Batch, k: Batch, v: Batch) -> Self {
+        assert_eq!((q.b, q.h, q.l, q.d), (k.b, k.h, k.l, k.d), "q/k shape mismatch");
+        assert_eq!((q.b, q.h, q.l, q.d), (v.b, v.h, v.l, v.d), "q/v shape mismatch");
+        Self { q, k, v }
+    }
+
+    /// Single-head bundle from `[L, d]` matrices.
+    pub fn from_mats(q: &Mat, k: &Mat, v: &Mat) -> Self {
+        Self::new(Batch::from_mat(q), Batch::from_mat(k), Batch::from_mat(v))
+    }
+
+    /// `(B, H, L, d)`.
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.q.b, self.q.h, self.q.l, self.q.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_layout_is_batch_major() {
+        let b = Batch::from_fn(2, 3, 4, 2, |bi, hi, i, j| {
+            (bi * 1000 + hi * 100 + i * 10 + j) as f32
+        });
+        assert_eq!(b.n_heads(), 6);
+        // head 4 == (bi=1, hi=1)
+        let h = b.head(4);
+        assert_eq!(h[0], 1100.0);
+        assert_eq!(h[2 * 2 + 1], 1121.0); // i=2, j=1
+        assert_eq!(b.at(1, 1, 2, 1), 1121.0);
+    }
+
+    #[test]
+    fn head_mat_round_trips() {
+        let mut rng = crate::util::Rng::new(3);
+        let mut batch = Batch::random(2, 2, 5, 3, &mut rng);
+        let m = batch.head_mat(3);
+        assert_eq!((m.rows, m.cols), (5, 3));
+        let mut doubled = m.clone();
+        doubled.scale(2.0);
+        batch.set_head(3, &doubled);
+        assert_eq!(batch.head_mat(3), doubled);
+        // other heads untouched
+        assert_eq!(batch.head_mat(0).data, batch.head(0).to_vec());
+    }
+
+    #[test]
+    fn from_mat_is_single_head() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let b = Batch::from_mat(&m);
+        assert_eq!((b.b, b.h, b.l, b.d), (1, 1, 3, 2));
+        assert_eq!(b.head_mat(0), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "q/v shape mismatch")]
+    fn qkv_rejects_mismatched_shapes() {
+        Qkv::new(
+            Batch::zeros(1, 2, 4, 2),
+            Batch::zeros(1, 2, 4, 2),
+            Batch::zeros(1, 2, 5, 2),
+        );
+    }
+}

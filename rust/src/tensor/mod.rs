@@ -8,10 +8,13 @@
 //! tests.  The matmul microkernel is cache-blocked and unrolled over k —
 //! enough to make the O(L^2) baselines honest without SIMD intrinsics.
 
+pub mod batch;
 pub mod ops;
 
+pub use batch::{Batch, Qkv};
+
 /// Row-major dense matrix.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -87,6 +90,27 @@ impl Mat {
         out
     }
 
+    /// Reshape in place to `[rows, cols]`, zero-filled, reusing the
+    /// existing allocation — the workspace-reuse primitive: once the
+    /// backing `Vec` has grown to a shape's size, repeated `reset`s at
+    /// that shape perform no heap allocation.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Overwrite in place from a `[rows, cols]` row-major slice,
+    /// reusing the existing allocation.
+    pub fn copy_from_slice_2d(&mut self, rows: usize, cols: usize, src: &[f32]) {
+        assert_eq!(rows * cols, src.len(), "shape/data mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.extend_from_slice(src);
+    }
+
     pub fn scale(&mut self, s: f32) {
         for x in &mut self.data {
             *x *= s;
@@ -131,5 +155,27 @@ mod tests {
         let i3 = Mat::eye(3);
         assert_eq!(i3.at(0, 0), 1.0);
         assert_eq!(i3.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut m = Mat::from_fn(8, 8, |i, j| (i + j) as f32);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m.reset(4, 4);
+        assert_eq!((m.rows, m.cols), (4, 4));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.data.as_ptr(), ptr);
+        m.reset(8, 8); // growing back within capacity: still no realloc
+        assert_eq!(m.data.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn copy_from_slice_2d_overwrites() {
+        let mut m = Mat::zeros(2, 2);
+        m.copy_from_slice_2d(1, 3, &[1.0, 2.0, 3.0]);
+        assert_eq!((m.rows, m.cols), (1, 3));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0]);
     }
 }

@@ -4,9 +4,17 @@ use super::Mat;
 
 /// C = A @ B (cache-blocked, k-unrolled).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::default();
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B, written into an existing matrix (resized in place, so a
+/// workspace-owned `c` is reused allocation-free across calls).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    c.reset(m, n);
     const BI: usize = 32;
     const BK: usize = 64;
     for i0 in (0..m).step_by(BI) {
@@ -29,14 +37,20 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
 /// C = A @ B^T — the attention-score shape (avoids materialising B^T).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::default();
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B^T, written into an existing matrix (see [`matmul_into`]).
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
+    c.reset(m, n);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c.data[i * n..(i + 1) * n];
@@ -49,7 +63,6 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
             crow[j] = acc;
         }
     }
-    c
 }
 
 /// In-place row softmax with max-subtraction; entries equal to `NEG_MASK`
@@ -137,6 +150,23 @@ mod tests {
         let c1 = matmul(&a, &b);
         let c2 = naive_matmul(&a, &b);
         assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn into_variants_reuse_and_match() {
+        let mut rng = crate::util::Rng::new(5);
+        let a = Mat::from_fn(9, 6, |_, _| rng.normal_f32());
+        let b = Mat::from_fn(6, 11, |_, _| rng.normal_f32());
+        let mut c = Mat::zeros(9, 11); // pre-sized: second fill reuses it
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c, matmul(&a, &b));
+        let ptr = c.data.as_ptr();
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data.as_ptr(), ptr, "matmul_into must not reallocate");
+        let bt = Mat::from_fn(11, 6, |_, _| rng.normal_f32());
+        let mut s = Mat::default();
+        matmul_nt_into(&a, &bt, &mut s);
+        assert_eq!(s, matmul_nt(&a, &bt));
     }
 
     #[test]

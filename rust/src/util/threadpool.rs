@@ -1,13 +1,22 @@
 //! Fixed-size thread pool over std primitives (no tokio in the vendor set).
 //!
-//! Used by the coordinator for data-generation workers and by the server
-//! for request handling.  Scoped-join semantics: `ThreadPool::execute`
-//! queues a boxed job; dropping the pool joins all workers after the
-//! queue drains.
+//! Used by the batched attention workspace to dispatch `(batch, head)`
+//! pairs, by the coordinator for data-generation workers and by the
+//! server for request handling.  Scoped-join semantics:
+//! `ThreadPool::execute` queues a boxed job; dropping the pool joins all
+//! workers after the queue drains.  `ThreadPool::map` is the ordered
+//! fork-join primitive: items are moved into jobs and their results
+//! collected back in input order, which is what lets a caller thread
+//! owned scratch buffers through the pool and recover them afterwards.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Worker count matching the host's available parallelism (>= 1).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 

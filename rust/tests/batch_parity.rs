@@ -1,0 +1,169 @@
+//! CPU integration suite for the batched attention core.
+//!
+//! Two contracts, for every algorithm in the zoo:
+//!  1. **parity** — `forward_batch` through a workspace (serial and
+//!     threadpool-parallel) matches the reference per-head loop over
+//!     `forward` to within 1e-6, across random shapes including odd L,
+//!     L < Nr, and B·H up to 8, both causal settings;
+//!  2. **reuse** — a second `forward_batch` call at the same shape
+//!     performs zero heap allocations inside the workspace (every
+//!     buffer's pointer and capacity is unchanged).
+
+use htransformer::attention::{
+    Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
+};
+use htransformer::tensor::{Batch, Qkv};
+use htransformer::util::quickcheck::forall;
+use htransformer::util::Rng;
+
+fn zoo() -> Vec<Box<dyn Attention>> {
+    vec![
+        Box::new(Full),
+        Box::new(LocalWindow::new(5)),
+        Box::new(LowRank::new(6, 7)),
+        Box::new(BlockSparse::new(4, 2, 2, 9)),
+        Box::new(H1d::new(8)),
+    ]
+}
+
+fn random_qkv(rng: &mut Rng, b: usize, h: usize, l: usize, d: usize) -> Qkv {
+    Qkv::new(
+        Batch::random(b, h, l, d, rng),
+        Batch::random(b, h, l, d, rng),
+        Batch::random(b, h, l, d, rng),
+    )
+}
+
+/// The reference semantics: a per-head loop over the single-head path.
+fn loop_reference(algo: &dyn Attention, qkv: &Qkv, causal: bool) -> Batch {
+    let (b, h, l, d) = qkv.dims();
+    let mut out = Batch::zeros(b, h, l, d);
+    for n in 0..qkv.q.n_heads() {
+        let z = algo.forward(
+            &qkv.q.head_mat(n),
+            &qkv.k.head_mat(n),
+            &qkv.v.head_mat(n),
+            causal,
+        );
+        out.set_head(n, &z);
+    }
+    out
+}
+
+#[test]
+fn fixed_shapes_cover_the_edges() {
+    // deterministic sweep over the shapes the issue calls out:
+    // odd L, L < Nr (Nr = 8 for the h1d entry), B·H up to 8
+    let shapes = [
+        (1usize, 1usize, 7usize, 4usize), // single head, odd L, L < Nr
+        (1, 1, 1, 4),                     // degenerate length
+        (2, 4, 33, 8),                    // B·H = 8, odd non-pow2 L
+        (1, 8, 16, 4),                    // B·H = 8, exact blocks
+        (2, 2, 5, 4),                     // L < Nr with several heads
+        (4, 2, 12, 4),                    // L not a multiple of Nr
+        (1, 3, 64, 8),                    // deeper h1d pyramid
+    ];
+    let mut rng = Rng::new(2024);
+    let mut ws_serial = AttnWorkspace::serial();
+    let mut ws_par = AttnWorkspace::new(4);
+    for &(b, h, l, d) in &shapes {
+        let qkv = random_qkv(&mut rng, b, h, l, d);
+        for algo in &zoo() {
+            for causal in [false, true] {
+                let want = loop_reference(algo.as_ref(), &qkv, causal);
+                for (mode, ws) in [("serial", &mut ws_serial), ("parallel", &mut ws_par)] {
+                    let got = algo.forward_batch(ws, &qkv, causal);
+                    let diff = got.max_abs_diff(&want);
+                    assert!(
+                        diff < 1e-6,
+                        "{} {mode} B={b} H={h} L={l} d={d} causal={causal}: diff {diff}",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_random_shapes_match_loop() {
+    // RefCell because `forall` properties are `Fn`: the single workspace
+    // is reused (and so stress-tested across shapes) without &mut capture
+    let ws = std::cell::RefCell::new(AttnWorkspace::new(3));
+    forall(
+        25,
+        |r| {
+            let b = 1 + r.usize_below(3) as u64;
+            let h = 1 + r.usize_below(4) as u64;
+            let l = 1 + r.usize_below(48) as u64;
+            (b, l, r.next_u64())
+        },
+        |&(b, l, seed)| {
+            let (b, l) = (b as usize, l as usize);
+            if b == 0 || l == 0 {
+                return Ok(()); // shrinker may propose empty shapes
+            }
+            let h = 1 + (seed % 4) as usize; // B·H in 1..=12, usually <= 8
+            let d = 4;
+            let mut rng = Rng::new(seed);
+            let qkv = random_qkv(&mut rng, b, h, l, d);
+            for algo in &zoo() {
+                for causal in [false, true] {
+                    let want = loop_reference(algo.as_ref(), &qkv, causal);
+                    let got = algo.forward_batch(&mut ws.borrow_mut(), &qkv, causal);
+                    let diff = got.max_abs_diff(&want);
+                    if diff >= 1e-6 {
+                        return Err(format!(
+                            "{} B={b} H={h} L={l} causal={causal}: diff {diff}",
+                            algo.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn second_call_at_same_shape_allocates_nothing_in_workspace() {
+    let mut rng = Rng::new(5);
+    let qkv = random_qkv(&mut rng, 2, 4, 40, 8);
+    for algo in &zoo() {
+        // fresh workspace per algorithm so each scratch profile is probed
+        let mut ws = AttnWorkspace::new(3);
+        let first = algo.forward_batch(&mut ws, &qkv, false);
+        let snap = ws.capacity_snapshot();
+        assert!(!snap.is_empty(), "{}: snapshot empty", algo.name());
+        let second = algo.forward_batch(&mut ws, &qkv, false);
+        assert_eq!(
+            ws.capacity_snapshot(),
+            snap,
+            "{}: second call reallocated workspace buffers",
+            algo.name()
+        );
+        // and reuse must not change results: bitwise-identical outputs
+        assert_eq!(first.data, second.data, "{}", algo.name());
+        // flipping causal at the same shape must also stay allocation-free
+        let _ = algo.forward_batch(&mut ws, &qkv, true);
+        assert_eq!(
+            ws.capacity_snapshot(),
+            snap,
+            "{}: causal flip reallocated workspace buffers",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn batched_is_deterministic_across_thread_counts() {
+    let mut rng = Rng::new(6);
+    let qkv = random_qkv(&mut rng, 2, 4, 65, 8);
+    for algo in &zoo() {
+        let a = algo.forward_batch(&mut AttnWorkspace::serial(), &qkv, true);
+        let b = algo.forward_batch(&mut AttnWorkspace::new(2), &qkv, true);
+        let c = algo.forward_batch(&mut AttnWorkspace::new(8), &qkv, true);
+        assert_eq!(a.data, b.data, "{}", algo.name());
+        assert_eq!(a.data, c.data, "{}", algo.name());
+    }
+}

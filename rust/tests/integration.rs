@@ -1,8 +1,13 @@
 //! Integration tests over the compiled artifacts.
 //!
-//! These require `make artifacts` to have run; they are skipped (with a
-//! visible marker) when the artifacts directory is absent so plain
-//! `cargo test` stays green in a fresh checkout.
+//! These require the `xla` feature (the whole file is compiled out
+//! otherwise — the batched-attention parity suite in `batch_parity.rs`
+//! is the CPU-only integration surface) and `make artifacts` to have
+//! run; they are skipped (with a visible marker) when the artifacts
+//! directory is absent so plain `cargo test` stays green in a fresh
+//! checkout.
+
+#![cfg(feature = "xla")]
 
 use htransformer::attention::{Attention, H1d};
 use htransformer::coordinator::{
