@@ -1,0 +1,102 @@
+//! Bench: end-to-end CPU model forward — tokens/sec vs L, h1d vs the
+//! quadratic baseline, at LRA-encoder and LM-decoder shapes.
+//!
+//! This is the model-level companion of `scaling.rs`: the paper's O(L)
+//! claim measured through the full stack (embedding, pre-LN blocks,
+//! batched attention out of one shared workspace, FFN, logits head)
+//! instead of through raw attention calls. The crossover where h1d
+//! overtakes full shifts right versus the raw-attention bench because
+//! the projections/FFN cost O(L·d²) for both.
+//!
+//! Flags:
+//!   --smoke          tiny shapes + budget (CI keep-alive; exercises
+//!                    every code path, proves the bench still runs)
+//!   --budget-ms N    per-cell measuring budget (default 250)
+//!   --batch N        batch size (default 2)
+
+use std::time::Duration;
+
+use htransformer::model::{AttnSpec, Model, ModelConfig, ModelWorkspace};
+use htransformer::util::bench::{bench_for, fmt_time, Table};
+use htransformer::util::cli::Args;
+use htransformer::util::Rng;
+
+fn run_table(
+    title: &str,
+    causal: bool,
+    lens: &[usize],
+    batch: usize,
+    nr: usize,
+    budget: Duration,
+) {
+    println!("== {title} (B={batch}, d_model 64, 2 layers x 4 heads, Nr={nr}) ==");
+    let mut t = Table::new(&["L", "h1d", "full", "h1d tok/s", "full tok/s", "h1d/full"]);
+    for &l in lens {
+        let mut cells = vec![l.to_string()];
+        let mut times = Vec::new();
+        for spec in [AttnSpec::H1d { nr }, AttnSpec::Full] {
+            let cfg = ModelConfig {
+                vocab_size: 256,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 256,
+                max_len: l,
+                causal,
+                attention: spec,
+            };
+            let model = Model::new(cfg, 1).expect("valid bench config");
+            let mut ws = ModelWorkspace::parallel();
+            let mut rng = Rng::new(l as u64);
+            let tokens: Vec<u32> = (0..batch * l)
+                .map(|_| rng.below(model.cfg.vocab_size as u64) as u32)
+                .collect();
+            let m = bench_for(model.attention_name(), 1, budget, || {
+                std::hint::black_box(model.forward(&mut ws, &tokens, batch));
+            });
+            times.push(m.min_s);
+        }
+        let toks = (batch * l) as f64;
+        cells.push(fmt_time(times[0]));
+        cells.push(fmt_time(times[1]));
+        cells.push(format!("{:.0}", toks / times[0]));
+        cells.push(format!("{:.0}", toks / times[1]));
+        cells.push(format!("{:.2}x", times[1] / times[0]));
+        t.row(&cells);
+    }
+    t.print();
+    println!();
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let budget = Duration::from_millis(args.u64_or("budget-ms", if smoke { 30 } else { 250 }));
+    let batch = args.usize_or("batch", if smoke { 1 } else { 2 });
+    let nr = 16;
+    println!("### CPU model forward: tokens/sec vs L (h1d vs full) ###\n");
+    if smoke {
+        // CI keep-alive: one short row per table, both causal settings
+        let lens = [64usize, 128];
+        run_table("LRA encoder shapes [smoke]", false, &lens, batch, nr, budget);
+        run_table("LM decoder shapes [smoke]", true, &lens[..1], batch, nr, budget);
+    } else {
+        run_table(
+            "LRA encoder shapes (Table 1 lengths)",
+            false,
+            &[256, 512, 1024, 2048],
+            batch,
+            nr,
+            budget,
+        );
+        run_table(
+            "LM decoder shapes (Table 2 lengths)",
+            true,
+            &[256, 512, 1024],
+            batch,
+            nr,
+            budget,
+        );
+    }
+    println!("h1d should approach linear scaling in L as the attention term dominates (paper §7).");
+}

@@ -141,6 +141,14 @@ impl Attention for BlockSparse {
         })
     }
 
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
+        let (window, n_global, n_random, seed) =
+            (self.window, self.n_global, self.n_random, self.seed);
+        ws.run_heads_into(qkv, out, move |s| {
+            blocksparse_head(window, n_global, n_random, seed, causal, s)
+        })
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * (2 * self.window + 1 + self.n_global + self.n_random) * 4
     }

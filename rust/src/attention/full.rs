@@ -44,6 +44,10 @@ impl Attention for Full {
         ws.run_heads(qkv, move |s| full_head(causal, s))
     }
 
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
+        ws.run_heads_into(qkv, out, move |s| full_head(causal, s))
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * l * 4
     }

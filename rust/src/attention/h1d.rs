@@ -196,6 +196,11 @@ impl Attention for H1d {
         ws.run_heads(qkv, move |s| h1d_head(nr, overlap_masks, causal, s))
     }
 
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
+        let (nr, overlap_masks) = (self.nr, self.overlap_masks);
+        ws.run_heads_into(qkv, out, move |s| h1d_head(nr, overlap_masks, causal, s))
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         // level-0: 3 bands of L*Nr scores; coarse levels: 2 bands over a
         // geometrically shrinking sequence — ~5 L Nr total (paper §7).

@@ -71,6 +71,11 @@ impl Attention for LocalWindow {
         ws.run_heads(qkv, move |s| local_head(radius, causal, s))
     }
 
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
+        let radius = self.radius;
+        ws.run_heads_into(qkv, out, move |s| local_head(radius, causal, s))
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * (2 * self.radius + 1) * 4
     }

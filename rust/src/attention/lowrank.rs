@@ -83,6 +83,11 @@ impl Attention for LowRank {
         ws.run_heads(qkv, move |s| lowrank_head(rank, seed, s))
     }
 
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, _causal: bool, out: &mut Batch) {
+        let (rank, seed) = (self.rank, self.seed);
+        ws.run_heads_into(qkv, out, move |s| lowrank_head(rank, seed, s))
+    }
+
     fn attn_memory_bytes(&self, l: usize, d: usize) -> usize {
         let r = self.rank;
         l * r * 4 + 2 * r * d * 4

@@ -59,6 +59,16 @@ pub trait Attention {
         out
     }
 
+    /// [`Attention::forward_batch`] writing into a caller-owned output
+    /// batch (resized in place). Layered callers that keep the output
+    /// alive across calls — e.g. the `model` transformer stack running
+    /// every layer through one shared workspace — stay allocation-free
+    /// at a fixed shape. The default delegates to `forward_batch`; the
+    /// zoo overrides it with [`AttnWorkspace::run_heads_into`].
+    fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
+        *out = self.forward_batch(ws, qkv, causal);
+    }
+
     /// Attention-state memory in bytes for sequence length `l` — the
     /// quantity the paper's O(L) memory claim is about (excludes Q/K/V/Z
     /// themselves, which are O(Ld) for every algorithm).

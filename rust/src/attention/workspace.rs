@@ -188,13 +188,27 @@ impl AttnWorkspace {
     where
         F: Fn(&mut HeadScratch) + Send + Sync + 'static,
     {
+        let mut out = Batch::zeros(0, 0, 0, 0);
+        self.run_heads_into(qkv, &mut out, kernel);
+        out
+    }
+
+    /// [`AttnWorkspace::run_heads`] writing into a caller-owned output
+    /// batch (resized in place) — callers that hold the output across
+    /// calls, like a transformer layer stack, stay allocation-free at a
+    /// fixed shape.
+    pub fn run_heads_into<F>(&mut self, qkv: &Qkv, out: &mut Batch, kernel: F)
+    where
+        F: Fn(&mut HeadScratch) + Send + Sync + 'static,
+    {
         let (b, h, l, d) = qkv.dims();
         let n = b * h;
         self.ensure_slots(n);
         for i in 0..n {
             self.slots[i].load_head(qkv, i);
         }
-        let mut out = Batch::zeros(b, h, l, d);
+        // every head region is copied over below, so skip the zero fill
+        out.reset_for_overwrite(b, h, l, d);
         match &self.pool {
             Some(pool) if n > 1 => {
                 // Move the active scratches through the pool and back;
@@ -221,7 +235,6 @@ impl AttnWorkspace {
                 }
             }
         }
-        out
     }
 }
 
@@ -284,6 +297,19 @@ mod tests {
         assert!(!snap.is_empty());
         let _ = ws.run_heads(&qkv, toy_kernel);
         assert_eq!(ws.capacity_snapshot(), snap);
+    }
+
+    #[test]
+    fn run_heads_into_reuses_the_output_batch() {
+        let mut rng = Rng::new(11);
+        let qkv = toy_qkv(&mut rng, 2, 2, 8, 4);
+        let mut ws = AttnWorkspace::new(2);
+        let mut out = Batch::zeros(0, 0, 0, 0);
+        ws.run_heads_into(&qkv, &mut out, toy_kernel);
+        assert_eq!(out, ws.run_heads(&qkv, toy_kernel));
+        let ptr = out.data.as_ptr();
+        ws.run_heads_into(&qkv, &mut out, toy_kernel);
+        assert_eq!(out.data.as_ptr(), ptr, "output batch must be reused");
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::trainer::TrainOptions;
+use crate::model::ModelConfig;
 use crate::util::cli::Args;
 
 #[derive(Clone, Debug, Default)]
@@ -66,6 +67,16 @@ impl RunConfig {
     fn pick<'a>(&'a self, args: &'a Args, key: &str) -> Option<&'a str> {
         // CLI flag wins over file value
         args.get(key).or_else(|| self.get(key))
+    }
+
+    /// Resolve the CPU `model` stack's configuration from file + CLI
+    /// overrides — the same [`ModelConfig`] type and key set the
+    /// CPU-only `htx infer` subcommand reads (`vocab_size`, `d_model`,
+    /// `n_heads`, `n_layers`, `d_ff`, `max_len`, `causal`, `attention`,
+    /// `block_size`, ...), so one config file can drive both the
+    /// artifact path and its CPU mirror.
+    pub fn model_config(&self, args: &Args) -> Result<ModelConfig> {
+        ModelConfig::from_lookup(|k| self.pick(args, k)).map_err(anyhow::Error::msg)
     }
 
     /// Resolve model name + TrainOptions from file + CLI overrides.
@@ -155,5 +166,22 @@ checkpoint = "runs/lm.ckpt"
     fn missing_model_is_an_error() {
         let c = RunConfig::parse("steps = 3").unwrap();
         assert!(c.train_options(&Args::default()).is_err());
+    }
+
+    #[test]
+    fn model_config_shares_the_cpu_key_set() {
+        let c = RunConfig::parse(
+            "attention = \"h1d\"\nblock_size = 8\nd_model = 64\nn_heads = 8\ncausal = true\n",
+        )
+        .unwrap();
+        // CLI overrides file, same precedence as train_options
+        let args = Args::parse(&["infer".into(), "--block_size".into(), "4".into()]);
+        let cfg = c.model_config(&args).unwrap();
+        assert_eq!(cfg.attention, crate::model::AttnSpec::H1d { nr: 4 });
+        assert_eq!(cfg.d_model, 64);
+        assert!(cfg.causal);
+        // invalid combinations surface as errors, not panics
+        let bad = RunConfig::parse("block_size = 7").unwrap();
+        assert!(bad.model_config(&Args::default()).is_err());
     }
 }

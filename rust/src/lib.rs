@@ -12,8 +12,12 @@
 //!   - the always-on CPU core: the **batched multi-head attention zoo**
 //!     (`attention` — every algorithm runs `[B, H, L, d]` batches out of
 //!     a reusable [`attention::AttnWorkspace`], with `(batch, head)`
-//!     pairs dispatched across `util::threadpool`), the `tensor`
-//!     substrate, the synthetic `data` generators and the `hmatrix`
+//!     pairs dispatched across `util::threadpool`), the **`model`
+//!     transformer inference stack** (embeddings, pre-LN residual
+//!     blocks, GELU FFN and a tied logits head over any zoo algorithm,
+//!     all activations owned by a zero-alloc
+//!     [`model::ModelWorkspace`]), the `tensor` substrate, the
+//!     synthetic `data` generators and the `hmatrix`
 //!     numerical-analysis machinery;
 //!   - the **`xla` feature tier**: PJRT `runtime`, training/serving
 //!     `coordinator` and the CLI's artifact-backed subcommands. These
@@ -28,6 +32,7 @@ pub mod attention;
 pub mod coordinator;
 pub mod data;
 pub mod hmatrix;
+pub mod model;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tensor;

@@ -3,6 +3,13 @@
 //! CPU-only subcommands (always available):
 //!   rankmap                   reproduce the paper's Eq. (11)-(13) example
 //!   scaling [--heads H]       batched attention scaling table (§7)
+//!   infer [--attention A]     end-to-end CPU transformer forward (no
+//!                             artifacts): builds a `model` stack from
+//!                             the shared config key set (vocab_size,
+//!                             d_model, n_heads, n_layers, d_ff,
+//!                             max_len, causal, attention, block_size,
+//!                             window, rank, ...) and reports logits +
+//!                             throughput
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
@@ -20,6 +27,7 @@ use htransformer::attention::{
     Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
 };
 use htransformer::hmatrix::toeplitz;
+use htransformer::model::{Model, ModelConfig, ModelWorkspace};
 use htransformer::tensor::{Batch, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::cli::Args;
@@ -36,6 +44,7 @@ fn main() {
             cmd_scaling(&args);
             Ok(())
         }
+        Some("infer") => cmd_infer(&args),
         #[cfg(feature = "xla")]
         Some("list") => xla_cmds::cmd_list(&args).map_err(|e| format!("{e:#}")),
         #[cfg(feature = "xla")]
@@ -46,7 +55,7 @@ fn main() {
         Some("serve") => xla_cmds::cmd_serve(&args).map_err(|e| format!("{e:#}")),
         other => {
             eprintln!(
-                "usage: htx <rankmap|scaling|list|train|eval|serve> [flags]\n\
+                "usage: htx <rankmap|scaling|infer|list|train|eval|serve> [flags]\n\
                  (got {other:?}; list/train/eval/serve need --features xla; see README.md)"
             );
             std::process::exit(2);
@@ -128,6 +137,80 @@ fn cmd_scaling(args: &Args) {
     }
     t.print();
     println!("\nh1d should scale ~linearly in L; full ~quadratically (paper §7).");
+}
+
+fn cmd_infer(args: &Args) -> Result<(), String> {
+    let cfg = ModelConfig::from_lookup(|k| args.get(k))?;
+    let seed = args.u64_or("seed", 42);
+    let batch = args.usize_or("batch", 2);
+    let len = args.usize_or("len", cfg.max_len.min(128));
+    let threads = args.usize_or("threads", 0); // 0 = host parallelism
+    let repeats = args.usize_or("repeats", 3);
+    if batch == 0 {
+        return Err("--batch must be >= 1".to_string());
+    }
+    if len == 0 || len > cfg.max_len {
+        return Err(format!(
+            "--len {len} outside 1..={} (raise --max_len to go longer)",
+            cfg.max_len
+        ));
+    }
+    let model = Model::new(cfg, seed)?;
+    let cfg = &model.cfg;
+    let mut ws = if threads == 0 {
+        ModelWorkspace::parallel()
+    } else {
+        ModelWorkspace::new(threads)
+    };
+    println!(
+        "model: {} layers x {} heads, d_model {}, d_ff {}, vocab {}, attention {}{} ({} params)",
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_model,
+        cfg.d_ff,
+        cfg.vocab_size,
+        model.attention_name(),
+        if cfg.causal { " (causal)" } else { "" },
+        model.n_params()
+    );
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let tokens: Vec<u32> = (0..batch * len)
+        .map(|_| rng.below(cfg.vocab_size as u64) as u32)
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let logits = model.forward(&mut ws, &tokens, batch);
+    let cold = t0.elapsed().as_secs_f64();
+    println!(
+        "forward: [{batch}, {len}] tokens -> [{}, {}] logits in {} (cold)",
+        logits.rows,
+        logits.cols,
+        fmt_time(cold)
+    );
+    for bi in 0..batch {
+        let last = logits.row((bi + 1) * len - 1);
+        let (mut arg, mut best) = (0usize, f32::NEG_INFINITY);
+        for (j, &v) in last.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = j;
+            }
+        }
+        println!("  seq {bi}: next-token argmax {arg} (logit {best:.4})");
+    }
+    // warm steady state: repeated same-shape calls reuse every buffer
+    let mut warm = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t1 = std::time::Instant::now();
+        std::hint::black_box(model.forward(&mut ws, &tokens, batch));
+        warm = warm.min(t1.elapsed().as_secs_f64());
+    }
+    println!(
+        "warm: {} / forward ({:.0} tokens/s, zero workspace allocations)",
+        fmt_time(warm),
+        (batch * len) as f64 / warm
+    );
+    Ok(())
 }
 
 #[cfg(feature = "xla")]

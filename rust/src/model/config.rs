@@ -1,0 +1,310 @@
+//! Model configuration for the CPU transformer stack — the rust mirror
+//! of the L2 `ModelConfig` in `python/compile/model.py`, shared between
+//! the CPU `htx infer` path and the coordinator's run-config files
+//! (`coordinator::config::RunConfig::model_config`, xla tier).
+//!
+//! Key set (strict `key = value` files and `--key value` CLI flags use
+//! the same names): `vocab_size`, `d_model`, `n_heads`, `n_layers`,
+//! `d_ff`, `max_len`, `causal`, `attention` plus the per-algorithm
+//! hyper-parameters `block_size` (h1d's Nr), `window`, `rank`,
+//! `n_global`, `n_random`, `attn_seed`.
+
+use crate::attention::{Attention, BlockSparse, Full, H1d, LocalWindow, LowRank};
+
+/// Which zoo algorithm a model routes its per-layer attention through —
+/// the drop-in point the paper describes (h1d replaces standard
+/// multi-head attention without touching the rest of the stack).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AttnSpec {
+    Full,
+    /// The paper's hierarchical attention; `nr` is the block size
+    /// (the single model hyper-parameter, must be even and >= 2).
+    H1d { nr: usize },
+    Local { radius: usize },
+    LowRank { rank: usize, seed: u64 },
+    BlockSparse {
+        window: usize,
+        n_global: usize,
+        n_random: usize,
+        seed: u64,
+    },
+}
+
+impl AttnSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnSpec::Full => "full",
+            AttnSpec::H1d { .. } => "h1d",
+            AttnSpec::Local { .. } => "local",
+            AttnSpec::LowRank { .. } => "lowrank",
+            AttnSpec::BlockSparse { .. } => "blocksparse",
+        }
+    }
+
+    /// Instantiate the zoo algorithm this spec names.
+    pub fn build(&self) -> Box<dyn Attention + Send + Sync> {
+        match *self {
+            AttnSpec::Full => Box::new(Full),
+            AttnSpec::H1d { nr } => Box::new(H1d::new(nr)),
+            AttnSpec::Local { radius } => Box::new(LocalWindow::new(radius)),
+            AttnSpec::LowRank { rank, seed } => Box::new(LowRank::new(rank, seed)),
+            AttnSpec::BlockSparse {
+                window,
+                n_global,
+                n_random,
+                seed,
+            } => Box::new(BlockSparse::new(window, n_global, n_random, seed)),
+        }
+    }
+}
+
+/// Hyper-parameters for one CPU model variant. Field names and defaults
+/// mirror the L2 jax `ModelConfig` so config files drive both stacks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub causal: bool,
+    pub attention: AttnSpec,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 256,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 512,
+            max_len: 512,
+            causal: false,
+            attention: AttnSpec::H1d { nr: 16 },
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Reject configs that cannot build a model (bad head split, odd
+    /// Nr, degenerate sizes) with a message instead of a mid-forward
+    /// panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.vocab_size < 2 {
+            return Err(format!("vocab_size must be >= 2 (got {})", self.vocab_size));
+        }
+        if self.n_heads == 0 || self.d_model == 0 || self.d_model % self.n_heads != 0 {
+            return Err(format!(
+                "d_model {} must be a positive multiple of n_heads {}",
+                self.d_model, self.n_heads
+            ));
+        }
+        if self.n_layers == 0 {
+            return Err("n_layers must be >= 1".to_string());
+        }
+        if self.d_ff == 0 {
+            return Err("d_ff must be >= 1".to_string());
+        }
+        if self.max_len == 0 {
+            return Err("max_len must be >= 1".to_string());
+        }
+        if let AttnSpec::H1d { nr } = self.attention {
+            if nr < 2 || nr % 2 != 0 {
+                return Err(format!("block_size (Nr) must be an even value >= 2 (got {nr})"));
+            }
+        }
+        if self.causal && matches!(self.attention, AttnSpec::LowRank { .. }) {
+            // Linformer-style projection has no exact causal variant and
+            // the zoo implementation ignores the flag — a "causal"
+            // lowrank decoder would silently attend to the future.
+            return Err("attention = lowrank cannot run causal (the projection \
+                        has no causal form; the flag would be ignored)"
+                .to_string());
+        }
+        Ok(())
+    }
+
+    /// Resolve a config from any `key -> value` source (CLI [`Args`]
+    /// flags, `RunConfig` files, tests). Unknown attention names and
+    /// unparsable values are errors; missing keys take the defaults.
+    ///
+    /// [`Args`]: crate::util::cli::Args
+    pub fn from_lookup<'a, F>(mut get: F) -> Result<ModelConfig, String>
+    where
+        F: FnMut(&str) -> Option<&'a str>,
+    {
+        fn pu<'a>(
+            get: &mut impl FnMut(&str) -> Option<&'a str>,
+            key: &str,
+            default: usize,
+        ) -> Result<usize, String> {
+            match get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| format!("bad {key}: {v:?} (expected an integer)")),
+            }
+        }
+        fn pb<'a>(
+            get: &mut impl FnMut(&str) -> Option<&'a str>,
+            key: &str,
+            default: bool,
+        ) -> Result<bool, String> {
+            match get(key) {
+                None => Ok(default),
+                Some("true") | Some("1") | Some("yes") => Ok(true),
+                Some("false") | Some("0") | Some("no") => Ok(false),
+                Some(v) => Err(format!("bad {key}: {v:?} (expected true/false)")),
+            }
+        }
+        let d = ModelConfig::default();
+        let vocab_size = pu(&mut get, "vocab_size", d.vocab_size)?;
+        let d_model = pu(&mut get, "d_model", d.d_model)?;
+        let n_heads = pu(&mut get, "n_heads", d.n_heads)?;
+        let n_layers = pu(&mut get, "n_layers", d.n_layers)?;
+        let d_ff = pu(&mut get, "d_ff", d.d_ff)?;
+        let max_len = pu(&mut get, "max_len", d.max_len)?;
+        let causal = pb(&mut get, "causal", d.causal)?;
+        let attention = match get("attention").unwrap_or("h1d") {
+            "full" => AttnSpec::Full,
+            "h1d" => AttnSpec::H1d {
+                nr: pu(&mut get, "block_size", 16)?,
+            },
+            "local" => AttnSpec::Local {
+                radius: pu(&mut get, "window", 16)?,
+            },
+            "lowrank" => AttnSpec::LowRank {
+                rank: pu(&mut get, "rank", 32)?,
+                seed: pu(&mut get, "attn_seed", 7)? as u64,
+            },
+            "blocksparse" => AttnSpec::BlockSparse {
+                window: pu(&mut get, "window", 8)?,
+                n_global: pu(&mut get, "n_global", 4)?,
+                n_random: pu(&mut get, "n_random", 4)?,
+                seed: pu(&mut get, "attn_seed", 7)? as u64,
+            },
+            other => {
+                return Err(format!(
+                    "unknown attention {other:?} (full|h1d|local|lowrank|blocksparse)"
+                ))
+            }
+        };
+        let cfg = ModelConfig {
+            vocab_size,
+            d_model,
+            n_heads,
+            n_layers,
+            d_ff,
+            max_len,
+            causal,
+            attention,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn lookup(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn defaults_mirror_the_l2_zoo() {
+        let cfg = ModelConfig::from_lookup(|_| None).unwrap();
+        assert_eq!(cfg, ModelConfig::default());
+        assert_eq!(cfg.d_head(), 32);
+        assert_eq!(cfg.attention, AttnSpec::H1d { nr: 16 });
+    }
+
+    #[test]
+    fn full_key_set_parses() {
+        let kv = lookup(&[
+            ("vocab_size", "512"),
+            ("d_model", "64"),
+            ("n_heads", "8"),
+            ("n_layers", "3"),
+            ("d_ff", "128"),
+            ("max_len", "1024"),
+            ("causal", "true"),
+            ("attention", "blocksparse"),
+            ("window", "6"),
+            ("n_global", "2"),
+            ("n_random", "3"),
+            ("attn_seed", "11"),
+        ]);
+        let cfg = ModelConfig::from_lookup(|k| kv.get(k).map(|s| s.as_str())).unwrap();
+        assert_eq!(cfg.vocab_size, 512);
+        assert_eq!(cfg.d_head(), 8);
+        assert!(cfg.causal);
+        assert_eq!(
+            cfg.attention,
+            AttnSpec::BlockSparse {
+                window: 6,
+                n_global: 2,
+                n_random: 3,
+                seed: 11
+            }
+        );
+    }
+
+    #[test]
+    fn bad_configs_are_rejected_with_messages() {
+        let odd_nr = lookup(&[("attention", "h1d"), ("block_size", "7")]);
+        let err = ModelConfig::from_lookup(|k| odd_nr.get(k).map(|s| s.as_str())).unwrap_err();
+        assert!(err.contains("even"), "{err}");
+
+        let bad_heads = lookup(&[("d_model", "100"), ("n_heads", "3")]);
+        let err = ModelConfig::from_lookup(|k| bad_heads.get(k).map(|s| s.as_str())).unwrap_err();
+        assert!(err.contains("n_heads"), "{err}");
+
+        let unknown = lookup(&[("attention", "linear")]);
+        let err = ModelConfig::from_lookup(|k| unknown.get(k).map(|s| s.as_str())).unwrap_err();
+        assert!(err.contains("unknown attention"), "{err}");
+
+        let junk = lookup(&[("d_ff", "many")]);
+        assert!(ModelConfig::from_lookup(|k| junk.get(k).map(|s| s.as_str())).is_err());
+
+        // lowrank ignores the causal flag, so a causal lowrank decoder
+        // must be rejected instead of silently attending to the future
+        let causal_lowrank = lookup(&[("attention", "lowrank"), ("causal", "true")]);
+        let err = ModelConfig::from_lookup(|k| causal_lowrank.get(k).map(|s| s.as_str()))
+            .unwrap_err();
+        assert!(err.contains("causal"), "{err}");
+    }
+
+    #[test]
+    fn every_spec_builds_its_algorithm() {
+        for (name, spec) in [
+            ("full", AttnSpec::Full),
+            ("h1d", AttnSpec::H1d { nr: 4 }),
+            ("local", AttnSpec::Local { radius: 3 }),
+            ("lowrank", AttnSpec::LowRank { rank: 4, seed: 1 }),
+            (
+                "blocksparse",
+                AttnSpec::BlockSparse {
+                    window: 2,
+                    n_global: 1,
+                    n_random: 1,
+                    seed: 1,
+                },
+            ),
+        ] {
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.build().name(), name);
+        }
+    }
+}

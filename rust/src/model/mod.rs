@@ -1,0 +1,386 @@
+//! CPU-native transformer inference stack over the batched attention
+//! core — the crate's end-to-end forward path when no XLA artifacts
+//! exist (the `xla` feature's `runtime`/`coordinator` tier is the
+//! production path; this is its always-available mirror).
+//!
+//! Architecture is the L2 jax model (`python/compile/model.py`),
+//! layer for layer: token + learned positional embedding, pre-LayerNorm
+//! residual blocks (attention then GELU feed-forward), a final
+//! LayerNorm and a tied-embedding logits head. The per-layer attention
+//! is any of the five zoo algorithms, chosen by [`ModelConfig`] — the
+//! paper's drop-in-replacement claim, exercised end to end.
+//!
+//! Execution follows the [`AttnWorkspace`] zero-alloc discipline one
+//! level up: every activation buffer (residual stream, projections,
+//! head-split Q/K/V, attention output, FFN hidden, logits) lives in a
+//! [`ModelWorkspace`] and is resized in place, and **all layers share
+//! the one `AttnWorkspace` inside it** — a second `forward` at the same
+//! `(B, L)` performs zero heap allocations
+//! ([`ModelWorkspace::capacity_snapshot`] makes that testable, see
+//! `tests/model_forward.rs`).
+
+pub mod config;
+
+pub use config::{AttnSpec, ModelConfig};
+
+use crate::attention::{Attention, AttnWorkspace};
+use crate::tensor::ops::{
+    add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into, matmul_nt_into,
+};
+use crate::tensor::{Batch, Mat, Qkv};
+use crate::util::Rng;
+
+/// LayerNorm epsilon, matching the L2 jax `_layer_norm`.
+const LN_EPS: f32 = 1e-6;
+
+/// One residual block's parameters (pre-LN attention + pre-LN FFN).
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub ln1_scale: Vec<f32>,
+    pub ln1_bias: Vec<f32>,
+    /// `[D, D]` projections, applied as `x @ W` (rows = fan-in).
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub ln2_scale: Vec<f32>,
+    pub ln2_bias: Vec<f32>,
+    pub ff_w1: Mat,
+    pub ff_b1: Vec<f32>,
+    pub ff_w2: Mat,
+    pub ff_b2: Vec<f32>,
+}
+
+/// Full parameter set; layout mirrors `param_spec` in the L2 model so a
+/// checkpoint maps field-for-field.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    /// `[V, D]` token embedding, also the tied logits head.
+    pub embed: Mat,
+    /// `[max_len, D]` learned positional embedding.
+    pub pos: Mat,
+    pub layers: Vec<LayerParams>,
+    pub ln_f_scale: Vec<f32>,
+    pub ln_f_bias: Vec<f32>,
+}
+
+/// A ready-to-run CPU model: config + parameters + the attention
+/// algorithm instance every layer dispatches through.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub params: ModelParams,
+    algo: Box<dyn Attention + Send + Sync>,
+}
+
+impl Model {
+    /// Deterministic initialisation from a seed, mirroring the L2
+    /// `init_params` scheme: biases zero, LN scales one, embeddings
+    /// `N(0, 0.02)`, weight matrices `N(0, 1/sqrt(fan_in))`.
+    pub fn new(cfg: ModelConfig, seed: u64) -> Result<Model, String> {
+        cfg.validate()?;
+        let mut rng = Rng::new(seed);
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let mut normal_mat = |rows: usize, cols: usize, std: f32| -> Mat {
+            let mut m = Mat::zeros(rows, cols);
+            rng.fill_normal(&mut m.data, std);
+            m
+        };
+        let embed = normal_mat(cfg.vocab_size, d, 0.02);
+        let pos = normal_mat(cfg.max_len, d, 0.02);
+        let proj_std = 1.0 / (d as f32).sqrt();
+        let layers: Vec<LayerParams> = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                ln1_scale: vec![1.0; d],
+                ln1_bias: vec![0.0; d],
+                wq: normal_mat(d, d, proj_std),
+                wk: normal_mat(d, d, proj_std),
+                wv: normal_mat(d, d, proj_std),
+                wo: normal_mat(d, d, proj_std),
+                ln2_scale: vec![1.0; d],
+                ln2_bias: vec![0.0; d],
+                ff_w1: normal_mat(d, f, proj_std),
+                ff_b1: vec![0.0; f],
+                ff_w2: normal_mat(f, d, 1.0 / (f as f32).sqrt()),
+                ff_b2: vec![0.0; d],
+            })
+            .collect();
+        let algo = cfg.attention.build();
+        Ok(Model {
+            params: ModelParams {
+                embed,
+                pos,
+                layers,
+                ln_f_scale: vec![1.0; d],
+                ln_f_bias: vec![0.0; d],
+            },
+            algo,
+            cfg,
+        })
+    }
+
+    /// Total parameter count (same formula as the L2 `count_params`
+    /// with `n_classes = 0`).
+    pub fn n_params(&self) -> usize {
+        let (v, d, f) = (self.cfg.vocab_size, self.cfg.d_model, self.cfg.d_ff);
+        let per_layer = 2 * d + 4 * d * d + 2 * d + d * f + f + f * d + d;
+        v * d + self.cfg.max_len * d + self.cfg.n_layers * per_layer + 2 * d
+    }
+
+    /// The attention algorithm the layers run (zoo name).
+    pub fn attention_name(&self) -> &'static str {
+        self.algo.name()
+    }
+
+    /// Forward pass: `tokens` is a row-major `[batch, L]` id matrix
+    /// (flattened, `L = tokens.len() / batch`); returns next-token /
+    /// feature logits as a `[batch * L, vocab]` matrix borrowed from
+    /// the workspace. Repeated calls at one `(batch, L)` shape allocate
+    /// nothing (see [`ModelWorkspace`]).
+    pub fn forward<'w>(&self, ws: &'w mut ModelWorkspace, tokens: &[u32], batch: usize) -> &'w Mat {
+        let cfg = &self.cfg;
+        assert!(batch > 0, "empty batch");
+        assert_eq!(
+            tokens.len() % batch,
+            0,
+            "token count {} not divisible by batch {batch}",
+            tokens.len()
+        );
+        let l = tokens.len() / batch;
+        assert!(
+            l > 0 && l <= cfg.max_len,
+            "sequence length {l} outside 1..={}",
+            cfg.max_len
+        );
+        let p = &self.params;
+        let (d, n_heads) = (cfg.d_model, cfg.n_heads);
+
+        // token + learned positional embedding -> residual stream x
+        // (every element is written below, so the zero fill is skipped)
+        ws.x.reset_for_overwrite(batch * l, d);
+        for bi in 0..batch {
+            for i in 0..l {
+                let tok = tokens[bi * l + i] as usize;
+                assert!(tok < cfg.vocab_size, "token id {tok} >= vocab {}", cfg.vocab_size);
+                let row = ws.x.row_mut(bi * l + i);
+                for ((o, e), ps) in row.iter_mut().zip(p.embed.row(tok)).zip(p.pos.row(i)) {
+                    *o = e + ps;
+                }
+            }
+        }
+
+        for lp in &p.layers {
+            // pre-LN attention block: x += merge(attn(split(LN(x) @ Wqkv))) @ Wo
+            layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
+            matmul_into(&ws.hn, &lp.wq, &mut ws.proj);
+            ws.qkv.q.split_heads_from(&ws.proj, batch, n_heads);
+            matmul_into(&ws.hn, &lp.wk, &mut ws.proj);
+            ws.qkv.k.split_heads_from(&ws.proj, batch, n_heads);
+            matmul_into(&ws.hn, &lp.wv, &mut ws.proj);
+            ws.qkv.v.split_heads_from(&ws.proj, batch, n_heads);
+            self.algo.forward_batch_into(&mut ws.attn, &ws.qkv, cfg.causal, &mut ws.attn_out);
+            ws.attn_out.merge_heads_into(&mut ws.merged);
+            matmul_into(&ws.merged, &lp.wo, &mut ws.proj);
+            add_assign(&mut ws.x, &ws.proj);
+
+            // pre-LN feed-forward block: x += GELU(LN(x) @ W1 + b1) @ W2 + b2
+            layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
+            matmul_into(&ws.hn, &lp.ff_w1, &mut ws.ff);
+            add_bias_rows(&mut ws.ff, &lp.ff_b1);
+            gelu(&mut ws.ff);
+            matmul_into(&ws.ff, &lp.ff_w2, &mut ws.proj);
+            add_bias_rows(&mut ws.proj, &lp.ff_b2);
+            add_assign(&mut ws.x, &ws.proj);
+        }
+
+        // final LN + tied-embedding logits head
+        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
+        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
+        &ws.logits
+    }
+}
+
+/// Owns every per-forward activation buffer plus the one
+/// [`AttnWorkspace`] all layers share. Buffers are resized in place, so
+/// a second [`Model::forward`] at the same `(batch, L)` shape performs
+/// zero heap allocations; shape changes grow (never shrink) the arena,
+/// exactly like the attention workspace underneath.
+pub struct ModelWorkspace {
+    /// The batched-attention arena, shared by every layer of the stack.
+    pub attn: AttnWorkspace,
+    /// `[B·L, D]` residual stream.
+    x: Mat,
+    /// `[B·L, D]` LayerNorm output.
+    hn: Mat,
+    /// `[B·L, D]` projection / residual-delta scratch.
+    proj: Mat,
+    /// `[B, H, L, d_head]` head-split Q/K/V bundle.
+    qkv: Qkv,
+    /// `[B, H, L, d_head]` attention output.
+    attn_out: Batch,
+    /// `[B·L, D]` merged attention heads.
+    merged: Mat,
+    /// `[B·L, d_ff]` FFN hidden activations.
+    ff: Mat,
+    /// `[B·L, V]` logits (the value `forward` returns a view of).
+    logits: Mat,
+}
+
+impl ModelWorkspace {
+    /// Workspace whose attention arena dispatches heads across
+    /// `threads` workers (`<= 1` means the calling thread).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            attn: AttnWorkspace::new(threads),
+            x: Mat::default(),
+            hn: Mat::default(),
+            proj: Mat::default(),
+            qkv: Qkv::new(
+                Batch::zeros(0, 0, 0, 0),
+                Batch::zeros(0, 0, 0, 0),
+                Batch::zeros(0, 0, 0, 0),
+            ),
+            attn_out: Batch::zeros(0, 0, 0, 0),
+            merged: Mat::default(),
+            ff: Mat::default(),
+            logits: Mat::default(),
+        }
+    }
+
+    /// Single-threaded workspace.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Workspace sized to the host's available parallelism.
+    pub fn parallel() -> Self {
+        Self::new(crate::util::threadpool::default_threads())
+    }
+
+    /// `(pointer, capacity)` of every heap buffer the workspace owns —
+    /// the model stack's own buffers plus the shared attention arena's.
+    /// Equal snapshots before/after a call prove the call allocated
+    /// nothing (the `batch_parity.rs` counting pattern, one level up).
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        let mats = [
+            &self.x,
+            &self.hn,
+            &self.proj,
+            &self.merged,
+            &self.ff,
+            &self.logits,
+        ];
+        let mut out: Vec<(usize, usize)> = mats
+            .iter()
+            .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+            .collect();
+        for b in [&self.qkv.q, &self.qkv.k, &self.qkv.v, &self.attn_out] {
+            out.push((b.data.as_ptr() as usize, b.data.capacity()));
+        }
+        out.extend(self.attn.capacity_snapshot());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(attention: AttnSpec, causal: bool) -> ModelConfig {
+        ModelConfig {
+            vocab_size: 31,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            max_len: 40,
+            causal,
+            attention,
+        }
+    }
+
+    fn ramp_tokens(rng: &mut Rng, vocab: usize, n: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.below(vocab as u64) as u32).collect()
+    }
+
+    #[test]
+    fn n_params_matches_the_l2_formula_on_defaults() {
+        // count_params(ModelConfig()) in python/compile/model.py == 494080
+        let model = Model::new(ModelConfig::default(), 1).unwrap();
+        assert_eq!(model.n_params(), 494_080);
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mut rng = Rng::new(3);
+        let model = Model::new(tiny_cfg(AttnSpec::H1d { nr: 4 }, true), 9).unwrap();
+        let tokens = ramp_tokens(&mut rng, model.cfg.vocab_size, 2 * 17);
+        let mut ws = ModelWorkspace::serial();
+        let out1 = model.forward(&mut ws, &tokens, 2).clone();
+        assert_eq!((out1.rows, out1.cols), (2 * 17, 31));
+        assert!(out1.data.iter().all(|x| x.is_finite()));
+        // same inputs -> bitwise identical, and across thread counts
+        let out2 = model.forward(&mut ws, &tokens, 2).clone();
+        assert_eq!(out1.data, out2.data);
+        let mut ws_par = ModelWorkspace::new(3);
+        let out3 = model.forward(&mut ws_par, &tokens, 2).clone();
+        assert_eq!(out1.data, out3.data);
+    }
+
+    #[test]
+    fn every_zoo_algorithm_drives_the_stack() {
+        let mut rng = Rng::new(4);
+        for spec in [
+            AttnSpec::Full,
+            AttnSpec::H1d { nr: 4 },
+            AttnSpec::Local { radius: 3 },
+            AttnSpec::LowRank { rank: 6, seed: 5 },
+            AttnSpec::BlockSparse {
+                window: 2,
+                n_global: 2,
+                n_random: 2,
+                seed: 5,
+            },
+        ] {
+            let model = Model::new(tiny_cfg(spec, false), 11).unwrap();
+            let tokens = ramp_tokens(&mut rng, model.cfg.vocab_size, 13);
+            let mut ws = ModelWorkspace::serial();
+            let out = model.forward(&mut ws, &tokens, 1);
+            assert_eq!((out.rows, out.cols), (13, 31), "{}", model.attention_name());
+            assert!(
+                out.data.iter().all(|x| x.is_finite()),
+                "{}",
+                model.attention_name()
+            );
+        }
+    }
+
+    #[test]
+    fn causal_lm_rows_ignore_future_tokens() {
+        // prefix property at the model level: logits for positions < t
+        // must not change when tokens at positions >= t change
+        let mut rng = Rng::new(5);
+        let model = Model::new(tiny_cfg(AttnSpec::H1d { nr: 4 }, true), 13).unwrap();
+        let l = 24;
+        let mut tokens = ramp_tokens(&mut rng, model.cfg.vocab_size, l);
+        let mut ws = ModelWorkspace::serial();
+        let z1 = model.forward(&mut ws, &tokens, 1).clone();
+        let cut = 16;
+        for t in tokens.iter_mut().skip(cut) {
+            *t = (*t + 7) % model.cfg.vocab_size as u32;
+        }
+        let z2 = model.forward(&mut ws, &tokens, 1).clone();
+        for i in 0..cut {
+            for j in 0..z1.cols {
+                assert_eq!(z1.at(i, j), z2.at(i, j), "row {i} leaked future info");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn overlong_sequences_are_rejected() {
+        let model = Model::new(tiny_cfg(AttnSpec::Full, false), 1).unwrap();
+        let tokens = vec![0u32; model.cfg.max_len + 1];
+        model.forward(&mut ModelWorkspace::serial(), &tokens, 1);
+    }
+}

@@ -63,6 +63,72 @@ impl Batch {
         Self { b, h, l, d, data }
     }
 
+    /// Reshape in place to `[b, h, l, d]`, zero-filled, reusing the
+    /// existing allocation (the `Batch` analogue of [`Mat::reset`]): once
+    /// the backing `Vec` has grown to a shape's size, repeated `reset`s
+    /// at that shape perform no heap allocation.
+    pub fn reset(&mut self, b: usize, h: usize, l: usize, d: usize) {
+        self.b = b;
+        self.h = h;
+        self.l = l;
+        self.d = d;
+        self.data.clear();
+        self.data.resize(b * h * l * d, 0.0);
+    }
+
+    /// [`Batch::reset`] without the zero fill when the element count is
+    /// unchanged — for callers that overwrite every element before any
+    /// read (head splits, batched output staging); see
+    /// [`Mat::reset_for_overwrite`].
+    pub(crate) fn reset_for_overwrite(&mut self, b: usize, h: usize, l: usize, d: usize) {
+        self.b = b;
+        self.h = h;
+        self.l = l;
+        self.d = d;
+        let n = b * h * l * d;
+        if self.data.len() != n {
+            self.data.clear();
+            self.data.resize(n, 0.0);
+        }
+    }
+
+    /// Split a `[B·L, H·d]` row-major activation matrix into this batch
+    /// as `[B, H, L, d]` heads (the transformer stack's per-layer
+    /// `split_heads`, writing into a reused buffer):
+    /// `self[bi, hi, i, j] = x[bi·L + i, hi·d + j]`.
+    pub fn split_heads_from(&mut self, x: &Mat, b: usize, h: usize) {
+        assert!(b > 0 && h > 0, "split_heads_from: empty batch/head count");
+        assert_eq!(x.rows % b, 0, "rows {} not divisible by B {b}", x.rows);
+        assert_eq!(x.cols % h, 0, "cols {} not divisible by H {h}", x.cols);
+        let (l, d) = (x.rows / b, x.cols / h);
+        self.reset_for_overwrite(b, h, l, d);
+        for bi in 0..b {
+            for i in 0..l {
+                let xrow = x.row(bi * l + i);
+                for hi in 0..h {
+                    let base = ((bi * h + hi) * l + i) * d;
+                    self.data[base..base + d].copy_from_slice(&xrow[hi * d..(hi + 1) * d]);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Batch::split_heads_from`]: merge `[B, H, L, d]` heads
+    /// back into a `[B·L, H·d]` matrix, writing into a reused buffer.
+    pub fn merge_heads_into(&self, out: &mut Mat) {
+        out.reset_for_overwrite(self.b * self.l, self.h * self.d);
+        let (h, l, d) = (self.h, self.l, self.d);
+        for bi in 0..self.b {
+            for i in 0..l {
+                let orow = out.row_mut(bi * l + i);
+                for hi in 0..h {
+                    let base = ((bi * h + hi) * l + i) * d;
+                    orow[hi * d..(hi + 1) * d].copy_from_slice(&self.data[base..base + d]);
+                }
+            }
+        }
+    }
+
     /// Lift a single `[L, d]` matrix into a `[1, 1, L, d]` batch.
     pub fn from_mat(m: &Mat) -> Self {
         Self {
@@ -191,6 +257,38 @@ mod tests {
         let b = Batch::from_mat(&m);
         assert_eq!((b.b, b.h, b.l, b.d), (1, 1, 3, 2));
         assert_eq!(b.head_mat(0), m);
+    }
+
+    #[test]
+    fn split_then_merge_round_trips() {
+        let (b, h, l, d) = (2usize, 3usize, 4usize, 2usize);
+        let x = Mat::from_fn(b * l, h * d, |i, j| (i * 100 + j) as f32);
+        let mut batch = Batch::zeros(0, 0, 0, 0);
+        batch.split_heads_from(&x, b, h);
+        assert_eq!((batch.b, batch.h, batch.l, batch.d), (b, h, l, d));
+        // spot-check the layout: (bi=1, hi=2, i=3, j=1) == x[1*4+3, 2*2+1]
+        assert_eq!(batch.at(1, 2, 3, 1), x.at(7, 5));
+        let mut back = Mat::default();
+        batch.merge_heads_into(&mut back);
+        assert_eq!(back, x);
+        // second split/merge at the same shape reuses both buffers
+        let (bp, mp) = (batch.data.as_ptr(), back.data.as_ptr());
+        batch.split_heads_from(&x, b, h);
+        batch.merge_heads_into(&mut back);
+        assert_eq!(batch.data.as_ptr(), bp);
+        assert_eq!(back.data.as_ptr(), mp);
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut b = Batch::zeros(2, 2, 4, 4);
+        let ptr = b.data.as_ptr();
+        b.reset(1, 2, 3, 4);
+        assert_eq!((b.b, b.h, b.l, b.d), (1, 2, 3, 4));
+        assert_eq!(b.data.as_ptr(), ptr);
+        b.reset(2, 2, 4, 4); // grow back within capacity: still no realloc
+        assert_eq!(b.data.as_ptr(), ptr);
+        assert!(b.data.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -101,6 +101,21 @@ impl Mat {
         self.data.resize(rows * cols, 0.0);
     }
 
+    /// [`Mat::reset`] without the zero fill when the element count is
+    /// unchanged — for callers that overwrite every element before any
+    /// read (head merge, LayerNorm output, direct-write matmuls), where
+    /// the memset would be pure overhead on the hot path. Shape changes
+    /// still zero-fill the fresh region.
+    pub(crate) fn reset_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let n = rows * cols;
+        if self.data.len() != n {
+            self.data.clear();
+            self.data.resize(n, 0.0);
+        }
+    }
+
     /// Overwrite in place from a `[rows, cols]` row-major slice,
     /// reusing the existing allocation.
     pub fn copy_from_slice_2d(&mut self, rows: usize, cols: usize, src: &[f32]) {

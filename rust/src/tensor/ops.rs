@@ -50,7 +50,9 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    c.reset(m, n);
+    // every element is written directly (no accumulation into stale
+    // values), so the zero fill is skippable
+    c.reset_for_overwrite(m, n);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c.data[i * n..(i + 1) * n];
@@ -101,6 +103,55 @@ pub fn add_assign(a: &mut Mat, b: &Mat) {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
     for (x, y) in a.data.iter_mut().zip(&b.data) {
         *x += y;
+    }
+}
+
+/// Row-wise layer normalisation into a reused output:
+/// `out[i] = (x[i] - mean) / sqrt(var + eps) * scale + bias`
+/// (the transformer stack's pre-LN; eps matches the L2 jax model).
+pub fn layernorm_rows_into(x: &Mat, scale: &[f32], bias: &[f32], eps: f32, out: &mut Mat) {
+    assert_eq!(x.cols, scale.len(), "layernorm scale length");
+    assert_eq!(x.cols, bias.len(), "layernorm bias length");
+    out.reset_for_overwrite(x.rows, x.cols);
+    let inv_d = 1.0 / x.cols as f32;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mut mu = 0.0f32;
+        for v in row {
+            mu += v;
+        }
+        mu *= inv_d;
+        let mut var = 0.0f32;
+        for v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var *= inv_d;
+        let inv_std = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(i);
+        for (t, v) in row.iter().enumerate() {
+            orow[t] = (v - mu) * inv_std * scale[t] + bias[t];
+        }
+    }
+}
+
+/// In-place GELU, tanh approximation (matches `jax.nn.gelu`'s default):
+/// `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
+pub fn gelu(m: &mut Mat) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for x in &mut m.data {
+        let x3 = *x * *x * *x;
+        *x = 0.5 * *x * (1.0 + (C * (*x + 0.044715 * x3)).tanh());
+    }
+}
+
+/// Add a `[cols]` bias vector to every row of `m`.
+pub fn add_bias_rows(m: &mut Mat, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len(), "bias length mismatch");
+    for i in 0..m.rows {
+        for (x, b) in m.row_mut(i).iter_mut().zip(bias) {
+            *x += b;
+        }
     }
 }
 
@@ -205,6 +256,51 @@ mod tests {
         assert_eq!(c.data, vec![3.0, 7.0]);
         let up = interpolate_rows(&c, 2);
         assert_eq!(up.data, x.data);
+    }
+
+    #[test]
+    fn layernorm_rows_normalise_and_affine() {
+        let mut rng = crate::util::Rng::new(21);
+        let x = Mat::from_fn(6, 8, |_, _| 3.0 + 2.0 * rng.normal_f32());
+        let scale = vec![1.0f32; 8];
+        let bias = vec![0.0f32; 8];
+        let mut out = Mat::default();
+        layernorm_rows_into(&x, &scale, &bias, 1e-6, &mut out);
+        for i in 0..out.rows {
+            let row = out.row(i);
+            let mu: f32 = row.iter().sum::<f32>() / 8.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 8.0;
+            assert!(mu.abs() < 1e-4, "row {i} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {i} var {var}");
+        }
+        // affine part: scale 2, bias 5 shifts the stats accordingly
+        let scale2 = vec![2.0f32; 8];
+        let bias2 = vec![5.0f32; 8];
+        let ptr = out.data.as_ptr();
+        layernorm_rows_into(&x, &scale2, &bias2, 1e-6, &mut out);
+        assert_eq!(out.data.as_ptr(), ptr, "layernorm_rows_into must reuse");
+        let mu: f32 = out.row(0).iter().sum::<f32>() / 8.0;
+        assert!((mu - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // reference values from the tanh approximation itself at a few
+        // points (monotone, ~x for large x, ~0 for very negative x)
+        let mut m = Mat::from_vec(1, 4, vec![-10.0, -1.0, 0.0, 10.0]);
+        gelu(&mut m);
+        assert!(m.at(0, 0).abs() < 1e-4);
+        assert!((m.at(0, 1) + 0.15880801).abs() < 1e-4);
+        assert_eq!(m.at(0, 2), 0.0);
+        assert!((m.at(0, 3) - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn add_bias_rows_broadcasts() {
+        let mut m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        add_bias_rows(&mut m, &[10.0, 20.0]);
+        assert_eq!(m.at(0, 0), 10.0);
+        assert_eq!(m.at(2, 1), 25.0);
     }
 
     #[test]

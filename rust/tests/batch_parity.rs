@@ -156,6 +156,58 @@ fn second_call_at_same_shape_allocates_nothing_in_workspace() {
 }
 
 #[test]
+fn shape_cycles_grow_shrink_grow_stay_parity_correct() {
+    // regression for workspace shape changes: one workspace driven
+    // through grow -> shrink -> grow cycles across different
+    // (B, H, L, d) must stay parity-correct with the per-head loop at
+    // every step (the repeated-same-shape tests above never stress the
+    // stale-arena paths: oversized slots, deeper-than-needed level
+    // pyramids, shrunken score blocks)
+    let big = (2usize, 4usize, 40usize, 8usize);
+    let cycle = [
+        (1usize, 2usize, 8usize, 4usize), // start small
+        big,                              // grow every axis
+        (1, 1, 5, 4),                     // shrink hard (L < Nr)
+        big,                              // grow back into the arena
+        (1, 3, 17, 8),                    // odd L, fewer heads
+        (2, 4, 64, 4),                    // grow L, shrink d
+        (1, 2, 8, 4),                     // back to the start
+    ];
+    let mut rng = Rng::new(77);
+    for algo in &zoo() {
+        let mut ws = AttnWorkspace::new(3);
+        let mut snap_at_big: Option<Vec<(usize, usize)>> = None;
+        for (step, &(b, h, l, d)) in cycle.iter().enumerate() {
+            let qkv = random_qkv(&mut rng, b, h, l, d);
+            for causal in [false, true] {
+                let want = loop_reference(algo.as_ref(), &qkv, causal);
+                let got = algo.forward_batch(&mut ws, &qkv, causal);
+                let diff = got.max_abs_diff(&want);
+                assert!(
+                    diff < 1e-6,
+                    "{} step {step} B={b} H={h} L={l} d={d} causal={causal}: diff {diff}",
+                    algo.name()
+                );
+            }
+            if (b, h, l, d) == big {
+                // revisiting the largest shape after a shrink must find
+                // the grown arena intact — no re-allocation
+                let snap = ws.capacity_snapshot();
+                match &snap_at_big {
+                    Some(prev) => assert_eq!(
+                        &snap,
+                        prev,
+                        "{}: arena re-allocated across a shrink/grow cycle",
+                        algo.name()
+                    ),
+                    None => snap_at_big = Some(snap),
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn batched_is_deterministic_across_thread_counts() {
     let mut rng = Rng::new(6);
     let qkv = random_qkv(&mut rng, 2, 4, 65, 8);

@@ -1,0 +1,236 @@
+//! Model-level contracts for the CPU transformer stack:
+//!
+//!  1. **parity** — `Model::forward` with `Full` attention matches a
+//!     naive unbatched reference forward (written inline below, straight
+//!     loops, no shared tensor kernels) to 1e-5 at L <= 64;
+//!  2. **reuse** — a second `forward` at the same `(B, L)` shape
+//!     performs zero heap allocations anywhere in the `ModelWorkspace`
+//!     (its own activation buffers plus the one `AttnWorkspace` all
+//!     layers share), asserted with the `batch_parity.rs`
+//!     pointer/capacity counting pattern, including across
+//!     grow -> shrink -> grow shape cycles.
+
+use htransformer::model::{AttnSpec, Model, ModelConfig, ModelWorkspace};
+use htransformer::tensor::Mat;
+use htransformer::util::Rng;
+
+fn cfg(attention: AttnSpec, causal: bool, max_len: usize) -> ModelConfig {
+    ModelConfig {
+        vocab_size: 41,
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 32,
+        max_len,
+        causal,
+        attention,
+    }
+}
+
+fn random_tokens(rng: &mut Rng, vocab: usize, n: usize) -> Vec<u32> {
+    (0..n).map(|_| rng.below(vocab as u64) as u32).collect()
+}
+
+// ---------------------------------------------------------------------
+// naive reference: per-sequence, per-head, plain loops
+// ---------------------------------------------------------------------
+
+fn naive_ln(x: &Mat, scale: &[f32], bias: &[f32]) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let d = x.cols as f32;
+        let mut mu = 0.0f32;
+        for t in 0..x.cols {
+            mu += x.at(i, t);
+        }
+        mu /= d;
+        let mut var = 0.0f32;
+        for t in 0..x.cols {
+            let c = x.at(i, t) - mu;
+            var += c * c;
+        }
+        var /= d;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for t in 0..x.cols {
+            *out.at_mut(i, t) = (x.at(i, t) - mu) * inv * scale[t] + bias[t];
+        }
+    }
+    out
+}
+
+fn naive_mm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += a.at(i, k) * b.at(k, j);
+            }
+            *c.at_mut(i, j) = acc;
+        }
+    }
+    c
+}
+
+fn naive_gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi), same constant as tensor::ops
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// The reference semantics of the whole stack: one sequence and one
+/// head at a time, exact softmax attention, no workspaces, no batching.
+fn naive_forward(model: &Model, tokens: &[u32], batch: usize) -> Mat {
+    let cfg = &model.cfg;
+    let p = &model.params;
+    let l = tokens.len() / batch;
+    let (d, n_heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+    let mut logits = Mat::zeros(batch * l, cfg.vocab_size);
+    for bi in 0..batch {
+        // token + positional embedding
+        let mut x = Mat::zeros(l, d);
+        for i in 0..l {
+            let tok = tokens[bi * l + i] as usize;
+            for t in 0..d {
+                *x.at_mut(i, t) = p.embed.at(tok, t) + p.pos.at(i, t);
+            }
+        }
+        for lp in &p.layers {
+            // attention block
+            let hn = naive_ln(&x, &lp.ln1_scale, &lp.ln1_bias);
+            let q = naive_mm(&hn, &lp.wq);
+            let k = naive_mm(&hn, &lp.wk);
+            let v = naive_mm(&hn, &lp.wv);
+            let mut merged = Mat::zeros(l, d);
+            for h in 0..n_heads {
+                for i in 0..l {
+                    let jmax = if cfg.causal { i } else { l - 1 };
+                    let mut scores = vec![0.0f32; jmax + 1];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        let mut dot = 0.0f32;
+                        for t in 0..dh {
+                            dot += q.at(i, h * dh + t) * k.at(j, h * dh + t);
+                        }
+                        *s = dot / (dh as f32).sqrt();
+                        mx = mx.max(*s);
+                    }
+                    let mut den = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - mx).exp();
+                        den += *s;
+                    }
+                    for (j, s) in scores.iter().enumerate() {
+                        let w = s / den;
+                        for t in 0..dh {
+                            *merged.at_mut(i, h * dh + t) += w * v.at(j, h * dh + t);
+                        }
+                    }
+                }
+            }
+            let delta = naive_mm(&merged, &lp.wo);
+            for i in 0..l {
+                for t in 0..d {
+                    *x.at_mut(i, t) += delta.at(i, t);
+                }
+            }
+            // feed-forward block
+            let hn = naive_ln(&x, &lp.ln2_scale, &lp.ln2_bias);
+            let mut ffh = naive_mm(&hn, &lp.ff_w1);
+            for i in 0..l {
+                for t in 0..cfg.d_ff {
+                    *ffh.at_mut(i, t) = naive_gelu(ffh.at(i, t) + lp.ff_b1[t]);
+                }
+            }
+            let delta = naive_mm(&ffh, &lp.ff_w2);
+            for i in 0..l {
+                for t in 0..d {
+                    *x.at_mut(i, t) += delta.at(i, t) + lp.ff_b2[t];
+                }
+            }
+        }
+        // final LN + tied logits head
+        let hn = naive_ln(&x, &p.ln_f_scale, &p.ln_f_bias);
+        for i in 0..l {
+            for w in 0..cfg.vocab_size {
+                let mut dot = 0.0f32;
+                for t in 0..d {
+                    dot += hn.at(i, t) * p.embed.at(w, t);
+                }
+                *logits.at_mut(bi * l + i, w) = dot;
+            }
+        }
+    }
+    logits
+}
+
+// ---------------------------------------------------------------------
+// contracts
+// ---------------------------------------------------------------------
+
+#[test]
+fn full_attention_model_matches_naive_reference() {
+    let mut rng = Rng::new(2026);
+    for causal in [false, true] {
+        for &l in &[7usize, 33, 64] {
+            let batch = 2;
+            let model = Model::new(cfg(AttnSpec::Full, causal, 64), 3).unwrap();
+            let tokens = random_tokens(&mut rng, model.cfg.vocab_size, batch * l);
+            let want = naive_forward(&model, &tokens, batch);
+            for threads in [1usize, 3] {
+                let mut ws = ModelWorkspace::new(threads);
+                let got = model.forward(&mut ws, &tokens, batch);
+                let diff = got.max_abs_diff(&want);
+                assert!(
+                    diff < 1e-5,
+                    "causal={causal} L={l} threads={threads}: max |logit diff| = {diff}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn second_forward_at_same_shape_allocates_nothing_in_workspace() {
+    let mut rng = Rng::new(9);
+    // h1d is the production config; full has the largest scratch profile
+    for spec in [AttnSpec::H1d { nr: 4 }, AttnSpec::Full] {
+        let model = Model::new(cfg(spec, true, 40), 5).unwrap();
+        let name = model.attention_name();
+        let tokens = random_tokens(&mut rng, model.cfg.vocab_size, 2 * 24);
+        let mut ws = ModelWorkspace::new(2);
+        let first = model.forward(&mut ws, &tokens, 2).clone();
+        let snap = ws.capacity_snapshot();
+        assert!(!snap.is_empty(), "{name}: snapshot empty");
+        let second = model.forward(&mut ws, &tokens, 2).clone();
+        assert_eq!(
+            ws.capacity_snapshot(),
+            snap,
+            "{name}: second same-shape forward re-allocated workspace buffers"
+        );
+        // and reuse must not change results: bitwise-identical logits
+        assert_eq!(first.data, second.data, "{name}");
+    }
+}
+
+#[test]
+fn model_workspace_survives_shape_cycles_without_reallocating_the_arena() {
+    // grow -> shrink -> grow at the model level: revisiting the largest
+    // (B, L) after a smaller call must find every buffer intact
+    let mut rng = Rng::new(10);
+    let model = Model::new(cfg(AttnSpec::H1d { nr: 4 }, false, 40), 6).unwrap();
+    let vocab = model.cfg.vocab_size;
+    let big = random_tokens(&mut rng, vocab, 2 * 32);
+    let small = random_tokens(&mut rng, vocab, 9);
+    let mut ws = ModelWorkspace::new(3);
+    let first_big = model.forward(&mut ws, &big, 2).clone();
+    let snap = ws.capacity_snapshot();
+    let _ = model.forward(&mut ws, &small, 1);
+    let again = model.forward(&mut ws, &big, 2).clone();
+    assert_eq!(
+        ws.capacity_snapshot(),
+        snap,
+        "grow -> shrink -> grow re-allocated the model arena"
+    );
+    assert_eq!(first_big.data, again.data, "shape cycling changed results");
+}
