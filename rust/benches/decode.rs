@@ -1,0 +1,148 @@
+//! Bench: KV-cached per-token decode latency vs context length — the
+//! serving-side complement of `model_forward.rs`.
+//!
+//! For every zoo algorithm this prefills a context of length L and then
+//! measures `DecodeSession::step` — the paper's complexity claim in its
+//! incremental form: h1d's per-token cost is O(Nr·d·log L) and should
+//! stay ~flat as L grows, `full` is O(L·d) and grows linearly, `local`
+//! is O(w·d) flat, while `lowrank`/`blocksparse` replay their forward
+//! per step (no exact incremental update exists for either; the table
+//! makes that cost visible rather than hiding it).
+//!
+//! Besides the human-readable table, the run emits machine-readable
+//! `BENCH_decode.json` (per-token µs vs L per algorithm) so the perf
+//! trajectory is tracked across PRs by CI artifacts and ad-hoc diffing.
+//!
+//! Flags:
+//!   --smoke        tiny shapes (CI keep-alive; exercises every path)
+//!   --steps N      decode steps measured per cell (default 32)
+//!   --out PATH     where to write the JSON (default BENCH_decode.json)
+
+use std::time::Instant;
+
+use htransformer::model::{AttnSpec, DecodeWorkspace, Model, ModelConfig};
+use htransformer::util::bench::Table;
+use htransformer::util::cli::Args;
+use htransformer::util::json::{num, obj, s, Json};
+use htransformer::util::Rng;
+
+fn spec_zoo(nr: usize) -> Vec<(&'static str, AttnSpec)> {
+    vec![
+        ("h1d", AttnSpec::H1d { nr }),
+        ("full", AttnSpec::Full),
+        ("local", AttnSpec::Local { radius: nr }),
+        ("lowrank", AttnSpec::LowRank { rank: 32, seed: 7 }),
+        (
+            "blocksparse",
+            AttnSpec::BlockSparse {
+                window: 8,
+                n_global: 4,
+                n_random: 4,
+                seed: 7,
+            },
+        ),
+    ]
+}
+
+/// Mean per-token step latency (seconds) at context length `l`.
+fn measure_step(spec: &AttnSpec, l: usize, steps: usize) -> f64 {
+    let causal = !matches!(spec, AttnSpec::LowRank { .. });
+    let cfg = ModelConfig {
+        vocab_size: 256,
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: 256,
+        max_len: l + steps + 1,
+        causal,
+        attention: spec.clone(),
+    };
+    let model = Model::new(cfg, 1).expect("valid bench config");
+    let mut rng = Rng::new(l as u64);
+    let prompt: Vec<u32> = (0..l)
+        .map(|_| rng.below(model.cfg.vocab_size as u64) as u32)
+        .collect();
+    let mut session = model
+        .prefill_with(DecodeWorkspace::serial(), &prompt)
+        .expect("prefill");
+    // one unmeasured step warms the per-step scratch
+    session.step(0).expect("warm step");
+    let t0 = Instant::now();
+    for i in 0..steps {
+        std::hint::black_box(session.step((i % 256) as u32).expect("step"));
+    }
+    t0.elapsed().as_secs_f64() / steps as f64
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let steps = args.usize_or("steps", if smoke { 4 } else { 32 });
+    let out_path = args.str_or("out", "BENCH_decode.json");
+    let nr = 16;
+    let lens: Vec<usize> = if smoke {
+        vec![64, 128]
+    } else {
+        vec![256, 512, 1024, 2048, 4096]
+    };
+    println!("### KV-cached decode: per-token latency vs context length ###");
+    println!("(B=1, d_model 64, 2 layers x 4 heads, Nr={nr}, {steps} steps/cell)\n");
+
+    let zoo = spec_zoo(nr);
+    let mut headers = vec!["L".to_string()];
+    headers.extend(zoo.iter().map(|(name, _)| name.to_string()));
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+
+    // per-algorithm {L -> µs/token}, in zoo order
+    let mut results: Vec<(&'static str, Vec<(usize, f64)>)> =
+        zoo.iter().map(|(name, _)| (*name, Vec::new())).collect();
+    for &l in &lens {
+        let mut cells = vec![l.to_string()];
+        for (i, (_, spec)) in zoo.iter().enumerate() {
+            let sec = measure_step(spec, l, steps);
+            let us = sec * 1e6;
+            results[i].1.push((l, us));
+            cells.push(format!("{us:.1}µs"));
+        }
+        t.row(&cells);
+    }
+    t.print();
+    println!(
+        "\nh1d should grow ~logarithmically in L (O(Nr·d·log L) per token), full \
+         ~linearly (O(L·d)); lowrank/blocksparse pay a full recompute per step."
+    );
+
+    let result_json: Vec<Json> = results
+        .iter()
+        .map(|(name, cells)| {
+            let per_l: Vec<Json> = cells
+                .iter()
+                .map(|&(l, us)| obj(vec![("L", num(l as f64)), ("per_token_us", num(us))]))
+                .collect();
+            obj(vec![("attention", s(name)), ("cells", Json::Arr(per_l))])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("decode")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("d_model", num(64.0)),
+                ("n_heads", num(4.0)),
+                ("n_layers", num(2.0)),
+                ("nr", num(nr as f64)),
+                ("steps_per_cell", num(steps as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(result_json)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => {
+            eprintln!("error: could not write {out_path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

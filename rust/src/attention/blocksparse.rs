@@ -1,6 +1,13 @@
 //! Block-sparse attention (BigBird-style, Zaheer et al. 2020; the
 //! previous-best row of Table 1): each query attends a local window,
 //! a few global tokens, and a few random blocks.
+//!
+//! Incremental decoding uses the trait's default cached-recompute
+//! `decode_step`: the random key sets are drawn from one RNG stream
+//! whose draws depend on the context length (`usize_below(l)`), so the
+//! sampled pattern for *every* row changes as tokens append — the
+//! prefix-parity contract holds (the default replays the forward), but
+//! no O(keys) incremental update can reproduce it exactly.
 
 use super::workspace::HeadScratch;
 use super::{Attention, AttnWorkspace};
@@ -180,6 +187,32 @@ mod tests {
         for i in 0..l - 1 {
             for t in 0..4 {
                 assert_eq!(z1.at(i, t), z2.at(i, t), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_decode_step_matches_prefix_forward() {
+        use crate::attention::DecodeState;
+        let mut rng = Rng::new(33);
+        let (l, d) = (24usize, 4usize);
+        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let algo = BlockSparse::new(3, 2, 2, 17);
+        let mut st = DecodeState::default();
+        algo.decode_begin(&mut st, l, d);
+        let mut out = vec![0.0f32; d];
+        for t in 0..l {
+            algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), true, &mut out);
+            let want = algo.forward(
+                &q.block(0, t + 1, 0, d),
+                &k.block(0, t + 1, 0, d),
+                &v.block(0, t + 1, 0, d),
+                true,
+            );
+            for j in 0..d {
+                assert!((out[j] - want.at(t, j)).abs() < 1e-6, "step {t} col {j}");
             }
         }
     }

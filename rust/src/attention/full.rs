@@ -5,7 +5,7 @@
 //! scratch alive in the workspace, so its workspace footprint is
 //! O(B·H·L²) — the memory cost the paper's O(L) structure removes.
 
-use super::workspace::HeadScratch;
+use super::workspace::{attend_fine_rows, DecodeState, HeadScratch};
 use super::{Attention, AttnWorkspace};
 use crate::tensor::ops::{matmul_into, matmul_nt_into, softmax_rows, NEG_MASK};
 use crate::tensor::{Batch, Mat, Qkv};
@@ -48,6 +48,36 @@ impl Attention for Full {
         ws.run_heads_into(qkv, out, move |s| full_head(causal, s))
     }
 
+    fn decode_begin(&self, state: &mut DecodeState, max_len: usize, d: usize) {
+        // no Q history, no pyramid: the step only needs the KV cache
+        state.begin(max_len, d, false, 0);
+    }
+
+    /// True incremental decoding: one softmax row over the cached keys,
+    /// O(t·d) per step — the per-token cost that grows linearly with
+    /// context and motivates the hierarchical alternative. `causal` is
+    /// irrelevant at decode time (no future tokens exist yet), so the
+    /// step matches the last forward row for both settings.
+    fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        _causal: bool,
+        out: &mut [f32],
+    ) {
+        state.append(q_row, k_row, v_row);
+        let t = state.len - 1;
+        let scale = 1.0 / (state.d as f32).sqrt();
+        let (_, den) =
+            attend_fine_rows(q_row, &state.k, &state.v, 0, t, scale, &mut state.wbuf, out);
+        let inv = 1.0 / den;
+        for x in out.iter_mut() {
+            *x *= inv;
+        }
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * l * 4
     }
@@ -75,6 +105,42 @@ mod tests {
             let vmax = (0..12).map(|i| v.at(i, j)).fold(f32::NEG_INFINITY, f32::max);
             for i in 0..12 {
                 assert!(z.at(i, j) >= vmin - 1e-5 && z.at(i, j) <= vmax + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_matches_prefix_forward_and_allocates_nothing() {
+        use crate::attention::DecodeState;
+        let mut rng = Rng::new(14);
+        let (l, d) = (33usize, 4usize);
+        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let mut st = DecodeState::default();
+        Full.decode_begin(&mut st, l, d);
+        assert!(!st.cache_q, "incremental full decode keeps no Q history");
+        let mut out = vec![0.0f32; d];
+        let mut snap = None;
+        for t in 0..l {
+            Full.decode_step(&mut st, q.row(t), k.row(t), v.row(t), true, &mut out);
+            let want = Full.forward(
+                &q.block(0, t + 1, 0, d),
+                &k.block(0, t + 1, 0, d),
+                &v.block(0, t + 1, 0, d),
+                true,
+            );
+            for j in 0..d {
+                assert!(
+                    (out[j] - want.at(t, j)).abs() < 1e-6,
+                    "step {t} col {j}: {} vs {}",
+                    out[j],
+                    want.at(t, j)
+                );
+            }
+            match &snap {
+                None => snap = Some(st.buffer_snapshot()),
+                Some(s) => assert_eq!(&st.buffer_snapshot(), s, "step {t} allocated"),
             }
         }
     }

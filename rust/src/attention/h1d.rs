@@ -16,7 +16,7 @@
 //! workspace buffers, so batched execution repeats `forward` at
 //! production shapes without allocating (see `attention::workspace`).
 
-use super::workspace::{ensure_levels, HeadScratch, LevelBuf};
+use super::workspace::{ensure_levels, DecodeState, HeadScratch, LevelBuf};
 use super::{Attention, AttnWorkspace};
 use crate::tensor::{Batch, Mat, Qkv};
 
@@ -63,6 +63,151 @@ impl H1d {
 fn padded_len(l: usize, nr: usize) -> usize {
     let nb = l.div_ceil(nr).max(1);
     nr * nb.next_power_of_two()
+}
+
+/// Coarse pyramid levels a decode cache must maintain for contexts up
+/// to `max_len`: level `l >= 1` is read at step `t` iff its coarse
+/// block index `(t >> l) / nr` is at least 1, i.e. `t >> l >= nr`.
+fn decode_coarse_levels(max_len: usize, nr: usize) -> usize {
+    let mut n = 0;
+    while max_len.saturating_sub(1) >> (n + 1) >= nr {
+        n += 1;
+    }
+    n
+}
+
+/// One incremental hierarchical decoding step (the `decode_step`
+/// override): append the token to the fine cache and pyramid, then
+/// rebuild only this position's output from O(log L) cached blocks.
+///
+/// Mirrors `h1d_head` restricted to the last row of an `L = t + 1`
+/// forward: level 0 attends the previous block plus the causal part of
+/// the diagonal block over *exact* cached keys; each coarse level `l`
+/// attends block `bi - 1` at that resolution through the cached
+/// partial sums (coarse Q = `qsum * 0.5^l`, masked-average K =
+/// `ksum / count`, V sums and counts exactly as Eq. 25-27 build them),
+/// with the footnote-4 overlap-quadrant mask; the per-level partials
+/// recombine through the same shared log-sum-exp rescale as the
+/// forward (Eq. 69/73). Cost: O(Nr·d) at level 0 plus O(Nr·d) per
+/// coarse level — O(Nr·d·log t) per token, the incremental form of the
+/// paper's linear-complexity claim.
+///
+/// The causal flag is immaterial here: at decode time every
+/// forward-direction block lies beyond the last token, where the
+/// forward's padding counts are zero and everything is masked anyway.
+pub(crate) fn h1d_decode_step(
+    nr: usize,
+    overlap_masks: bool,
+    state: &mut DecodeState,
+    q_row: &[f32],
+    k_row: &[f32],
+    v_row: &[f32],
+    out: &mut [f32],
+) {
+    state.append(q_row, k_row, v_row);
+    let d = state.d;
+    let t = state.len - 1;
+    let scale = 1.0 / (d as f32).sqrt();
+    let half = nr / 2;
+
+    // per-level (m, den, y) partials for the single query row, level 0
+    // first — the decode-time LevelBuf
+    state.mbuf.clear();
+    state.dbuf.clear();
+    state.ylev.reset(state.n_coarse + 1, d);
+
+    // level 0: previous block + causal diagonal = one contiguous range
+    // of exact cached keys, the shared fine-row kernel
+    let b0 = t / nr;
+    let lo0 = b0.saturating_sub(1) * nr;
+    let (m0, den0) = super::workspace::attend_fine_rows(
+        q_row,
+        &state.k,
+        &state.v,
+        lo0,
+        t,
+        scale,
+        &mut state.wbuf,
+        state.ylev.row_mut(0),
+    );
+    state.mbuf.push(m0);
+    state.dbuf.push(den0);
+
+    // coarse levels: block bi-1 at each resolution, until the current
+    // token's coarse block is the leftmost (contributions above that
+    // are empty, exactly as the forward's padded levels are)
+    let mut used = 1usize;
+    for level in 1..=state.n_coarse {
+        let ci = t >> level;
+        let bi = ci / nr;
+        if bi == 0 {
+            break;
+        }
+        let lv = &state.levels[level - 1];
+        let r = ci % nr;
+        let qf = 0.5f32.powi(level as i32);
+        // pass 1: scores + row max (masked entries marked -inf)
+        state.wbuf.clear();
+        let mut m = NEG;
+        for c in 0..nr {
+            let kj = (bi - 1) * nr + c;
+            if (overlap_masks && r < half && c >= half) || lv.count[kj] <= 0.0 {
+                state.wbuf.push(f32::NEG_INFINITY);
+                continue;
+            }
+            let inv_cnt = 1.0 / lv.count[kj];
+            let qrow = lv.qsum.row(ci);
+            let krow = lv.ksum.row(kj);
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += (qrow[i] * qf) * (krow[i] * inv_cnt);
+            }
+            let sc = dot * scale;
+            state.wbuf.push(sc);
+            if sc > m {
+                m = sc;
+            }
+        }
+        // pass 2: exp-accumulate against the V sums and counts
+        let mut den = 0.0f32;
+        let yrow = state.ylev.row_mut(used);
+        for (c, sc) in state.wbuf.iter().enumerate() {
+            if !sc.is_finite() {
+                continue;
+            }
+            let kj = (bi - 1) * nr + c;
+            let w = (sc - m).exp();
+            den += w * lv.count[kj];
+            let vrow = lv.vsum.row(kj);
+            for i in 0..d {
+                yrow[i] += w * vrow[i];
+            }
+        }
+        state.mbuf.push(m);
+        state.dbuf.push(den);
+        used += 1;
+    }
+
+    // recombine the levels with a shared rescale (forward Eq. 69/73)
+    let mut m_tot = NEG;
+    for &m in &state.mbuf {
+        m_tot = m_tot.max(m);
+    }
+    let mut den = 0.0f32;
+    out.fill(0.0);
+    for (lvl, (&m, &dn)) in state.mbuf.iter().zip(&state.dbuf).enumerate() {
+        let w = (m - m_tot).exp();
+        den += dn * w;
+        let yrow = state.ylev.row(lvl);
+        for i in 0..d {
+            out[i] += yrow[i] * w;
+        }
+    }
+    let inv = 1.0 / den.max(1e-30);
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+    debug_assert_eq!(used, state.mbuf.len());
 }
 
 /// The full hierarchical forward for one head, out of scratch buffers:
@@ -199,6 +344,24 @@ impl Attention for H1d {
     fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
         let (nr, overlap_masks) = (self.nr, self.overlap_masks);
         ws.run_heads_into(qkv, out, move |s| h1d_head(nr, overlap_masks, causal, s))
+    }
+
+    fn decode_begin(&self, state: &mut DecodeState, max_len: usize, d: usize) {
+        // fine K/V plus the coarsening pyramid; no fine-Q history (the
+        // coarse query reads the incrementally maintained qsum levels)
+        state.begin(max_len, d, false, decode_coarse_levels(max_len, self.nr));
+    }
+
+    fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        _causal: bool,
+        out: &mut [f32],
+    ) {
+        h1d_decode_step(self.nr, self.overlap_masks, state, q_row, k_row, v_row, out)
     }
 
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
@@ -529,6 +692,100 @@ mod tests {
                 assert!((z.at(i, 0) - 1.0).abs() < 1e-4, "L={l} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn decode_step_matches_prefix_forward_row_by_row() {
+        // prefix parity across several block boundaries and pyramid
+        // depths: step t must equal the last row of a forward over the
+        // first t+1 tokens (the h1d coarse-query interpolation averages
+        // over spans, so this — not row t of a longer forward — is the
+        // exact contract; see decode_parity.rs for the model level)
+        let mut rng = Rng::new(21);
+        let (l, d, nr) = (70usize, 8usize, 4usize);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        for causal in [true, false] {
+            let algo = H1d::new(nr);
+            let mut st = DecodeState::default();
+            algo.decode_begin(&mut st, l, d);
+            assert!(st.n_coarse >= 3, "want a multi-level pyramid, got {}", st.n_coarse);
+            let mut out = vec![0.0f32; d];
+            for t in 0..l {
+                algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), causal, &mut out);
+                let want = algo.forward(
+                    &q.block(0, t + 1, 0, d),
+                    &k.block(0, t + 1, 0, d),
+                    &v.block(0, t + 1, 0, d),
+                    causal,
+                );
+                for j in 0..d {
+                    assert!(
+                        (out[j] - want.at(t, j)).abs() < 1e-5,
+                        "causal={causal} step {t} col {j}: {} vs {}",
+                        out[j],
+                        want.at(t, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_steps_allocate_nothing_after_begin() {
+        let mut rng = Rng::new(22);
+        let (l, d, nr) = (64usize, 8usize, 8usize);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let algo = H1d::new(nr);
+        let mut st = DecodeState::default();
+        algo.decode_begin(&mut st, l, d);
+        let mut out = vec![0.0f32; d];
+        // one step warms the per-step scratch (wbuf/mbuf/dbuf lengths)
+        algo.decode_step(&mut st, q.row(0), k.row(0), v.row(0), true, &mut out);
+        let snap = st.buffer_snapshot();
+        for t in 1..l {
+            algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), true, &mut out);
+        }
+        assert_eq!(st.buffer_snapshot(), snap, "decode steps must not allocate");
+    }
+
+    #[test]
+    fn decode_overlap_mask_ablation_tracks_forward() {
+        let mut rng = Rng::new(23);
+        let (l, d, nr) = (40usize, 4usize, 4usize);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let algo = H1d::without_overlap_masks(nr);
+        let mut st = DecodeState::default();
+        algo.decode_begin(&mut st, l, d);
+        let mut out = vec![0.0f32; d];
+        for t in 0..l {
+            algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), true, &mut out);
+            let want = algo.forward(
+                &q.block(0, t + 1, 0, d),
+                &k.block(0, t + 1, 0, d),
+                &v.block(0, t + 1, 0, d),
+                true,
+            );
+            for j in 0..d {
+                assert!((out[j] - want.at(t, j)).abs() < 1e-5, "step {t} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_coarse_levels_match_forward_depth_needs() {
+        // level l is read at some step below max_len iff the forward at
+        // that length has a non-empty dir=-1 block there
+        assert_eq!(decode_coarse_levels(1, 4), 0);
+        assert_eq!(decode_coarse_levels(8, 4), 0); // t <= 7: 7 >> 1 = 3 < 4
+        assert_eq!(decode_coarse_levels(9, 4), 1); // t = 8: 8 >> 1 = 4
+        assert_eq!(decode_coarse_levels(64, 4), 3); // 63 >> 3 = 7, >> 4 = 3
+        assert_eq!(decode_coarse_levels(64, 16), 1);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! Attention" row of Table 1): each query attends to keys within a fixed
 //! window radius — O(L·w) time/memory, but no long-range information.
 
-use super::workspace::HeadScratch;
+use super::workspace::{attend_fine_rows, DecodeState, HeadScratch};
 use super::{Attention, AttnWorkspace};
 use crate::tensor::{Batch, Mat, Qkv};
 
@@ -76,6 +76,35 @@ impl Attention for LocalWindow {
         ws.run_heads_into(qkv, out, move |s| local_head(radius, causal, s))
     }
 
+    fn decode_begin(&self, state: &mut DecodeState, max_len: usize, d: usize) {
+        state.begin(max_len, d, false, 0);
+    }
+
+    /// True incremental decoding: softmax over the trailing window of
+    /// cached keys, O(radius·d) per step — constant in context length.
+    /// At decode time the window can only extend backwards, so the
+    /// causal flag changes nothing.
+    fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        _causal: bool,
+        out: &mut [f32],
+    ) {
+        state.append(q_row, k_row, v_row);
+        let t = state.len - 1;
+        let lo = t.saturating_sub(self.radius);
+        let scale = 1.0 / (state.d as f32).sqrt();
+        let (_, den) =
+            attend_fine_rows(q_row, &state.k, &state.v, lo, t, scale, &mut state.wbuf, out);
+        let inv = 1.0 / den;
+        for x in out.iter_mut() {
+            *x *= inv;
+        }
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * (2 * self.radius + 1) * 4
     }
@@ -101,6 +130,37 @@ mod tests {
         let zl = LocalWindow::new(l).forward(&q, &k, &v, false);
         let zf = Full.forward(&q, &k, &v, false);
         assert!(zl.max_abs_diff(&zf) < 1e-4);
+    }
+
+    #[test]
+    fn decode_step_matches_prefix_forward() {
+        use crate::attention::DecodeState;
+        let mut rng = Rng::new(16);
+        let (l, d) = (30usize, 4usize);
+        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let algo = LocalWindow::new(4);
+        for causal in [true, false] {
+            let mut st = DecodeState::default();
+            algo.decode_begin(&mut st, l, d);
+            let mut out = vec![0.0f32; d];
+            for t in 0..l {
+                algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), causal, &mut out);
+                let want = algo.forward(
+                    &q.block(0, t + 1, 0, d),
+                    &k.block(0, t + 1, 0, d),
+                    &v.block(0, t + 1, 0, d),
+                    causal,
+                );
+                for j in 0..d {
+                    assert!(
+                        (out[j] - want.at(t, j)).abs() < 1e-6,
+                        "causal={causal} step {t} col {j}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

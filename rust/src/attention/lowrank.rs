@@ -6,6 +6,12 @@
 //! with its *hierarchical* low-rank structure (section 4.1): a single
 //! global rank-r factorisation, which the Eq. (11)-(13) example shows can
 //! fail where the H-Matrix succeeds.
+//!
+//! Incremental decoding uses the trait's default cached-recompute
+//! `decode_step`: the projection is a function of the current context
+//! length, so every appended token changes *all* projected K/V rows —
+//! there is no cheaper exact update (another face of the same
+//! limitation that rules out a causal variant).
 
 use super::workspace::HeadScratch;
 use super::{Attention, AttnWorkspace};
@@ -115,6 +121,37 @@ mod tests {
         for i in 0..l {
             for j in 0..4 {
                 assert!((z.at(i, j) - (j as f32 + 1.0)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn default_decode_step_matches_prefix_forward() {
+        use crate::attention::DecodeState;
+        use crate::util::Rng;
+        let mut rng = Rng::new(31);
+        let (l, d) = (20usize, 4usize);
+        let q = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(l, d, |_, _| rng.normal_f32());
+        let algo = LowRank::new(6, 3);
+        let mut st = DecodeState::default();
+        algo.decode_begin(&mut st, l, d);
+        let mut out = vec![0.0f32; d];
+        for t in 0..l {
+            algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), false, &mut out);
+            let want = algo.forward(
+                &q.block(0, t + 1, 0, d),
+                &k.block(0, t + 1, 0, d),
+                &v.block(0, t + 1, 0, d),
+                false,
+            );
+            for j in 0..d {
+                assert!(
+                    (out[j] - want.at(t, j)).abs() < 1e-6,
+                    "step {t} col {j} (projection is length-dependent, so \
+                     only prefix parity can hold)"
+                );
             }
         }
     }

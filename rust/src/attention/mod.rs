@@ -10,14 +10,19 @@
 //!     the compiled artifacts through the runtime);
 //!  3. documentation-by-code of the algorithm for rust readers.
 //!
-//! Every algorithm exposes two entry points: the legacy single-head
-//! `[L, d]` `forward`, and the batched multi-head `[B, H, L, d]`
+//! Every algorithm exposes three entry points: the legacy single-head
+//! `[L, d]` `forward`; the batched multi-head `[B, H, L, d]`
 //! `forward_batch`, which runs the same per-head kernels out of an
 //! [`AttnWorkspace`] — padded copies, level pyramids, counts and score
 //! blocks all live in the workspace and are reused call-to-call, and
 //! the `(batch, head)` pairs are dispatched across the crate's thread
-//! pool. The production hot path is still the XLA artifacts; this is
-//! its CPU mirror at production shapes.
+//! pool; and the incremental `decode_step`, which appends one token to
+//! a [`DecodeState`] KV cache and produces that position's output
+//! without re-running the prefix — the serving-side autoregressive
+//! path (`full`/`local`/`h1d` have true incremental updates, the rest
+//! fall back to a cached full recompute). The production hot path is
+//! still the XLA artifacts; this is its CPU mirror at production
+//! shapes.
 
 pub mod blocksparse;
 pub mod full;
@@ -28,7 +33,7 @@ pub mod workspace;
 
 use crate::tensor::{Batch, Mat, Qkv};
 
-pub use workspace::{AttnWorkspace, HeadScratch, LevelBuf};
+pub use workspace::{AttnWorkspace, DecodeLevel, DecodeState, HeadScratch, LevelBuf};
 
 /// An attention algorithm (single-head core + batched execution).
 pub trait Attention {
@@ -67,6 +72,66 @@ pub trait Attention {
     /// zoo overrides it with [`AttnWorkspace::run_heads_into`].
     fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
         *out = self.forward_batch(ws, qkv, causal);
+    }
+
+    /// Prepare `state` for incremental autoregressive decoding of up to
+    /// `max_len` tokens at head width `d`: reset the context to empty
+    /// and reserve every cache buffer, so that each subsequent
+    /// [`DecodeState::append`] / [`Attention::decode_step`] runs without
+    /// heap allocation. The default reserves the fine Q cache too,
+    /// because the default `decode_step` replays the full forward over
+    /// the cached history; incremental overrides reserve only what they
+    /// read (`full`/`local`: K/V; `h1d`: K/V plus its coarsening
+    /// pyramid).
+    fn decode_begin(&self, state: &mut DecodeState, max_len: usize, d: usize) {
+        state.begin(max_len, d, true, 0);
+    }
+
+    /// Bulk-load a `[rows, d]` row-major prompt prefix into `state` —
+    /// the prefill path. Must be semantically identical to appending
+    /// the rows one at a time (which is exactly what the default does;
+    /// [`DecodeState::append`] already maintains the pyramid levels
+    /// incrementally).
+    fn decode_load_prefix(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) {
+        let d = state.d;
+        assert!(d > 0, "decode_begin must run before decode_load_prefix");
+        assert_eq!(q.len() % d, 0, "prefix length not a multiple of d");
+        assert!(q.len() == k.len() && q.len() == v.len(), "q/k/v prefix mismatch");
+        for ((qr, kr), vr) in q.chunks_exact(d).zip(k.chunks_exact(d)).zip(v.chunks_exact(d)) {
+            state.append(qr, kr, vr);
+        }
+    }
+
+    /// One incremental decoding step: append `(q_row, k_row, v_row)` to
+    /// the cached context and write this position's `[d]` attention
+    /// output into `out`.
+    ///
+    /// Contract (**prefix parity**, `tests/decode_parity.rs`): the
+    /// result equals the *last row* of [`Attention::forward`] over the
+    /// whole cached prefix. For causal `full`/`local` that is also row
+    /// `t` of any longer forward; for the rest only the prefix form
+    /// holds — `h1d`'s coarse queries average over spans that later
+    /// tokens keep filling, and `lowrank`'s projection /
+    /// `blocksparse`'s random key sets depend on the total length.
+    ///
+    /// The default implementation replays the cached full forward and
+    /// is therefore correct for every algorithm at O(forward) per step
+    /// (it allocates inside `forward`); `full`, `local` and `h1d`
+    /// override it with allocation-free incremental updates costing
+    /// O(L·d), O(w·d) and O(Nr·d·log L) respectively.
+    fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        causal: bool,
+        out: &mut [f32],
+    ) {
+        state.append(q_row, k_row, v_row);
+        debug_assert!(state.cache_q, "default decode_step needs the Q cache");
+        let z = self.forward(&state.q, &state.k, &state.v, causal);
+        out.copy_from_slice(z.row(z.rows - 1));
     }
 
     /// Attention-state memory in bytes for sequence length `l` — the
@@ -169,6 +234,59 @@ mod tests {
     fn cosine_of_empty_is_zero_in_release() {
         let a = Mat::zeros(0, 4);
         assert_eq!(mean_row_cosine(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn default_decode_step_replays_the_cached_forward() {
+        // an algorithm relying on every trait default must still satisfy
+        // prefix parity: step t == last row of forward over rows 0..=t
+        struct MeanV;
+        impl Attention for MeanV {
+            fn name(&self) -> &'static str {
+                "meanv"
+            }
+            fn forward(&self, _q: &Mat, _k: &Mat, v: &Mat, _causal: bool) -> Mat {
+                // row i = mean of v rows 0..=i (depends on the prefix,
+                // so a broken cache would be caught)
+                Mat::from_fn(v.rows, v.cols, |i, j| {
+                    (0..=i).map(|r| v.at(r, j)).sum::<f32>() / (i + 1) as f32
+                })
+            }
+            fn attn_memory_bytes(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+            fn flops(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+        }
+        let mut rng = Rng::new(6);
+        let (l, d) = (10usize, 3usize);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let algo = MeanV;
+        let mut st = DecodeState::default();
+        algo.decode_begin(&mut st, l, d);
+        let mut out = vec![0.0f32; d];
+        for t in 0..l {
+            algo.decode_step(&mut st, q.row(t), k.row(t), v.row(t), true, &mut out);
+            let want = algo.forward(
+                &q.block(0, t + 1, 0, d),
+                &k.block(0, t + 1, 0, d),
+                &v.block(0, t + 1, 0, d),
+                true,
+            );
+            for j in 0..d {
+                assert!(
+                    (out[j] - want.at(t, j)).abs() < 1e-6,
+                    "step {t} col {j}: {} vs {}",
+                    out[j],
+                    want.at(t, j)
+                );
+            }
+        }
+        assert_eq!(st.len, l);
+        assert_eq!(st.q.rows, l, "default path caches the Q history");
     }
 
     #[test]

@@ -14,6 +14,17 @@
 //! back as the job's result ([`ThreadPool::map`] preserves order), so a
 //! scratch's heap buffers survive call-to-call even though the structs
 //! travel through the pool's channels.
+//!
+//! This module also owns [`DecodeState`], the incremental-decoding
+//! counterpart of `HeadScratch`: one per `(layer, head)` pair, holding
+//! the KV cache a [`crate::attention::Attention::decode_step`] call
+//! appends to — plus, for hierarchical attention, the incrementally
+//! maintained coarsening pyramid (per-level Q/K/V partial sums and
+//! token counts), so appending one token touches O(log L) pyramid rows
+//! instead of rebuilding the tree. All buffers are capacity-reserved up
+//! front by [`DecodeState::begin`], so every append and step after that
+//! is allocation-free ([`DecodeState::buffer_snapshot`] makes that
+//! testable, mirroring [`AttnWorkspace::capacity_snapshot`]).
 
 use crate::tensor::{Batch, Mat, Qkv};
 use crate::util::threadpool::ThreadPool;
@@ -119,6 +130,205 @@ impl HeadScratch {
         }
         out
     }
+}
+
+/// One coarse level of a decode-time coarsening pyramid (resolution
+/// `2^(index+1)` fine tokens per row). Rows hold *partial sums* while a
+/// span is still being filled; [`DecodeState::append`] completes them —
+/// a row is only ever read by `decode_step` once its span is complete
+/// (coarse blocks strictly left of the current token's block).
+#[derive(Debug, Default)]
+pub struct DecodeLevel {
+    /// `[lc, d]` fine-Q partial sums (read as the coarse query after a
+    /// `0.5^level` rescale — the paper's Eq. 25 average, accumulated
+    /// incrementally).
+    pub qsum: Mat,
+    /// `[lc, d]` K partial sums (read as the masked average
+    /// `ksum / count`, Eq. 26).
+    pub ksum: Mat,
+    /// `[lc, d]` V partial sums (Eq. 27).
+    pub vsum: Mat,
+    /// `[lc]` real-token counts per coarse row.
+    pub count: Vec<f32>,
+}
+
+impl DecodeLevel {
+    fn begin(&mut self, d: usize, rows_cap: usize) {
+        self.qsum.reset_appendable(d, rows_cap);
+        self.ksum.reset_appendable(d, rows_cap);
+        self.vsum.reset_appendable(d, rows_cap);
+        self.count.clear();
+        self.count.reserve(rows_cap);
+    }
+}
+
+/// Per-`(layer, head)` incremental decoding state: the KV cache every
+/// algorithm appends to, the optional Q cache the default
+/// recompute-path keeps, and the coarsening pyramid `h1d` maintains.
+/// Created/reset by [`crate::attention::Attention::decode_begin`]
+/// (which decides `cache_q` and the pyramid depth), fed by
+/// [`DecodeState::append`], read by `decode_step`.
+#[derive(Debug, Default)]
+pub struct DecodeState {
+    /// Tokens cached so far (row count of `k`/`v`).
+    pub len: usize,
+    /// Head width.
+    pub d: usize,
+    /// Keep fine Q rows (the default full-recompute path needs the
+    /// whole Q history; incremental overrides leave this off).
+    pub cache_q: bool,
+    /// Coarse pyramid levels maintained (0 for non-hierarchical).
+    pub n_coarse: usize,
+    /// Context capacity reserved by [`DecodeState::begin`]; appending
+    /// beyond it is rejected (for `h1d` the pyramid depth is frozen at
+    /// `begin` time, so overrunning would be silently wrong, not slow).
+    pub max_len: usize,
+    /// `[len, d]` cached queries (only if `cache_q`).
+    pub q: Mat,
+    /// `[len, d]` cached keys.
+    pub k: Mat,
+    /// `[len, d]` cached values.
+    pub v: Mat,
+    /// Coarsening pyramid; entry `i` holds level `i + 1` (level 0 is
+    /// `k`/`v` themselves). Stale entries beyond `n_coarse` are kept
+    /// for their allocations, never read.
+    pub levels: Vec<DecodeLevel>,
+    /// Per-step score/weight scratch (sized to the widest key set).
+    pub wbuf: Vec<f32>,
+    /// Per-step per-level row-max logits (h1d recombination).
+    pub mbuf: Vec<f32>,
+    /// Per-step per-level exp-weight sums (h1d recombination).
+    pub dbuf: Vec<f32>,
+    /// Per-step `[n_levels, d]` per-level value accumulators.
+    pub ylev: Mat,
+}
+
+impl DecodeState {
+    /// Reset to an empty context and reserve every buffer for up to
+    /// `max_len` tokens of head width `d`, so subsequent appends and
+    /// steps allocate nothing. Grow-only: a smaller `begin` keeps a
+    /// previously grown arena.
+    pub fn begin(&mut self, max_len: usize, d: usize, cache_q: bool, n_coarse: usize) {
+        self.len = 0;
+        self.d = d;
+        self.cache_q = cache_q;
+        self.n_coarse = n_coarse;
+        self.max_len = max_len;
+        self.k.reset_appendable(d, max_len);
+        self.v.reset_appendable(d, max_len);
+        self.q.reset_appendable(d, if cache_q { max_len } else { 0 });
+        while self.levels.len() < n_coarse {
+            self.levels.push(DecodeLevel::default());
+        }
+        for (i, lv) in self.levels.iter_mut().enumerate().take(n_coarse) {
+            lv.begin(d, (max_len >> (i + 1)) + 1);
+        }
+        self.wbuf.clear();
+        self.wbuf.reserve(max_len);
+        self.mbuf.clear();
+        self.mbuf.reserve(n_coarse + 1);
+        self.dbuf.clear();
+        self.dbuf.reserve(n_coarse + 1);
+        self.ylev.reset(n_coarse + 1, d);
+    }
+
+    /// Append one token's per-head rows: extend the fine K/V (and,
+    /// when `cache_q`, Q) caches and fold the token into every coarse
+    /// pyramid level — O(`n_coarse`) row updates of O(d) each.
+    pub fn append(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) {
+        let t = self.len;
+        assert!(
+            t < self.max_len,
+            "decode context full: {} tokens were reserved by decode_begin",
+            self.max_len
+        );
+        self.k.push_row(k_row);
+        self.v.push_row(v_row);
+        if self.cache_q {
+            self.q.push_row(q_row);
+        }
+        for (i, lv) in self.levels.iter_mut().enumerate().take(self.n_coarse) {
+            let idx = t >> (i + 1);
+            if idx == lv.count.len() {
+                lv.qsum.push_row(q_row);
+                lv.ksum.push_row(k_row);
+                lv.vsum.push_row(v_row);
+                lv.count.push(1.0);
+            } else {
+                lv.qsum.add_into_row(idx, q_row);
+                lv.ksum.add_into_row(idx, k_row);
+                lv.vsum.add_into_row(idx, v_row);
+                lv.count[idx] += 1.0;
+            }
+        }
+        self.len = t + 1;
+    }
+
+    /// `(pointer, capacity)` of every heap buffer this state owns —
+    /// stable across `append`/`decode_step` calls within the reserved
+    /// `max_len`, the zero-alloc invariant of the decode path.
+    pub fn buffer_snapshot(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = [&self.q, &self.k, &self.v, &self.ylev]
+            .iter()
+            .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+            .collect();
+        for v in [&self.wbuf, &self.mbuf, &self.dbuf] {
+            out.push((v.as_ptr() as usize, v.capacity()));
+        }
+        out.push((self.levels.as_ptr() as usize, self.levels.capacity()));
+        for lv in &self.levels {
+            for m in [&lv.qsum, &lv.ksum, &lv.vsum] {
+                out.push((m.data.as_ptr() as usize, m.data.capacity()));
+            }
+            out.push((lv.count.as_ptr() as usize, lv.count.capacity()));
+        }
+        out
+    }
+}
+
+/// Streaming softmax attention of `q_row` against the contiguous
+/// cached fine rows `lo..=hi` of `(k, v)`: two-pass max / exp
+/// accumulation of the exp-weighted value sums into `y` (zeroed here),
+/// returning `(row max, exp-weight sum)`. The shared kernel behind the
+/// `full`, `local` and `h1d` level-0 `decode_step` paths — callers
+/// either normalise `y` by `1/den` (single-level softmax) or feed
+/// `(m, den, y)` into a multi-level recombination.
+pub(crate) fn attend_fine_rows(
+    q_row: &[f32],
+    k: &Mat,
+    v: &Mat,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    wbuf: &mut Vec<f32>,
+    y: &mut [f32],
+) -> (f32, f32) {
+    let d = q_row.len();
+    wbuf.clear();
+    let mut m = f32::NEG_INFINITY;
+    for j in lo..=hi {
+        let krow = k.row(j);
+        let mut dot = 0.0f32;
+        for i in 0..d {
+            dot += q_row[i] * krow[i];
+        }
+        let sc = dot * scale;
+        wbuf.push(sc);
+        if sc > m {
+            m = sc;
+        }
+    }
+    let mut den = 0.0f32;
+    y.fill(0.0);
+    for (sc, j) in wbuf.iter().zip(lo..=hi) {
+        let w = (sc - m).exp();
+        den += w;
+        let vrow = v.row(j);
+        for i in 0..d {
+            y[i] += w * vrow[i];
+        }
+    }
+    (m, den)
 }
 
 /// Reusable batched-attention workspace; see the module docs.
@@ -310,6 +520,81 @@ mod tests {
         let ptr = out.data.as_ptr();
         ws.run_heads_into(&qkv, &mut out, toy_kernel);
         assert_eq!(out.data.as_ptr(), ptr, "output batch must be reused");
+    }
+
+    #[test]
+    fn decode_state_appends_are_allocation_free_after_begin() {
+        let mut st = DecodeState::default();
+        st.begin(32, 4, true, 3);
+        // warm the per-step scratch the way a step would
+        st.wbuf.resize(32, 0.0);
+        st.mbuf.resize(4, 0.0);
+        st.dbuf.resize(4, 0.0);
+        let snap = st.buffer_snapshot();
+        for t in 0..32 {
+            let row = [t as f32, 1.0, 2.0, 3.0];
+            st.append(&row, &row, &row);
+        }
+        assert_eq!(st.len, 32);
+        assert_eq!(st.buffer_snapshot(), snap, "appends within capacity must not allocate");
+        // re-begin keeps the grown arena (grow-only, like the workspaces)
+        st.begin(16, 4, true, 2);
+        st.wbuf.resize(32, 0.0);
+        st.mbuf.resize(4, 0.0);
+        st.dbuf.resize(4, 0.0);
+        assert_eq!(st.len, 0);
+        assert_eq!(st.buffer_snapshot(), snap);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode context full")]
+    fn decode_state_rejects_appends_beyond_reserved_capacity() {
+        // h1d's pyramid depth is frozen at begin time, so overrunning
+        // the reservation would be silently wrong — it must panic
+        let mut st = DecodeState::default();
+        st.begin(2, 3, false, 0);
+        let r = [1.0f32, 2.0, 3.0];
+        st.append(&r, &r, &r);
+        st.append(&r, &r, &r);
+        st.append(&r, &r, &r);
+    }
+
+    #[test]
+    fn decode_state_pyramid_matches_bulk_coarsening() {
+        // appending token by token must produce the same per-level
+        // sums/counts as coarsening the whole prefix at once
+        let mut rng = Rng::new(12);
+        let (l, d) = (13usize, 3usize);
+        let rows: Vec<Vec<f32>> = (0..l)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut st = DecodeState::default();
+        st.begin(l, d, false, 3);
+        for r in &rows {
+            st.append(r, r, r);
+        }
+        assert_eq!(st.q.rows, 0, "cache_q off: no fine q rows kept");
+        assert_eq!(st.k.rows, l);
+        for level in 1..=3usize {
+            let lv = &st.levels[level - 1];
+            let span = 1usize << level;
+            let n = l.div_ceil(span);
+            assert_eq!(lv.count.len(), n, "level {level}");
+            for ci in 0..n {
+                let lo = ci * span;
+                let hi = (lo + span).min(l);
+                assert_eq!(lv.count[ci], (hi - lo) as f32, "level {level} row {ci}");
+                for t in 0..d {
+                    let want: f32 = (lo..hi).map(|i| rows[i][t]).sum();
+                    assert!(
+                        (lv.ksum.at(ci, t) - want).abs() < 1e-5,
+                        "level {level} row {ci} col {t}"
+                    );
+                    assert!((lv.qsum.at(ci, t) - want).abs() < 1e-5);
+                    assert!((lv.vsum.at(ci, t) - want).abs() < 1e-5);
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //!     transformer inference stack** (embeddings, pre-LN residual
 //!     blocks, GELU FFN and a tied logits head over any zoo algorithm,
 //!     all activations owned by a zero-alloc
-//!     [`model::ModelWorkspace`]), the `tensor` substrate, the
-//!     synthetic `data` generators and the `hmatrix`
-//!     numerical-analysis machinery;
+//!     [`model::ModelWorkspace`]), the **KV-cached decode path**
+//!     (`Model::prefill` → [`model::DecodeSession`] `step`, per-token
+//!     generation out of [`attention::DecodeState`] caches — h1d pays
+//!     O(Nr·d·log L) per token where full attention pays O(L·d)), the
+//!     `tensor` substrate, the synthetic `data` generators and the
+//!     `hmatrix` numerical-analysis machinery;
 //!   - the **`xla` feature tier**: PJRT `runtime`, training/serving
 //!     `coordinator` and the CLI's artifact-backed subcommands. These
 //!     need the vendored `xla` bindings, so they are compiled out of

@@ -10,6 +10,13 @@
 //!                             max_len, causal, attention, block_size,
 //!                             window, rank, ...) and reports logits +
 //!                             throughput
+//!   generate [--attention A]  KV-cached autoregressive decoding: one
+//!                             prefill over a prompt, then per-token
+//!                             `DecodeSession::step` sampling (greedy
+//!                             or --temperature T); reports per-token
+//!                             latency — the serving-style path where
+//!                             h1d's incremental cost stays ~flat while
+//!                             full attention grows with context
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
@@ -27,7 +34,7 @@ use htransformer::attention::{
     Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
 };
 use htransformer::hmatrix::toeplitz;
-use htransformer::model::{Model, ModelConfig, ModelWorkspace};
+use htransformer::model::{sample_logits, DecodeWorkspace, Model, ModelConfig, ModelWorkspace};
 use htransformer::tensor::{Batch, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::cli::Args;
@@ -45,6 +52,7 @@ fn main() {
             Ok(())
         }
         Some("infer") => cmd_infer(&args),
+        Some("generate") => cmd_generate(&args),
         #[cfg(feature = "xla")]
         Some("list") => xla_cmds::cmd_list(&args).map_err(|e| format!("{e:#}")),
         #[cfg(feature = "xla")]
@@ -55,8 +63,8 @@ fn main() {
         Some("serve") => xla_cmds::cmd_serve(&args).map_err(|e| format!("{e:#}")),
         other => {
             eprintln!(
-                "usage: htx <rankmap|scaling|infer|list|train|eval|serve> [flags]\n\
-                 (got {other:?}; list/train/eval/serve need --features xla; see README.md)"
+                "usage: htx <rankmap|scaling|infer|generate|list|train|eval|serve> [flags]\n\
+                 (got {other:?}; list/train/eval/serve need --features xla; see DESIGN.md)"
             );
             std::process::exit(2);
         }
@@ -210,6 +218,99 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
         fmt_time(warm),
         (batch * len) as f64 / warm
     );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    // decoding wants a causal model; default the flag on unless the user
+    // set it or picked lowrank (which has no causal form and decodes in
+    // encoder mode, each step attending the whole prefix)
+    let default_causal = args.get("attention").unwrap_or("h1d") != "lowrank";
+    let cfg = ModelConfig::from_lookup(|k| {
+        args.get(k).or_else(|| match (k, default_causal) {
+            ("causal", true) => Some("true"),
+            _ => None,
+        })
+    })?;
+    let seed = args.u64_or("seed", 42);
+    let prompt_len = args.usize_or("prompt-len", 8);
+    let n_gen = args.usize_or("gen", 32);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    let threads = args.usize_or("threads", 0); // 0 = host parallelism
+    if prompt_len == 0 {
+        return Err("--prompt-len must be >= 1".to_string());
+    }
+    if prompt_len + n_gen > cfg.max_len {
+        return Err(format!(
+            "--prompt-len {prompt_len} + --gen {n_gen} exceeds max_len {} \
+             (raise --max_len to go longer)",
+            cfg.max_len
+        ));
+    }
+    let model = Model::new(cfg, seed)?;
+    let cfg = &model.cfg;
+    println!(
+        "model: {} layers x {} heads, d_model {}, vocab {}, attention {}{} ({} params)",
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_model,
+        cfg.vocab_size,
+        model.attention_name(),
+        if cfg.causal { " (causal)" } else { "" },
+        model.n_params()
+    );
+    let mut rng = Rng::new(seed ^ 0xDEC0DE);
+    let prompt: Vec<u32> = (0..prompt_len)
+        .map(|_| rng.below(cfg.vocab_size as u64) as u32)
+        .collect();
+
+    let ws = if threads == 0 {
+        DecodeWorkspace::parallel()
+    } else {
+        DecodeWorkspace::new(threads)
+    };
+    let t0 = std::time::Instant::now();
+    let mut session = model.prefill_with(ws, &prompt)?;
+    let prefill_t = t0.elapsed().as_secs_f64();
+    println!(
+        "prefill: {prompt_len} prompt tokens in {} ({:.0} tokens/s)",
+        fmt_time(prefill_t),
+        prompt_len as f64 / prefill_t
+    );
+
+    let mut out_tokens = Vec::with_capacity(n_gen);
+    let mut next = sample_logits(session.logits().row(0), temperature, &mut rng) as u32;
+    let mut step_total = 0.0f64;
+    let mut step_min = f64::INFINITY;
+    for _ in 0..n_gen {
+        out_tokens.push(next);
+        let t1 = std::time::Instant::now();
+        let logits = session.step(next)?;
+        let dt = t1.elapsed().as_secs_f64();
+        step_total += dt;
+        step_min = step_min.min(dt);
+        next = sample_logits(logits.row(0), temperature, &mut rng) as u32;
+    }
+    println!(
+        "sampled {n_gen} tokens ({}, seed {seed}):",
+        if temperature > 0.0 {
+            format!("temperature {temperature}")
+        } else {
+            "greedy".to_string()
+        }
+    );
+    let rendered: Vec<String> = out_tokens.iter().map(|t| t.to_string()).collect();
+    println!("  {}", rendered.join(" "));
+    if n_gen > 0 {
+        println!(
+            "decode: {} / token mean, {} min ({:.0} tokens/s; context {} -> {})",
+            fmt_time(step_total / n_gen as f64),
+            fmt_time(step_min),
+            n_gen as f64 / step_total,
+            prompt_len,
+            session.pos()
+        );
+    }
     Ok(())
 }
 

@@ -287,6 +287,43 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_unsplittable_heads() {
+        // d_model % n_heads != 0 must be an Err, not a mid-forward panic
+        let cfg = ModelConfig {
+            d_model: 100,
+            n_heads: 3,
+            ..ModelConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("n_heads"), "{err}");
+        assert!(crate::model::Model::new(cfg, 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_layers() {
+        let cfg = ModelConfig {
+            n_layers: 0,
+            ..ModelConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("n_layers"), "{err}");
+        assert!(crate::model::Model::new(cfg, 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_vocab() {
+        for vocab_size in [0usize, 1] {
+            let cfg = ModelConfig {
+                vocab_size,
+                ..ModelConfig::default()
+            };
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains("vocab_size"), "vocab {vocab_size}: {err}");
+            assert!(crate::model::Model::new(cfg, 1).is_err());
+        }
+    }
+
+    #[test]
     fn every_spec_builds_its_algorithm() {
         for (name, spec) in [
             ("full", AttnSpec::Full),

@@ -1,0 +1,452 @@
+//! Incremental autoregressive decoding over the CPU model stack — the
+//! serving-side API the paper's linear-cost claim is ultimately for.
+//!
+//! `Model::forward` prices a generation loop at O(L·forward): every new
+//! token re-runs the whole prefix. This module replaces that with the
+//! standard KV-cached decode split:
+//!
+//!  * [`Model::prefill`] runs **one** batched forward over the prompt,
+//!    stashing each layer's per-head K/V (and whatever else the
+//!    attention algorithm's [`DecodeState`] maintains — for `h1d`, the
+//!    coarsening pyramid) into a [`DecodeWorkspace`], and returns a
+//!    [`DecodeSession`];
+//!  * [`DecodeSession::step`] embeds a single token, runs every layer
+//!    at `[1, D]` activation shapes, and routes each head through
+//!    `Attention::decode_step` — O(one token) work per layer plus the
+//!    algorithm's incremental attention cost (`h1d`: O(Nr·d·log L),
+//!    `full`: O(L·d) — the gap `benches/decode.rs` measures).
+//!
+//! The workspace follows the crate's zero-alloc reuse discipline:
+//! `prefill` reserves every cache up to `max_len`, so repeated `step`
+//! calls perform no heap allocation inside the workspace
+//! ([`DecodeWorkspace::capacity_snapshot`]), and a finished session's
+//! workspace can be recycled into the next `prefill_with` without
+//! re-growing the arena (the serving loop's steady state).
+//!
+//! Logit contract (**prefix parity**, `tests/decode_parity.rs`): after
+//! feeding tokens `t_0..t_n` through prefill + steps, the latest logits
+//! equal the last row of `Model::forward` over exactly those tokens to
+//! within float-accumulation noise — exactly, for causal `full`/`local`
+//! at any depth (their row outputs never change as context grows) and
+//! for every zoo algorithm at depth 1. Deeper stacks of the other
+//! algorithms follow standard **online KV-cache semantics**: a cached
+//! layer output is frozen when its token is appended, while a batched
+//! re-forward would recompute it under the longer context (h1d's coarse
+//! queries average over spans that later tokens keep filling; lowrank's
+//! projection and blocksparse's sampled key sets depend on the length
+//! outright). The decode session is therefore *strictly causal* even
+//! where the batched h1d forward is only span-aligned causal.
+
+use super::{Model, ModelWorkspace, LN_EPS};
+use crate::attention::DecodeState;
+use crate::tensor::ops::{
+    add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into, matmul_nt_into,
+};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Owns everything a decode session needs besides the model: the
+/// full-forward arena the prefill pass runs in, one [`DecodeState`] per
+/// `(layer, head)` pair, and the `[1, ·]` step-path activation buffers.
+/// Reusable across sessions (grow-only, like every workspace here).
+pub struct DecodeWorkspace {
+    /// Batched-forward arena for the prefill pass.
+    prefill: ModelWorkspace,
+    /// KV caches, `layer * n_heads + head` order.
+    states: Vec<DecodeState>,
+    /// `[1, D]` residual stream for the current position.
+    x: Mat,
+    /// `[1, D]` LayerNorm output.
+    hn: Mat,
+    /// `[1, D]` Q/K/V projection rows (head `h` = columns `h*dh..`).
+    qrow: Mat,
+    krow: Mat,
+    vrow: Mat,
+    /// `[1, D]` per-head attention outputs, written in place.
+    merged: Mat,
+    /// `[1, D]` projection / residual-delta scratch.
+    proj: Mat,
+    /// `[1, d_ff]` FFN hidden activations.
+    ff: Mat,
+    /// `[1, V]` logits for the latest position.
+    logits: Mat,
+}
+
+impl DecodeWorkspace {
+    /// Workspace whose prefill pass dispatches heads across `threads`
+    /// workers (`<= 1` means the calling thread; steps are always
+    /// single-token and run on the calling thread).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            prefill: ModelWorkspace::new(threads),
+            states: Vec::new(),
+            x: Mat::default(),
+            hn: Mat::default(),
+            qrow: Mat::default(),
+            krow: Mat::default(),
+            vrow: Mat::default(),
+            merged: Mat::default(),
+            proj: Mat::default(),
+            ff: Mat::default(),
+            logits: Mat::default(),
+        }
+    }
+
+    /// Single-threaded workspace.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Workspace whose prefill uses the host's available parallelism.
+    pub fn parallel() -> Self {
+        Self::new(crate::util::threadpool::default_threads())
+    }
+
+    /// `(pointer, capacity)` of every heap buffer the workspace owns —
+    /// step-path activations, every per-`(layer, head)` decode state,
+    /// and the prefill arena. Equal snapshots across `step` calls prove
+    /// the decode hot path allocates nothing.
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        let mats = [
+            &self.x,
+            &self.hn,
+            &self.qrow,
+            &self.krow,
+            &self.vrow,
+            &self.merged,
+            &self.proj,
+            &self.ff,
+            &self.logits,
+        ];
+        let mut out: Vec<(usize, usize)> = mats
+            .iter()
+            .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+            .collect();
+        out.push((self.states.as_ptr() as usize, self.states.capacity()));
+        for st in &self.states {
+            out.extend(st.buffer_snapshot());
+        }
+        out.extend(self.prefill.capacity_snapshot());
+        out
+    }
+}
+
+impl Model {
+    /// Run the prompt through one batched forward, load every layer's
+    /// per-head K/V into a fresh [`DecodeWorkspace`], and return the
+    /// ready-to-step session. See [`Model::prefill_with`].
+    pub fn prefill(&self, tokens: &[u32]) -> Result<DecodeSession<'_>, String> {
+        self.prefill_with(DecodeWorkspace::serial(), tokens)
+    }
+
+    /// [`Model::prefill`] into a caller-supplied workspace — the
+    /// serving loop's steady state: a workspace recycled from a
+    /// finished session ([`DecodeSession::into_workspace`]) starts the
+    /// next same-shape session without growing its arena.
+    ///
+    /// The prompt must be non-empty (the session's logits always
+    /// describe "the next token after what it has seen") and fit in
+    /// `max_len`. Token ids are validated against the vocabulary.
+    pub fn prefill_with(
+        &self,
+        mut ws: DecodeWorkspace,
+        tokens: &[u32],
+    ) -> Result<DecodeSession<'_>, String> {
+        let cfg = &self.cfg;
+        if tokens.is_empty() {
+            return Err("prefill needs at least one prompt token".to_string());
+        }
+        if tokens.len() > cfg.max_len {
+            return Err(format!(
+                "prompt length {} exceeds max_len {}",
+                tokens.len(),
+                cfg.max_len
+            ));
+        }
+        if let Some(&bad) = tokens.iter().find(|&&t| t as usize >= cfg.vocab_size) {
+            return Err(format!("token id {bad} >= vocab {}", cfg.vocab_size));
+        }
+        let n_heads = cfg.n_heads;
+        let n_states = cfg.n_layers * n_heads;
+        while ws.states.len() < n_states {
+            ws.states.push(DecodeState::default());
+        }
+        for st in &mut ws.states[..n_states] {
+            self.algo.decode_begin(st, cfg.max_len, cfg.d_head());
+        }
+
+        // one batched forward over the prompt; the observer bulk-loads
+        // each layer's head-split Q/K/V into the decode caches
+        let (prefill, states) = (&mut ws.prefill, &mut ws.states);
+        self.run_trunk(prefill, tokens, 1, |layer, qkv| {
+            for h in 0..n_heads {
+                let st = &mut states[layer * n_heads + h];
+                self.algo
+                    .decode_load_prefix(st, qkv.q.head(h), qkv.k.head(h), qkv.v.head(h));
+            }
+        });
+
+        // pre-size the step-path activation buffers so the very first
+        // `step` call is already allocation-free
+        ws.qrow.reset(1, cfg.d_model);
+        ws.krow.reset(1, cfg.d_model);
+        ws.vrow.reset(1, cfg.d_model);
+        ws.merged.reset(1, cfg.d_model);
+        ws.proj.reset(1, cfg.d_model);
+        ws.ff.reset(1, cfg.d_ff);
+
+        // logits for the last prompt position via the step-path head
+        ws.x.reset_for_overwrite(1, cfg.d_model);
+        ws.x.row_mut(0)
+            .copy_from_slice(ws.prefill.x.row(tokens.len() - 1));
+        self.head_logits(&mut ws);
+        Ok(DecodeSession {
+            model: self,
+            ws,
+            pos: tokens.len(),
+        })
+    }
+
+    /// Final LayerNorm + tied-embedding logits head over the `[1, D]`
+    /// residual row in `ws.x`, into `ws.logits`.
+    fn head_logits(&self, ws: &mut DecodeWorkspace) {
+        let p = &self.params;
+        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
+        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
+    }
+}
+
+/// A live KV-cached generation session: borrow of the model plus the
+/// owned [`DecodeWorkspace`]. Create with [`Model::prefill`], advance
+/// with [`DecodeSession::step`], recycle the arena with
+/// [`DecodeSession::into_workspace`].
+pub struct DecodeSession<'m> {
+    model: &'m Model,
+    ws: DecodeWorkspace,
+    pos: usize,
+}
+
+impl<'m> DecodeSession<'m> {
+    /// Tokens consumed so far (prompt + steps) = the position the next
+    /// `step` will decode at.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Steps left before the context window (`max_len`) is full.
+    pub fn remaining(&self) -> usize {
+        self.model.cfg.max_len - self.pos
+    }
+
+    /// `[1, vocab]` logits for the latest position (after prefill: the
+    /// last prompt token; after a step: that step's token).
+    pub fn logits(&self) -> &Mat {
+        &self.ws.logits
+    }
+
+    /// The session's workspace snapshot (see
+    /// [`DecodeWorkspace::capacity_snapshot`]).
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        self.ws.capacity_snapshot()
+    }
+
+    /// Finish the session, handing the workspace (KV arena included)
+    /// back for the next `prefill_with`.
+    pub fn into_workspace(self) -> DecodeWorkspace {
+        self.ws
+    }
+
+    /// Feed one token and return the `[1, vocab]` logits for it — the
+    /// incremental equivalent of appending the token and re-running
+    /// `Model::forward` (exact for prefix-stable algorithms; online
+    /// KV-cache semantics otherwise, see the module docs), at one
+    /// token's cost: every layer runs at `[1, D]`, and each head pays
+    /// only its algorithm's `decode_step`. Allocation-free within the
+    /// reserved `max_len` (`full`/`local`/`h1d`; the recompute
+    /// fallbacks allocate transiently inside their replayed forward).
+    pub fn step(&mut self, token: u32) -> Result<&Mat, String> {
+        let cfg = &self.model.cfg;
+        if self.pos >= cfg.max_len {
+            return Err(format!(
+                "context full: max_len {} tokens already decoded",
+                cfg.max_len
+            ));
+        }
+        if token as usize >= cfg.vocab_size {
+            return Err(format!("token id {token} >= vocab {}", cfg.vocab_size));
+        }
+        let p = &self.model.params;
+        let (d, n_heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+        let ws = &mut self.ws;
+
+        // token + positional embedding for this single position
+        ws.x.reset_for_overwrite(1, d);
+        let row = ws.x.row_mut(0);
+        for ((o, e), ps) in row
+            .iter_mut()
+            .zip(p.embed.row(token as usize))
+            .zip(p.pos.row(self.pos))
+        {
+            *o = e + ps;
+        }
+
+        for (layer, lp) in p.layers.iter().enumerate() {
+            // pre-LN attention block at [1, D], heads through the caches
+            layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
+            matmul_into(&ws.hn, &lp.wq, &mut ws.qrow);
+            matmul_into(&ws.hn, &lp.wk, &mut ws.krow);
+            matmul_into(&ws.hn, &lp.wv, &mut ws.vrow);
+            ws.merged.reset_for_overwrite(1, d);
+            for h in 0..n_heads {
+                self.model.algo.decode_step(
+                    &mut ws.states[layer * n_heads + h],
+                    &ws.qrow.row(0)[h * dh..(h + 1) * dh],
+                    &ws.krow.row(0)[h * dh..(h + 1) * dh],
+                    &ws.vrow.row(0)[h * dh..(h + 1) * dh],
+                    cfg.causal,
+                    &mut ws.merged.row_mut(0)[h * dh..(h + 1) * dh],
+                );
+            }
+            matmul_into(&ws.merged, &lp.wo, &mut ws.proj);
+            add_assign(&mut ws.x, &ws.proj);
+
+            // pre-LN feed-forward block
+            layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
+            matmul_into(&ws.hn, &lp.ff_w1, &mut ws.ff);
+            add_bias_rows(&mut ws.ff, &lp.ff_b1);
+            gelu(&mut ws.ff);
+            matmul_into(&ws.ff, &lp.ff_w2, &mut ws.proj);
+            add_bias_rows(&mut ws.proj, &lp.ff_b2);
+            add_assign(&mut ws.x, &ws.proj);
+        }
+
+        self.model.head_logits(ws);
+        self.pos += 1;
+        Ok(&self.ws.logits)
+    }
+}
+
+/// Sample a token id from a `[vocab]` logits row: greedy argmax when
+/// `temperature <= 0`, otherwise a draw from
+/// `softmax(logits / temperature)` through `rng` — the `htx generate`
+/// sampling rule.
+pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    assert!(!logits.is_empty(), "empty logits row");
+    if temperature <= 0.0 {
+        let (mut arg, mut best) = (0usize, f32::NEG_INFINITY);
+        for (j, &v) in logits.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = j;
+            }
+        }
+        return arg;
+    }
+    let inv_t = 1.0 / temperature;
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&v| (((v - mx) * inv_t) as f64).exp())
+        .collect();
+    rng.weighted(&weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AttnSpec, ModelConfig};
+
+    fn tiny_model(attention: AttnSpec, causal: bool, max_len: usize) -> Model {
+        Model::new(
+            ModelConfig {
+                vocab_size: 29,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 24,
+                max_len,
+                causal,
+                attention,
+            },
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn prefill_logits_match_forward_last_row() {
+        let model = tiny_model(AttnSpec::H1d { nr: 4 }, true, 32);
+        let mut rng = Rng::new(1);
+        let tokens: Vec<u32> = (0..12).map(|_| rng.below(29) as u32).collect();
+        let mut ws = ModelWorkspace::serial();
+        let want = model.forward(&mut ws, &tokens, 1).clone();
+        let session = model.prefill(&tokens).unwrap();
+        assert_eq!(session.pos(), tokens.len());
+        assert_eq!(session.remaining(), 32 - tokens.len());
+        let got = session.logits();
+        assert_eq!((got.rows, got.cols), (1, 29));
+        for j in 0..want.cols {
+            let w = want.at(tokens.len() - 1, j);
+            assert!(
+                (got.at(0, j) - w).abs() < 1e-5,
+                "col {j}: {} vs {w}",
+                got.at(0, j)
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_rejects_bad_prompts() {
+        let model = tiny_model(AttnSpec::Full, true, 8);
+        assert!(model.prefill(&[]).unwrap_err().contains("at least one"));
+        assert!(model.prefill(&[0u32; 9]).unwrap_err().contains("max_len"));
+        assert!(model.prefill(&[0, 29]).unwrap_err().contains("vocab"));
+    }
+
+    #[test]
+    fn step_rejects_overflow_and_bad_tokens() {
+        let model = tiny_model(AttnSpec::Full, true, 4);
+        let mut session = model.prefill(&[1, 2, 3]).unwrap();
+        assert!(session.step(99).unwrap_err().contains("vocab"));
+        session.step(4).unwrap();
+        assert_eq!(session.remaining(), 0);
+        assert!(session.step(1).unwrap_err().contains("context full"));
+    }
+
+    #[test]
+    fn recycled_workspace_does_not_regrow() {
+        let model = tiny_model(AttnSpec::H1d { nr: 4 }, true, 24);
+        let mut rng = Rng::new(5);
+        let tokens: Vec<u32> = (0..8).map(|_| rng.below(29) as u32).collect();
+        let mut session = model.prefill(&tokens).unwrap();
+        for t in 0..8u32 {
+            session.step(t % 29).unwrap();
+        }
+        let snap = session.capacity_snapshot();
+        let ws = session.into_workspace();
+        // same prompt shape through the recycled arena: no growth
+        let mut session2 = model.prefill_with(ws, &tokens).unwrap();
+        session2.step(3).unwrap();
+        assert_eq!(session2.capacity_snapshot(), snap, "recycled arena re-grew");
+    }
+
+    #[test]
+    fn sample_logits_greedy_and_tempered() {
+        let mut rng = Rng::new(9);
+        let logits = [0.0f32, 3.0, -1.0, 2.5];
+        assert_eq!(sample_logits(&logits, 0.0, &mut rng), 1);
+        assert_eq!(sample_logits(&logits, -1.0, &mut rng), 1);
+        // temperature sampling stays in range and hits the peak most
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[sample_logits(&logits, 0.7, &mut rng)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 2000);
+        assert!(counts[1] > counts[0] && counts[1] > counts[2] && counts[1] > counts[3]);
+        // near-zero temperature sharpens to the argmax
+        let sharp = (0..50)
+            .filter(|_| sample_logits(&logits, 0.05, &mut rng) == 1)
+            .count();
+        assert!(sharp >= 48, "t->0 should be ~greedy, got {sharp}/50");
+    }
+}

@@ -18,10 +18,19 @@
 //! `(B, L)` performs zero heap allocations
 //! ([`ModelWorkspace::capacity_snapshot`] makes that testable, see
 //! `tests/model_forward.rs`).
+//!
+//! Autoregressive serving does not go through `forward` at all: the
+//! [`decode`] submodule provides `Model::prefill` →
+//! [`DecodeSession::step`], which caches per-layer K/V in
+//! `attention::DecodeState`s and pays only one token's work per step
+//! (`tests/decode_parity.rs` pins the prefix-parity and zero-alloc
+//! contracts).
 
 pub mod config;
+pub mod decode;
 
 pub use config::{AttnSpec, ModelConfig};
+pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
 
 use crate::attention::{Attention, AttnWorkspace};
 use crate::tensor::ops::{
@@ -137,6 +146,26 @@ impl Model {
     /// the workspace. Repeated calls at one `(batch, L)` shape allocate
     /// nothing (see [`ModelWorkspace`]).
     pub fn forward<'w>(&self, ws: &'w mut ModelWorkspace, tokens: &[u32], batch: usize) -> &'w Mat {
+        self.run_trunk(ws, tokens, batch, |_, _| {});
+        // final LN + tied-embedding logits head
+        let p = &self.params;
+        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
+        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
+        &ws.logits
+    }
+
+    /// Embedding plus every residual block, leaving the final residual
+    /// stream in `ws.x` (the shared trunk of [`Model::forward`] and the
+    /// decode prefill). `observe` sees each layer's head-split Q/K/V
+    /// bundle right before attention runs — the prefill path uses it to
+    /// bulk-load the per-layer KV caches without a second pass.
+    fn run_trunk<F: FnMut(usize, &Qkv)>(
+        &self,
+        ws: &mut ModelWorkspace,
+        tokens: &[u32],
+        batch: usize,
+        mut observe: F,
+    ) {
         let cfg = &self.cfg;
         assert!(batch > 0, "empty batch");
         assert_eq!(
@@ -168,7 +197,7 @@ impl Model {
             }
         }
 
-        for lp in &p.layers {
+        for (layer, lp) in p.layers.iter().enumerate() {
             // pre-LN attention block: x += merge(attn(split(LN(x) @ Wqkv))) @ Wo
             layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
             matmul_into(&ws.hn, &lp.wq, &mut ws.proj);
@@ -177,6 +206,7 @@ impl Model {
             ws.qkv.k.split_heads_from(&ws.proj, batch, n_heads);
             matmul_into(&ws.hn, &lp.wv, &mut ws.proj);
             ws.qkv.v.split_heads_from(&ws.proj, batch, n_heads);
+            observe(layer, &ws.qkv);
             self.algo.forward_batch_into(&mut ws.attn, &ws.qkv, cfg.causal, &mut ws.attn_out);
             ws.attn_out.merge_heads_into(&mut ws.merged);
             matmul_into(&ws.merged, &lp.wo, &mut ws.proj);
@@ -191,11 +221,6 @@ impl Model {
             add_bias_rows(&mut ws.proj, &lp.ff_b2);
             add_assign(&mut ws.x, &ws.proj);
         }
-
-        // final LN + tied-embedding logits head
-        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
-        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
-        &ws.logits
     }
 }
 

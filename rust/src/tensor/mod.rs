@@ -116,6 +116,35 @@ impl Mat {
         }
     }
 
+    /// Truncate to zero rows at width `cols`, reserving capacity for
+    /// `rows_cap` rows — the append-mode counterpart of [`Mat::reset`]
+    /// for buffers that grow row by row via [`Mat::push_row`] (KV
+    /// caches). Once reserved, pushes up to `rows_cap` rows perform no
+    /// heap allocation; a later `begin` at a smaller capacity keeps the
+    /// larger allocation (grow-only, like the workspace arenas).
+    pub fn reset_appendable(&mut self, cols: usize, rows_cap: usize) {
+        self.rows = 0;
+        self.cols = cols;
+        self.data.clear();
+        self.data.reserve(rows_cap * cols);
+    }
+
+    /// Append one `[cols]` row. Allocation-free while within the
+    /// capacity reserved by [`Mat::reset_appendable`].
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Add `src` elementwise into row `i` (the coarsening-pyramid
+    /// accumulation primitive).
+    pub fn add_into_row(&mut self, i: usize, src: &[f32]) {
+        for (x, y) in self.row_mut(i).iter_mut().zip(src) {
+            *x += y;
+        }
+    }
+
     /// Overwrite in place from a `[rows, cols]` row-major slice,
     /// reusing the existing allocation.
     pub fn copy_from_slice_2d(&mut self, rows: usize, cols: usize, src: &[f32]) {
@@ -184,6 +213,43 @@ mod tests {
         assert_eq!(m.data.as_ptr(), ptr);
         m.reset(8, 8); // growing back within capacity: still no realloc
         assert_eq!(m.data.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn push_row_appends_without_reallocating() {
+        let mut m = Mat::default();
+        m.reset_appendable(3, 4);
+        assert_eq!((m.rows, m.cols), (0, 3));
+        let ptr = m.data.as_ptr();
+        let cap = m.data.capacity();
+        assert!(cap >= 12);
+        for i in 0..4 {
+            m.push_row(&[i as f32, 1.0, 2.0]);
+        }
+        assert_eq!((m.rows, m.cols), (4, 3));
+        assert_eq!(m.at(3, 0), 3.0);
+        assert_eq!(m.data.as_ptr(), ptr, "pushes within capacity must not reallocate");
+        assert_eq!(m.data.capacity(), cap);
+        // re-begin at a smaller capacity keeps the grown allocation
+        m.reset_appendable(3, 2);
+        assert_eq!(m.rows, 0);
+        assert_eq!(m.data.as_ptr(), ptr);
+        assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn add_into_row_accumulates() {
+        let mut m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        m.add_into_row(1, &[10.0, 20.0, 30.0]);
+        assert_eq!(m.row(1), &[13.0, 24.0, 35.0]);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn push_row_rejects_wrong_width() {
+        let mut m = Mat::zeros(0, 3);
+        m.push_row(&[1.0, 2.0]);
     }
 
     #[test]
