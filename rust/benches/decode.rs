@@ -10,8 +10,11 @@
 //! makes that cost visible rather than hiding it).
 //!
 //! Besides the human-readable table, the run emits machine-readable
-//! `BENCH_decode.json` (per-token µs vs L per algorithm) so the perf
-//! trajectory is tracked across PRs by CI artifacts and ad-hoc diffing.
+//! `BENCH_decode.json` in the stable trajectory schema
+//! `{commit, bench, smoke, config, points[]}` — each point carries a
+//! unique `id` (`decode/<attention>/L<len>`) and a `per_token_us`
+//! metric, which is what `tools/bench_compare.rs` diffs against the
+//! committed `BENCH_baseline.json` in CI (the perf-regression gate).
 //!
 //! Flags:
 //!   --smoke        tiny shapes (CI keep-alive; exercises every path)
@@ -21,7 +24,7 @@
 use std::time::Instant;
 
 use htransformer::model::{AttnSpec, DecodeWorkspace, Model, ModelConfig};
-use htransformer::util::bench::Table;
+use htransformer::util::bench::{commit_id, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::json::{num, obj, s, Json};
 use htransformer::util::Rng;
@@ -113,18 +116,22 @@ fn main() {
          ~linearly (O(L·d)); lowrank/blocksparse pay a full recompute per step."
     );
 
-    let result_json: Vec<Json> = results
-        .iter()
-        .map(|(name, cells)| {
-            let per_l: Vec<Json> = cells
-                .iter()
-                .map(|&(l, us)| obj(vec![("L", num(l as f64)), ("per_token_us", num(us))]))
-                .collect();
-            obj(vec![("attention", s(name)), ("cells", Json::Arr(per_l))])
-        })
-        .collect();
+    // stable trajectory schema: flat points keyed by a unique id, the
+    // shape tools/bench_compare.rs matches against the baseline
+    let mut points: Vec<Json> = Vec::new();
+    for (name, cells) in &results {
+        for &(l, us) in cells {
+            points.push(obj(vec![
+                ("id", s(&format!("decode/{name}/L{l}"))),
+                ("attention", s(name)),
+                ("L", num(l as f64)),
+                ("per_token_us", num(us)),
+            ]));
+        }
+    }
     let doc = obj(vec![
         ("bench", s("decode")),
+        ("commit", s(&commit_id())),
         ("smoke", Json::Bool(smoke)),
         (
             "config",
@@ -136,7 +143,7 @@ fn main() {
                 ("steps_per_cell", num(steps as f64)),
             ]),
         ),
-        ("results", Json::Arr(result_json)),
+        ("points", Json::Arr(points)),
     ]);
     match std::fs::write(&out_path, doc.to_string()) {
         Ok(()) => println!("wrote {out_path}"),

@@ -1,0 +1,233 @@
+//! Bench: continuous-batching serving throughput vs batch size — the
+//! multi-session complement of `decode.rs`.
+//!
+//! A closed-loop synthetic workload (mixed prompt lengths, fixed
+//! per-request token budgets) runs through `model::serve`'s scheduler
+//! at several `max_batch` settings and through the sequential
+//! one-session-at-a-time loop, per algorithm. Continuous batching wins
+//! by amortising every weight-matrix read over the active batch and by
+//! spreading chunks across worker threads; the sequential loop
+//! re-streams the full parameter set for every single token. The
+//! acceptance line for the scheduler is the `b8` row: aggregate
+//! tokens/sec at `max_batch 8` should be >= 3x the sequential loop for
+//! h1d and full on multi-core hosts.
+//!
+//! Besides the human-readable table, the run emits machine-readable
+//! `BENCH_serve.json` in the stable trajectory schema
+//! `{commit, bench, smoke, config, points[]}` — each point carries a
+//! unique `id` (`serve/<attention>/seq` or `serve/<attention>/b<N>`)
+//! and a `per_token_us` metric (aggregate wall / generated tokens),
+//! which `tools/bench_compare.rs` diffs against `BENCH_baseline.json`
+//! in CI. `lowrank`/`blocksparse` are tracked by `decode.rs` instead:
+//! their per-step full recompute makes a serving loop pathological by
+//! construction, not a regression signal.
+//!
+//! Flags:
+//!   --smoke        small shapes (CI keep-alive; exercises every path)
+//!   --threads N    worker threads (default: host parallelism)
+//!   --out PATH     where to write the JSON (default BENCH_serve.json)
+
+use std::sync::Arc;
+
+use htransformer::model::{
+    run_sequential, synthetic_workload, AttnSpec, Model, ModelConfig, ServeConfig, ServeEngine,
+    ServeReport,
+};
+use htransformer::util::bench::{commit_id, Table};
+use htransformer::util::cli::Args;
+use htransformer::util::json::{num, obj, s, Json};
+
+struct Shape {
+    d_model: usize,
+    n_heads: usize,
+    n_layers: usize,
+    d_ff: usize,
+    vocab: usize,
+    prompt_mix: Vec<usize>,
+    gen: usize,
+    requests: usize,
+    batches: Vec<usize>,
+}
+
+fn shape(smoke: bool) -> Shape {
+    if smoke {
+        Shape {
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 512,
+            vocab: 1024,
+            prompt_mix: vec![16, 32, 48],
+            gen: 12,
+            requests: 12,
+            batches: vec![2, 4, 8],
+        }
+    } else {
+        // weights well past L2: the regime where batched rounds stop
+        // being memory-bound on the parameter stream
+        Shape {
+            d_model: 256,
+            n_heads: 8,
+            n_layers: 3,
+            d_ff: 1024,
+            vocab: 4096,
+            prompt_mix: vec![64, 128, 256],
+            gen: 48,
+            requests: 32,
+            batches: vec![2, 4, 8, 16],
+        }
+    }
+}
+
+fn check_parity(name: &str, seq: &ServeReport, batched: &ServeReport) {
+    assert_eq!(
+        seq.tokens_by_id(),
+        batched.tokens_by_id(),
+        "{name}: batched run diverged from the sequential loop"
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_serve.json");
+    let threads = {
+        let t = args.usize_or("threads", 0);
+        if t == 0 {
+            htransformer::util::threadpool::default_threads()
+        } else {
+            t
+        }
+    };
+    let sh = shape(smoke);
+    let max_len = sh.prompt_mix.iter().copied().max().unwrap() + sh.gen + 1;
+    let algos: Vec<(&'static str, AttnSpec)> = vec![
+        ("h1d", AttnSpec::H1d { nr: 16 }),
+        ("full", AttnSpec::Full),
+        ("local", AttnSpec::Local { radius: 16 }),
+    ];
+
+    println!("### continuous-batching serve: aggregate throughput vs batch size ###");
+    println!(
+        "(d_model {}, {} layers x {} heads, d_ff {}, vocab {}, {} requests, \
+         prompt mix {:?}, {} tokens/request, {} worker thread(s))\n",
+        sh.d_model,
+        sh.n_layers,
+        sh.n_heads,
+        sh.d_ff,
+        sh.vocab,
+        sh.requests,
+        sh.prompt_mix,
+        sh.gen,
+        threads
+    );
+
+    let mut t = Table::new(&[
+        "attention", "mode", "tokens/s", "per-token", "p50", "p95", "occupancy", "vs seq",
+    ]);
+    let mut points: Vec<Json> = Vec::new();
+    for (name, spec) in &algos {
+        let cfg = ModelConfig {
+            vocab_size: sh.vocab,
+            d_model: sh.d_model,
+            n_heads: sh.n_heads,
+            n_layers: sh.n_layers,
+            d_ff: sh.d_ff,
+            max_len,
+            causal: true,
+            attention: spec.clone(),
+        };
+        let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
+        let requests =
+            synthetic_workload(sh.requests, &sh.prompt_mix, sh.gen, sh.vocab, 0.0, 7);
+
+        let seq = run_sequential(&model, &requests).expect("sequential run");
+        let seq_tps = seq.stats.tokens_per_sec();
+        t.row(&[
+            name.to_string(),
+            "seq".to_string(),
+            format!("{seq_tps:.0}"),
+            format!("{:.1}µs", seq.stats.per_token_us()),
+            format!("{:.1}µs", seq.stats.latency_us(50.0)),
+            format!("{:.1}µs", seq.stats.latency_us(95.0)),
+            "1.00".to_string(),
+            "1.00x".to_string(),
+        ]);
+        points.push(obj(vec![
+            ("id", s(&format!("serve/{name}/seq"))),
+            ("attention", s(name)),
+            ("mode", s("sequential")),
+            ("per_token_us", num(seq.stats.per_token_us())),
+            ("tokens_per_sec", num(seq_tps)),
+        ]));
+
+        for &b in &sh.batches {
+            let mut engine = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch: b,
+                    max_tokens: usize::MAX,
+                    threads,
+                },
+            )
+            .expect("engine");
+            let rep = engine.run(requests.clone()).expect("batched run");
+            check_parity(name, &seq, &rep);
+            let speedup = rep.stats.tokens_per_sec() / seq_tps.max(1e-9);
+            t.row(&[
+                name.to_string(),
+                format!("b{b}"),
+                format!("{:.0}", rep.stats.tokens_per_sec()),
+                format!("{:.1}µs", rep.stats.per_token_us()),
+                format!("{:.1}µs", rep.stats.latency_us(50.0)),
+                format!("{:.1}µs", rep.stats.latency_us(95.0)),
+                format!("{:.2}", rep.stats.mean_occupancy()),
+                format!("{speedup:.2}x"),
+            ]);
+            points.push(obj(vec![
+                ("id", s(&format!("serve/{name}/b{b}"))),
+                ("attention", s(name)),
+                ("mode", s("continuous")),
+                ("max_batch", num(b as f64)),
+                ("per_token_us", num(rep.stats.per_token_us())),
+                ("tokens_per_sec", num(rep.stats.tokens_per_sec())),
+                ("p50_us", num(rep.stats.latency_us(50.0))),
+                ("p95_us", num(rep.stats.latency_us(95.0))),
+                ("speedup_vs_seq", num(speedup)),
+            ]));
+        }
+    }
+    t.print();
+    println!(
+        "\naggregate tokens/s should grow with max_batch (weight reads amortise over \
+         the batch; chunks spread across {threads} worker thread(s)); per-token p95 \
+         rises gently — the continuous-batching throughput/latency trade."
+    );
+
+    let doc = obj(vec![
+        ("bench", s("serve")),
+        ("commit", s(&commit_id())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("d_model", num(sh.d_model as f64)),
+                ("n_heads", num(sh.n_heads as f64)),
+                ("n_layers", num(sh.n_layers as f64)),
+                ("d_ff", num(sh.d_ff as f64)),
+                ("vocab", num(sh.vocab as f64)),
+                ("requests", num(sh.requests as f64)),
+                ("gen", num(sh.gen as f64)),
+                ("threads", num(threads as f64)),
+            ]),
+        ),
+        ("points", Json::Arr(points)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => {
+            eprintln!("error: could not write {out_path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -146,6 +146,78 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_batch_matches_lone_steps_on_ragged_contexts() {
+        // the serving round: several sessions at different context
+        // lengths advance together; row i must be bitwise what a lone
+        // per-head decode_step sequence produces (the O(t·d) path)
+        use crate::attention::DecodeState;
+        let (n_heads, d) = (2usize, 4usize);
+        let dm = n_heads * d;
+        let prefix_lens = [7usize, 18, 1];
+        let max_len = 32usize;
+        let mut rng = Rng::new(41);
+        let prefixes: Vec<Vec<(Mat, Mat, Mat)>> = prefix_lens
+            .iter()
+            .map(|&pl| {
+                (0..n_heads)
+                    .map(|_| {
+                        (
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_states = |prefixes: &[Vec<(Mat, Mat, Mat)>]| -> Vec<Vec<DecodeState>> {
+            prefixes
+                .iter()
+                .map(|heads| {
+                    heads
+                        .iter()
+                        .map(|(q, k, v)| {
+                            let mut st = DecodeState::default();
+                            Full.decode_begin(&mut st, max_len, d);
+                            Full.decode_load_prefix(&mut st, &q.data, &k.data, &v.data);
+                            st
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut single = mk_states(&prefixes);
+        let mut batched = mk_states(&prefixes);
+        let n = prefix_lens.len();
+        let q = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let mut want = Mat::zeros(n, dm);
+        for (i, sess) in single.iter_mut().enumerate() {
+            for (h, st) in sess.iter_mut().enumerate() {
+                let c = h * d;
+                Full.decode_step(
+                    st,
+                    &q.row(i)[c..c + d],
+                    &k.row(i)[c..c + d],
+                    &v.row(i)[c..c + d],
+                    true,
+                    &mut want.row_mut(i)[c..c + d],
+                );
+            }
+        }
+        let mut out = Mat::zeros(n, dm);
+        let mut refs: Vec<&mut [DecodeState]> = batched.iter_mut().map(|s| &mut s[..]).collect();
+        Full.decode_step_batch(&mut refs, &q, &k, &v, true, &mut out);
+        assert_eq!(out, want);
+        for (sess, &pl) in batched.iter().zip(&prefix_lens) {
+            for st in sess {
+                assert_eq!(st.len, pl + 1);
+            }
+        }
+    }
+
+    #[test]
     fn causal_first_row_copies_first_value() {
         let mut rng = Rng::new(4);
         let q = Mat::from_fn(6, 3, |_, _| rng.normal_f32());

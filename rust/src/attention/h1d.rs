@@ -753,6 +753,95 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_batch_matches_lone_steps_on_ragged_contexts() {
+        // sessions at depths activating different pyramid levels (one
+        // still inside block 0, one several coarse blocks deep) advance
+        // together; outputs must be bitwise the lone-step path, and the
+        // batched rounds must stay allocation-free in every state
+        let algo = H1d::new(4);
+        let (n_heads, d) = (2usize, 4usize);
+        let dm = n_heads * d;
+        let prefix_lens = [33usize, 3, 18];
+        let max_len = 64usize;
+        let mut rng = Rng::new(43);
+        let prefixes: Vec<Vec<(Mat, Mat, Mat)>> = prefix_lens
+            .iter()
+            .map(|&pl| {
+                (0..n_heads)
+                    .map(|_| {
+                        (
+                            rand_mat(&mut rng, pl, d),
+                            rand_mat(&mut rng, pl, d),
+                            rand_mat(&mut rng, pl, d),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_states = |prefixes: &[Vec<(Mat, Mat, Mat)>]| -> Vec<Vec<DecodeState>> {
+            prefixes
+                .iter()
+                .map(|heads| {
+                    heads
+                        .iter()
+                        .map(|(q, k, v)| {
+                            let mut st = DecodeState::default();
+                            algo.decode_begin(&mut st, max_len, d);
+                            algo.decode_load_prefix(&mut st, &q.data, &k.data, &v.data);
+                            st
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut single = mk_states(&prefixes);
+        let mut batched = mk_states(&prefixes);
+        let n = prefix_lens.len();
+        // several rounds, so every session crosses at least one block
+        // boundary while batched with the others
+        for round in 0..6usize {
+            let q = rand_mat(&mut rng, n, dm);
+            let k = rand_mat(&mut rng, n, dm);
+            let v = rand_mat(&mut rng, n, dm);
+            let mut want = Mat::zeros(n, dm);
+            for (i, sess) in single.iter_mut().enumerate() {
+                for (h, st) in sess.iter_mut().enumerate() {
+                    let c = h * d;
+                    algo.decode_step(
+                        st,
+                        &q.row(i)[c..c + d],
+                        &k.row(i)[c..c + d],
+                        &v.row(i)[c..c + d],
+                        true,
+                        &mut want.row_mut(i)[c..c + d],
+                    );
+                }
+            }
+            let snap: Vec<_> = batched
+                .iter()
+                .flat_map(|sess| sess.iter().flat_map(|st| st.buffer_snapshot()))
+                .collect();
+            let mut out = Mat::zeros(n, dm);
+            let mut refs: Vec<&mut [DecodeState]> =
+                batched.iter_mut().map(|s| &mut s[..]).collect();
+            algo.decode_step_batch(&mut refs, &q, &k, &v, true, &mut out);
+            assert_eq!(out, want, "round {round}");
+            if round > 0 {
+                let snap2: Vec<_> = batched
+                    .iter()
+                    .flat_map(|sess| sess.iter().flat_map(|st| st.buffer_snapshot()))
+                    .collect();
+                assert_eq!(snap2, snap, "round {round} allocated in a decode state");
+            }
+        }
+        for (sess, &pl) in batched.iter().zip(&prefix_lens) {
+            for st in sess {
+                assert_eq!(st.len, pl + 6);
+            }
+        }
+    }
+
+    #[test]
     fn decode_overlap_mask_ablation_tracks_forward() {
         let mut rng = Rng::new(23);
         let (l, d, nr) = (40usize, 4usize, 4usize);

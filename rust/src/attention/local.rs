@@ -164,6 +164,73 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_batch_matches_lone_steps_on_ragged_contexts() {
+        // mixed context lengths around the window radius: sessions
+        // whose windows are still growing and sessions already sliding
+        use crate::attention::DecodeState;
+        let algo = LocalWindow::new(4);
+        let (n_heads, d) = (2usize, 3usize);
+        let dm = n_heads * d;
+        let prefix_lens = [2usize, 11, 5];
+        let max_len = 24usize;
+        let mut rng = Rng::new(42);
+        let prefixes: Vec<Vec<(Mat, Mat, Mat)>> = prefix_lens
+            .iter()
+            .map(|&pl| {
+                (0..n_heads)
+                    .map(|_| {
+                        (
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                            Mat::from_fn(pl, d, |_, _| rng.normal_f32()),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_states = |prefixes: &[Vec<(Mat, Mat, Mat)>]| -> Vec<Vec<DecodeState>> {
+            prefixes
+                .iter()
+                .map(|heads| {
+                    heads
+                        .iter()
+                        .map(|(q, k, v)| {
+                            let mut st = DecodeState::default();
+                            algo.decode_begin(&mut st, max_len, d);
+                            algo.decode_load_prefix(&mut st, &q.data, &k.data, &v.data);
+                            st
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut single = mk_states(&prefixes);
+        let mut batched = mk_states(&prefixes);
+        let n = prefix_lens.len();
+        let q = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, dm, |_, _| rng.normal_f32());
+        let mut want = Mat::zeros(n, dm);
+        for (i, sess) in single.iter_mut().enumerate() {
+            for (h, st) in sess.iter_mut().enumerate() {
+                let c = h * d;
+                algo.decode_step(
+                    st,
+                    &q.row(i)[c..c + d],
+                    &k.row(i)[c..c + d],
+                    &v.row(i)[c..c + d],
+                    true,
+                    &mut want.row_mut(i)[c..c + d],
+                );
+            }
+        }
+        let mut out = Mat::zeros(n, dm);
+        let mut refs: Vec<&mut [DecodeState]> = batched.iter_mut().map(|s| &mut s[..]).collect();
+        algo.decode_step_batch(&mut refs, &q, &k, &v, true, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
     fn far_tokens_do_not_influence() {
         let mut rng = Rng::new(6);
         let l = 64;

@@ -20,9 +20,12 @@
 //! a [`DecodeState`] KV cache and produces that position's output
 //! without re-running the prefix — the serving-side autoregressive
 //! path (`full`/`local`/`h1d` have true incremental updates, the rest
-//! fall back to a cached full recompute). The production hot path is
-//! still the XLA artifacts; this is its CPU mirror at production
-//! shapes.
+//! fall back to a cached full recompute). `decode_step_batch` is the
+//! ragged many-session form of that step — one call per layer advances
+//! every active serving session by one token, the primitive behind
+//! `model::serve`'s continuous-batching rounds. The production hot
+//! path is still the XLA artifacts; this is its CPU mirror at
+//! production shapes.
 
 pub mod blocksparse;
 pub mod full;
@@ -132,6 +135,53 @@ pub trait Attention {
         debug_assert!(state.cache_q, "default decode_step needs the Q cache");
         let z = self.forward(&state.q, &state.k, &state.v, causal);
         out.copy_from_slice(z.row(z.rows - 1));
+    }
+
+    /// One ragged-batch decode round for a single layer, across many
+    /// concurrent sessions: session `i`'s per-head states are
+    /// `states[i]` (head-major, exactly as the model stack stores
+    /// them), its projected rows are row `i` of the `[n, H·d]`
+    /// `q`/`k`/`v` matrices with head `h` occupying columns
+    /// `h*d..(h+1)*d`, and its attention outputs are written to the
+    /// same spans of `out` row `i`. Sessions may sit at different
+    /// context lengths — the ragged part — and each state advances by
+    /// exactly one token, so the result row `i` must be bitwise what a
+    /// lone [`Attention::decode_step`] per head would have produced
+    /// (pinned per algorithm in the zoo's unit tests).
+    ///
+    /// The default loops `decode_step` over every `(session, head)`
+    /// pair; since default bodies are instantiated per implementation,
+    /// that statically resolves to each algorithm's own step — the true
+    /// incremental paths for `full`/`local`/`h1d`, the cached full
+    /// recompute for `lowrank`/`blocksparse`. `model::serve` drives
+    /// this once per layer from its batched decode rounds.
+    fn decode_step_batch(
+        &self,
+        states: &mut [&mut [DecodeState]],
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        causal: bool,
+        out: &mut Mat,
+    ) {
+        debug_assert_eq!(states.len(), q.rows, "one state set per q row");
+        debug_assert_eq!((out.rows, out.cols), (q.rows, q.cols));
+        for (i, sess) in states.iter_mut().enumerate() {
+            let (qr, kr, vr) = (q.row(i), k.row(i), v.row(i));
+            let orow = out.row_mut(i);
+            for (h, st) in sess.iter_mut().enumerate() {
+                let d = st.d;
+                let c = h * d;
+                self.decode_step(
+                    st,
+                    &qr[c..c + d],
+                    &kr[c..c + d],
+                    &vr[c..c + d],
+                    causal,
+                    &mut orow[c..c + d],
+                );
+            }
+        }
     }
 
     /// Attention-state memory in bytes for sequence length `l` — the
@@ -287,6 +337,96 @@ mod tests {
         }
         assert_eq!(st.len, l);
         assert_eq!(st.q.rows, l, "default path caches the Q history");
+    }
+
+    #[test]
+    fn default_decode_step_batch_matches_lone_steps_on_ragged_sessions() {
+        // an algorithm relying on every trait default (the serving
+        // situation of lowrank/blocksparse): the ragged batched round
+        // must be bitwise the per-(session, head) decode_step loop
+        struct MeanV;
+        impl Attention for MeanV {
+            fn name(&self) -> &'static str {
+                "meanv"
+            }
+            fn forward(&self, _q: &Mat, _k: &Mat, v: &Mat, _causal: bool) -> Mat {
+                Mat::from_fn(v.rows, v.cols, |i, j| {
+                    (0..=i).map(|r| v.at(r, j)).sum::<f32>() / (i + 1) as f32
+                })
+            }
+            fn attn_memory_bytes(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+            fn flops(&self, _l: usize, _d: usize) -> usize {
+                0
+            }
+        }
+        let algo = MeanV;
+        let (n_heads, d) = (2usize, 3usize);
+        let dm = n_heads * d;
+        let prefix_lens = [4usize, 9, 1];
+        let max_len = 16usize;
+        let mut rng = Rng::new(33);
+        // per-(session, head) prefix rows, shared by both state sets
+        let prefixes: Vec<Vec<(Mat, Mat, Mat)>> = prefix_lens
+            .iter()
+            .map(|&pl| {
+                (0..n_heads)
+                    .map(|_| {
+                        (
+                            rand_mat(&mut rng, pl, d),
+                            rand_mat(&mut rng, pl, d),
+                            rand_mat(&mut rng, pl, d),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_states = |prefixes: &[Vec<(Mat, Mat, Mat)>]| -> Vec<Vec<DecodeState>> {
+            prefixes
+                .iter()
+                .map(|heads| {
+                    heads
+                        .iter()
+                        .map(|(q, k, v)| {
+                            let mut st = DecodeState::default();
+                            algo.decode_begin(&mut st, max_len, d);
+                            algo.decode_load_prefix(&mut st, &q.data, &k.data, &v.data);
+                            st
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut single = mk_states(&prefixes);
+        let mut batched = mk_states(&prefixes);
+        let n = prefix_lens.len();
+        let q = rand_mat(&mut rng, n, dm);
+        let k = rand_mat(&mut rng, n, dm);
+        let v = rand_mat(&mut rng, n, dm);
+        let mut want = Mat::zeros(n, dm);
+        for (i, sess) in single.iter_mut().enumerate() {
+            for (h, st) in sess.iter_mut().enumerate() {
+                let c = h * d;
+                algo.decode_step(
+                    st,
+                    &q.row(i)[c..c + d],
+                    &k.row(i)[c..c + d],
+                    &v.row(i)[c..c + d],
+                    true,
+                    &mut want.row_mut(i)[c..c + d],
+                );
+            }
+        }
+        let mut out = Mat::zeros(n, dm);
+        let mut refs: Vec<&mut [DecodeState]> = batched.iter_mut().map(|s| &mut s[..]).collect();
+        algo.decode_step_batch(&mut refs, &q, &k, &v, true, &mut out);
+        assert_eq!(out, want);
+        for (sess, &pl) in batched.iter().zip(&prefix_lens) {
+            for st in sess {
+                assert_eq!(st.len, pl + 1, "batched round must advance every session");
+            }
+        }
     }
 
     #[test]

@@ -264,6 +264,13 @@ impl DecodeState {
         self.len = t + 1;
     }
 
+    /// Context capacity still unused (`max_len - len`) — the quantity
+    /// the serve scheduler's admission budget reasons about, and the
+    /// guard every batched decode round asserts before appending.
+    pub fn remaining(&self) -> usize {
+        self.max_len - self.len
+    }
+
     /// `(pointer, capacity)` of every heap buffer this state owns —
     /// stable across `append`/`decode_step` calls within the reserved
     /// `max_len`, the zero-alloc invariant of the decode path.
@@ -365,6 +372,14 @@ impl AttnWorkspace {
     /// Worker-thread count (1 when running on the calling thread).
     pub fn threads(&self) -> usize {
         self.pool.as_ref().map(|p| p.size()).unwrap_or(1)
+    }
+
+    /// Borrow the attached pool (`None` when running on the calling
+    /// thread) — lets layered schedulers (`model::serve`) dispatch
+    /// their own fork-join rounds on these workers instead of spawning
+    /// a second pool per engine.
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_ref()
     }
 
     /// Drop all cached scratch (frees memory; the next call re-grows).
@@ -531,11 +546,13 @@ mod tests {
         st.mbuf.resize(4, 0.0);
         st.dbuf.resize(4, 0.0);
         let snap = st.buffer_snapshot();
+        assert_eq!(st.remaining(), 32);
         for t in 0..32 {
             let row = [t as f32, 1.0, 2.0, 3.0];
             st.append(&row, &row, &row);
         }
         assert_eq!(st.len, 32);
+        assert_eq!(st.remaining(), 0);
         assert_eq!(st.buffer_snapshot(), snap, "appends within capacity must not allocate");
         // re-begin keeps the grown arena (grow-only, like the workspaces)
         st.begin(16, 4, true, 2);

@@ -17,6 +17,15 @@
 //!                             latency — the serving-style path where
 //!                             h1d's incremental cost stays ~flat while
 //!                             full attention grows with context
+//!   serve-bench               continuous-batching throughput: a
+//!                             closed-loop synthetic workload
+//!                             (--requests, --prompt-mix, --gen) driven
+//!                             through `model::serve`'s scheduler at
+//!                             --max-batch / --max-tokens budgets and
+//!                             compared against the sequential
+//!                             one-session-at-a-time loop (aggregate
+//!                             tokens/s, p50/p95 per-token latency,
+//!                             speedup)
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
@@ -53,6 +62,7 @@ fn main() {
         }
         Some("infer") => cmd_infer(&args),
         Some("generate") => cmd_generate(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         #[cfg(feature = "xla")]
         Some("list") => xla_cmds::cmd_list(&args).map_err(|e| format!("{e:#}")),
         #[cfg(feature = "xla")]
@@ -63,7 +73,8 @@ fn main() {
         Some("serve") => xla_cmds::cmd_serve(&args).map_err(|e| format!("{e:#}")),
         other => {
             eprintln!(
-                "usage: htx <rankmap|scaling|infer|generate|list|train|eval|serve> [flags]\n\
+                "usage: htx <rankmap|scaling|infer|generate|serve-bench|list|train|eval|serve> \
+                 [flags]\n\
                  (got {other:?}; list/train/eval/serve need --features xla; see DESIGN.md)"
             );
             std::process::exit(2);
@@ -311,6 +322,106 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
             session.pos()
         );
     }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<(), String> {
+    use htransformer::model::{run_sequential, synthetic_workload, ServeConfig, ServeEngine};
+    use std::sync::Arc;
+
+    // decoding wants a causal model, same defaulting rule as `generate`
+    let default_causal = args.get("attention").unwrap_or("h1d") != "lowrank";
+    let cfg = ModelConfig::from_lookup(|k| {
+        args.get(k).or_else(|| match (k, default_causal) {
+            ("causal", true) => Some("true"),
+            _ => None,
+        })
+    })?;
+    let seed = args.u64_or("seed", 42);
+    let n_requests = args.usize_or("requests", 16);
+    let max_batch = args.usize_or("max-batch", 8);
+    let max_tokens = args.usize_or("max-tokens", 0); // 0 = unlimited
+    let gen = args.usize_or("gen", 16);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    let threads = args.usize_or("threads", 0); // 0 = host parallelism
+    let mix: Vec<usize> = args
+        .str_or("prompt-mix", "16,32,48")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--prompt-mix expects comma-separated lengths, got {s:?}"))
+        })
+        .collect::<Result<_, _>>()?;
+    if n_requests == 0 || gen == 0 || mix.is_empty() {
+        return Err("--requests, --gen and --prompt-mix must be non-empty".to_string());
+    }
+    let longest = mix.iter().copied().max().unwrap_or(0);
+    if longest + gen > cfg.max_len {
+        return Err(format!(
+            "prompt {longest} + gen {gen} exceeds max_len {} (raise --max_len)",
+            cfg.max_len
+        ));
+    }
+    let model = Arc::new(Model::new(cfg, seed)?);
+    let cfg = &model.cfg;
+    println!(
+        "model: {} layers x {} heads, d_model {}, vocab {}, attention {}{} ({} params)",
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_model,
+        cfg.vocab_size,
+        model.attention_name(),
+        if cfg.causal { " (causal)" } else { "" },
+        model.n_params()
+    );
+    let requests =
+        synthetic_workload(n_requests, &mix, gen, cfg.vocab_size, temperature, seed ^ 0x5EB);
+    println!(
+        "workload: {n_requests} requests, prompt mix {mix:?}, {gen} tokens each \
+         ({} total to generate)\n",
+        n_requests * gen
+    );
+
+    let seq = run_sequential(&model, &requests)?;
+    let workers = if threads == 0 {
+        htransformer::util::threadpool::default_threads()
+    } else {
+        threads
+    };
+    let scfg = ServeConfig {
+        max_batch,
+        max_tokens: if max_tokens == 0 { usize::MAX } else { max_tokens },
+        threads: workers,
+    };
+    let mut engine = ServeEngine::new(Arc::clone(&model), scfg)?;
+    let batched = engine.run(requests)?;
+    // scheduling must never change results — guard the comparison
+    if seq.tokens_by_id() != batched.tokens_by_id() {
+        return Err("batched and sequential runs diverged (parity bug)".to_string());
+    }
+
+    let mut t = Table::new(&[
+        "mode", "tokens/s", "per-token", "p50", "p95", "wall", "occupancy",
+    ]);
+    for (mode, rep) in [("sequential", &seq), ("continuous", &batched)] {
+        t.row(&[
+            mode.to_string(),
+            format!("{:.0}", rep.stats.tokens_per_sec()),
+            format!("{:.1}µs", rep.stats.per_token_us()),
+            format!("{:.1}µs", rep.stats.latency_us(50.0)),
+            format!("{:.1}µs", rep.stats.latency_us(95.0)),
+            fmt_time(rep.stats.wall_s),
+            format!("{:.2}", rep.stats.mean_occupancy()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ncontinuous batching: {:.2}x aggregate throughput vs one-session-at-a-time \
+         (max_batch {max_batch}, {workers} worker thread(s), peak active {})",
+        batched.stats.tokens_per_sec() / seq.stats.tokens_per_sec().max(1e-9),
+        batched.stats.peak_active
+    );
     Ok(())
 }
 

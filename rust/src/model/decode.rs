@@ -39,9 +39,7 @@
 
 use super::{Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
-use crate::tensor::ops::{
-    add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into, matmul_nt_into,
-};
+use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
 use crate::tensor::Mat;
 use crate::util::Rng;
 
@@ -208,11 +206,11 @@ impl Model {
     }
 
     /// Final LayerNorm + tied-embedding logits head over the `[1, D]`
-    /// residual row in `ws.x`, into `ws.logits`.
+    /// residual row in `ws.x`, into `ws.logits` (the shared
+    /// [`Model::logits_into`] tail at single-row shape).
     fn head_logits(&self, ws: &mut DecodeWorkspace) {
-        let p = &self.params;
-        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
-        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
+        let (x, hn, logits) = (&ws.x, &mut ws.hn, &mut ws.logits);
+        self.logits_into(x, hn, logits);
     }
 }
 
@@ -264,6 +262,10 @@ impl<'m> DecodeSession<'m> {
     /// only its algorithm's `decode_step`. Allocation-free within the
     /// reserved `max_len` (`full`/`local`/`h1d`; the recompute
     /// fallbacks allocate transiently inside their replayed forward).
+    ///
+    /// KEEP IN SYNC with `serve::step_slots`, the `[n, D]` many-session
+    /// form of this exact layer schedule (`tests/serve.rs` pins the
+    /// parity).
     pub fn step(&mut self, token: u32) -> Result<&Mat, String> {
         let cfg = &self.model.cfg;
         if self.pos >= cfg.max_len {

@@ -24,13 +24,23 @@
 //! [`DecodeSession::step`], which caches per-layer K/V in
 //! `attention::DecodeState`s and pays only one token's work per step
 //! (`tests/decode_parity.rs` pins the prefix-parity and zero-alloc
-//! contracts).
+//! contracts). The [`serve`] submodule scales that from one session to
+//! many: a continuous-batching scheduler drives concurrent sessions
+//! through shared ragged-batch decode rounds
+//! (`Attention::decode_step_batch`), amortising every weight matrix
+//! over the active batch (`tests/serve.rs` pins batched-vs-sequential
+//! parity and the session-pool zero-alloc invariant).
 
 pub mod config;
 pub mod decode;
+pub mod serve;
 
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
+pub use serve::{
+    run_sequential, synthetic_workload, Completion, Request, ServeConfig, ServeEngine,
+    ServeReport, ServeStats,
+};
 
 use crate::attention::{Attention, AttnWorkspace};
 use crate::tensor::ops::{
@@ -147,11 +157,19 @@ impl Model {
     /// nothing (see [`ModelWorkspace`]).
     pub fn forward<'w>(&self, ws: &'w mut ModelWorkspace, tokens: &[u32], batch: usize) -> &'w Mat {
         self.run_trunk(ws, tokens, batch, |_, _| {});
-        // final LN + tied-embedding logits head
-        let p = &self.params;
-        layernorm_rows_into(&ws.x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, &mut ws.hn);
-        matmul_nt_into(&ws.hn, &p.embed, &mut ws.logits);
+        let (x, hn, logits) = (&ws.x, &mut ws.hn, &mut ws.logits);
+        self.logits_into(x, hn, logits);
         &ws.logits
+    }
+
+    /// Final LayerNorm + tied-embedding logits head over `[n, D]`
+    /// residual rows — the shared tail of [`Model::forward`], the
+    /// decode step path and the serve engine's batched rounds. `hn` is
+    /// LayerNorm scratch; `logits` receives `[n, vocab]`.
+    pub(crate) fn logits_into(&self, x: &Mat, hn: &mut Mat, logits: &mut Mat) {
+        let p = &self.params;
+        layernorm_rows_into(x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, hn);
+        matmul_nt_into(hn, &p.embed, logits);
     }
 
     /// Embedding plus every residual block, leaving the final residual

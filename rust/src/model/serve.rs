@@ -1,0 +1,968 @@
+//! Continuous-batching decode scheduler — the multi-session serving
+//! layer over the KV-cached decode API, where the paper's O(L)
+//! attention actually earns its keep: a server for heavy traffic must
+//! interleave prefill and decode across many concurrent generation
+//! streams, not run one `DecodeSession` at a time.
+//!
+//! ## Scheduler state machine
+//!
+//! A request moves `pending → active → completed` through
+//! [`ServeEngine::tick`], which runs one scheduling round:
+//!
+//!  1. **Admission** — while the head of the FIFO queue fits both
+//!     budgets (`max_batch` concurrent sessions, `max_tokens` summed
+//!     `prompt + max_new` context reservation across active sessions),
+//!     pop it, take a recycled slot from the session pool (or grow a
+//!     fresh one), run **one batched prefill forward** over its prompt
+//!     through the shared `ModelWorkspace` — the `run_trunk` observer
+//!     bulk-loads every `(layer, head)` [`DecodeState`] — and sample
+//!     its first token from the prefill logits.
+//!  2. **Decode round** — every active session advances by one token
+//!     through a ragged batched step: embeddings for all `n` sessions
+//!     are assembled into `[n, D]` rows, each layer runs its LayerNorm
+//!     / Q/K/V / output / FFN matmuls **once for the whole batch**
+//!     (amortising every weight matrix read over `n` rows — the
+//!     continuous-batching throughput win; a lone session re-streams
+//!     the full parameter set per token), and attention goes through
+//!     [`Attention::decode_step_batch`] — one call per layer, session
+//!     `i`'s per-head states advancing against row `i`. With
+//!     `threads > 1` the active set is split into contiguous chunks
+//!     that run on the crate thread pool (slots and step buffers travel
+//!     through `ThreadPool::map` by value, the workspace idiom).
+//!  3. **Completion / eviction** — sessions that reached their
+//!     `max_new` emit a [`Completion`] and their slot (KV arena, token
+//!     and logits buffers included) returns to the pool for the next
+//!     admission; `prompt + max_new`-shaped re-admissions re-use the
+//!     arena without growing it.
+//!
+//! ## Ragged-batch layout
+//!
+//! Active sessions sit at different context lengths; nothing is padded.
+//! Session `i` contributes row `i` of every `[n, ·]` activation matrix,
+//! and its per-`(layer, head)` `DecodeState`s advance independently —
+//! `decode_step_batch` receives the states session-major, head `h` of
+//! the `[n, H·d]` projection rows at columns `h*d..(h+1)*d`. Because
+//! every per-row computation is independent and loop orders match the
+//! single-session step path, batched logits are **bitwise** what a lone
+//! `DecodeSession` produces — `tests/serve.rs` pins batched-vs-
+//! sequential parity at 1e-5 and determinism under arrival-order
+//! permutations.
+//!
+//! ## Budget knobs ([`ServeConfig`])
+//!
+//! * `max_batch` — concurrent-session cap (compute bound per round);
+//! * `max_tokens` — summed context reservation (`prompt + max_new`)
+//!   across active sessions (KV-memory bound; a request that could
+//!   never fit is rejected at [`ServeEngine::submit`]);
+//! * `threads` — worker count for prefill head dispatch and chunked
+//!   decode rounds (`<= 1` runs on the calling thread).
+//!
+//! Entry points: `htx serve-bench` (closed-loop synthetic workload),
+//! `benches/serve.rs` (emits `BENCH_serve.json`, the CI perf
+//! trajectory), `examples/cpu_serve.rs`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
+use crate::attention::DecodeState;
+use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Scheduler budgets; see the module docs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Maximum concurrently active sessions per round.
+    pub max_batch: usize,
+    /// Maximum summed context reservation (`prompt + max_new`) across
+    /// active sessions — the KV-memory budget.
+    pub max_tokens: usize,
+    /// Worker threads for prefill and chunked decode rounds
+    /// (`<= 1` means the calling thread).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_tokens: usize::MAX,
+            threads: 1,
+        }
+    }
+}
+
+/// One generation request: a prompt, a token budget and per-request
+/// sampling parameters (greedy at `temperature <= 0`, otherwise a
+/// seeded softmax draw — each request owns its RNG stream, so results
+/// are independent of batch composition).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    /// Tokens to generate (>= 1); the first is sampled from the
+    /// prefill logits, exactly like the sequential `htx generate` loop.
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+/// A finished request: the generated tokens plus the `[vocab]` logits
+/// of the final generated position (the parity pin for tests).
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub last_logits: Vec<f32>,
+    /// Round index at which the request was admitted / finished. Once
+    /// admitted a session produces one token per round, so these mark
+    /// *when* the request held a slot; queueing delay before admission
+    /// is visible engine-wide as rounds where `queued() > 0`.
+    pub admitted_round: usize,
+    pub finished_round: usize,
+}
+
+/// Aggregate serving metrics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Decode rounds executed.
+    pub rounds: usize,
+    /// Tokens generated (prefill-sampled first tokens included).
+    pub generated: usize,
+    /// Prompt tokens prefilled.
+    pub prefill_tokens: usize,
+    /// Total wall time across ticks (admission + rounds), seconds.
+    pub wall_s: f64,
+    /// Wall time of each decode round. Admission/prefill time is
+    /// excluded (it shows up in `wall_s` and therefore throughput), so
+    /// the p50/p95 derived from these samples measures the same thing
+    /// as the sequential baseline's per-`step` samples.
+    pub round_s: Vec<f64>,
+    /// Tokens produced by each round (= active sessions that round).
+    pub round_tokens: Vec<usize>,
+    /// Peak concurrently active sessions.
+    pub peak_active: usize,
+}
+
+impl ServeStats {
+    /// Aggregate throughput: generated tokens per wall second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate per-token cost in µs (`wall / generated`) — the
+    /// regression-gate metric of `BENCH_serve.json`.
+    pub fn per_token_us(&self) -> f64 {
+        if self.generated > 0 {
+            self.wall_s * 1e6 / self.generated as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-token latency percentile in µs: every token generated in a
+    /// round observes that round's wall time (`pct` in 0..=100).
+    pub fn latency_us(&self, pct: f64) -> f64 {
+        let mut samples: Vec<f64> = Vec::new();
+        for (s, n) in self.round_s.iter().zip(&self.round_tokens) {
+            samples.extend(std::iter::repeat(*s * 1e6).take(*n));
+        }
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let idx = ((pct / 100.0) * (samples.len() - 1) as f64).round() as usize;
+        samples[idx.min(samples.len() - 1)]
+    }
+
+    /// Mean active sessions per decode round (batch fill).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.round_tokens.is_empty() {
+            0.0
+        } else {
+            self.round_tokens.iter().sum::<usize>() as f64 / self.round_tokens.len() as f64
+        }
+    }
+}
+
+/// Completions plus run-level stats — returned by both
+/// [`ServeEngine::run`] and the [`run_sequential`] baseline.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub stats: ServeStats,
+}
+
+impl ServeReport {
+    /// Generated tokens keyed and sorted by request id — the
+    /// scheduling-invariant view two runs of one workload must agree
+    /// on. The parity guard shared by `htx serve-bench`,
+    /// `benches/serve.rs` and the test suite: batching, chunking and
+    /// arrival order may change *when* a request runs, never *what* it
+    /// generates.
+    pub fn tokens_by_id(&self) -> Vec<(u64, &[u32])> {
+        let mut out: Vec<(u64, &[u32])> = self
+            .completions
+            .iter()
+            .map(|c| (c.id, c.tokens.as_slice()))
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+}
+
+/// One pooled session: the per-`(layer, head)` KV states plus request
+/// bookkeeping. Slots recycle through the engine's free pool — all
+/// buffers are grow-only, so same-shape re-admissions allocate nothing.
+struct SessionSlot {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    /// `prompt + max_new`, the admission-budget reservation.
+    budget: usize,
+    temperature: f32,
+    rng: Rng,
+    /// Tokens consumed so far = position the next fed token decodes at.
+    pos: usize,
+    /// Last sampled token, fed in the next round.
+    next_token: u32,
+    /// Generated tokens (capacity reserved to `max_new` at admission).
+    tokens: Vec<u32>,
+    /// `[vocab]` logits of the final generated position, filled at
+    /// completion (capacity reserved at admission).
+    logits: Vec<f32>,
+    /// `layer * n_heads + head` order, like `DecodeWorkspace`.
+    states: Vec<DecodeState>,
+    admitted_round: usize,
+    done: bool,
+}
+
+impl SessionSlot {
+    fn fresh() -> Self {
+        Self {
+            id: 0,
+            prompt_len: 0,
+            max_new: 0,
+            budget: 0,
+            temperature: 0.0,
+            rng: Rng::new(0),
+            pos: 0,
+            next_token: 0,
+            tokens: Vec::new(),
+            logits: Vec::new(),
+            states: Vec::new(),
+            admitted_round: 0,
+            done: false,
+        }
+    }
+}
+
+/// Per-worker activation buffers for one chunk of a decode round —
+/// the `[n, ·]` counterpart of the `[1, ·]` buffers in
+/// `DecodeWorkspace`. Grow-only, recycled round to round.
+#[derive(Default)]
+struct StepBuf {
+    x: Mat,
+    hn: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    merged: Mat,
+    proj: Mat,
+    ff: Mat,
+    logits: Mat,
+}
+
+impl StepBuf {
+    fn snapshot(&self) -> Vec<(usize, usize)> {
+        [
+            &self.x,
+            &self.hn,
+            &self.q,
+            &self.k,
+            &self.v,
+            &self.merged,
+            &self.proj,
+            &self.ff,
+            &self.logits,
+        ]
+        .iter()
+        .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+        .collect()
+    }
+}
+
+/// One ragged decode round over `slots`: embed every session's pending
+/// token at its own position, run each layer's batched matmuls once for
+/// the chunk, advance all per-head caches through
+/// `Attention::decode_step_batch`, then sample each session's next
+/// token from the batched logits. Row `i` is bitwise the
+/// single-session step path (loop orders match; every per-row op reads
+/// only row `i`).
+///
+/// KEEP IN SYNC with `DecodeSession::step` (decode.rs): this is that
+/// layer schedule at `[n, D]` instead of `[1, D]`, differing only in
+/// `decode_step_batch` vs per-head `decode_step`. Any change to the
+/// block structure must land in both; `tests/serve.rs` pins the parity
+/// at 1e-5 so drift fails loudly.
+fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
+    if slots.is_empty() {
+        return;
+    }
+    let cfg = &model.cfg;
+    let p = &model.params;
+    let n = slots.len();
+    let (d, n_heads) = (cfg.d_model, cfg.n_heads);
+    let n_states = cfg.n_layers * n_heads;
+
+    // token + positional embedding for every session's current position
+    buf.x.reset_for_overwrite(n, d);
+    for (i, slot) in slots.iter().enumerate() {
+        debug_assert!(
+            slot.states[..n_states].iter().all(|st| st.remaining() > 0),
+            "session {} stepped beyond its reserved context",
+            slot.id
+        );
+        let row = buf.x.row_mut(i);
+        for ((o, e), ps) in row
+            .iter_mut()
+            .zip(p.embed.row(slot.next_token as usize))
+            .zip(p.pos.row(slot.pos))
+        {
+            *o = e + ps;
+        }
+    }
+
+    for (layer, lp) in p.layers.iter().enumerate() {
+        // pre-LN attention block at [n, D]; one weight read per matrix
+        layernorm_rows_into(&buf.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut buf.hn);
+        matmul_into(&buf.hn, &lp.wq, &mut buf.q);
+        matmul_into(&buf.hn, &lp.wk, &mut buf.k);
+        matmul_into(&buf.hn, &lp.wv, &mut buf.v);
+        buf.merged.reset_for_overwrite(n, d);
+        let mut layer_states: Vec<&mut [DecodeState]> = slots
+            .iter_mut()
+            .map(|s| &mut s.states[layer * n_heads..(layer + 1) * n_heads])
+            .collect();
+        model.algo.decode_step_batch(
+            &mut layer_states,
+            &buf.q,
+            &buf.k,
+            &buf.v,
+            cfg.causal,
+            &mut buf.merged,
+        );
+        matmul_into(&buf.merged, &lp.wo, &mut buf.proj);
+        add_assign(&mut buf.x, &buf.proj);
+
+        // pre-LN feed-forward block
+        layernorm_rows_into(&buf.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut buf.hn);
+        matmul_into(&buf.hn, &lp.ff_w1, &mut buf.ff);
+        add_bias_rows(&mut buf.ff, &lp.ff_b1);
+        gelu(&mut buf.ff);
+        matmul_into(&buf.ff, &lp.ff_w2, &mut buf.proj);
+        add_bias_rows(&mut buf.proj, &lp.ff_b2);
+        add_assign(&mut buf.x, &buf.proj);
+    }
+
+    model.logits_into(&buf.x, &mut buf.hn, &mut buf.logits);
+    for (i, slot) in slots.iter_mut().enumerate() {
+        slot.pos += 1;
+        let row = buf.logits.row(i);
+        let t = sample_logits(row, slot.temperature, &mut slot.rng) as u32;
+        slot.tokens.push(t);
+        if slot.tokens.len() >= slot.max_new {
+            slot.done = true;
+            slot.logits.clear();
+            slot.logits.extend_from_slice(row);
+        } else {
+            slot.next_token = t;
+        }
+    }
+}
+
+/// The continuous-batching scheduler; see the module docs. Owns the
+/// model through an `Arc` so chunked rounds can travel through the
+/// thread pool's `'static` jobs.
+pub struct ServeEngine {
+    model: Arc<Model>,
+    cfg: ServeConfig,
+    /// Shared batched-forward arena for admission prefills; its
+    /// attention pool doubles as the decode-round worker pool (one set
+    /// of OS threads per engine — prefill and rounds never overlap).
+    prefill: ModelWorkspace,
+    /// `[1, ·]` admission head-logits path (first-token sampling).
+    adm_x: Mat,
+    adm_hn: Mat,
+    adm_logits: Mat,
+    pending: VecDeque<Request>,
+    active: Vec<SessionSlot>,
+    /// Session pool: retired slots waiting to be re-admitted.
+    free: Vec<SessionSlot>,
+    /// Reusable chunk containers for pooled rounds (one per worker).
+    chunk_store: Vec<Vec<SessionSlot>>,
+    /// Per-worker step buffers.
+    bufs: Vec<StepBuf>,
+    completions: Vec<Completion>,
+    stats: ServeStats,
+    /// Summed `budget` of active sessions (admission accounting).
+    active_budget: usize,
+}
+
+impl ServeEngine {
+    pub fn new(model: Arc<Model>, cfg: ServeConfig) -> Result<ServeEngine, String> {
+        if cfg.max_batch == 0 {
+            return Err("max_batch must be >= 1".to_string());
+        }
+        if cfg.max_tokens == 0 {
+            return Err("max_tokens budget must be >= 1".to_string());
+        }
+        let threads = cfg.threads.max(1);
+        Ok(ServeEngine {
+            prefill: ModelWorkspace::new(threads),
+            adm_x: Mat::default(),
+            adm_hn: Mat::default(),
+            adm_logits: Mat::default(),
+            pending: VecDeque::new(),
+            active: Vec::with_capacity(cfg.max_batch),
+            free: Vec::with_capacity(cfg.max_batch),
+            chunk_store: (0..threads).map(|_| Vec::with_capacity(cfg.max_batch)).collect(),
+            bufs: (0..threads).map(|_| StepBuf::default()).collect(),
+            completions: Vec::new(),
+            stats: ServeStats::default(),
+            active_budget: 0,
+            model,
+            cfg,
+        })
+    }
+
+    /// Validate and enqueue a request (FIFO). Rejects requests that
+    /// could never run: empty prompt, `max_new == 0`, token ids outside
+    /// the vocabulary, or a context reservation exceeding the model's
+    /// `max_len` or the engine's `max_tokens` budget.
+    pub fn submit(&mut self, req: Request) -> Result<(), String> {
+        self.validate(&req)?;
+        self.pending.push_back(req);
+        Ok(())
+    }
+
+    /// The [`ServeEngine::submit`] admission checks, side-effect free.
+    fn validate(&self, req: &Request) -> Result<(), String> {
+        let mcfg = &self.model.cfg;
+        if req.prompt.is_empty() {
+            return Err(format!("request {}: empty prompt", req.id));
+        }
+        if req.max_new == 0 {
+            return Err(format!("request {}: max_new must be >= 1", req.id));
+        }
+        let budget = req.prompt.len() + req.max_new;
+        if budget > mcfg.max_len {
+            return Err(format!(
+                "request {}: prompt {} + max_new {} exceeds model max_len {}",
+                req.id,
+                req.prompt.len(),
+                req.max_new,
+                mcfg.max_len
+            ));
+        }
+        if budget > self.cfg.max_tokens {
+            return Err(format!(
+                "request {}: context reservation {budget} exceeds the max_tokens budget {}",
+                req.id, self.cfg.max_tokens
+            ));
+        }
+        if let Some(&bad) = req.prompt.iter().find(|&&t| t as usize >= mcfg.vocab_size) {
+            return Err(format!(
+                "request {}: token id {bad} >= vocab {}",
+                req.id, mcfg.vocab_size
+            ));
+        }
+        Ok(())
+    }
+
+    /// Queued requests not yet admitted.
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Currently active sessions.
+    pub fn active_sessions(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Run-so-far metrics (reset by [`ServeEngine::run`]).
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Completions accumulated so far (drains the internal buffer).
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// `(pointer, capacity)` of every workspace buffer the engine owns
+    /// — session slots (active and pooled), step buffers, the prefill
+    /// arena and the admission head path. Sorted, so the snapshot is
+    /// invariant to slots migrating between the active set and the
+    /// pool; equal snapshots across ticks prove the steady state
+    /// allocates nothing in any workspace (request outputs — completion
+    /// token/logit copies — are not workspace and are excluded).
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for slot in self.active.iter().chain(self.free.iter()) {
+            out.push((slot.states.as_ptr() as usize, slot.states.capacity()));
+            for st in &slot.states {
+                out.extend(st.buffer_snapshot());
+            }
+            out.push((slot.tokens.as_ptr() as usize, slot.tokens.capacity()));
+            out.push((slot.logits.as_ptr() as usize, slot.logits.capacity()));
+        }
+        for b in &self.bufs {
+            out.extend(b.snapshot());
+        }
+        for c in &self.chunk_store {
+            out.push((c.as_ptr() as usize, c.capacity()));
+        }
+        out.extend(self.prefill.capacity_snapshot());
+        for m in [&self.adm_x, &self.adm_hn, &self.adm_logits] {
+            out.push((m.data.as_ptr() as usize, m.data.capacity()));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Admit one request into a (recycled) session slot: reset and
+    /// reserve its per-`(layer, head)` states to the request's own
+    /// horizon, run the batched prefill forward, and sample the first
+    /// token from the prefill logits. A request whose `max_new` is 1
+    /// completes here and never enters a decode round.
+    ///
+    /// KEEP IN SYNC with `Model::prefill_with` (decode.rs): same
+    /// state-reserve + `run_trunk` observer sequence, pooled instead of
+    /// per-`DecodeWorkspace` (the one semantic difference: states are
+    /// reserved to the request horizon, not `max_len` — h1d's step
+    /// output is invariant to the extra pyramid depth).
+    fn admit(&mut self, req: Request) {
+        let model = Arc::clone(&self.model);
+        let mcfg = &model.cfg;
+        let n_heads = mcfg.n_heads;
+        let n_states = mcfg.n_layers * n_heads;
+        let mut slot = self.free.pop().unwrap_or_else(SessionSlot::fresh);
+        slot.id = req.id;
+        slot.prompt_len = req.prompt.len();
+        slot.max_new = req.max_new;
+        slot.budget = req.prompt.len() + req.max_new;
+        slot.temperature = req.temperature;
+        slot.rng = Rng::new(req.seed);
+        slot.pos = req.prompt.len();
+        slot.tokens.clear();
+        slot.tokens.reserve(req.max_new);
+        slot.logits.clear();
+        slot.logits.reserve(mcfg.vocab_size);
+        slot.admitted_round = self.stats.rounds;
+        slot.done = false;
+        while slot.states.len() < n_states {
+            slot.states.push(DecodeState::default());
+        }
+        for st in &mut slot.states[..n_states] {
+            model.algo.decode_begin(st, slot.budget, mcfg.d_head());
+        }
+
+        // one batched forward over the prompt; the observer bulk-loads
+        // every (layer, head) cache — the decode.rs prefill, pooled
+        let states = &mut slot.states;
+        model.run_trunk(&mut self.prefill, &req.prompt, 1, |layer, qkv| {
+            for h in 0..n_heads {
+                model.algo.decode_load_prefix(
+                    &mut states[layer * n_heads + h],
+                    qkv.q.head(h),
+                    qkv.k.head(h),
+                    qkv.v.head(h),
+                );
+            }
+        });
+
+        // first-token logits from the last prompt position
+        self.adm_x.reset_for_overwrite(1, mcfg.d_model);
+        self.adm_x
+            .row_mut(0)
+            .copy_from_slice(self.prefill.x.row(req.prompt.len() - 1));
+        model.logits_into(&self.adm_x, &mut self.adm_hn, &mut self.adm_logits);
+        let row = self.adm_logits.row(0);
+        let t = sample_logits(row, slot.temperature, &mut slot.rng) as u32;
+        slot.tokens.push(t);
+        self.stats.prefill_tokens += req.prompt.len();
+        self.stats.generated += 1;
+        if slot.tokens.len() >= slot.max_new {
+            slot.done = true;
+            slot.logits.clear();
+            slot.logits.extend_from_slice(row);
+            // the session held a slot during its prefill even though it
+            // never enters a decode round — count it as active
+            self.stats.peak_active = self.stats.peak_active.max(self.active.len() + 1);
+            self.retire(slot);
+        } else {
+            slot.next_token = t;
+            self.active_budget += slot.budget;
+            self.active.push(slot);
+            self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+        }
+    }
+
+    /// Emit a [`Completion`] and recycle the slot into the pool. The
+    /// slot keeps its buffers (token/logit copies go to the completion)
+    /// so a same-shape re-admission allocates nothing.
+    fn retire(&mut self, mut slot: SessionSlot) {
+        self.completions.push(Completion {
+            id: slot.id,
+            prompt_len: slot.prompt_len,
+            tokens: slot.tokens.clone(),
+            last_logits: slot.logits.clone(),
+            admitted_round: slot.admitted_round,
+            finished_round: self.stats.rounds,
+        });
+        slot.tokens.clear();
+        slot.logits.clear();
+        self.free.push(slot);
+    }
+
+    /// One scheduling round: admit what fits, run one ragged decode
+    /// round over the active set, retire finished sessions. Returns
+    /// whether work remains (pending or active requests).
+    pub fn tick(&mut self) -> bool {
+        let t0 = Instant::now();
+        // admission: head-of-line FIFO within both budgets (a request's
+        // fit is checked at submit, so an empty active set always admits)
+        while self.active.len() < self.cfg.max_batch {
+            let fits = match self.pending.front() {
+                None => false,
+                Some(r) => {
+                    self.active_budget + r.prompt.len() + r.max_new <= self.cfg.max_tokens
+                }
+            };
+            if !fits {
+                break;
+            }
+            let req = self.pending.pop_front().expect("checked front");
+            self.admit(req);
+        }
+
+        // one ragged decode round across every active session; timed on
+        // its own so the latency percentiles measure the same thing as
+        // the sequential baseline's per-step samples (admission/prefill
+        // time lands in wall_s and throughput, not in round latency)
+        let n = self.active.len();
+        if n > 0 {
+            let t_round = Instant::now();
+            match self.prefill.attn.pool() {
+                Some(pool) if n > 1 => {
+                    let workers = pool.size().min(n);
+                    // deterministic contiguous split: chunk c covers
+                    // active rows [c*n/workers, (c+1)*n/workers)
+                    let mut jobs: Vec<(Vec<SessionSlot>, StepBuf)> = Vec::with_capacity(workers);
+                    for c in (0..workers).rev() {
+                        let lo = c * n / workers;
+                        let mut chunk = self.chunk_store.pop().expect("chunk container");
+                        chunk.clear();
+                        chunk.extend(self.active.drain(lo..));
+                        let buf = self.bufs.pop().expect("step buffer");
+                        jobs.push((chunk, buf));
+                    }
+                    jobs.reverse();
+                    let model = Arc::clone(&self.model);
+                    let done = pool.map(jobs, move |(mut chunk, mut buf)| {
+                        step_slots(model.as_ref(), &mut chunk, &mut buf);
+                        (chunk, buf)
+                    });
+                    for (mut chunk, buf) in done {
+                        self.active.append(&mut chunk);
+                        self.chunk_store.push(chunk);
+                        self.bufs.push(buf);
+                    }
+                }
+                _ => {
+                    step_slots(self.model.as_ref(), &mut self.active, &mut self.bufs[0]);
+                }
+            }
+            self.stats.rounds += 1;
+            self.stats.generated += n;
+            self.stats.round_tokens.push(n);
+            self.stats.round_s.push(t_round.elapsed().as_secs_f64());
+            // eviction: retire finished sessions, preserving order
+            let mut i = 0;
+            while i < self.active.len() {
+                if self.active[i].done {
+                    let slot = self.active.remove(i);
+                    self.active_budget -= slot.budget;
+                    self.retire(slot);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.stats.wall_s += t0.elapsed().as_secs_f64();
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    /// Submit every request and tick until the queue drains; returns
+    /// the completions plus run stats (and resets both for the next
+    /// run — the engine and its session pool are reusable). The whole
+    /// batch is validated before anything is enqueued, so a rejected
+    /// request leaves the engine exactly as it was — no half-queued
+    /// workload leaking into the next run.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<ServeReport, String> {
+        for r in &requests {
+            self.validate(r)?;
+        }
+        for r in requests {
+            self.pending.push_back(r);
+        }
+        while self.tick() {}
+        Ok(ServeReport {
+            completions: std::mem::take(&mut self.completions),
+            stats: std::mem::take(&mut self.stats),
+        })
+    }
+}
+
+/// The sequential baseline the serve acceptance compares against: one
+/// session at a time through `Model::prefill_with` / `step`, recycling
+/// a single `DecodeWorkspace` — identical request semantics and report
+/// shape, so it doubles as the parity oracle for `tests/serve.rs`.
+pub fn run_sequential(model: &Model, requests: &[Request]) -> Result<ServeReport, String> {
+    let mut ws = DecodeWorkspace::serial();
+    let mut completions = Vec::with_capacity(requests.len());
+    let mut stats = ServeStats::default();
+    let t_all = Instant::now();
+    for req in requests {
+        if req.max_new == 0 {
+            return Err(format!("request {}: max_new must be >= 1", req.id));
+        }
+        if req.prompt.len() + req.max_new > model.cfg.max_len {
+            return Err(format!(
+                "request {}: prompt {} + max_new {} exceeds model max_len {}",
+                req.id,
+                req.prompt.len(),
+                req.max_new,
+                model.cfg.max_len
+            ));
+        }
+        let mut rng = Rng::new(req.seed);
+        let mut session = model.prefill_with(ws, &req.prompt)?;
+        stats.prefill_tokens += req.prompt.len();
+        let mut tokens = Vec::with_capacity(req.max_new);
+        let first = sample_logits(session.logits().row(0), req.temperature, &mut rng) as u32;
+        tokens.push(first);
+        stats.generated += 1;
+        let mut next = first;
+        let last_logits: Vec<f32> = if tokens.len() >= req.max_new {
+            session.logits().row(0).to_vec()
+        } else {
+            loop {
+                let ts = Instant::now();
+                let logits = session.step(next)?;
+                stats.round_s.push(ts.elapsed().as_secs_f64());
+                stats.round_tokens.push(1);
+                stats.rounds += 1;
+                let t = sample_logits(logits.row(0), req.temperature, &mut rng) as u32;
+                tokens.push(t);
+                stats.generated += 1;
+                if tokens.len() >= req.max_new {
+                    break logits.row(0).to_vec();
+                }
+                next = t;
+            }
+        };
+        completions.push(Completion {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens,
+            last_logits,
+            admitted_round: 0,
+            finished_round: stats.rounds,
+        });
+        stats.peak_active = 1;
+        ws = session.into_workspace();
+    }
+    stats.wall_s = t_all.elapsed().as_secs_f64();
+    Ok(ServeReport { completions, stats })
+}
+
+/// Closed-loop synthetic workload: `n` requests whose prompt lengths
+/// cycle through `prompt_mix`, sharing `max_new` and `temperature`,
+/// with per-request RNG seeds derived from `seed`. All requests are
+/// queued up front; admission paces them — the next stream starts as
+/// soon as budget frees (the closed-loop serving regime). Behind
+/// `htx serve-bench`, `benches/serve.rs` and the parity tests.
+pub fn synthetic_workload(
+    n: usize,
+    prompt_mix: &[usize],
+    max_new: usize,
+    vocab: usize,
+    temperature: f32,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(!prompt_mix.is_empty(), "prompt_mix must name at least one length");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let pl = prompt_mix[i % prompt_mix.len()];
+            Request {
+                id: i as u64,
+                prompt: (0..pl).map(|_| rng.below(vocab as u64) as u32).collect(),
+                max_new,
+                temperature,
+                seed: seed ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AttnSpec, ModelConfig};
+
+    fn tiny_model(attention: AttnSpec, max_len: usize) -> Model {
+        Model::new(
+            ModelConfig {
+                vocab_size: 29,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 24,
+                max_len,
+                causal: true,
+                attention,
+            },
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_rejects_unrunnable_requests() {
+        let model = Arc::new(tiny_model(AttnSpec::Full, 16));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 2,
+                max_tokens: 20,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        let ok = Request {
+            id: 0,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            temperature: 0.0,
+            seed: 1,
+        };
+        eng.submit(ok.clone()).unwrap();
+        let mut bad = ok.clone();
+        bad.prompt.clear();
+        assert!(eng.submit(bad).unwrap_err().contains("empty prompt"));
+        let mut bad = ok.clone();
+        bad.max_new = 0;
+        assert!(eng.submit(bad).unwrap_err().contains("max_new"));
+        let mut bad = ok.clone();
+        bad.max_new = 14; // 3 + 14 > max_len 16
+        assert!(eng.submit(bad).unwrap_err().contains("max_len"));
+        let mut bad = ok.clone();
+        bad.prompt = vec![1; 18]; // longer than max_len outright
+        assert!(eng.submit(bad).unwrap_err().contains("max_len"));
+        let mut bad = ok.clone();
+        bad.prompt = vec![0, 29]; // token id outside the vocabulary
+        assert!(eng.submit(bad).unwrap_err().contains("vocab"));
+        // a reservation within max_len but beyond the engine's whole
+        // max_tokens budget can never be admitted: rejected at submit
+        let mut eng2 = ServeEngine::new(
+            model,
+            ServeConfig {
+                max_batch: 2,
+                max_tokens: 6,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        assert!(eng2.submit(ok).unwrap_err().contains("max_tokens"));
+    }
+
+    #[test]
+    fn run_rejects_batches_atomically() {
+        let model = Arc::new(tiny_model(AttnSpec::Full, 16));
+        let mut eng = ServeEngine::new(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let mut reqs = synthetic_workload(3, &[4], 3, 29, 0.0, 1);
+        reqs[2].prompt = vec![99]; // out-of-vocab, rejected at validation
+        assert!(eng.run(reqs).is_err());
+        assert_eq!(eng.queued(), 0, "a rejected batch must not enqueue anything");
+        // the engine is still clean: a valid batch then runs normally
+        let rep = eng.run(synthetic_workload(3, &[4], 3, 29, 0.0, 1)).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+    }
+
+    #[test]
+    fn max_new_one_completes_at_prefill_without_a_round() {
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 16));
+        let mut eng = ServeEngine::new(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let reqs = vec![Request {
+            id: 9,
+            prompt: vec![1, 2, 3, 4],
+            max_new: 1,
+            temperature: 0.0,
+            seed: 5,
+        }];
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.stats.rounds, 0);
+        assert_eq!(rep.stats.peak_active, 1, "prefill-only sessions still held a slot");
+        assert_eq!(rep.completions.len(), 1);
+        assert_eq!(rep.completions[0].tokens.len(), 1);
+        // matches the sequential loop exactly
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.completions[0].tokens, rep.completions[0].tokens);
+        assert_eq!(seq.completions[0].last_logits, rep.completions[0].last_logits);
+    }
+
+    #[test]
+    fn tight_token_budget_serialises_admissions() {
+        let model = Arc::new(tiny_model(AttnSpec::Full, 24));
+        // each request reserves 9 + 5 = 14; a 20-token budget fits one
+        let mut eng = ServeEngine::new(
+            model,
+            ServeConfig {
+                max_batch: 4,
+                max_tokens: 20,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        let reqs = synthetic_workload(4, &[9], 5, 29, 0.0, 3);
+        let rep = eng.run(reqs).unwrap();
+        assert_eq!(rep.completions.len(), 4);
+        assert_eq!(rep.stats.peak_active, 1, "budget should serialise sessions");
+        assert_eq!(rep.stats.generated, 4 * 5);
+    }
+
+    #[test]
+    fn synthetic_workload_cycles_the_mix() {
+        let reqs = synthetic_workload(5, &[3, 7], 4, 29, 0.5, 11);
+        assert_eq!(reqs.len(), 5);
+        let lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+        assert_eq!(lens, vec![3, 7, 3, 7, 3]);
+        assert!(reqs.iter().all(|r| r.max_new == 4 && r.temperature == 0.5));
+        assert!(reqs.iter().all(|r| r.prompt.iter().all(|&t| t < 29)));
+        // distinct per-request seeds
+        let mut seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 5);
+    }
+}

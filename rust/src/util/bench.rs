@@ -130,6 +130,27 @@ impl Table {
     }
 }
 
+/// Commit id stamped into the machine-readable `BENCH_*.json` files so
+/// the perf trajectory is attributable across PRs: `$GITHUB_SHA` when
+/// CI provides it, else `git rev-parse --short HEAD`, else "unknown"
+/// (offline tarballs without a git checkout).
+pub fn commit_id() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Format seconds human-readably (µs/ms/s).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-3 {
@@ -162,6 +183,12 @@ mod tests {
         assert!(s.contains("model"));
         assert!(s.contains("20.25"));
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn commit_id_is_never_empty() {
+        // env var, git or the "unknown" fallback — always something
+        assert!(!commit_id().is_empty());
     }
 
     #[test]

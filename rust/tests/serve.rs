@@ -1,0 +1,232 @@
+//! Integration suite for the continuous-batching serve scheduler.
+//!
+//! Contracts pinned here:
+//!  1. **batched == sequential** — for every zoo algorithm (the
+//!     "mixed-algorithm" coverage: each algorithm's incremental or
+//!     recompute decode path runs under the same scheduler), a workload
+//!     of mixed prompt lengths, token budgets and sampling temperatures
+//!     produces the same per-request tokens and final logits (1e-5)
+//!     through the batched engine as through the one-session-at-a-time
+//!     `run_sequential` loop — at any `max_batch` and thread count.
+//!  2. **arrival-order determinism** — permuting the submission order
+//!     changes scheduling, never results: each request's tokens and
+//!     final logits are identical under any arrival permutation.
+//!  3. **session-pool zero-alloc** — once the pool is warm, further
+//!     same-shape admissions, decode rounds and evictions leave the
+//!     engine's capacity snapshot untouched (slots recycle their KV
+//!     arenas; step buffers and the prefill arena are reused).
+//!  4. **accounting** — generated counts, round samples and occupancy
+//!     stay mutually consistent and within the configured budgets.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use htransformer::model::{
+    run_sequential, synthetic_workload, AttnSpec, Model, ModelConfig, Request, ServeConfig,
+    ServeEngine,
+};
+
+fn zoo() -> Vec<AttnSpec> {
+    vec![
+        AttnSpec::Full,
+        AttnSpec::H1d { nr: 4 },
+        AttnSpec::Local { radius: 3 },
+        AttnSpec::LowRank { rank: 6, seed: 5 },
+        AttnSpec::BlockSparse {
+            window: 2,
+            n_global: 2,
+            n_random: 2,
+            seed: 5,
+        },
+    ]
+}
+
+fn model_for(spec: AttnSpec, max_len: usize) -> Model {
+    let causal = !matches!(spec, AttnSpec::LowRank { .. });
+    Model::new(
+        ModelConfig {
+            vocab_size: 31,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            max_len,
+            causal,
+            attention: spec,
+        },
+        13,
+    )
+    .unwrap()
+}
+
+/// Mixed workload: prompt lengths cycle 3/9/14, every third request
+/// samples at temperature 0.8 (seeded per request), the rest greedy.
+fn workload(vocab: usize) -> Vec<Request> {
+    let mut reqs = synthetic_workload(7, &[3, 9, 14], 5, vocab, 0.0, 77);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 3 == 1 {
+            r.temperature = 0.8;
+        }
+    }
+    reqs
+}
+
+fn by_id(completions: &[htransformer::model::Completion]) -> BTreeMap<u64, (Vec<u32>, Vec<f32>)> {
+    completions
+        .iter()
+        .map(|c| (c.id, (c.tokens.clone(), c.last_logits.clone())))
+        .collect()
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-5 + 1e-5 * b.abs()
+}
+
+#[test]
+fn batched_serve_matches_sequential_for_every_algorithm() {
+    for spec in zoo() {
+        let model = Arc::new(model_for(spec, 32));
+        let name = model.attention_name();
+        let reqs = workload(model.cfg.vocab_size);
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.completions.len(), reqs.len(), "{name}");
+        let want = by_id(&seq.completions);
+        for (threads, max_batch) in [(1usize, 3usize), (2, 4)] {
+            let mut eng = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch,
+                    max_tokens: usize::MAX,
+                    threads,
+                },
+            )
+            .unwrap();
+            let rep = eng.run(reqs.clone()).unwrap();
+            assert_eq!(rep.completions.len(), reqs.len(), "{name} t{threads}");
+            let got = by_id(&rep.completions);
+            for (id, (tokens, logits)) in &want {
+                let (gt, gl) = got.get(id).expect("completion per request");
+                assert_eq!(
+                    gt, tokens,
+                    "{name} t{threads} b{max_batch} req {id}: token divergence"
+                );
+                assert_eq!(gl.len(), logits.len(), "{name} req {id}");
+                for (j, (a, b)) in gl.iter().zip(logits).enumerate() {
+                    assert!(
+                        close(*a, *b),
+                        "{name} t{threads} req {id} logit {j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn arrival_order_permutations_do_not_change_per_request_results() {
+    let model = Arc::new(model_for(AttnSpec::H1d { nr: 4 }, 32));
+    let reqs = workload(model.cfg.vocab_size);
+    let mut orders: Vec<Vec<Request>> = vec![reqs.clone()];
+    let mut rev = reqs.clone();
+    rev.reverse();
+    orders.push(rev);
+    let mut rot = reqs.clone();
+    rot.rotate_left(3);
+    orders.push(rot);
+
+    let mut want: Option<BTreeMap<u64, (Vec<u32>, Vec<f32>)>> = None;
+    for order in orders {
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 4,
+                max_tokens: usize::MAX,
+                threads: 2,
+            },
+        )
+        .unwrap();
+        let rep = eng.run(order).unwrap();
+        let got = by_id(&rep.completions);
+        match &want {
+            None => want = Some(got),
+            Some(w) => {
+                assert_eq!(&got, w, "arrival order changed a request's results");
+            }
+        }
+    }
+}
+
+#[test]
+fn session_pool_recycling_keeps_steps_zero_alloc_after_evictions() {
+    let model = Arc::new(model_for(AttnSpec::H1d { nr: 4 }, 32));
+    let mut eng = ServeEngine::new(
+        Arc::clone(&model),
+        ServeConfig {
+            max_batch: 3,
+            max_tokens: usize::MAX,
+            threads: 2,
+        },
+    )
+    .unwrap();
+    // warm phase: two full waves through the pool (admission, rounds,
+    // evictions, re-admission from the recycled slots)
+    let warm = synthetic_workload(6, &[9], 6, model.cfg.vocab_size, 0.0, 21);
+    for r in warm {
+        eng.submit(r).unwrap();
+    }
+    while eng.tick() {}
+    assert_eq!(eng.take_completions().len(), 6);
+    let snap = eng.capacity_snapshot();
+    assert!(!snap.is_empty());
+
+    // steady state: same-shape admissions must not grow any workspace
+    let more = synthetic_workload(3, &[9], 6, model.cfg.vocab_size, 0.0, 22);
+    for r in more {
+        eng.submit(r).unwrap();
+    }
+    while eng.tick() {}
+    assert_eq!(eng.take_completions().len(), 3);
+    assert_eq!(
+        eng.capacity_snapshot(),
+        snap,
+        "steady-state serving re-grew a workspace buffer"
+    );
+}
+
+#[test]
+fn accounting_stays_consistent_and_within_budgets() {
+    let model = Arc::new(model_for(AttnSpec::Full, 32));
+    let mut eng = ServeEngine::new(
+        Arc::clone(&model),
+        ServeConfig {
+            max_batch: 3,
+            max_tokens: usize::MAX,
+            threads: 1,
+        },
+    )
+    .unwrap();
+    let reqs = workload(model.cfg.vocab_size);
+    let n_reqs = reqs.len();
+    let rep = eng.run(reqs).unwrap();
+    let stats = &rep.stats;
+    assert_eq!(rep.completions.len(), n_reqs);
+    let total_tokens: usize = rep.completions.iter().map(|c| c.tokens.len()).sum();
+    assert_eq!(stats.generated, total_tokens);
+    assert_eq!(stats.rounds, stats.round_s.len());
+    assert_eq!(stats.rounds, stats.round_tokens.len());
+    assert!(stats.peak_active <= 3);
+    assert!(stats.mean_occupancy() <= 3.0);
+    assert!(stats.mean_occupancy() > 0.0);
+    assert!(stats.tokens_per_sec() > 0.0);
+    assert!(stats.per_token_us() > 0.0);
+    assert!(stats.latency_us(95.0) >= stats.latency_us(50.0));
+    for c in &rep.completions {
+        assert_eq!(c.tokens.len(), 5);
+        assert_eq!(c.last_logits.len(), model.cfg.vocab_size);
+        assert!(c.finished_round >= c.admitted_round);
+    }
+    // the engine is reusable: a second run on the recycled pool works
+    let rep2 = eng.run(workload(model.cfg.vocab_size)).unwrap();
+    assert_eq!(rep2.completions.len(), n_reqs);
+    assert_eq!(by_id(&rep.completions), by_id(&rep2.completions));
+}

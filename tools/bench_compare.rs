@@ -1,0 +1,234 @@
+//! CI perf-regression gate over the `BENCH_*.json` trajectory.
+//!
+//! Usage:
+//!   bench_compare --baseline BENCH_baseline.json \
+//!       [--threshold 1.5] [--write-merged PATH] CURRENT.json...
+//!
+//! Every input follows the stable trajectory schema
+//! `{commit, config, points[]}` where each point has a unique `id` and
+//! a `per_token_us` metric (lower is better). The gate matches points
+//! by `id` and computes per-point ratios `current / baseline`.
+//!
+//! **Machine-speed normalisation:** CI runners and the machines that
+//! commit baselines differ in absolute speed, so raw ratios would trip
+//! on hardware, not code. The gate therefore divides each ratio by the
+//! *median* ratio across all matched points: a uniformly faster or
+//! slower runner cancels out, while a point that regressed relative to
+//! its peers stands out. A point fails when its normalised ratio
+//! exceeds `--threshold` (default 1.5x). Normalisation alone would be
+//! blind to a change that slows *everything* (a shared kernel like
+//! `matmul_into` regressing moves the median itself), so a second,
+//! looser raw gate backs it up: any point whose raw ratio exceeds
+//! `--raw-threshold` (default 3.0x, sized to exceed plausible runner
+//! variance) also fails. The full delta table (raw and normalised)
+//! prints on every run, pass or fail.
+//!
+//! Baseline lifecycle: a baseline with `"bootstrap": true` reports but
+//! never fails the job — it seeds the trajectory until a PR commits
+//! real runner numbers. `--write-merged PATH` emits the current points
+//! as a fresh non-bootstrap baseline (CI uploads it as an artifact;
+//! copy it over `BENCH_baseline.json` to ratchet). Points present in
+//! the baseline but missing from the current runs fail the gate: if a
+//! PR changes the bench matrix, it must update the baseline in the
+//! same change.
+
+use htransformer::util::bench::Table;
+use htransformer::util::cli::Args;
+use htransformer::util::json::{num, obj, s, Json};
+
+/// `(id, per_token_us, raw point)` for every point in a trajectory file.
+fn load_points(path: &str) -> Result<(Json, Vec<(String, f64, Json)>), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let arr = doc
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| format!("{path}: no points[] array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for p in arr {
+        let id = p
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("{path}: point without an id"))?
+            .to_string();
+        let us = p
+            .get("per_token_us")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{path}: point {id} without per_token_us"))?;
+        out.push((id, us, p.clone()));
+    }
+    Ok((doc, out))
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite ratios"));
+    let n = xs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+fn run() -> Result<i32, String> {
+    let args = Args::from_env();
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| "--baseline PATH is required".to_string())?
+        .to_string();
+    let threshold = args.f64_or("threshold", 1.5);
+    let raw_threshold = args.f64_or("raw-threshold", 3.0);
+    // Args puts the first bare argument into `subcommand`; every bare
+    // argument is a current-trajectory file for this tool
+    let currents: Vec<String> = args
+        .subcommand
+        .iter()
+        .cloned()
+        .chain(args.positional.iter().cloned())
+        .collect();
+    if currents.is_empty() {
+        return Err("no current BENCH_*.json files given".to_string());
+    }
+
+    let (base_doc, base_points) = load_points(&baseline_path)?;
+    let bootstrap = base_doc
+        .get("bootstrap")
+        .and_then(|b| b.as_bool())
+        .unwrap_or(false);
+
+    let mut cur_points: Vec<(String, f64, Json)> = Vec::new();
+    let mut cur_commit = "unknown".to_string();
+    for path in &currents {
+        let (doc, pts) = load_points(path)?;
+        if let Some(c) = doc.get("commit").and_then(|v| v.as_str()) {
+            cur_commit = c.to_string();
+        }
+        for (id, us, raw) in pts {
+            if cur_points.iter().any(|(i, _, _)| *i == id) {
+                return Err(format!("duplicate point id {id} across current files"));
+            }
+            cur_points.push((id, us, raw));
+        }
+    }
+
+    // match by id; collect raw ratios for the median normaliser
+    let mut matched: Vec<(String, f64, f64)> = Vec::new(); // (id, base, cur)
+    let mut missing: Vec<String> = Vec::new();
+    for (id, base_us, _) in &base_points {
+        match cur_points.iter().find(|(i, _, _)| i == id) {
+            Some((_, cur_us, _)) => matched.push((id.clone(), *base_us, *cur_us)),
+            None => missing.push(id.clone()),
+        }
+    }
+    let fresh: Vec<&String> = cur_points
+        .iter()
+        .map(|(id, _, _)| id)
+        .filter(|id| !base_points.iter().any(|(b, _, _)| b == *id))
+        .collect();
+    let m = median(matched.iter().map(|(_, b, c)| c / b.max(1e-9)).collect());
+
+    println!(
+        "bench_compare: {} matched point(s), median speed ratio {m:.3} \
+         (runner-speed normaliser), threshold {threshold:.2}x normalised / \
+         {raw_threshold:.2}x raw",
+        matched.len()
+    );
+    let mut t = Table::new(&["point", "baseline", "current", "ratio", "normalised", "verdict"]);
+    let mut regressed = 0usize;
+    for (id, base_us, cur_us) in &matched {
+        let ratio = cur_us / base_us.max(1e-9);
+        let norm = ratio / m.max(1e-9);
+        let verdict = if norm > threshold {
+            regressed += 1;
+            "REGRESSED"
+        } else if ratio > raw_threshold {
+            // normalisation hides uniform slowdowns (a shared kernel
+            // regressing moves the median too) — the raw cap catches them
+            regressed += 1;
+            "REGRESSED (raw)"
+        } else if norm < 1.0 / threshold {
+            "improved"
+        } else {
+            "ok"
+        };
+        t.row(&[
+            id.clone(),
+            format!("{base_us:.1}µs"),
+            format!("{cur_us:.1}µs"),
+            format!("{ratio:.2}x"),
+            format!("{norm:.2}x"),
+            verdict.to_string(),
+        ]);
+    }
+    for id in &missing {
+        t.row(&[
+            id.clone(),
+            "-".to_string(),
+            "MISSING".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "FAIL".to_string(),
+        ]);
+    }
+    for id in &fresh {
+        t.row(&[
+            (*id).clone(),
+            "new".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "new point".to_string(),
+        ]);
+    }
+    t.print();
+
+    if let Some(path) = args.get("write-merged") {
+        let merged = obj(vec![
+            ("bench", s("baseline")),
+            ("commit", s(&cur_commit)),
+            ("bootstrap", Json::Bool(false)),
+            ("threshold", num(threshold)),
+            (
+                "points",
+                Json::Arr(cur_points.iter().map(|(_, _, raw)| raw.clone()).collect()),
+            ),
+        ]);
+        std::fs::write(path, merged.to_string()).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote candidate baseline {path} (commit {cur_commit})");
+    }
+
+    let failures = regressed + missing.len();
+    if failures > 0 {
+        if bootstrap {
+            println!(
+                "\n{failures} finding(s), but the committed baseline is a bootstrap seed — \
+                 not failing the job. Commit the candidate baseline to arm the gate."
+            );
+            return Ok(0);
+        }
+        println!(
+            "\nFAIL: {regressed} point(s) regressed (past {threshold:.2}x normalised or \
+             {raw_threshold:.2}x raw) and {} expected point(s) are missing. If the bench \
+             matrix changed on purpose, update BENCH_baseline.json in the same PR.",
+            missing.len()
+        );
+        return Ok(1);
+    }
+    println!(
+        "\nOK: no per-token regression past {threshold:.2}x normalised ({raw_threshold:.2}x raw)."
+    );
+    Ok(0)
+}
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
