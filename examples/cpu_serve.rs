@@ -37,6 +37,7 @@ fn main() -> Result<(), String> {
             max_batch: 8,
             max_tokens: usize::MAX,
             threads: htransformer::util::threadpool::default_threads(),
+            ..ServeConfig::default()
         },
     )?;
     let batched = engine.run(requests)?;

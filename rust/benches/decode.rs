@@ -24,7 +24,7 @@
 use std::time::Instant;
 
 use htransformer::model::{AttnSpec, DecodeWorkspace, Model, ModelConfig};
-use htransformer::util::bench::{commit_id, Table};
+use htransformer::util::bench::{commit_id, synthetic_prompt, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::json::{num, obj, s, Json};
 use htransformer::util::Rng;
@@ -62,9 +62,7 @@ fn measure_step(spec: &AttnSpec, l: usize, steps: usize) -> f64 {
     };
     let model = Model::new(cfg, 1).expect("valid bench config");
     let mut rng = Rng::new(l as u64);
-    let prompt: Vec<u32> = (0..l)
-        .map(|_| rng.below(model.cfg.vocab_size as u64) as u32)
-        .collect();
+    let prompt = synthetic_prompt(l, model.cfg.vocab_size, &mut rng);
     let mut session = model
         .prefill_with(DecodeWorkspace::serial(), &prompt)
         .expect("prefill");

@@ -12,15 +12,28 @@
 //! tokens/sec at `max_batch 8` should be >= 3x the sequential loop for
 //! h1d and full on multi-core hosts.
 //!
+//! A second section pins the paged-KV memory subsystem: a
+//! shared-system-prompt workload (every request carries one identical
+//! prompt) runs at a FIXED `max_tokens` budget through (a) the
+//! contiguous-reservation baseline (`reserve: true` — the PR-4
+//! admission semantics) and (b) the demand-grown paged engine with the
+//! copy-on-write prefix cache. The paged run shares the prompt pages
+//! across sessions (counted once against the budget) and faults tail
+//! pages per round, so the same budget admits >= 1.5x the concurrent
+//! sessions — the paged-serve acceptance line, reported as peak-active
+//! concurrency plus pages-in-use and prefix-cache hit rate.
+//!
 //! Besides the human-readable table, the run emits machine-readable
 //! `BENCH_serve.json` in the stable trajectory schema
 //! `{commit, bench, smoke, config, points[]}` — each point carries a
-//! unique `id` (`serve/<attention>/seq` or `serve/<attention>/b<N>`)
-//! and a `per_token_us` metric (aggregate wall / generated tokens),
-//! which `tools/bench_compare.rs` diffs against `BENCH_baseline.json`
-//! in CI. `lowrank`/`blocksparse` are tracked by `decode.rs` instead:
-//! their per-step full recompute makes a serving loop pathological by
-//! construction, not a regression signal.
+//! unique `id` (`serve/<attention>/seq`, `serve/<attention>/b<N>`, or
+//! `serve/<attention>/shared-{reserved,paged}`) and a `per_token_us`
+//! metric (aggregate wall / generated tokens), which
+//! `tools/bench_compare.rs` diffs against `BENCH_baseline.json` in CI
+//! (the shared-prefix points also carry `pages_in_use` and
+//! `prefix_hit_rate`). `lowrank`/`blocksparse` are tracked by
+//! `decode.rs` instead: their per-step full recompute makes a serving
+//! loop pathological by construction, not a regression signal.
 //!
 //! Flags:
 //!   --smoke        small shapes (CI keep-alive; exercises every path)
@@ -30,8 +43,8 @@
 use std::sync::Arc;
 
 use htransformer::model::{
-    run_sequential, synthetic_workload, AttnSpec, Model, ModelConfig, ServeConfig, ServeEngine,
-    ServeReport,
+    run_sequential, shared_prefix_workload, synthetic_workload, AttnSpec, Model, ModelConfig,
+    ServeConfig, ServeEngine, ServeReport,
 };
 use htransformer::util::bench::{commit_id, Table};
 use htransformer::util::cli::Args;
@@ -167,7 +180,11 @@ fn main() {
                 ServeConfig {
                     max_batch: b,
                     max_tokens: usize::MAX,
+                    // distinct prompts: keep the prefix cache out of the
+                    // classic throughput trajectory
+                    prefix_cache: 0,
                     threads,
+                    ..ServeConfig::default()
                 },
             )
             .expect("engine");
@@ -202,6 +219,97 @@ fn main() {
         "\naggregate tokens/s should grow with max_batch (weight reads amortise over \
          the batch; chunks spread across {threads} worker thread(s)); per-token p95 \
          rises gently — the continuous-batching throughput/latency trade."
+    );
+
+    // ---- paged KV vs contiguous reservation on a shared-prefix -----
+    // workload at a FIXED max_tokens budget: the reservation baseline
+    // pre-pays prompt + max_new per session, so the budget admits ~2
+    // sessions; the paged engine shares the prompt pages (counted
+    // once) and grows tails on demand, so the same budget admits many
+    // more — the acceptance line is >= 1.5x admitted concurrency (and
+    // it shows up as aggregate tokens/s too)
+    let shared_prompt = if smoke { 48 } else { 256 };
+    let shared_budget = if smoke { 160 } else { 640 };
+    let page_len = 16usize;
+    println!(
+        "\n### shared-prefix workload: paged KV vs contiguous reservation \
+         (one {shared_prompt}-token prompt x {} requests, max_tokens {shared_budget}, \
+         page_len {page_len}) ###\n",
+        sh.requests
+    );
+    let mut t2 = Table::new(&[
+        "attention", "mode", "tokens/s", "per-token", "peak active", "peak pages",
+        "peak ctx", "hit rate", "concurrency",
+    ]);
+    for (name, spec) in &algos {
+        let cfg = ModelConfig {
+            vocab_size: sh.vocab,
+            d_model: sh.d_model,
+            n_heads: sh.n_heads,
+            n_layers: sh.n_layers,
+            d_ff: sh.d_ff,
+            max_len,
+            causal: true,
+            attention: spec.clone(),
+        };
+        let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
+        let requests =
+            shared_prefix_workload(sh.requests, shared_prompt, sh.gen, sh.vocab, 0.0, 11);
+        let seq = run_sequential(&model, &requests).expect("sequential run");
+        let mut reserved_active = 0usize;
+        for (mode, reserve, prefix) in
+            [("shared-reserved", true, 0usize), ("shared-paged", false, 4)]
+        {
+            let mut engine = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch: 8,
+                    max_tokens: shared_budget,
+                    page_len,
+                    reserve,
+                    prefix_cache: prefix,
+                    threads,
+                },
+            )
+            .expect("engine");
+            let rep = engine.run(requests.clone()).expect("shared-prefix run");
+            check_parity(name, &seq, &rep);
+            let concurrency = if reserve {
+                reserved_active = rep.stats.peak_active;
+                1.0
+            } else {
+                rep.stats.peak_active as f64 / reserved_active.max(1) as f64
+            };
+            t2.row(&[
+                name.to_string(),
+                mode.to_string(),
+                format!("{:.0}", rep.stats.tokens_per_sec()),
+                format!("{:.1}µs", rep.stats.per_token_us()),
+                rep.stats.peak_active.to_string(),
+                rep.stats.peak_pages.to_string(),
+                rep.stats.peak_ctx_tokens.to_string(),
+                format!("{:.0}%", 100.0 * rep.stats.prefix_hit_rate()),
+                format!("{concurrency:.2}x"),
+            ]);
+            points.push(obj(vec![
+                ("id", s(&format!("serve/{name}/{mode}"))),
+                ("attention", s(name)),
+                ("mode", s(mode)),
+                ("per_token_us", num(rep.stats.per_token_us())),
+                ("tokens_per_sec", num(rep.stats.tokens_per_sec())),
+                ("peak_active", num(rep.stats.peak_active as f64)),
+                ("pages_in_use", num(rep.stats.peak_pages as f64)),
+                ("peak_ctx_tokens", num(rep.stats.peak_ctx_tokens as f64)),
+                ("prefix_hit_rate", num(rep.stats.prefix_hit_rate())),
+                ("evictions", num(rep.stats.evictions as f64)),
+            ]));
+        }
+    }
+    t2.print();
+    println!(
+        "\npaged KV shares the prompt pages across sessions (hit rate ~100% after the \
+         first admission) and charges max_tokens only for pages actually faulted, so \
+         the same budget admits >= 1.5x the sessions the reservation baseline does."
     );
 
     let doc = obj(vec![

@@ -842,6 +842,62 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_pages_decode_identically_and_allocate_once() {
+        // the prefix-cache primitive at the attention level: snapshot a
+        // prefilled state's pages (refcount bumps only), clone them
+        // into a second state, and continue both with the same rows —
+        // outputs must be bitwise equal, sharing must allocate nothing,
+        // and only boundary pages may privatise (copy-on-write) while
+        // fully-completed coarse blocks stay shared
+        let algo = H1d::new(4);
+        let (l, d, max_len) = (37usize, 4usize, 64usize);
+        let mut rng = Rng::new(77);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let pool = crate::tensor::PagePool::new(8);
+        let mut a = DecodeState::default();
+        a.attach_pool(&pool, false);
+        algo.decode_begin(&mut a, max_len, d);
+        algo.decode_load_prefix(&mut a, &q.data, &k.data, &v.data);
+        assert!(a.n_coarse >= 2, "want a multi-level pyramid");
+        let live_before = pool.stats().live;
+        assert!(live_before > 0);
+        let entry = a.snapshot_shared();
+        assert_eq!(pool.stats().live, live_before, "sharing must allocate nothing");
+        let mut b = DecodeState::default();
+        b.attach_pool(&pool, false);
+        algo.decode_begin(&mut b, max_len, d);
+        entry.clone_shared_into(&mut b);
+        assert_eq!(pool.stats().live, live_before, "clone must allocate nothing");
+        assert_eq!(b.len, l);
+        let steps = 9usize;
+        let q2 = rand_mat(&mut rng, steps, d);
+        let k2 = rand_mat(&mut rng, steps, d);
+        let v2 = rand_mat(&mut rng, steps, d);
+        let mut oa = vec![0.0f32; d];
+        let mut ob = vec![0.0f32; d];
+        for t in 0..steps {
+            algo.decode_step(&mut a, q2.row(t), k2.row(t), v2.row(t), true, &mut oa);
+            algo.decode_step(&mut b, q2.row(t), k2.row(t), v2.row(t), true, &mut ob);
+            assert_eq!(oa, ob, "shared-prefix step {t} diverged");
+        }
+        // both sessions privatised their boundary/tail pages, but the
+        // completed interior pages are still shared with the entry
+        let grown = pool.stats().live - live_before;
+        assert!(grown > 0, "continuations must have faulted private pages");
+        assert!(
+            grown < live_before,
+            "only boundary pages may copy: {grown} new vs {live_before} shared"
+        );
+        // dropping the cache entry releases only its now-unshared refs
+        drop(entry);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.stats().live, 0, "all pages must return to the pool");
+    }
+
+    #[test]
     fn decode_overlap_mask_ablation_tracks_forward() {
         let mut rng = Rng::new(23);
         let (l, d, nr) = (40usize, 4usize, 4usize);

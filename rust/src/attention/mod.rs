@@ -117,11 +117,14 @@ pub trait Attention {
     /// tokens keep filling, and `lowrank`'s projection /
     /// `blocksparse`'s random key sets depend on the total length.
     ///
-    /// The default implementation replays the cached full forward and
-    /// is therefore correct for every algorithm at O(forward) per step
+    /// The default implementation replays the cached full forward over
+    /// the paged history (materialised into dense scratch via a paged
+    /// span iterator — same cost class as the recompute itself) and is
+    /// therefore correct for every algorithm at O(forward) per step
     /// (it allocates inside `forward`); `full`, `local` and `h1d`
     /// override it with allocation-free incremental updates costing
-    /// O(L·d), O(w·d) and O(Nr·d·log L) respectively.
+    /// O(L·d), O(w·d) and O(Nr·d·log L) respectively, reading the
+    /// paged caches in place.
     fn decode_step(
         &self,
         state: &mut DecodeState,
@@ -133,7 +136,8 @@ pub trait Attention {
     ) {
         state.append(q_row, k_row, v_row);
         debug_assert!(state.cache_q, "default decode_step needs the Q cache");
-        let z = self.forward(&state.q, &state.k, &state.v, causal);
+        let (q, k, v) = state.recompute_history();
+        let z = self.forward(q, k, v, causal);
         out.copy_from_slice(z.row(z.rows - 1));
     }
 
@@ -336,7 +340,7 @@ mod tests {
             }
         }
         assert_eq!(st.len, l);
-        assert_eq!(st.q.rows, l, "default path caches the Q history");
+        assert_eq!(st.q.rows(), l, "default path caches the Q history");
     }
 
     #[test]

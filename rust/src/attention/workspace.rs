@@ -21,12 +21,32 @@
 //! appends to — plus, for hierarchical attention, the incrementally
 //! maintained coarsening pyramid (per-level Q/K/V partial sums and
 //! token counts), so appending one token touches O(log L) pyramid rows
-//! instead of rebuilding the tree. All buffers are capacity-reserved up
-//! front by [`DecodeState::begin`], so every append and step after that
-//! is allocation-free ([`DecodeState::buffer_snapshot`] makes that
-//! testable, mirroring [`AttnWorkspace::capacity_snapshot`]).
+//! instead of rebuilding the tree.
+//!
+//! Since the paged-KV refactor, the fine K/V (and optional Q) caches
+//! and every pyramid level store their rows in
+//! [`crate::tensor::PagedRows`] — fixed-size pool pages instead of one
+//! contiguous arena. A state runs in one of two modes, chosen by
+//! [`DecodeState::attach_pool`]:
+//!
+//! * **reserved** (the default, and the single-session
+//!   `DecodeWorkspace` mode): [`DecodeState::begin`] pre-faults pages
+//!   for the whole `max_len` horizon, so every append and step after
+//!   `begin` is allocation-free ([`DecodeState::buffer_snapshot`]
+//!   makes that testable, mirroring
+//!   [`AttnWorkspace::capacity_snapshot`]);
+//! * **demand-grown** (the serve-engine mode): pages fault in only as
+//!   the context actually grows, return to the shared pool at retire,
+//!   and may arrive pre-shared from a prompt prefix cache
+//!   ([`DecodeState::clone_shared_into`] — shared pages copy-on-write
+//!   on first mutation, so only the boundary partials privatise while
+//!   fully-completed pages stay shared).
+//!
+//! Either way the *values* the decode kernels read are identical, so
+//! the paged refactor is invisible to the parity contracts.
 
-use crate::tensor::{Batch, Mat, Qkv};
+use crate::tensor::paged::DEFAULT_PAGE_LEN;
+use crate::tensor::{Batch, Mat, PagePool, PagedRows, Qkv};
 use crate::util::threadpool::ThreadPool;
 
 /// One attention level's partial result at that level's resolution
@@ -142,23 +162,37 @@ pub struct DecodeLevel {
     /// `[lc, d]` fine-Q partial sums (read as the coarse query after a
     /// `0.5^level` rescale — the paper's Eq. 25 average, accumulated
     /// incrementally).
-    pub qsum: Mat,
+    pub qsum: PagedRows,
     /// `[lc, d]` K partial sums (read as the masked average
     /// `ksum / count`, Eq. 26).
-    pub ksum: Mat,
+    pub ksum: PagedRows,
     /// `[lc, d]` V partial sums (Eq. 27).
-    pub vsum: Mat,
-    /// `[lc]` real-token counts per coarse row.
+    pub vsum: PagedRows,
+    /// `[lc]` real-token counts per coarse row (kept dense: a few
+    /// floats per page of fine tokens, not worth paging).
     pub count: Vec<f32>,
 }
 
 impl DecodeLevel {
-    fn begin(&mut self, d: usize, rows_cap: usize) {
-        self.qsum.reset_appendable(d, rows_cap);
-        self.ksum.reset_appendable(d, rows_cap);
-        self.vsum.reset_appendable(d, rows_cap);
+    fn begin(&mut self, pool: &PagePool, d: usize, rows_cap: usize, reserve: bool) {
+        if reserve {
+            self.qsum.begin_reserved(pool, d, rows_cap);
+            self.ksum.begin_reserved(pool, d, rows_cap);
+            self.vsum.begin_reserved(pool, d, rows_cap);
+        } else {
+            self.qsum.begin_released(pool, d);
+            self.ksum.begin_released(pool, d);
+            self.vsum.begin_released(pool, d);
+        }
         self.count.clear();
         self.count.reserve(rows_cap);
+    }
+
+    fn release_pages(&mut self) {
+        self.qsum.release_all();
+        self.ksum.release_all();
+        self.vsum.release_all();
+        self.count.clear();
     }
 }
 
@@ -179,16 +213,18 @@ pub struct DecodeState {
     pub cache_q: bool,
     /// Coarse pyramid levels maintained (0 for non-hierarchical).
     pub n_coarse: usize,
-    /// Context capacity reserved by [`DecodeState::begin`]; appending
+    /// Context horizon declared to [`DecodeState::begin`]; appending
     /// beyond it is rejected (for `h1d` the pyramid depth is frozen at
     /// `begin` time, so overrunning would be silently wrong, not slow).
+    /// In reserved mode pages for the whole horizon are pre-faulted;
+    /// in demand-grown mode it is only the append bound.
     pub max_len: usize,
     /// `[len, d]` cached queries (only if `cache_q`).
-    pub q: Mat,
+    pub q: PagedRows,
     /// `[len, d]` cached keys.
-    pub k: Mat,
+    pub k: PagedRows,
     /// `[len, d]` cached values.
-    pub v: Mat,
+    pub v: PagedRows,
     /// Coarsening pyramid; entry `i` holds level `i + 1` (level 0 is
     /// `k`/`v` themselves). Stale entries beyond `n_coarse` are kept
     /// for their allocations, never read.
@@ -201,27 +237,53 @@ pub struct DecodeState {
     pub dbuf: Vec<f32>,
     /// Per-step `[n_levels, d]` per-level value accumulators.
     pub ylev: Mat,
+    /// Page pool the caches draw from: a private per-state pool unless
+    /// [`DecodeState::attach_pool`] connected a shared one.
+    pool: Option<PagePool>,
+    /// Demand-grown mode (serve); false = reserve the full horizon at
+    /// `begin` (single-session decode, the zero-alloc contract).
+    on_demand: bool,
+    /// Dense history scratch for the cached-recompute decode fallback
+    /// (`lowrank`/`blocksparse`): [`DecodeState::recompute_history`]
+    /// materialises the paged caches here each step.
+    rq: Mat,
+    rk: Mat,
+    rv: Mat,
 }
 
 impl DecodeState {
-    /// Reset to an empty context and reserve every buffer for up to
-    /// `max_len` tokens of head width `d`, so subsequent appends and
-    /// steps allocate nothing. Grow-only: a smaller `begin` keeps a
-    /// previously grown arena.
+    /// Reset to an empty context for up to `max_len` tokens of head
+    /// width `d`. In reserved mode (the default) every page and scratch
+    /// buffer is pre-faulted so subsequent appends and steps allocate
+    /// nothing; grow-only, so a smaller `begin` keeps a previously
+    /// grown arena. In demand-grown mode (see
+    /// [`DecodeState::attach_pool`]) pages are returned to the shared
+    /// pool instead and fault back in as the context grows.
     pub fn begin(&mut self, max_len: usize, d: usize, cache_q: bool, n_coarse: usize) {
+        if self.pool.is_none() {
+            self.pool = Some(PagePool::new(DEFAULT_PAGE_LEN));
+        }
+        let pool = self.pool.clone().expect("pool ensured above");
+        let reserve = !self.on_demand;
         self.len = 0;
         self.d = d;
         self.cache_q = cache_q;
         self.n_coarse = n_coarse;
         self.max_len = max_len;
-        self.k.reset_appendable(d, max_len);
-        self.v.reset_appendable(d, max_len);
-        self.q.reset_appendable(d, if cache_q { max_len } else { 0 });
+        if reserve {
+            self.k.begin_reserved(&pool, d, max_len);
+            self.v.begin_reserved(&pool, d, max_len);
+            self.q.begin_reserved(&pool, d, if cache_q { max_len } else { 0 });
+        } else {
+            self.k.begin_released(&pool, d);
+            self.v.begin_released(&pool, d);
+            self.q.begin_released(&pool, d);
+        }
         while self.levels.len() < n_coarse {
             self.levels.push(DecodeLevel::default());
         }
         for (i, lv) in self.levels.iter_mut().enumerate().take(n_coarse) {
-            lv.begin(d, (max_len >> (i + 1)) + 1);
+            lv.begin(&pool, d, (max_len >> (i + 1)) + 1, reserve);
         }
         self.wbuf.clear();
         self.wbuf.reserve(max_len);
@@ -230,11 +292,154 @@ impl DecodeState {
         self.dbuf.clear();
         self.dbuf.reserve(n_coarse + 1);
         self.ylev.reset(n_coarse + 1, d);
+        if cache_q && reserve {
+            // the recompute fallback materialises the whole history per
+            // step; reserving keeps those steps allocation-free too
+            self.rq.reset_appendable(d, max_len);
+            self.rk.reset_appendable(d, max_len);
+            self.rv.reset_appendable(d, max_len);
+        }
+    }
+
+    /// Draw cache pages from `pool` instead of a private one. With
+    /// `reserve` the full horizon is still pre-faulted at `begin` (the
+    /// contiguous-reservation admission mode); without it pages fault
+    /// in on demand and [`DecodeState::release_pages`] frees them for
+    /// other sessions — the serve engine's paged mode.
+    pub fn attach_pool(&mut self, pool: &PagePool, reserve: bool) {
+        let same = self.pool.as_ref().map(|p| p.ptr_eq(pool)).unwrap_or(false);
+        if !same {
+            // hand any held pages back to the pool that issued them
+            self.release_pages();
+            self.pool = Some(pool.clone());
+        }
+        self.on_demand = !reserve;
+    }
+
+    /// The pool this state draws from (None before the first `begin`).
+    pub fn pool(&self) -> Option<&PagePool> {
+        self.pool.as_ref()
+    }
+
+    /// Flag the fine-K stream as the budgeted "context tokens" stream
+    /// (one designated stream per serve session; see
+    /// [`crate::tensor::PagePool`] accounting).
+    pub fn mark_ctx_stream(&mut self) {
+        self.k.set_budgeted(true);
+    }
+
+    /// Budgeted-page cost of staging the next append on the context
+    /// stream (0 or 1) — the serve scheduler's per-round growth check.
+    pub fn ctx_stage_cost(&self) -> usize {
+        self.k.stage_cost()
+    }
+
+    /// Pre-fault every page the next [`DecodeState::append`] will touch
+    /// (fresh tail pages; copy-on-write of shared boundary pages), so
+    /// the append itself runs lock-free on a worker thread.
+    pub fn stage_append(&mut self) {
+        debug_assert!(self.len < self.max_len, "staging past the horizon");
+        self.k.stage_append();
+        self.v.stage_append();
+        if self.cache_q {
+            self.q.stage_append();
+        }
+        let t = self.len;
+        for (i, lv) in self.levels.iter_mut().enumerate().take(self.n_coarse) {
+            let idx = t >> (i + 1);
+            if idx == lv.count.len() {
+                lv.qsum.stage_append();
+                lv.ksum.stage_append();
+                lv.vsum.stage_append();
+            } else {
+                lv.qsum.stage_update(idx);
+                lv.ksum.stage_update(idx);
+                lv.vsum.stage_update(idx);
+            }
+        }
+    }
+
+    /// Return every cache page to the pool and truncate to an empty
+    /// context (session retire/evict). Page-table and scratch
+    /// capacities are kept, so a later re-admission re-faults without
+    /// growing any non-page buffer.
+    pub fn release_pages(&mut self) {
+        self.len = 0;
+        self.k.release_all();
+        self.v.release_all();
+        self.q.release_all();
+        for lv in &mut self.levels {
+            lv.release_pages();
+        }
+    }
+
+    /// Share this state's cache pages into `dst` read-only (refcount
+    /// bumps, no copies) — the prefix-cache hit path. `dst` must have
+    /// been `begin`-configured with the same `d`/`cache_q` and a
+    /// pyramid no deeper than this state maintains; `dst` keeps its own
+    /// horizon and pyramid depth, taking the first `dst.n_coarse`
+    /// levels. Mutations after the clone copy-on-write, so only pages
+    /// holding still-accumulating boundary partials privatise.
+    pub fn clone_shared_into(&self, dst: &mut DecodeState) {
+        debug_assert_eq!(self.d, dst.d, "head width mismatch");
+        debug_assert_eq!(self.cache_q, dst.cache_q, "cache_q mismatch");
+        debug_assert!(
+            dst.n_coarse <= self.n_coarse,
+            "cannot share a shallower pyramid into a deeper state"
+        );
+        debug_assert!(self.len <= dst.max_len, "shared prefix exceeds dst horizon");
+        dst.len = self.len;
+        self.k.clone_shared_into(&mut dst.k);
+        self.v.clone_shared_into(&mut dst.v);
+        if self.cache_q {
+            self.q.clone_shared_into(&mut dst.q);
+        }
+        let nl = dst.n_coarse;
+        for (dlv, slv) in dst.levels.iter_mut().zip(&self.levels).take(nl) {
+            slv.qsum.clone_shared_into(&mut dlv.qsum);
+            slv.ksum.clone_shared_into(&mut dlv.ksum);
+            slv.vsum.clone_shared_into(&mut dlv.vsum);
+            dlv.count.clear();
+            dlv.count.extend_from_slice(&slv.count);
+        }
+    }
+
+    /// Detached copy of this state sharing the same pages — what the
+    /// serve prefix cache stores per `(layer, head)` right after a
+    /// prefill (cache entries are never stepped, so the per-step
+    /// scratch stays empty).
+    pub fn snapshot_shared(&self) -> DecodeState {
+        let mut dst = DecodeState {
+            d: self.d,
+            cache_q: self.cache_q,
+            n_coarse: self.n_coarse,
+            max_len: self.max_len,
+            pool: self.pool.clone(),
+            on_demand: self.on_demand,
+            ..DecodeState::default()
+        };
+        while dst.levels.len() < self.n_coarse {
+            dst.levels.push(DecodeLevel::default());
+        }
+        self.clone_shared_into(&mut dst);
+        dst
+    }
+
+    /// Materialise the cached q/k/v history into dense matrices — the
+    /// cached-recompute decode fallback's input (requires `cache_q`).
+    pub(crate) fn recompute_history(&mut self) -> (&Mat, &Mat, &Mat) {
+        debug_assert!(self.cache_q, "recompute history needs the Q cache");
+        self.q.copy_to_mat(&mut self.rq);
+        self.k.copy_to_mat(&mut self.rk);
+        self.v.copy_to_mat(&mut self.rv);
+        (&self.rq, &self.rk, &self.rv)
     }
 
     /// Append one token's per-head rows: extend the fine K/V (and,
     /// when `cache_q`, Q) caches and fold the token into every coarse
-    /// pyramid level — O(`n_coarse`) row updates of O(d) each.
+    /// pyramid level — O(`n_coarse`) row updates of O(d) each. Page
+    /// faults and copy-on-write happen inside the paged buffers unless
+    /// [`DecodeState::stage_append`] pre-faulted them.
     pub fn append(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) {
         let t = self.len;
         assert!(
@@ -272,20 +477,24 @@ impl DecodeState {
     }
 
     /// `(pointer, capacity)` of every heap buffer this state owns —
-    /// stable across `append`/`decode_step` calls within the reserved
+    /// scratch, page tables and the pages they currently reference.
+    /// Stable across `append`/`decode_step` calls within a reserved
     /// `max_len`, the zero-alloc invariant of the decode path.
     pub fn buffer_snapshot(&self) -> Vec<(usize, usize)> {
-        let mut out: Vec<(usize, usize)> = [&self.q, &self.k, &self.v, &self.ylev]
-            .iter()
-            .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
-            .collect();
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for m in [&self.ylev, &self.rq, &self.rk, &self.rv] {
+            out.push((m.data.as_ptr() as usize, m.data.capacity()));
+        }
         for v in [&self.wbuf, &self.mbuf, &self.dbuf] {
             out.push((v.as_ptr() as usize, v.capacity()));
         }
+        for pr in [&self.q, &self.k, &self.v] {
+            pr.buffer_snapshot_into(&mut out);
+        }
         out.push((self.levels.as_ptr() as usize, self.levels.capacity()));
         for lv in &self.levels {
-            for m in [&lv.qsum, &lv.ksum, &lv.vsum] {
-                out.push((m.data.as_ptr() as usize, m.data.capacity()));
+            for pr in [&lv.qsum, &lv.ksum, &lv.vsum] {
+                pr.buffer_snapshot_into(&mut out);
             }
             out.push((lv.count.as_ptr() as usize, lv.count.capacity()));
         }
@@ -299,11 +508,15 @@ impl DecodeState {
 /// returning `(row max, exp-weight sum)`. The shared kernel behind the
 /// `full`, `local` and `h1d` level-0 `decode_step` paths — callers
 /// either normalise `y` by `1/den` (single-level softmax) or feed
-/// `(m, den, y)` into a multi-level recombination.
+/// `(m, den, y)` into a multi-level recombination. Iterates the paged
+/// caches by page-contiguous span, so the inner loops run over dense
+/// slices exactly as they did over the contiguous arena (and in the
+/// same order — results are bitwise unchanged).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_fine_rows(
     q_row: &[f32],
-    k: &Mat,
-    v: &Mat,
+    k: &PagedRows,
+    v: &PagedRows,
     lo: usize,
     hi: usize,
     scale: f32,
@@ -313,28 +526,32 @@ pub(crate) fn attend_fine_rows(
     let d = q_row.len();
     wbuf.clear();
     let mut m = f32::NEG_INFINITY;
-    for j in lo..=hi {
-        let krow = k.row(j);
-        let mut dot = 0.0f32;
-        for i in 0..d {
-            dot += q_row[i] * krow[i];
+    k.spans(lo, hi, |chunk| {
+        for krow in chunk.chunks_exact(d) {
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += q_row[i] * krow[i];
+            }
+            let sc = dot * scale;
+            wbuf.push(sc);
+            if sc > m {
+                m = sc;
+            }
         }
-        let sc = dot * scale;
-        wbuf.push(sc);
-        if sc > m {
-            m = sc;
-        }
-    }
+    });
     let mut den = 0.0f32;
     y.fill(0.0);
-    for (sc, j) in wbuf.iter().zip(lo..=hi) {
-        let w = (sc - m).exp();
-        den += w;
-        let vrow = v.row(j);
-        for i in 0..d {
-            y[i] += w * vrow[i];
+    let mut wi = 0usize;
+    v.spans(lo, hi, |chunk| {
+        for vrow in chunk.chunks_exact(d) {
+            let w = (wbuf[wi] - m).exp();
+            wi += 1;
+            den += w;
+            for i in 0..d {
+                y[i] += w * vrow[i];
+            }
         }
-    }
+    });
     (m, den)
 }
 
@@ -590,8 +807,8 @@ mod tests {
         for r in &rows {
             st.append(r, r, r);
         }
-        assert_eq!(st.q.rows, 0, "cache_q off: no fine q rows kept");
-        assert_eq!(st.k.rows, l);
+        assert_eq!(st.q.rows(), 0, "cache_q off: no fine q rows kept");
+        assert_eq!(st.k.rows(), l);
         for level in 1..=3usize {
             let lv = &st.levels[level - 1];
             let span = 1usize << level;

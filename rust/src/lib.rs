@@ -20,8 +20,13 @@
 //!     (`Model::prefill` → [`model::DecodeSession`] `step`, per-token
 //!     generation out of [`attention::DecodeState`] caches — h1d pays
 //!     O(Nr·d·log L) per token where full attention pays O(L·d)), the
-//!     `tensor` substrate, the synthetic `data` generators and the
-//!     `hmatrix` numerical-analysis machinery;
+//!     **paged KV-cache memory subsystem** ([`tensor::paged`]:
+//!     fixed-size refcounted pool pages with copy-on-write sharing —
+//!     `model::serve` admits by free-page accounting instead of
+//!     contiguous reservation and shares identical prompts across
+//!     sessions through a prefix cache), the `tensor` substrate, the
+//!     synthetic `data` generators and the `hmatrix`
+//!     numerical-analysis machinery;
 //!   - the **`xla` feature tier**: PJRT `runtime`, training/serving
 //!     `coordinator` and the CLI's artifact-backed subcommands. These
 //!     need the vendored `xla` bindings, so they are compiled out of

@@ -19,13 +19,19 @@
 //!                             full attention grows with context
 //!   serve-bench               continuous-batching throughput: a
 //!                             closed-loop synthetic workload
-//!                             (--requests, --prompt-mix, --gen) driven
-//!                             through `model::serve`'s scheduler at
+//!                             (--requests, --prompt-mix, --gen; or
+//!                             --shared-prompt N for one shared
+//!                             N-token prompt) driven through
+//!                             `model::serve`'s scheduler at
 //!                             --max-batch / --max-tokens budgets and
 //!                             compared against the sequential
 //!                             one-session-at-a-time loop (aggregate
 //!                             tokens/s, p50/p95 per-token latency,
-//!                             speedup)
+//!                             speedup). KV memory is paged
+//!                             (--page-len, prefix sharing via
+//!                             --prefix-cache); --reserve restores the
+//!                             contiguous-reservation baseline
+//!                             admission
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
@@ -344,6 +350,10 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
     let gen = args.usize_or("gen", 16);
     let temperature = args.f64_or("temperature", 0.0) as f32;
     let threads = args.usize_or("threads", 0); // 0 = host parallelism
+    let page_len = args.usize_or("page-len", 16);
+    let reserve = args.bool("reserve"); // contiguous-reservation baseline
+    let prefix_cache = args.usize_or("prefix-cache", 8);
+    let shared_prompt = args.usize_or("shared-prompt", 0); // 0 = mixed prompts
     let mix: Vec<usize> = args
         .str_or("prompt-mix", "16,32,48")
         .split(',')
@@ -363,6 +373,12 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
             cfg.max_len
         ));
     }
+    if shared_prompt > 0 && shared_prompt + gen > cfg.max_len {
+        return Err(format!(
+            "--shared-prompt {shared_prompt} + gen {gen} exceeds max_len {} (raise --max_len)",
+            cfg.max_len
+        ));
+    }
     let model = Arc::new(Model::new(cfg, seed)?);
     let cfg = &model.cfg;
     println!(
@@ -375,13 +391,31 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         if cfg.causal { " (causal)" } else { "" },
         model.n_params()
     );
-    let requests =
-        synthetic_workload(n_requests, &mix, gen, cfg.vocab_size, temperature, seed ^ 0x5EB);
-    println!(
-        "workload: {n_requests} requests, prompt mix {mix:?}, {gen} tokens each \
-         ({} total to generate)\n",
-        n_requests * gen
-    );
+    let requests = if shared_prompt > 0 {
+        htransformer::model::shared_prefix_workload(
+            n_requests,
+            shared_prompt,
+            gen,
+            cfg.vocab_size,
+            temperature,
+            seed ^ 0x5EB,
+        )
+    } else {
+        synthetic_workload(n_requests, &mix, gen, cfg.vocab_size, temperature, seed ^ 0x5EB)
+    };
+    if shared_prompt > 0 {
+        println!(
+            "workload: {n_requests} requests sharing one {shared_prompt}-token prompt, \
+             {gen} tokens each ({} total to generate)\n",
+            n_requests * gen
+        );
+    } else {
+        println!(
+            "workload: {n_requests} requests, prompt mix {mix:?}, {gen} tokens each \
+             ({} total to generate)\n",
+            n_requests * gen
+        );
+    }
 
     let seq = run_sequential(&model, &requests)?;
     let workers = if threads == 0 {
@@ -392,6 +426,9 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
     let scfg = ServeConfig {
         max_batch,
         max_tokens: if max_tokens == 0 { usize::MAX } else { max_tokens },
+        page_len,
+        reserve,
+        prefix_cache,
         threads: workers,
     };
     let mut engine = ServeEngine::new(Arc::clone(&model), scfg)?;
@@ -421,6 +458,17 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
          (max_batch {max_batch}, {workers} worker thread(s), peak active {})",
         batched.stats.tokens_per_sec() / seq.stats.tokens_per_sec().max(1e-9),
         batched.stats.peak_active
+    );
+    println!(
+        "paged KV ({}): page_len {page_len}, peak {} pages / {} ctx tokens, \
+         prefix-cache hit rate {:.0}% ({}/{} admissions), {} eviction(s)",
+        if reserve { "reserved baseline" } else { "demand-grown" },
+        batched.stats.peak_pages,
+        batched.stats.peak_ctx_tokens,
+        100.0 * batched.stats.prefix_hit_rate(),
+        batched.stats.prefix_hits,
+        batched.stats.prefix_lookups,
+        batched.stats.evictions
     );
     Ok(())
 }

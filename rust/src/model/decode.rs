@@ -40,16 +40,25 @@
 use super::{Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
 use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
-use crate::tensor::Mat;
+use crate::tensor::paged::DEFAULT_PAGE_LEN;
+use crate::tensor::{Mat, PagePool};
 use crate::util::Rng;
 
 /// Owns everything a decode session needs besides the model: the
 /// full-forward arena the prefill pass runs in, one [`DecodeState`] per
-/// `(layer, head)` pair, and the `[1, ·]` step-path activation buffers.
+/// `(layer, head)` pair (all drawing pages from one private
+/// [`PagePool`], fully reserved at prefill so steps stay
+/// allocation-free), and the `[1, ·]` step-path activation buffers.
 /// Reusable across sessions (grow-only, like every workspace here).
 pub struct DecodeWorkspace {
     /// Batched-forward arena for the prefill pass.
     prefill: ModelWorkspace,
+    /// Page pool backing every state's KV cache. Private to this
+    /// workspace and reserved up front (`reserve = true` in
+    /// [`DecodeState::attach_pool`]) — the single-session mode; the
+    /// serve engine shares one demand-grown pool across sessions
+    /// instead.
+    pool: PagePool,
     /// KV caches, `layer * n_heads + head` order.
     states: Vec<DecodeState>,
     /// `[1, D]` residual stream for the current position.
@@ -77,6 +86,7 @@ impl DecodeWorkspace {
     pub fn new(threads: usize) -> Self {
         Self {
             prefill: ModelWorkspace::new(threads),
+            pool: PagePool::new(DEFAULT_PAGE_LEN),
             states: Vec::new(),
             x: Mat::default(),
             hn: Mat::default(),
@@ -124,6 +134,7 @@ impl DecodeWorkspace {
         for st in &self.states {
             out.extend(st.buffer_snapshot());
         }
+        out.extend(self.pool.capacity_snapshot());
         out.extend(self.prefill.capacity_snapshot());
         out
     }
@@ -170,6 +181,7 @@ impl Model {
             ws.states.push(DecodeState::default());
         }
         for st in &mut ws.states[..n_states] {
+            st.attach_pool(&ws.pool, true);
             self.algo.decode_begin(st, cfg.max_len, cfg.d_head());
         }
 

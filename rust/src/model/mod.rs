@@ -38,8 +38,8 @@ pub mod serve;
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
 pub use serve::{
-    run_sequential, synthetic_workload, Completion, Request, ServeConfig, ServeEngine,
-    ServeReport, ServeStats,
+    run_sequential, shared_prefix_workload, synthetic_workload, Completion, Request, ServeConfig,
+    ServeEngine, ServeReport, ServeStats,
 };
 
 use crate::attention::{Attention, AttnWorkspace};

@@ -4,62 +4,103 @@
 //! interleave prefill and decode across many concurrent generation
 //! streams, not run one `DecodeSession` at a time.
 //!
+//! ## Paged KV memory
+//!
+//! Session KV state lives in fixed-size pool pages
+//! ([`crate::tensor::PagePool`] / [`crate::tensor::PagedRows`]), not
+//! per-session contiguous arenas. That changes the two things that used
+//! to bound concurrency:
+//!
+//! * **Admission is page-accounted, not reservation-accounted.** In the
+//!   default demand-grown mode a session is charged only for the
+//!   context pages it has actually faulted (its layer-0/head-0 fine-K
+//!   stream, ×`page_len`, is the designated "context tokens" measure),
+//!   so `max_tokens` no longer pre-pays `max_new` tokens that may never
+//!   be generated. Growth happens one page at a time per decode round;
+//!   when the pool can't cover a round, the engine first drops
+//!   prefix-cache entries (LRU), then evicts the **youngest** active
+//!   session(s) and requeues their requests at the queue head — a
+//!   deterministic out-of-pages policy that preserves FIFO order and,
+//!   because every request re-runs from its own seeded RNG stream,
+//!   never changes any request's tokens. `reserve = true` restores the
+//!   PR-4 contiguous-reservation semantics (the baseline the serve
+//!   bench compares against): the full `prompt + max_new` horizon is
+//!   pre-faulted and charged at admission.
+//! * **Identical prompts share pages.** A copy-on-write prefix cache
+//!   keyed on prompt-token hashes keeps the per-`(layer, head)` page
+//!   tables of recent prefills; a same-prompt admission clones them
+//!   (refcount bumps — no page copies, no forward pass), making the
+//!   shared-system-prompt workload O(1)-per-duplicate at prefill and
+//!   counting the shared pages **once** against `max_tokens`. Shared
+//!   pages are immutable: a session's first mutation of a boundary page
+//!   (appending into a partially-filled tail, accumulating an h1d
+//!   pyramid partial sum) copies it first, so only pages holding
+//!   still-accumulating partials privatise — h1d pyramid pages stay
+//!   shared exactly for fully-completed coarse blocks. Sharing is
+//!   whole-prompt (a hit requires the full token sequence to match):
+//!   prefill outputs are a pure function of the prompt, so the cloned
+//!   state is bitwise what a fresh prefill would produce for **every**
+//!   algorithm, including the non-causal and length-dependent ones.
+//!
 //! ## Scheduler state machine
 //!
 //! A request moves `pending → active → completed` through
 //! [`ServeEngine::tick`], which runs one scheduling round:
 //!
 //!  1. **Admission** — while the head of the FIFO queue fits both
-//!     budgets (`max_batch` concurrent sessions, `max_tokens` summed
-//!     `prompt + max_new` context reservation across active sessions),
-//!     pop it, take a recycled slot from the session pool (or grow a
-//!     fresh one), run **one batched prefill forward** over its prompt
-//!     through the shared `ModelWorkspace` — the `run_trunk` observer
-//!     bulk-loads every `(layer, head)` [`DecodeState`] — and sample
-//!     its first token from the prefill logits.
-//!  2. **Decode round** — every active session advances by one token
+//!     budgets (`max_batch` concurrent sessions, `max_tokens` context
+//!     pages), pop it, take a recycled slot from the session pool, and
+//!     either clone the prefix-cache entry (hit) or run **one batched
+//!     prefill forward** through the shared `ModelWorkspace` — the
+//!     `run_trunk` observer bulk-loads every `(layer, head)`
+//!     [`DecodeState`] — then sample the first token.
+//!  2. **Growth staging** (demand-grown mode) — pre-fault every page
+//!     this round's appends will touch (evicting as described above if
+//!     the budget is exhausted), so worker-thread appends never take
+//!     the pool lock.
+//!  3. **Decode round** — every active session advances by one token
 //!     through a ragged batched step: embeddings for all `n` sessions
 //!     are assembled into `[n, D]` rows, each layer runs its LayerNorm
-//!     / Q/K/V / output / FFN matmuls **once for the whole batch**
-//!     (amortising every weight matrix read over `n` rows — the
-//!     continuous-batching throughput win; a lone session re-streams
-//!     the full parameter set per token), and attention goes through
-//!     [`Attention::decode_step_batch`] — one call per layer, session
-//!     `i`'s per-head states advancing against row `i`. With
+//!     / Q/K/V / output / FFN matmuls **once for the whole batch**, and
+//!     attention goes through [`Attention::decode_step_batch`]. With
 //!     `threads > 1` the active set is split into contiguous chunks
-//!     that run on the crate thread pool (slots and step buffers travel
-//!     through `ThreadPool::map` by value, the workspace idiom).
-//!  3. **Completion / eviction** — sessions that reached their
-//!     `max_new` emit a [`Completion`] and their slot (KV arena, token
-//!     and logits buffers included) returns to the pool for the next
-//!     admission; `prompt + max_new`-shaped re-admissions re-use the
-//!     arena without growing it.
+//!     that run on the crate thread pool.
+//!  4. **Completion / eviction** — sessions that reached their
+//!     `max_new` emit a [`Completion`]; their pages return to the pool
+//!     and their slot (page tables, token and logits buffers included)
+//!     recycles for the next admission.
 //!
 //! ## Ragged-batch layout
 //!
 //! Active sessions sit at different context lengths; nothing is padded.
 //! Session `i` contributes row `i` of every `[n, ·]` activation matrix,
-//! and its per-`(layer, head)` `DecodeState`s advance independently —
-//! `decode_step_batch` receives the states session-major, head `h` of
-//! the `[n, H·d]` projection rows at columns `h*d..(h+1)*d`. Because
-//! every per-row computation is independent and loop orders match the
-//! single-session step path, batched logits are **bitwise** what a lone
-//! `DecodeSession` produces — `tests/serve.rs` pins batched-vs-
-//! sequential parity at 1e-5 and determinism under arrival-order
-//! permutations.
+//! and its per-`(layer, head)` `DecodeState`s advance independently.
+//! Because every per-row computation is independent and loop orders
+//! match the single-session step path (page tables change the layout of
+//! the caches, never the values or read order), batched logits are
+//! **bitwise** what a lone `DecodeSession` produces — `tests/serve.rs`
+//! pins batched-vs-sequential parity at 1e-5 and determinism under
+//! arrival-order permutations.
 //!
 //! ## Budget knobs ([`ServeConfig`])
 //!
 //! * `max_batch` — concurrent-session cap (compute bound per round);
-//! * `max_tokens` — summed context reservation (`prompt + max_new`)
-//!   across active sessions (KV-memory bound; a request that could
-//!   never fit is rejected at [`ServeEngine::submit`]);
+//! * `max_tokens` — context-token budget: page-granular tokens of
+//!   fine-K context actually allocated across sessions and cache,
+//!   shared pages counted once (a request whose rounded-up
+//!   `prompt + max_new` could never fit is rejected at
+//!   [`ServeEngine::submit`]);
+//! * `page_len` — rows per KV page (power of two);
+//! * `reserve` — contiguous-reservation admission (the paged-off
+//!   baseline; disables the prefix cache);
+//! * `prefix_cache` — retained prompt-cache entries (0 disables);
 //! * `threads` — worker count for prefill head dispatch and chunked
 //!   decode rounds (`<= 1` runs on the calling thread).
 //!
-//! Entry points: `htx serve-bench` (closed-loop synthetic workload),
-//! `benches/serve.rs` (emits `BENCH_serve.json`, the CI perf
-//! trajectory), `examples/cpu_serve.rs`.
+//! Entry points: `htx serve-bench` (closed-loop synthetic workload,
+//! paged vs reserved), `benches/serve.rs` (emits `BENCH_serve.json`,
+//! the CI perf trajectory, including the shared-prefix paged points),
+//! `examples/cpu_serve.rs`.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -68,7 +109,9 @@ use std::time::Instant;
 use super::{sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
 use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
-use crate::tensor::Mat;
+use crate::tensor::paged::DEFAULT_PAGE_LEN;
+use crate::tensor::{Mat, PagePool, PoolStats};
+use crate::util::bench::{derive_seed, synthetic_prompt};
 use crate::util::Rng;
 
 /// Scheduler budgets; see the module docs.
@@ -76,9 +119,22 @@ use crate::util::Rng;
 pub struct ServeConfig {
     /// Maximum concurrently active sessions per round.
     pub max_batch: usize,
-    /// Maximum summed context reservation (`prompt + max_new`) across
-    /// active sessions — the KV-memory budget.
+    /// Context-token budget: page-granular fine-K tokens allocated
+    /// across active sessions and the prefix cache, shared pages
+    /// counted once. In `reserve` mode the whole `prompt + max_new`
+    /// horizon is charged at admission instead.
     pub max_tokens: usize,
+    /// Rows per KV page (power of two). Smaller pages share prompt
+    /// prefixes at finer granularity; larger pages amortise the page
+    /// hop in the decode inner loop.
+    pub page_len: usize,
+    /// Pre-fault and charge the full `prompt + max_new` horizon at
+    /// admission — the PR-4 contiguous-reservation baseline semantics
+    /// (no demand growth, no eviction, prefix cache disabled).
+    pub reserve: bool,
+    /// Retained prefix-cache entries (0 disables the cache; ignored in
+    /// `reserve` mode).
+    pub prefix_cache: usize,
     /// Worker threads for prefill and chunked decode rounds
     /// (`<= 1` means the calling thread).
     pub threads: usize,
@@ -89,6 +145,9 @@ impl Default for ServeConfig {
         Self {
             max_batch: 8,
             max_tokens: usize::MAX,
+            page_len: DEFAULT_PAGE_LEN,
+            reserve: false,
+            prefix_cache: 8,
             threads: 1,
         }
     }
@@ -97,7 +156,8 @@ impl Default for ServeConfig {
 /// One generation request: a prompt, a token budget and per-request
 /// sampling parameters (greedy at `temperature <= 0`, otherwise a
 /// seeded softmax draw — each request owns its RNG stream, so results
-/// are independent of batch composition).
+/// are independent of batch composition, and an evicted-and-requeued
+/// request regenerates exactly the same tokens).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -120,7 +180,8 @@ pub struct Completion {
     /// Round index at which the request was admitted / finished. Once
     /// admitted a session produces one token per round, so these mark
     /// *when* the request held a slot; queueing delay before admission
-    /// is visible engine-wide as rounds where `queued() > 0`.
+    /// is visible engine-wide as rounds where `queued() > 0`. An
+    /// evicted request reports its final (successful) admission.
     pub admitted_round: usize,
     pub finished_round: usize,
 }
@@ -132,7 +193,7 @@ pub struct ServeStats {
     pub rounds: usize,
     /// Tokens generated (prefill-sampled first tokens included).
     pub generated: usize,
-    /// Prompt tokens prefilled.
+    /// Prompt tokens prefilled (prefix-cache hits prefill nothing).
     pub prefill_tokens: usize,
     /// Total wall time across ticks (admission + rounds), seconds.
     pub wall_s: f64,
@@ -145,6 +206,18 @@ pub struct ServeStats {
     pub round_tokens: Vec<usize>,
     /// Peak concurrently active sessions.
     pub peak_active: usize,
+    /// Prefix-cache lookups / hits (identical-prompt admissions that
+    /// skipped the prefill forward entirely).
+    pub prefix_lookups: usize,
+    pub prefix_hits: usize,
+    /// Sessions evicted and requeued by the out-of-pages policy.
+    pub evictions: usize,
+    /// Peak page-granular context tokens allocated (shared pages
+    /// counted once) — what `max_tokens` bounds.
+    pub peak_ctx_tokens: usize,
+    /// Peak unique KV pages alive in the pool, all streams (fine K/V,
+    /// Q history, pyramid levels).
+    pub peak_pages: usize,
 }
 
 impl ServeStats {
@@ -190,6 +263,15 @@ impl ServeStats {
             self.round_tokens.iter().sum::<usize>() as f64 / self.round_tokens.len() as f64
         }
     }
+
+    /// Fraction of admissions served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
 }
 
 /// Completions plus run-level stats — returned by both
@@ -204,9 +286,9 @@ impl ServeReport {
     /// Generated tokens keyed and sorted by request id — the
     /// scheduling-invariant view two runs of one workload must agree
     /// on. The parity guard shared by `htx serve-bench`,
-    /// `benches/serve.rs` and the test suite: batching, chunking and
-    /// arrival order may change *when* a request runs, never *what* it
-    /// generates.
+    /// `benches/serve.rs` and the test suite: batching, chunking,
+    /// paging, prefix sharing and eviction may change *when* a request
+    /// runs, never *what* it generates.
     pub fn tokens_by_id(&self) -> Vec<(u64, &[u32])> {
         let mut out: Vec<(u64, &[u32])> = self
             .completions
@@ -218,14 +300,54 @@ impl ServeReport {
     }
 }
 
+/// FNV-1a over the prompt token ids — the prefix-cache key (full token
+/// equality is re-checked on every hit, so collisions cost a compare,
+/// never a wrong share).
+fn hash_tokens(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One retained prompt prefill: the per-`(layer, head)` states sharing
+/// the prompt's pages (never stepped — scratch stays empty) plus the
+/// final-position residual row for first-token logits on a hit.
+struct CacheEntry {
+    prompt: Vec<u32>,
+    hash: u64,
+    states: Vec<DecodeState>,
+    last_x: Vec<f32>,
+    /// Pyramid depth the states were prefilled at; a hit requires the
+    /// admitting session to need no deeper pyramid (shallower levels
+    /// are a prefix of deeper ones, so sharing down is exact).
+    n_coarse: usize,
+    /// Largest `prompt + max_new` horizon this entry is known to serve.
+    /// Pyramid depth is monotone in the horizon, so a request whose own
+    /// horizon fits inside it is **guaranteed** to satisfy the
+    /// `n_coarse` check above — the admission accounting predicts a
+    /// free hit only under this guarantee, keeping the context budget
+    /// sound. A deeper request is conservatively charged a full
+    /// prefill; if it still hits (its depth fits anyway — always for
+    /// the non-hierarchical algorithms), the hit **ratchets** this
+    /// horizon so later duplicates are predicted correctly, and if it
+    /// misses, its re-prefill replaces the entry at the deeper horizon.
+    horizon: usize,
+}
+
 /// One pooled session: the per-`(layer, head)` KV states plus request
-/// bookkeeping. Slots recycle through the engine's free pool — all
-/// buffers are grow-only, so same-shape re-admissions allocate nothing.
+/// bookkeeping. Slots recycle through the engine's free pool — page
+/// tables, token and logits buffers are grow-only, so same-shape
+/// re-admissions allocate nothing outside the page pool.
 struct SessionSlot {
     id: u64,
     prompt_len: usize,
     max_new: usize,
-    /// `prompt + max_new`, the admission-budget reservation.
+    /// `prompt + max_new`, the session's context horizon (pages are
+    /// faulted up to here on demand; fully pre-faulted in reserve
+    /// mode).
     budget: usize,
     temperature: f32,
     rng: Rng,
@@ -240,6 +362,9 @@ struct SessionSlot {
     logits: Vec<f32>,
     /// `layer * n_heads + head` order, like `DecodeWorkspace`.
     states: Vec<DecodeState>,
+    /// The original request, kept so an out-of-pages eviction can
+    /// requeue it verbatim.
+    request: Option<Request>,
     admitted_round: usize,
     done: bool,
 }
@@ -258,6 +383,7 @@ impl SessionSlot {
             tokens: Vec::new(),
             logits: Vec::new(),
             states: Vec::new(),
+            request: None,
             admitted_round: 0,
             done: false,
         }
@@ -305,7 +431,8 @@ impl StepBuf {
 /// `Attention::decode_step_batch`, then sample each session's next
 /// token from the batched logits. Row `i` is bitwise the
 /// single-session step path (loop orders match; every per-row op reads
-/// only row `i`).
+/// only row `i`; the paged caches were staged by the scheduler thread,
+/// so appends here are lock-free).
 ///
 /// KEEP IN SYNC with `DecodeSession::step` (decode.rs): this is that
 /// layer schedule at `[n, D]` instead of `[1, D]`, differing only in
@@ -394,6 +521,11 @@ fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
 pub struct ServeEngine {
     model: Arc<Model>,
     cfg: ServeConfig,
+    /// Shared KV page pool for every session's caches and the prefix
+    /// cache; its accounting drives admission and growth (module docs).
+    pool: PagePool,
+    /// Prefix cache, LRU at the front / MRU at the back.
+    cache: Vec<CacheEntry>,
     /// Shared batched-forward arena for admission prefills; its
     /// attention pool doubles as the decode-round worker pool (one set
     /// of OS threads per engine — prefill and rounds never overlap).
@@ -412,8 +544,6 @@ pub struct ServeEngine {
     bufs: Vec<StepBuf>,
     completions: Vec<Completion>,
     stats: ServeStats,
-    /// Summed `budget` of active sessions (admission accounting).
-    active_budget: usize,
 }
 
 impl ServeEngine {
@@ -424,8 +554,16 @@ impl ServeEngine {
         if cfg.max_tokens == 0 {
             return Err("max_tokens budget must be >= 1".to_string());
         }
+        if cfg.page_len == 0 || !cfg.page_len.is_power_of_two() {
+            return Err(format!(
+                "page_len must be a power of two >= 1 (got {})",
+                cfg.page_len
+            ));
+        }
         let threads = cfg.threads.max(1);
         Ok(ServeEngine {
+            pool: PagePool::new(cfg.page_len),
+            cache: Vec::new(),
             prefill: ModelWorkspace::new(threads),
             adm_x: Mat::default(),
             adm_hn: Mat::default(),
@@ -437,7 +575,6 @@ impl ServeEngine {
             bufs: (0..threads).map(|_| StepBuf::default()).collect(),
             completions: Vec::new(),
             stats: ServeStats::default(),
-            active_budget: 0,
             model,
             cfg,
         })
@@ -445,8 +582,9 @@ impl ServeEngine {
 
     /// Validate and enqueue a request (FIFO). Rejects requests that
     /// could never run: empty prompt, `max_new == 0`, token ids outside
-    /// the vocabulary, or a context reservation exceeding the model's
-    /// `max_len` or the engine's `max_tokens` budget.
+    /// the vocabulary, an overflowing or over-`max_len` context
+    /// horizon, or a page-rounded horizon exceeding the engine's
+    /// `max_tokens` budget even when the session runs alone.
     pub fn submit(&mut self, req: Request) -> Result<(), String> {
         self.validate(&req)?;
         self.pending.push_back(req);
@@ -462,7 +600,14 @@ impl ServeEngine {
         if req.max_new == 0 {
             return Err(format!("request {}: max_new must be >= 1", req.id));
         }
-        let budget = req.prompt.len() + req.max_new;
+        let budget = req.prompt.len().checked_add(req.max_new).ok_or_else(|| {
+            format!(
+                "request {}: prompt length {} + max_new {} overflows the context horizon",
+                req.id,
+                req.prompt.len(),
+                req.max_new
+            )
+        })?;
         if budget > mcfg.max_len {
             return Err(format!(
                 "request {}: prompt {} + max_new {} exceeds model max_len {}",
@@ -472,9 +617,14 @@ impl ServeEngine {
                 mcfg.max_len
             ));
         }
-        if budget > self.cfg.max_tokens {
+        // page-granular: the horizon this session could grow to, alone
+        let granular = budget
+            .div_ceil(self.cfg.page_len)
+            .saturating_mul(self.cfg.page_len);
+        if granular > self.cfg.max_tokens {
             return Err(format!(
-                "request {}: context reservation {budget} exceeds the max_tokens budget {}",
+                "request {}: page-rounded context reservation {granular} exceeds the \
+                 max_tokens budget {}",
                 req.id, self.cfg.max_tokens
             ));
         }
@@ -502,18 +652,119 @@ impl ServeEngine {
         &self.stats
     }
 
+    /// Page-pool accounting right now (live/free/budgeted pages).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Prefix-cache entries currently retained.
+    pub fn prefix_cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
     /// Completions accumulated so far (drains the internal buffer).
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
     }
 
+    fn cache_limit(&self) -> usize {
+        if self.cfg.reserve {
+            0
+        } else {
+            self.cfg.prefix_cache
+        }
+    }
+
+    /// Whether `extra_pages` more context pages fit `max_tokens`.
+    fn fits_ctx(&self, extra_pages: usize) -> bool {
+        if self.cfg.max_tokens == usize::MAX {
+            return true;
+        }
+        (self.pool.stats().ctx_live + extra_pages).saturating_mul(self.cfg.page_len)
+            <= self.cfg.max_tokens
+    }
+
+    /// Context pages admitting `req` would allocate right now. A free
+    /// cache hit is predicted only when [`ServeEngine::cache_predicts_hit`]
+    /// *guarantees* the hit path in `admit` will take it; otherwise the
+    /// full prompt prefill is charged conservatively, so the context
+    /// budget can never be exceeded by a predicted-hit-turned-miss.
+    fn admission_ctx_pages(&self, req: &Request) -> usize {
+        if self.cfg.reserve {
+            (req.prompt.len() + req.max_new).div_ceil(self.cfg.page_len)
+        } else if self.cache_limit() > 0 && self.cache_predicts_hit(req) {
+            0
+        } else {
+            req.prompt.len().div_ceil(self.cfg.page_len)
+        }
+    }
+
+    /// Sound hit predictor: the tokens match and the request's horizon
+    /// fits inside the entry's. Pyramid depth (`n_coarse`) is monotone
+    /// in the horizon for every algorithm, so this implies the
+    /// `n_coarse >= min_coarse` check `cache_position` performs —
+    /// predicted hits always hit.
+    fn cache_predicts_hit(&self, req: &Request) -> bool {
+        let h = hash_tokens(&req.prompt);
+        let horizon = req.prompt.len() + req.max_new;
+        self.cache
+            .iter()
+            .any(|e| e.hash == h && horizon <= e.horizon && e.prompt == req.prompt)
+    }
+
+    fn cache_position(&self, prompt: &[u32], min_coarse: usize) -> Option<usize> {
+        let h = hash_tokens(prompt);
+        self.cache
+            .iter()
+            .position(|e| e.hash == h && e.n_coarse >= min_coarse && e.prompt == prompt)
+    }
+
+    /// Drop the least-recently-used cache entry to free page budget.
+    /// Returns false when the cache is already empty. Freed pages are
+    /// only those no live session still shares.
+    fn drop_lru_cache_entry(&mut self) -> bool {
+        if self.cache.is_empty() {
+            return false;
+        }
+        self.cache.remove(0);
+        true
+    }
+
+    fn cache_insert(&mut self, prompt: &[u32], states: &[DecodeState], last_x: &[f32]) {
+        let hash = hash_tokens(prompt);
+        if let Some(i) = self
+            .cache
+            .iter()
+            .position(|e| e.hash == hash && e.prompt == prompt)
+        {
+            // replace (a re-prefill at a deeper horizon supersedes it)
+            self.cache.remove(i);
+        }
+        let entry = CacheEntry {
+            prompt: prompt.to_vec(),
+            hash,
+            states: states.iter().map(|s| s.snapshot_shared()).collect(),
+            last_x: last_x.to_vec(),
+            n_coarse: states.first().map(|s| s.n_coarse).unwrap_or(0),
+            horizon: states.first().map(|s| s.max_len).unwrap_or(0),
+        };
+        self.cache.push(entry);
+        while self.cache.len() > self.cache_limit() {
+            self.cache.remove(0);
+        }
+    }
+
     /// `(pointer, capacity)` of every workspace buffer the engine owns
-    /// — session slots (active and pooled), step buffers, the prefill
-    /// arena and the admission head path. Sorted, so the snapshot is
-    /// invariant to slots migrating between the active set and the
-    /// pool; equal snapshots across ticks prove the steady state
-    /// allocates nothing in any workspace (request outputs — completion
-    /// token/logit copies — are not workspace and are excluded).
+    /// — session slots (active and pooled) with their page tables and
+    /// pages, prefix-cache entries, step buffers, the prefill arena,
+    /// the admission head path and the page pool's free list plus its
+    /// total-pages marker. Sorted, so the snapshot is invariant to
+    /// slots migrating between the active set and the pool and to
+    /// pages migrating between sessions, the cache and the free list;
+    /// equal snapshots across ticks prove the steady state allocates
+    /// nothing in any workspace **and grows the page pool by zero
+    /// pages** (request outputs — completion token/logit copies — are
+    /// not workspace and are excluded).
     pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
         let mut out: Vec<(usize, usize)> = Vec::new();
         for slot in self.active.iter().chain(self.free.iter()) {
@@ -524,12 +775,21 @@ impl ServeEngine {
             out.push((slot.tokens.as_ptr() as usize, slot.tokens.capacity()));
             out.push((slot.logits.as_ptr() as usize, slot.logits.capacity()));
         }
+        for e in &self.cache {
+            out.push((e.prompt.as_ptr() as usize, e.prompt.capacity()));
+            out.push((e.last_x.as_ptr() as usize, e.last_x.capacity()));
+            out.push((e.states.as_ptr() as usize, e.states.capacity()));
+            for st in &e.states {
+                out.extend(st.buffer_snapshot());
+            }
+        }
         for b in &self.bufs {
             out.extend(b.snapshot());
         }
         for c in &self.chunk_store {
             out.push((c.as_ptr() as usize, c.capacity()));
         }
+        out.extend(self.pool.capacity_snapshot());
         out.extend(self.prefill.capacity_snapshot());
         for m in [&self.adm_x, &self.adm_hn, &self.adm_logits] {
             out.push((m.data.as_ptr() as usize, m.data.capacity()));
@@ -538,14 +798,16 @@ impl ServeEngine {
         out
     }
 
-    /// Admit one request into a (recycled) session slot: reset and
-    /// reserve its per-`(layer, head)` states to the request's own
-    /// horizon, run the batched prefill forward, and sample the first
-    /// token from the prefill logits. A request whose `max_new` is 1
-    /// completes here and never enters a decode round.
+    /// Admit one request into a (recycled) session slot: wire its
+    /// per-`(layer, head)` states to the shared page pool, then either
+    /// clone the prefix-cache entry for an identical prompt (no
+    /// forward pass, no page copies) or run the batched prefill
+    /// forward, and sample the first token from the prompt's final
+    /// logits. A request whose `max_new` is 1 completes here and never
+    /// enters a decode round.
     ///
     /// KEEP IN SYNC with `Model::prefill_with` (decode.rs): same
-    /// state-reserve + `run_trunk` observer sequence, pooled instead of
+    /// state-begin + `run_trunk` observer sequence, pooled instead of
     /// per-`DecodeWorkspace` (the one semantic difference: states are
     /// reserved to the request horizon, not `max_len` — h1d's step
     /// output is invariant to the extra pyramid depth).
@@ -553,6 +815,7 @@ impl ServeEngine {
         let model = Arc::clone(&self.model);
         let mcfg = &model.cfg;
         let n_heads = mcfg.n_heads;
+        let d_model = mcfg.d_model;
         let n_states = mcfg.n_layers * n_heads;
         let mut slot = self.free.pop().unwrap_or_else(SessionSlot::fresh);
         slot.id = req.id;
@@ -572,34 +835,70 @@ impl ServeEngine {
             slot.states.push(DecodeState::default());
         }
         for st in &mut slot.states[..n_states] {
+            st.attach_pool(&self.pool, self.cfg.reserve);
+        }
+        // layer-0/head-0 fine K is the budgeted "context tokens" stream
+        slot.states[0].mark_ctx_stream();
+        for st in &mut slot.states[..n_states] {
             model.algo.decode_begin(st, slot.budget, mcfg.d_head());
         }
 
-        // one batched forward over the prompt; the observer bulk-loads
-        // every (layer, head) cache — the decode.rs prefill, pooled
-        let states = &mut slot.states;
-        model.run_trunk(&mut self.prefill, &req.prompt, 1, |layer, qkv| {
-            for h in 0..n_heads {
-                model.algo.decode_load_prefix(
-                    &mut states[layer * n_heads + h],
-                    qkv.q.head(h),
-                    qkv.k.head(h),
-                    qkv.v.head(h),
-                );
+        // prefix cache: an identical prompt clones the cached page
+        // tables (refcount bumps) instead of re-running the prefill
+        let mut hit = false;
+        if self.cache_limit() > 0 {
+            self.stats.prefix_lookups += 1;
+            let min_coarse = slot.states[0].n_coarse;
+            if let Some(i) = self.cache_position(&req.prompt, min_coarse) {
+                let mut entry = self.cache.remove(i);
+                for (st, cst) in slot.states[..n_states].iter_mut().zip(&entry.states) {
+                    cst.clone_shared_into(st);
+                }
+                self.adm_x.reset_for_overwrite(1, d_model);
+                self.adm_x.row_mut(0).copy_from_slice(&entry.last_x);
+                // this hit proves the entry's depth serves this horizon:
+                // ratchet it so later duplicates are *predicted* as hits
+                // by admission_ctx_pages instead of being conservatively
+                // charged a prefill they will never run
+                entry.horizon = entry.horizon.max(slot.budget);
+                self.cache.push(entry); // back to the MRU position
+                self.stats.prefix_hits += 1;
+                hit = true;
             }
-        });
+        }
+        if !hit {
+            // one batched forward over the prompt; the observer
+            // bulk-loads every (layer, head) cache — the decode.rs
+            // prefill, pooled
+            let states = &mut slot.states;
+            model.run_trunk(&mut self.prefill, &req.prompt, 1, |layer, qkv| {
+                for h in 0..n_heads {
+                    model.algo.decode_load_prefix(
+                        &mut states[layer * n_heads + h],
+                        qkv.q.head(h),
+                        qkv.k.head(h),
+                        qkv.v.head(h),
+                    );
+                }
+            });
+            self.stats.prefill_tokens += req.prompt.len();
+            self.adm_x.reset_for_overwrite(1, d_model);
+            self.adm_x
+                .row_mut(0)
+                .copy_from_slice(self.prefill.x.row(req.prompt.len() - 1));
+            if self.cache_limit() > 0 {
+                let last_x = self.adm_x.row(0).to_vec();
+                self.cache_insert(&req.prompt, &slot.states[..n_states], &last_x);
+            }
+        }
 
         // first-token logits from the last prompt position
-        self.adm_x.reset_for_overwrite(1, mcfg.d_model);
-        self.adm_x
-            .row_mut(0)
-            .copy_from_slice(self.prefill.x.row(req.prompt.len() - 1));
         model.logits_into(&self.adm_x, &mut self.adm_hn, &mut self.adm_logits);
         let row = self.adm_logits.row(0);
         let t = sample_logits(row, slot.temperature, &mut slot.rng) as u32;
         slot.tokens.push(t);
-        self.stats.prefill_tokens += req.prompt.len();
         self.stats.generated += 1;
+        slot.request = Some(req);
         if slot.tokens.len() >= slot.max_new {
             slot.done = true;
             slot.logits.clear();
@@ -610,15 +909,15 @@ impl ServeEngine {
             self.retire(slot);
         } else {
             slot.next_token = t;
-            self.active_budget += slot.budget;
             self.active.push(slot);
             self.stats.peak_active = self.stats.peak_active.max(self.active.len());
         }
     }
 
-    /// Emit a [`Completion`] and recycle the slot into the pool. The
-    /// slot keeps its buffers (token/logit copies go to the completion)
-    /// so a same-shape re-admission allocates nothing.
+    /// Emit a [`Completion`], return the slot's pages to the pool and
+    /// recycle the slot. Page tables and token/logit buffers keep
+    /// their capacity, so a same-shape re-admission allocates nothing
+    /// outside the (warm) page pool.
     fn retire(&mut self, mut slot: SessionSlot) {
         self.completions.push(Completion {
             id: slot.id,
@@ -630,29 +929,89 @@ impl ServeEngine {
         });
         slot.tokens.clear();
         slot.logits.clear();
+        slot.request = None;
+        for st in &mut slot.states {
+            st.release_pages();
+        }
         self.free.push(slot);
     }
 
-    /// One scheduling round: admit what fits, run one ragged decode
-    /// round over the active set, retire finished sessions. Returns
-    /// whether work remains (pending or active requests).
+    /// One scheduling round: admit what fits, stage this round's page
+    /// growth (evicting under pressure), run one ragged decode round
+    /// over the active set, retire finished sessions. Returns whether
+    /// work remains (pending or active requests).
     pub fn tick(&mut self) -> bool {
         let t0 = Instant::now();
-        // admission: head-of-line FIFO within both budgets (a request's
-        // fit is checked at submit, so an empty active set always admits)
-        while self.active.len() < self.cfg.max_batch {
-            let fits = match self.pending.front() {
-                None => false,
-                Some(r) => {
-                    self.active_budget + r.prompt.len() + r.max_new <= self.cfg.max_tokens
-                }
+        let n_states = self.model.cfg.n_layers * self.model.cfg.n_heads;
+
+        // admission: head-of-line FIFO within the batch and context
+        // budgets; under page pressure the LRU cache entries go first
+        loop {
+            if self.active.len() >= self.cfg.max_batch {
+                break;
+            }
+            let needed = match self.pending.front() {
+                None => break,
+                Some(r) => self.admission_ctx_pages(r),
             };
-            if !fits {
+            if !self.fits_ctx(needed) {
+                if self.drop_lru_cache_entry() {
+                    continue;
+                }
                 break;
             }
             let req = self.pending.pop_front().expect("checked front");
             self.admit(req);
         }
+
+        // demand-grown rounds: pre-fault every page this round's
+        // appends will touch, so worker-thread appends are lock-free.
+        // Out of pages → drop cache entries (LRU), then evict the
+        // youngest session(s) and requeue at the queue head: FIFO order
+        // is preserved (older sessions never lose their slot to younger
+        // ones) and the requeued request regenerates identical tokens
+        // from its own RNG stream.
+        if !self.cfg.reserve && !self.active.is_empty() {
+            loop {
+                let need: usize = self
+                    .active
+                    .iter()
+                    .map(|s| s.states[0].ctx_stage_cost())
+                    .sum();
+                if self.fits_ctx(need) {
+                    break;
+                }
+                if self.drop_lru_cache_entry() {
+                    continue;
+                }
+                if self.active.len() <= 1 {
+                    // a lone session always fits: validate() bounds its
+                    // page-rounded horizon by max_tokens
+                    break;
+                }
+                let mut slot = self.active.pop().expect("non-empty active set");
+                let req = slot.request.take().expect("active slot keeps its request");
+                for st in &mut slot.states {
+                    st.release_pages();
+                }
+                // the discarded tokens will be regenerated after the
+                // requeue, so they come off the generated count
+                self.stats.generated -= slot.tokens.len();
+                slot.tokens.clear();
+                slot.logits.clear();
+                self.pending.push_front(req);
+                self.free.push(slot);
+                self.stats.evictions += 1;
+            }
+            for slot in &mut self.active {
+                for st in &mut slot.states[..n_states] {
+                    st.stage_append();
+                }
+            }
+        }
+        let ps = self.pool.stats();
+        self.stats.peak_ctx_tokens = self.stats.peak_ctx_tokens.max(ps.ctx_tokens());
+        self.stats.peak_pages = self.stats.peak_pages.max(ps.live);
 
         // one ragged decode round across every active session; timed on
         // its own so the latency percentiles measure the same thing as
@@ -700,7 +1059,6 @@ impl ServeEngine {
             while i < self.active.len() {
                 if self.active[i].done {
                     let slot = self.active.remove(i);
-                    self.active_budget -= slot.budget;
                     self.retire(slot);
                 } else {
                     i += 1;
@@ -713,10 +1071,10 @@ impl ServeEngine {
 
     /// Submit every request and tick until the queue drains; returns
     /// the completions plus run stats (and resets both for the next
-    /// run — the engine and its session pool are reusable). The whole
-    /// batch is validated before anything is enqueued, so a rejected
-    /// request leaves the engine exactly as it was — no half-queued
-    /// workload leaking into the next run.
+    /// run — the engine, its session pool, page pool and prefix cache
+    /// are reusable). The whole batch is validated before anything is
+    /// enqueued, so a rejected request leaves the engine exactly as it
+    /// was — no half-queued workload leaking into the next run.
     pub fn run(&mut self, requests: Vec<Request>) -> Result<ServeReport, String> {
         for r in &requests {
             self.validate(r)?;
@@ -745,7 +1103,10 @@ pub fn run_sequential(model: &Model, requests: &[Request]) -> Result<ServeReport
         if req.max_new == 0 {
             return Err(format!("request {}: max_new must be >= 1", req.id));
         }
-        if req.prompt.len() + req.max_new > model.cfg.max_len {
+        let horizon = req.prompt.len().checked_add(req.max_new).ok_or_else(|| {
+            format!("request {}: prompt + max_new overflows the context horizon", req.id)
+        })?;
+        if horizon > model.cfg.max_len {
             return Err(format!(
                 "request {}: prompt {} + max_new {} exceeds model max_len {}",
                 req.id,
@@ -799,8 +1160,9 @@ pub fn run_sequential(model: &Model, requests: &[Request]) -> Result<ServeReport
 /// cycle through `prompt_mix`, sharing `max_new` and `temperature`,
 /// with per-request RNG seeds derived from `seed`. All requests are
 /// queued up front; admission paces them — the next stream starts as
-/// soon as budget frees (the closed-loop serving regime). Behind
-/// `htx serve-bench`, `benches/serve.rs` and the parity tests.
+/// soon as budget frees (the closed-loop serving regime). Prompt
+/// tokens come from `util::bench::synthetic_prompt`, the generator
+/// shared with the decode bench and `htx serve-bench`.
 pub fn synthetic_workload(
     n: usize,
     prompt_mix: &[usize],
@@ -816,11 +1178,36 @@ pub fn synthetic_workload(
             let pl = prompt_mix[i % prompt_mix.len()];
             Request {
                 id: i as u64,
-                prompt: (0..pl).map(|_| rng.below(vocab as u64) as u32).collect(),
+                prompt: synthetic_prompt(pl, vocab, &mut rng),
                 max_new,
                 temperature,
-                seed: seed ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                seed: derive_seed(seed, i as u64),
             }
+        })
+        .collect()
+}
+
+/// Shared-system-prompt workload: `n` requests with one identical
+/// `prompt_len`-token prompt (per-request RNG streams still distinct) —
+/// the regime the prefix cache turns into an O(1)-per-duplicate
+/// prefill with prompt pages allocated once.
+pub fn shared_prefix_workload(
+    n: usize,
+    prompt_len: usize,
+    max_new: usize,
+    vocab: usize,
+    temperature: f32,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let prompt = synthetic_prompt(prompt_len, vocab, &mut rng);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_new,
+            temperature,
+            seed: derive_seed(seed, i as u64),
         })
         .collect()
 }
@@ -854,8 +1241,9 @@ mod tests {
             Arc::clone(&model),
             ServeConfig {
                 max_batch: 2,
-                max_tokens: 20,
+                max_tokens: 32,
                 threads: 1,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -882,6 +1270,10 @@ mod tests {
         let mut bad = ok.clone();
         bad.prompt = vec![0, 29]; // token id outside the vocabulary
         assert!(eng.submit(bad).unwrap_err().contains("vocab"));
+        // prompt + max_new overflowing usize is rejected, not wrapped
+        let mut bad = ok.clone();
+        bad.max_new = usize::MAX;
+        assert!(eng.submit(bad).unwrap_err().contains("overflows"));
         // a reservation within max_len but beyond the engine's whole
         // max_tokens budget can never be admitted: rejected at submit
         let mut eng2 = ServeEngine::new(
@@ -889,11 +1281,28 @@ mod tests {
             ServeConfig {
                 max_batch: 2,
                 max_tokens: 6,
+                page_len: 4,
                 threads: 1,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
         assert!(eng2.submit(ok).unwrap_err().contains("max_tokens"));
+    }
+
+    #[test]
+    fn engine_rejects_bad_page_len() {
+        let model = Arc::new(tiny_model(AttnSpec::Full, 16));
+        for bad in [0usize, 6, 12] {
+            let err = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    page_len: bad,
+                    ..ServeConfig::default()
+                },
+            );
+            assert!(err.is_err(), "page_len {bad} must be rejected");
+        }
     }
 
     #[test]
@@ -934,13 +1343,17 @@ mod tests {
     #[test]
     fn tight_token_budget_serialises_admissions() {
         let model = Arc::new(tiny_model(AttnSpec::Full, 24));
-        // each request reserves 9 + 5 = 14; a 20-token budget fits one
+        // each request can grow to ceil(14/4)*4 = 16 context tokens; a
+        // 20-token budget fits one session at a time (two would need
+        // >= 24), so the budget serialises the batch
         let mut eng = ServeEngine::new(
             model,
             ServeConfig {
                 max_batch: 4,
                 max_tokens: 20,
+                page_len: 4,
                 threads: 1,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -949,6 +1362,93 @@ mod tests {
         assert_eq!(rep.completions.len(), 4);
         assert_eq!(rep.stats.peak_active, 1, "budget should serialise sessions");
         assert_eq!(rep.stats.generated, 4 * 5);
+        assert!(rep.stats.peak_ctx_tokens <= 20, "budget exceeded");
+    }
+
+    #[test]
+    fn reserved_mode_matches_paged_results() {
+        // the contiguous-reservation baseline and the paged engine are
+        // the same scheduler over different memory policies: identical
+        // workload results, different admission pacing
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 32));
+        let reqs = synthetic_workload(6, &[7, 12], 6, 29, 0.0, 9);
+        let mut paged = ServeEngine::new(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let mut reserved = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                reserve: true,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let rp = paged.run(reqs.clone()).unwrap();
+        let rr = reserved.run(reqs).unwrap();
+        assert_eq!(rp.tokens_by_id(), rr.tokens_by_id());
+        assert_eq!(rr.stats.prefix_lookups, 0, "reserve mode disables the cache");
+    }
+
+    #[test]
+    fn deeper_horizon_same_prompt_is_a_predicted_miss_and_replaces_the_entry() {
+        // an entry cached at a shallow pyramid must never be *predicted*
+        // as a free hit for a request needing a deeper one: the
+        // admission accounting charges the full prefill (budget stays
+        // sound), the hit path misses, and the re-prefill replaces the
+        // entry at the deeper horizon so later twins hit again
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 28));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 2,
+                // roomy enough that no eviction interferes: the pin here
+                // is the predictor/hit-path agreement, not page pressure
+                max_tokens: 48,
+                page_len: 4,
+                threads: 1,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let prompt: Vec<u32> = (0..6).map(|t| (t % 7) as u32).collect();
+        let a = Request {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new: 2,
+            temperature: 0.0,
+            seed: 3,
+        };
+        // horizon 20 vs 8: decode_coarse_levels grows with the horizon,
+        // so b needs a deeper pyramid than a's cached entry carries
+        let b = Request {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new: 14,
+            temperature: 0.0,
+            seed: 4,
+        };
+        // same prompt and horizon as b: must hit b's replaced entry
+        let c = Request {
+            id: 2,
+            prompt: prompt.clone(),
+            max_new: 14,
+            temperature: 0.0,
+            seed: 5,
+        };
+        let reqs = vec![a, b, c];
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        assert_eq!(
+            rep.stats.prefix_hits, 1,
+            "only the equal-horizon twin may hit (deeper request must re-prefill)"
+        );
+        assert_eq!(rep.stats.prefill_tokens, 2 * 6);
+        assert_eq!(rep.stats.evictions, 0);
+        assert!(
+            rep.stats.peak_ctx_tokens <= 48,
+            "conservative prediction must keep the budget: peak {}",
+            rep.stats.peak_ctx_tokens
+        );
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
     }
 
     #[test]
@@ -964,5 +1464,17 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 5);
+    }
+
+    #[test]
+    fn shared_prefix_workload_repeats_one_prompt() {
+        let reqs = shared_prefix_workload(4, 6, 3, 29, 0.0, 17);
+        assert_eq!(reqs.len(), 4);
+        assert!(reqs.iter().all(|r| r.prompt == reqs[0].prompt));
+        assert_eq!(reqs[0].prompt.len(), 6);
+        let mut seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 4);
     }
 }

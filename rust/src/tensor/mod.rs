@@ -10,8 +10,10 @@
 
 pub mod batch;
 pub mod ops;
+pub mod paged;
 
 pub use batch::{Batch, Qkv};
+pub use paged::{PagePool, PagedRows, PoolStats};
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, Default, PartialEq)]

@@ -1,0 +1,616 @@
+//! Paged block-pool memory for KV caches — the serving stack's memory
+//! spine.
+//!
+//! The PR-3/PR-4 decode path reserved one contiguous `[max_len, d]`
+//! arena per `(layer, head)` stream per session, so a serve engine had
+//! to budget `prompt + max_new` tokens up front even though most
+//! sessions never fill their horizon, and identical prompts were cached
+//! once per session. This module replaces that with the standard paged
+//! design (vLLM-style, at CPU scale):
+//!
+//! * [`PagePool`] — a shared, thread-safe pool of fixed-size
+//!   `[page_len, cols]` f32 blocks with a free list. Pages are
+//!   recycled, never shrunk, so a warm pool allocates nothing in steady
+//!   state ([`PagePool::capacity_snapshot`] makes that testable). The
+//!   pool also carries the serve scheduler's accounting: `live` unique
+//!   pages, plus the `ctx_live` subset flagged *budgeted* — one
+//!   designated stream per session (layer-0/head-0 fine K), whose
+//!   page count × `page_len` is the page-granular "context tokens"
+//!   measure that `ServeConfig::max_tokens` bounds. A page shared by
+//!   many sessions is counted **once** — the prefix-cache sharing win.
+//! * [`PagedRows`] — a page-table view over pool pages with the same
+//!   append-row semantics as `Mat::{reset_appendable, push_row,
+//!   add_into_row}`, plus `row(i)` random access and page-contiguous
+//!   [`PagedRows::spans`] iteration (the decode kernels' tight inner
+//!   loop). Pages are `Arc`-refcounted: cloning a view
+//!   ([`PagedRows::clone_shared_into`]) shares pages read-only, and any
+//!   mutation of a shared page (appending into a partially-filled tail,
+//!   accumulating into a pyramid partial sum) transparently
+//!   **copies-on-write** first, so shared prompt pages stay immutable
+//!   while each session grows its own private tail.
+//!
+//! `page_len` must be a power of two so `row(i)` is a shift/mask, not a
+//! division.
+
+use std::sync::{Arc, Mutex};
+
+use super::Mat;
+
+/// Default rows per page — small enough that short prompts waste little,
+/// large enough that span iteration amortises the page hop.
+pub const DEFAULT_PAGE_LEN: usize = 16;
+
+/// One fixed-size block of `page_len * cols` f32 rows. `budgeted` marks
+/// pages charged against the serve context budget (set at alloc time
+/// from the owning [`PagedRows`]); it is a property of the page for its
+/// whole life so release-time accounting matches alloc-time accounting.
+#[derive(Debug)]
+pub(crate) struct Page {
+    pub(crate) data: Vec<f32>,
+    budgeted: bool,
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    /// Recycled page buffers (capacity kept; zeroed on re-alloc).
+    free: Vec<Vec<f32>>,
+    /// Unique pages currently held by at least one view or cache.
+    live: usize,
+    /// Budgeted subset of `live` (the context-token accounting).
+    ctx_live: usize,
+    peak_live: usize,
+    peak_ctx_live: usize,
+}
+
+/// Aggregate pool accounting; see [`PagePool::stats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    pub page_len: usize,
+    /// Unique pages currently referenced by views/caches.
+    pub live: usize,
+    /// Budgeted ("context") subset of `live`.
+    pub ctx_live: usize,
+    /// Recycled buffers waiting on the free list.
+    pub free: usize,
+    /// Buffers the pool owns in total (`live + free`) — the growth
+    /// tripwire: constant in steady state.
+    pub total: usize,
+    pub peak_live: usize,
+    pub peak_ctx_live: usize,
+}
+
+impl PoolStats {
+    /// Page-granular context tokens currently allocated (shared pages
+    /// counted once) — what `ServeConfig::max_tokens` bounds.
+    pub fn ctx_tokens(&self) -> usize {
+        self.ctx_live * self.page_len
+    }
+
+    pub fn peak_ctx_tokens(&self) -> usize {
+        self.peak_ctx_live * self.page_len
+    }
+}
+
+/// Cloneable handle to a shared page pool (see the module docs). The
+/// mutex guards only alloc/release — row reads and in-place writes go
+/// straight through the page `Arc`s, so the decode hot loop never
+/// locks.
+#[derive(Clone, Debug)]
+pub struct PagePool {
+    page_len: usize,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl PagePool {
+    pub fn new(page_len: usize) -> Self {
+        assert!(
+            page_len >= 1 && page_len.is_power_of_two(),
+            "page_len must be a power of two >= 1 (got {page_len})"
+        );
+        Self {
+            page_len,
+            inner: Arc::new(Mutex::new(PoolInner::default())),
+        }
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.page_len
+    }
+
+    /// Whether two handles name the same pool.
+    pub fn ptr_eq(&self, other: &PagePool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    fn alloc(&self, cols: usize, budgeted: bool) -> Arc<Page> {
+        let mut inner = self.inner.lock().expect("page pool lock");
+        let mut data = inner.free.pop().unwrap_or_default();
+        data.clear();
+        data.resize(self.page_len * cols, 0.0);
+        inner.live += 1;
+        if inner.live > inner.peak_live {
+            inner.peak_live = inner.live;
+        }
+        if budgeted {
+            inner.ctx_live += 1;
+            if inner.ctx_live > inner.peak_ctx_live {
+                inner.peak_ctx_live = inner.ctx_live;
+            }
+        }
+        Arc::new(Page { data, budgeted })
+    }
+
+    /// Drop one reference; when it is the last, the buffer returns to
+    /// the free list and the accounting decrements. Shared pages stay
+    /// live (and counted) until their final owner releases them.
+    ///
+    /// The unwrap attempt happens **under the pool lock** (and a failed
+    /// attempt drops its reference before the lock is released), so
+    /// concurrent releases of a page's last two references serialise:
+    /// exactly one of them observes itself last and recycles the
+    /// buffer — without the lock, both could fail the unwrap and leak
+    /// the buffer with `live`/`ctx_live` never decremented.
+    fn release(&self, page: Arc<Page>) {
+        let mut inner = self.inner.lock().expect("page pool lock");
+        if let Ok(p) = Arc::try_unwrap(page) {
+            inner.live -= 1;
+            if p.budgeted {
+                inner.ctx_live -= 1;
+            }
+            inner.free.push(p.data);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().expect("page pool lock");
+        PoolStats {
+            page_len: self.page_len,
+            live: inner.live,
+            ctx_live: inner.ctx_live,
+            free: inner.free.len(),
+            total: inner.live + inner.free.len(),
+            peak_live: inner.peak_live,
+            peak_ctx_live: inner.peak_ctx_live,
+        }
+    }
+
+    /// `(pointer, capacity)` of every free-listed buffer plus a final
+    /// `(usize::MAX, total pages owned)` marker. Together with the
+    /// page entries of the views holding live pages, equal snapshots
+    /// across serving waves prove zero page-pool growth in steady
+    /// state.
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        let inner = self.inner.lock().expect("page pool lock");
+        let mut out: Vec<(usize, usize)> = inner
+            .free
+            .iter()
+            .map(|b| (b.as_ptr() as usize, b.capacity()))
+            .collect();
+        out.push((usize::MAX, inner.live + inner.free.len()));
+        out
+    }
+}
+
+/// Append-only row storage backed by pool pages; see the module docs.
+/// Mirrors the `Mat` appendable API (`push_row` / `add_into_row` /
+/// `row`) so the decode caches swap over without changing their update
+/// rules.
+#[derive(Debug, Default)]
+pub struct PagedRows {
+    cols: usize,
+    /// Committed rows.
+    len: usize,
+    page_len: usize,
+    shift: u32,
+    mask: usize,
+    /// New pages this view allocates are charged to the context budget.
+    budgeted: bool,
+    /// Page table. May hold one staged page beyond the committed rows
+    /// (pre-faulted by [`PagedRows::stage_append`] so worker-thread
+    /// appends never touch the pool).
+    pages: Vec<Arc<Page>>,
+    pool: Option<PagePool>,
+}
+
+impl PagedRows {
+    /// Adopt `pool`/`cols` (releasing any pages held under a different
+    /// pool or width) and truncate to zero rows.
+    fn adopt(&mut self, pool: &PagePool, cols: usize) {
+        let same = self
+            .pool
+            .as_ref()
+            .map(|p| p.ptr_eq(pool))
+            .unwrap_or(false);
+        if !same || self.cols != cols {
+            self.release_all();
+            self.pool = Some(pool.clone());
+            self.page_len = pool.page_len();
+            self.shift = pool.page_len().trailing_zeros();
+            self.mask = pool.page_len() - 1;
+            self.cols = cols;
+        }
+        self.len = 0;
+    }
+
+    /// Truncate to zero rows and pre-fault pages for up to `rows` rows
+    /// — the reserve-up-front mode (single-session decode workspaces).
+    /// Grow-only: pages staged by an earlier, larger `begin` are kept,
+    /// so re-begins never release-and-refault (the old appendable-`Mat`
+    /// arena semantics, page-granular).
+    pub fn begin_reserved(&mut self, pool: &PagePool, cols: usize, rows: usize) {
+        self.adopt(pool, cols);
+        self.reserve_rows(rows);
+    }
+
+    /// Truncate to zero rows and return every page to the pool — the
+    /// demand-grown mode (serve sessions: pages fault in as the context
+    /// actually grows, and free back for other sessions at retire).
+    pub fn begin_released(&mut self, pool: &PagePool, cols: usize) {
+        self.adopt(pool, cols);
+        self.release_all();
+    }
+
+    /// Mark pages this view allocates from now on as budgeted context
+    /// pages (sticky across begins; see [`PagePool`] accounting).
+    pub fn set_budgeted(&mut self, budgeted: bool) {
+        self.budgeted = budgeted;
+    }
+
+    pub fn is_budgeted(&self) -> bool {
+        self.budgeted
+    }
+
+    pub fn rows(&self) -> usize {
+        self.len
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.page_len
+    }
+
+    /// Pages in the table (staged spares included).
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        let data = &self.pages[i >> self.shift].data;
+        let off = (i & self.mask) * self.cols;
+        &data[off..off + self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.row(i)[j]
+    }
+
+    /// Call `f` once per page-contiguous span of rows `lo..=hi`, in
+    /// order, with a `[span_rows * cols]` slice — the tight-loop form
+    /// the streaming-softmax decode kernel iterates.
+    pub fn spans<F: FnMut(&[f32])>(&self, lo: usize, hi: usize, mut f: F) {
+        debug_assert!(lo <= hi && hi < self.len);
+        let mut r = lo;
+        while r <= hi {
+            let ti = r >> self.shift;
+            let o = r & self.mask;
+            let rows = (hi + 1 - r).min(self.page_len - o);
+            let data = &self.pages[ti].data;
+            f(&data[o * self.cols..(o + rows) * self.cols]);
+            r += rows;
+        }
+    }
+
+    /// Pre-fault everything the next `push_row` (or a tail
+    /// `add_into_row`) needs: the target page exists and is privately
+    /// owned. After staging, the append itself touches neither the pool
+    /// lock nor any shared page — the serve engine stages every active
+    /// session on the scheduler thread, then appends from workers.
+    pub fn stage_append(&mut self) {
+        let ti = self.len >> self.shift;
+        if ti == self.pages.len() {
+            let pool = self.pool.as_ref().expect("PagedRows used before begin");
+            let page = pool.alloc(self.cols, self.budgeted);
+            self.pages.push(page);
+        } else {
+            self.make_private(ti);
+        }
+    }
+
+    /// Pre-fault an in-place update of committed row `i` (copy-on-write
+    /// if its page is shared).
+    pub fn stage_update(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.make_private(i >> self.shift);
+    }
+
+    /// Budgeted-page cost of the next [`PagedRows::stage_append`]:
+    /// 1 when it would fault a fresh page or copy-on-write a shared
+    /// one, else 0. The serve scheduler sums this over active sessions
+    /// to decide whether a decode round fits the context budget.
+    pub fn stage_cost(&self) -> usize {
+        let ti = self.len >> self.shift;
+        if ti == self.pages.len() || Arc::strong_count(&self.pages[ti]) > 1 {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Ensure the page table covers `rows` rows (allocating forward;
+    /// never releases).
+    pub fn reserve_rows(&mut self, rows: usize) {
+        let need = rows.div_ceil(self.page_len.max(1));
+        while self.pages.len() < need {
+            let pool = self.pool.as_ref().expect("PagedRows used before begin");
+            let page = pool.alloc(self.cols, self.budgeted);
+            self.pages.push(page);
+        }
+    }
+
+    /// Append one `[cols]` row (copy-on-write / page fault handled
+    /// here when not pre-staged).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.stage_append();
+        let ti = self.len >> self.shift;
+        let off = (self.len & self.mask) * self.cols;
+        let page = Arc::get_mut(&mut self.pages[ti]).expect("staged page is private");
+        page.data[off..off + self.cols].copy_from_slice(row);
+        self.len += 1;
+    }
+
+    /// Add `src` elementwise into committed row `i` (the pyramid
+    /// partial-sum accumulation; copies-on-write a shared page first,
+    /// which is how a session privatises the boundary page of a shared
+    /// prompt while fully-completed pages stay shared).
+    pub fn add_into_row(&mut self, i: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.cols, "add_into_row width mismatch");
+        assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        let ti = i >> self.shift;
+        self.make_private(ti);
+        let off = (i & self.mask) * self.cols;
+        let page = Arc::get_mut(&mut self.pages[ti]).expect("private page");
+        for (x, y) in page.data[off..off + self.cols].iter_mut().zip(src) {
+            *x += y;
+        }
+    }
+
+    fn make_private(&mut self, ti: usize) {
+        if Arc::get_mut(&mut self.pages[ti]).is_some() {
+            return;
+        }
+        let pool = self.pool.as_ref().expect("PagedRows used before begin");
+        let mut fresh = pool.alloc(self.cols, self.budgeted);
+        {
+            let dst = Arc::get_mut(&mut fresh).expect("fresh page is private");
+            dst.data.copy_from_slice(&self.pages[ti].data);
+        }
+        let old = std::mem::replace(&mut self.pages[ti], fresh);
+        let pool = self.pool.as_ref().expect("PagedRows used before begin");
+        pool.release(old);
+    }
+
+    /// Return every page to the pool (buffers recycle through the free
+    /// list; shared pages just drop this reference) and truncate.
+    /// Released in reverse table order so a later re-reserve pops the
+    /// same buffers back in the same order — snapshot-stable recycling.
+    pub fn release_all(&mut self) {
+        if let Some(pool) = &self.pool {
+            for page in self.pages.drain(..).rev() {
+                pool.release(page);
+            }
+        } else {
+            self.pages.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Share this view's pages into `dst` read-only (refcount bumps —
+    /// no page copies): the prefix-cache hit path. `dst` drops whatever
+    /// it held, adopts this view's pool/shape, and will copy-on-write
+    /// as soon as it mutates a shared page.
+    pub fn clone_shared_into(&self, dst: &mut PagedRows) {
+        dst.release_all();
+        dst.pool = self.pool.clone();
+        dst.page_len = self.page_len;
+        dst.shift = self.shift;
+        dst.mask = self.mask;
+        dst.cols = self.cols;
+        dst.budgeted = self.budgeted;
+        dst.pages.extend(self.pages.iter().cloned());
+        dst.len = self.len;
+    }
+
+    /// Materialise the committed rows into a dense `[len, cols]` matrix
+    /// (page-span copies) — the cached-recompute decode fallback reads
+    /// its history through this.
+    pub fn copy_to_mat(&self, m: &mut Mat) {
+        m.reset_for_overwrite(self.len, self.cols);
+        let mut r = 0usize;
+        while r < self.len {
+            let ti = r >> self.shift;
+            let rows = (self.len - r).min(self.page_len);
+            let src = &self.pages[ti].data[..rows * self.cols];
+            m.data[r * self.cols..(r + rows) * self.cols].copy_from_slice(src);
+            r += rows;
+        }
+    }
+
+    /// `(pointer, capacity)` entries for the page table and every page
+    /// buffer it references — the zero-alloc snapshot contribution.
+    pub fn buffer_snapshot_into(&self, out: &mut Vec<(usize, usize)>) {
+        out.push((self.pages.as_ptr() as usize, self.pages.capacity()));
+        for p in &self.pages {
+            out.push((p.data.as_ptr() as usize, p.data.capacity()));
+        }
+    }
+}
+
+impl Drop for PagedRows {
+    fn drop(&mut self) {
+        self.release_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(pool: &PagePool, cols: usize, rows: usize) -> PagedRows {
+        let mut pr = PagedRows::default();
+        pr.begin_released(pool, cols);
+        for i in 0..rows {
+            let row: Vec<f32> = (0..cols).map(|j| (i * cols + j) as f32).collect();
+            pr.push_row(&row);
+        }
+        pr
+    }
+
+    #[test]
+    fn rows_round_trip_across_page_boundaries() {
+        let pool = PagePool::new(4);
+        let pr = filled(&pool, 3, 11);
+        assert_eq!(pr.rows(), 11);
+        assert_eq!(pr.n_pages(), 3);
+        for i in 0..11 {
+            for j in 0..3 {
+                assert_eq!(pr.at(i, j), (i * 3 + j) as f32);
+            }
+        }
+        // spans cover exactly the requested range in order
+        let mut got: Vec<f32> = Vec::new();
+        pr.spans(2, 9, |chunk| got.extend_from_slice(chunk));
+        let want: Vec<f32> = (2 * 3..10 * 3).map(|x| x as f32).collect();
+        assert_eq!(got, want);
+        // copy_to_mat matches row reads
+        let mut m = Mat::default();
+        pr.copy_to_mat(&mut m);
+        assert_eq!((m.rows, m.cols), (11, 3));
+        for i in 0..11 {
+            assert_eq!(m.row(i), pr.row(i));
+        }
+    }
+
+    #[test]
+    fn add_into_row_accumulates_in_place() {
+        let pool = PagePool::new(4);
+        let mut pr = filled(&pool, 2, 5);
+        pr.add_into_row(4, &[10.0, 20.0]);
+        assert_eq!(pr.row(4), &[18.0, 29.0]);
+        assert_eq!(pr.row(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn release_recycles_buffers_through_the_free_list() {
+        let pool = PagePool::new(8);
+        let mut pr = filled(&pool, 2, 20); // 3 pages
+        assert_eq!(pool.stats().live, 3);
+        assert_eq!(pool.stats().free, 0);
+        pr.release_all();
+        let s = pool.stats();
+        assert_eq!((s.live, s.free, s.total), (0, 3, 3));
+        // re-fill: pops the same buffers, no new pages created
+        let snap = pool.capacity_snapshot();
+        drop(pr);
+        let pr2 = filled(&pool, 2, 20);
+        assert_eq!(pool.stats().total, 3, "warm pool must not grow");
+        drop(pr2);
+        assert_eq!(pool.capacity_snapshot(), snap);
+    }
+
+    #[test]
+    fn clone_shared_counts_pages_once_and_cows_on_mutation() {
+        let pool = PagePool::new(4);
+        let a = filled(&pool, 2, 6); // 2 pages (rows 0..4, 4..6)
+        assert_eq!(pool.stats().live, 2);
+        let mut b = PagedRows::default();
+        a.clone_shared_into(&mut b);
+        // sharing allocates nothing: still 2 unique pages
+        assert_eq!(pool.stats().live, 2);
+        assert_eq!(b.rows(), 6);
+        assert_eq!(b.row(5), a.row(5));
+        // appending into the shared partially-filled tail page COWs it
+        assert_eq!(b.stage_cost(), 1, "shared tail must cost a page");
+        b.push_row(&[100.0, 200.0]);
+        assert_eq!(pool.stats().live, 3);
+        assert_eq!(b.rows(), 7);
+        assert_eq!(b.row(6), &[100.0, 200.0]);
+        // the original is untouched (its tail page was never mutated)
+        assert_eq!(a.rows(), 6);
+        assert_eq!(a.row(5), &[10.0, 11.0]);
+        // a fully-completed page stays shared: mutating it in b COWs
+        b.add_into_row(0, &[1.0, 1.0]);
+        assert_eq!(pool.stats().live, 4);
+        assert_eq!(a.row(0), &[0.0, 1.0]);
+        assert_eq!(b.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn budgeted_accounting_counts_shared_pages_once() {
+        let pool = PagePool::new(4);
+        let mut a = PagedRows::default();
+        a.begin_released(&pool, 2);
+        a.set_budgeted(true);
+        for i in 0..8 {
+            a.push_row(&[i as f32, 0.0]);
+        }
+        assert_eq!(pool.stats().ctx_live, 2);
+        assert_eq!(pool.stats().ctx_tokens(), 8);
+        let mut b = PagedRows::default();
+        a.clone_shared_into(&mut b);
+        assert_eq!(pool.stats().ctx_live, 2, "shared pages count once");
+        b.push_row(&[9.0, 0.0]); // rows aligned: faults a fresh page
+        assert_eq!(pool.stats().ctx_live, 3);
+        drop(b);
+        assert_eq!(pool.stats().ctx_live, 2);
+        a.release_all();
+        assert_eq!(pool.stats().ctx_live, 0);
+        assert_eq!(pool.stats().peak_ctx_live, 3);
+    }
+
+    #[test]
+    fn begin_reserved_is_grow_only_and_stage_free() {
+        let pool = PagePool::new(4);
+        let mut pr = PagedRows::default();
+        pr.begin_reserved(&pool, 3, 10); // 3 pages staged
+        assert_eq!(pr.n_pages(), 3);
+        assert_eq!(pool.stats().live, 3);
+        let mut snap = Vec::new();
+        pr.buffer_snapshot_into(&mut snap);
+        for i in 0..10 {
+            assert_eq!(pr.stage_cost(), 0, "reserved rows never fault");
+            pr.push_row(&[i as f32, 0.0, 0.0]);
+        }
+        let mut snap2 = Vec::new();
+        pr.buffer_snapshot_into(&mut snap2);
+        assert_eq!(snap, snap2, "appends within the reservation must not allocate");
+        // a smaller re-begin keeps the grown table (grow-only)
+        pr.begin_reserved(&pool, 3, 4);
+        assert_eq!(pr.rows(), 0);
+        assert_eq!(pr.n_pages(), 3);
+        let mut snap3 = Vec::new();
+        pr.buffer_snapshot_into(&mut snap3);
+        assert_eq!(snap, snap3);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn push_row_rejects_wrong_width() {
+        let pool = PagePool::new(4);
+        let mut pr = PagedRows::default();
+        pr.begin_released(&pool, 3);
+        pr.push_row(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn pool_rejects_non_power_of_two_page_len() {
+        let r = std::panic::catch_unwind(|| PagePool::new(6));
+        assert!(r.is_err());
+    }
+}

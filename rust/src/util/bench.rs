@@ -6,6 +6,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::rng::Rng;
 use super::stats::Welford;
 
 #[derive(Clone, Debug)]
@@ -149,6 +150,23 @@ pub fn commit_id() -> String {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Deterministic synthetic prompt: `len` token ids below `vocab`,
+/// drawn from `rng`. The one token-stream generator behind
+/// `model::serve::synthetic_workload` / `shared_prefix_workload`,
+/// `benches/decode.rs`' contexts, `benches/serve.rs` and
+/// `htx serve-bench` — a single definition so every bench and test
+/// drives bit-identical workloads.
+pub fn synthetic_prompt(len: usize, vocab: usize, rng: &mut Rng) -> Vec<u32> {
+    (0..len).map(|_| rng.below(vocab as u64) as u32).collect()
+}
+
+/// Per-request RNG-stream seed derived from a workload seed — keeps
+/// request results independent of batch composition and identical
+/// across schedulers (every request owns its stream).
+pub fn derive_seed(seed: u64, i: u64) -> u64 {
+    seed ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Format seconds human-readably (µs/ms/s).
