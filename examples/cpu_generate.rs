@@ -30,6 +30,7 @@ fn main() {
         max_len: 256,
         causal: true,
         attention: AttnSpec::H1d { nr: 16 },
+        quant_weights: false,
     };
     let model = Model::new(cfg, 42).expect("valid config");
     println!(

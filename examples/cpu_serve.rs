@@ -21,6 +21,7 @@ fn main() -> Result<(), String> {
         max_len: 96,
         causal: true,
         attention: AttnSpec::H1d { nr: 16 },
+        quant_weights: false,
     };
     let model = Arc::new(Model::new(cfg, 42)?);
     println!(

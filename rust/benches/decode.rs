@@ -59,6 +59,7 @@ fn measure_step(spec: &AttnSpec, l: usize, steps: usize) -> f64 {
         max_len: l + steps + 1,
         causal,
         attention: spec.clone(),
+        quant_weights: false,
     };
     let model = Model::new(cfg, 1).expect("valid bench config");
     let mut rng = Rng::new(l as u64);

@@ -44,6 +44,7 @@ fn run_table(
                 max_len: l,
                 causal,
                 attention: spec,
+                quant_weights: false,
             };
             let model = Model::new(cfg, 1).expect("valid bench config");
             let mut ws = ModelWorkspace::parallel();

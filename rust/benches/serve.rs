@@ -35,17 +35,30 @@
 //! `decode.rs` instead: their per-step full recompute makes a serving
 //! loop pathological by construction, not a regression signal.
 //!
+//! A third section pins the compressed-KV subsystem: the same
+//! shared-prefix workload runs at a TIGHT fixed `max_tokens` budget
+//! with f32, f16 and int8 KV pages. Compressed pages charge the budget
+//! proportionally to their slot footprint (f16 half, int8 ~0.28x), so
+//! the same budget admits >= 1.8x the concurrent sessions with f16 KV —
+//! the compressed-serve acceptance line, emitted as
+//! `serve/<attention>/kv-<dtype>` points.
+//!
 //! Flags:
-//!   --smoke        small shapes (CI keep-alive; exercises every path)
-//!   --threads N    worker threads (default: host parallelism)
-//!   --out PATH     where to write the JSON (default BENCH_serve.json)
+//!   --smoke          small shapes (CI keep-alive; exercises every path)
+//!   --threads N      worker threads (default: host parallelism)
+//!   --out PATH       where to write the JSON (default BENCH_serve.json)
+//!   --kv-dtype D     restrict the compressed-KV sweep to one page dtype
+//!                    (`f32`, `f16`, `int8`; default: all three)
+//!   --quant-weights  run the compressed-KV sweep with int8 per-row
+//!                    quantised weight matmuls (bounded drift)
 
 use std::sync::Arc;
 
 use htransformer::model::{
-    run_sequential, shared_prefix_workload, synthetic_workload, AttnSpec, Model, ModelConfig,
-    ServeConfig, ServeEngine, ServeReport,
+    run_sequential, run_sequential_dtype, shared_prefix_workload, synthetic_workload, AttnSpec,
+    Model, ModelConfig, ServeConfig, ServeEngine, ServeReport,
 };
+use htransformer::tensor::PageDtype;
 use htransformer::util::bench::{commit_id, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::json::{num, obj, s, Json};
@@ -104,6 +117,15 @@ fn main() {
     let args = Args::from_env();
     let smoke = args.bool("smoke");
     let out_path = args.str_or("out", "BENCH_serve.json");
+    let kv_flag = args.str_or("kv-dtype", "all");
+    let kv_sweep: Vec<PageDtype> = if kv_flag == "all" {
+        vec![PageDtype::F32, PageDtype::F16, PageDtype::I8]
+    } else {
+        let d = PageDtype::parse(&kv_flag)
+            .unwrap_or_else(|| panic!("--kv-dtype expects f32|f16|int8, got {kv_flag:?}"));
+        vec![d]
+    };
+    let quant_weights = args.bool("quant-weights");
     let threads = {
         let t = args.usize_or("threads", 0);
         if t == 0 {
@@ -149,6 +171,7 @@ fn main() {
             max_len,
             causal: true,
             attention: spec.clone(),
+            quant_weights: false,
         };
         let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
         let requests =
@@ -251,6 +274,7 @@ fn main() {
             max_len,
             causal: true,
             attention: spec.clone(),
+            quant_weights: false,
         };
         let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
         let requests =
@@ -269,6 +293,7 @@ fn main() {
                     reserve,
                     prefix_cache: prefix,
                     threads,
+                    kv_dtype: PageDtype::F32,
                 },
             )
             .expect("engine");
@@ -312,6 +337,97 @@ fn main() {
          the same budget admits >= 1.5x the sessions the reservation baseline does."
     );
 
+    // ---- compressed KV pages at a tight budget ---------------------
+    // Same shared-prefix workload, but the budget is deliberately
+    // tighter than section 2's: at f32 it only admits a few sessions,
+    // so the concurrency headroom bought by f16 (half the slot
+    // footprint) and int8 (~0.28x) is visible as peak-active growth.
+    // The weights flag routes every matmul through the int8 per-row
+    // quantised path on top.
+    let kv_budget = if smoke { 112 } else { 448 };
+    let weights_mode = if quant_weights { "int8" } else { "f32" };
+    println!(
+        "\n### compressed KV pages: f32 vs f16 vs int8 at a tight budget \
+         (one {shared_prompt}-token prompt x {} requests, max_tokens {kv_budget}, \
+         page_len {page_len}, weights {weights_mode}) ###\n",
+        sh.requests
+    );
+    let mut t3 = Table::new(&[
+        "attention", "kv dtype", "weights", "tokens/s", "per-token", "peak active",
+        "peak ctx", "vs f32",
+    ]);
+    {
+        let name = "h1d";
+        let cfg = ModelConfig {
+            vocab_size: sh.vocab,
+            d_model: sh.d_model,
+            n_heads: sh.n_heads,
+            n_layers: sh.n_layers,
+            d_ff: sh.d_ff,
+            max_len,
+            causal: true,
+            attention: AttnSpec::H1d { nr: 16 },
+            quant_weights,
+        };
+        let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
+        let requests =
+            shared_prefix_workload(sh.requests, shared_prompt, sh.gen, sh.vocab, 0.0, 11);
+        let mut f32_active = 0usize;
+        for &dtype in &kv_sweep {
+            let seq = run_sequential_dtype(&model, &requests, dtype).expect("sequential run");
+            let mut engine = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch: 8,
+                    max_tokens: kv_budget,
+                    page_len,
+                    reserve: false,
+                    prefix_cache: 4,
+                    threads,
+                    kv_dtype: dtype,
+                },
+            )
+            .expect("engine");
+            let rep = engine.run(requests.clone()).expect("compressed-kv run");
+            check_parity(name, &seq, &rep);
+            let concurrency = match dtype {
+                PageDtype::F32 => {
+                    f32_active = rep.stats.peak_active;
+                    1.0
+                }
+                _ => rep.stats.peak_active as f64 / f32_active.max(1) as f64,
+            };
+            t3.row(&[
+                name.to_string(),
+                dtype.as_str().to_string(),
+                weights_mode.to_string(),
+                format!("{:.0}", rep.stats.tokens_per_sec()),
+                format!("{:.1}µs", rep.stats.per_token_us()),
+                rep.stats.peak_active.to_string(),
+                rep.stats.peak_ctx_tokens.to_string(),
+                format!("{concurrency:.2}x"),
+            ]);
+            points.push(obj(vec![
+                ("id", s(&format!("serve/{name}/kv-{}", dtype.as_str()))),
+                ("attention", s(name)),
+                ("mode", s("compressed-kv")),
+                ("kv_dtype", s(dtype.as_str())),
+                ("quant_weights", Json::Bool(quant_weights)),
+                ("per_token_us", num(rep.stats.per_token_us())),
+                ("tokens_per_sec", num(rep.stats.tokens_per_sec())),
+                ("peak_active", num(rep.stats.peak_active as f64)),
+                ("peak_ctx_tokens", num(rep.stats.peak_ctx_tokens as f64)),
+                ("concurrency_vs_f32", num(concurrency)),
+            ]));
+        }
+    }
+    t3.print();
+    println!(
+        "\nf16 pages charge half the context tokens per page and int8 ~0.28x, so the \
+         same max_tokens budget holds >= 1.8x (f16) the concurrent sessions the f32 \
+         engine does; generated tokens stay pinned to the same-dtype sequential loop."
+    );
+
     let doc = obj(vec![
         ("bench", s("serve")),
         ("commit", s(&commit_id())),
@@ -327,6 +443,8 @@ fn main() {
                 ("requests", num(sh.requests as f64)),
                 ("gen", num(sh.gen as f64)),
                 ("threads", num(threads as f64)),
+                ("kv_dtype", s(&kv_flag)),
+                ("quant_weights", Json::Bool(quant_weights)),
             ]),
         ),
         ("points", Json::Arr(points)),

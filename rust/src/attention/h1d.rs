@@ -18,7 +18,7 @@
 
 use super::workspace::{ensure_levels, DecodeState, HeadScratch, LevelBuf};
 use super::{Attention, AttnWorkspace};
-use crate::tensor::{Batch, Mat, Qkv};
+use crate::tensor::{kernels, Batch, Mat, Qkv};
 
 const NEG: f32 = -1e30;
 
@@ -156,13 +156,7 @@ pub(crate) fn h1d_decode_step(
                 continue;
             }
             let inv_cnt = 1.0 / lv.count[kj];
-            let qrow = lv.qsum.row(ci);
-            let krow = lv.ksum.row(kj);
-            let mut dot = 0.0f32;
-            for i in 0..d {
-                dot += (qrow[i] * qf) * (krow[i] * inv_cnt);
-            }
-            let sc = dot * scale;
+            let sc = kernels::dot_scaled(lv.qsum.row(ci), qf, lv.ksum.row(kj), inv_cnt) * scale;
             state.wbuf.push(sc);
             if sc > m {
                 m = sc;
@@ -178,10 +172,7 @@ pub(crate) fn h1d_decode_step(
             let kj = (bi - 1) * nr + c;
             let w = (sc - m).exp();
             den += w * lv.count[kj];
-            let vrow = lv.vsum.row(kj);
-            for i in 0..d {
-                yrow[i] += w * vrow[i];
-            }
+            kernels::axpy(yrow, w, lv.vsum.row(kj));
         }
         state.mbuf.push(m);
         state.dbuf.push(den);
@@ -198,15 +189,9 @@ pub(crate) fn h1d_decode_step(
     for (lvl, (&m, &dn)) in state.mbuf.iter().zip(&state.dbuf).enumerate() {
         let w = (m - m_tot).exp();
         den += dn * w;
-        let yrow = state.ylev.row(lvl);
-        for i in 0..d {
-            out[i] += yrow[i] * w;
-        }
+        kernels::axpy(out, w, state.ylev.row(lvl));
     }
-    let inv = 1.0 / den.max(1e-30);
-    for x in out.iter_mut() {
-        *x *= inv;
-    }
+    kernels::scale(out, 1.0 / den.max(1e-30));
     debug_assert_eq!(used, state.mbuf.len());
 }
 
@@ -309,15 +294,12 @@ pub(crate) fn h1d_head(nr: usize, overlap_masks: bool, causal: bool, s: &mut Hea
             let ci = i >> level;
             let w = (res.m[ci] - m_tot).exp();
             den += res.den[ci] * w;
-            let row = res.y.row(ci);
-            for t in 0..d {
-                s.f4[t] += row[t] * w;
-            }
+            kernels::axpy(&mut s.f4, w, res.y.row(ci));
         }
         let inv = 1.0 / den.max(1e-30);
-        for t in 0..d {
-            *s.out.at_mut(i, t) = s.f4[t] * inv;
-        }
+        let orow = s.out.row_mut(i);
+        orow.copy_from_slice(&s.f4);
+        kernels::scale(orow, inv);
     }
 }
 
@@ -450,13 +432,7 @@ fn level_attention_into(
                     if masked {
                         continue;
                     }
-                    let mut dot = 0.0f32;
-                    let qrow = q.row(qi);
-                    let krow = k.row(kj);
-                    for t in 0..d {
-                        dot += qrow[t] * krow[t];
-                    }
-                    let sc = dot * scale;
+                    let sc = kernels::dot(q.row(qi), k.row(kj)) * scale;
                     if sc > m[qi] {
                         m[qi] = sc;
                     }
@@ -494,12 +470,7 @@ fn level_attention_into(
                         s[r * nr + c] = 0.0;
                         continue;
                     }
-                    let krow = k.row(kj);
-                    let mut dot = 0.0f32;
-                    for t in 0..d {
-                        dot += qrow[t] * krow[t];
-                    }
-                    s[r * nr + c] = (dot * scale - m[qi]).exp();
+                    s[r * nr + c] = (kernels::dot(qrow, k.row(kj)) * scale - m[qi]).exp();
                 }
             }
             for r in 0..nr {
@@ -512,10 +483,7 @@ fn level_attention_into(
                     }
                     let kj = bj * nr + c;
                     den[qi] += w * counts[kj];
-                    let vrow = v.row(kj);
-                    for t in 0..d {
-                        yrow[t] += w * vrow[t];
-                    }
+                    kernels::axpy(yrow, w, v.row(kj));
                 }
             }
         }

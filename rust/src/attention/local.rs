@@ -4,7 +4,7 @@
 
 use super::workspace::{attend_fine_rows, DecodeState, HeadScratch};
 use super::{Attention, AttnWorkspace};
-use crate::tensor::{Batch, Mat, Qkv};
+use crate::tensor::{kernels, Batch, Mat, Qkv};
 
 pub struct LocalWindow {
     pub radius: usize,
@@ -30,11 +30,7 @@ pub(crate) fn local_head(radius: usize, causal: bool, s: &mut HeadScratch) {
         // scores
         let mut mx = f32::NEG_INFINITY;
         for j in lo..=hi {
-            let mut sc = 0.0f32;
-            for t in 0..d {
-                sc += s.qin.at(i, t) * s.kin.at(j, t);
-            }
-            let sc = sc * scale;
+            let sc = kernels::dot(s.qin.row(i), s.kin.row(j)) * scale;
             s.f1[j - lo] = sc;
             mx = mx.max(sc);
         }
@@ -47,9 +43,7 @@ pub(crate) fn local_head(radius: usize, causal: bool, s: &mut HeadScratch) {
         let inv = 1.0 / sum;
         for j in lo..=hi {
             let w = s.f1[j - lo] * inv;
-            for t in 0..d {
-                *s.out.at_mut(i, t) += w * s.vin.at(j, t);
-            }
+            kernels::axpy(s.out.row_mut(i), w, s.vin.row(j));
         }
     }
 }

@@ -46,7 +46,7 @@
 //! the paged refactor is invisible to the parity contracts.
 
 use crate::tensor::paged::DEFAULT_PAGE_LEN;
-use crate::tensor::{Batch, Mat, PagePool, PagedRows, Qkv};
+use crate::tensor::{kernels, Batch, Mat, PageDtype, PagePool, PagedRows, Qkv};
 use crate::util::threadpool::ThreadPool;
 
 /// One attention level's partial result at that level's resolution
@@ -225,6 +225,12 @@ pub struct DecodeState {
     pub k: PagedRows,
     /// `[len, d]` cached values.
     pub v: PagedRows,
+    /// Storage format of the fine K/V caches, applied at the next
+    /// [`DecodeState::begin`] (see [`DecodeState::set_kv_dtype`]). The
+    /// Q cache and the pyramid partial sums always stay F32 — they are
+    /// accumulated in place, where requantising every update would
+    /// compound error instead of bounding it at one encode per row.
+    kv_dtype: PageDtype,
     /// Coarsening pyramid; entry `i` holds level `i + 1` (level 0 is
     /// `k`/`v` themselves). Stale entries beyond `n_coarse` are kept
     /// for their allocations, never read.
@@ -270,6 +276,10 @@ impl DecodeState {
         self.cache_q = cache_q;
         self.n_coarse = n_coarse;
         self.max_len = max_len;
+        // fine K/V take the configured dtype; Q and the pyramid sums
+        // stay F32 (in-place accumulation)
+        self.k.set_dtype(self.kv_dtype);
+        self.v.set_dtype(self.kv_dtype);
         if reserve {
             self.k.begin_reserved(&pool, d, max_len);
             self.v.begin_reserved(&pool, d, max_len);
@@ -319,6 +329,19 @@ impl DecodeState {
     /// The pool this state draws from (None before the first `begin`).
     pub fn pool(&self) -> Option<&PagePool> {
         self.pool.as_ref()
+    }
+
+    /// Store the fine K/V caches in `dtype` from the next
+    /// [`DecodeState::begin`] on (sticky, like `attach_pool`).
+    /// Compressed rows are encoded once on append and dequantised on
+    /// the fly by the decode kernels; see the drift bounds in
+    /// `tensor::kernels`.
+    pub fn set_kv_dtype(&mut self, dtype: PageDtype) {
+        self.kv_dtype = dtype;
+    }
+
+    pub fn kv_dtype(&self) -> PageDtype {
+        self.kv_dtype
     }
 
     /// Flag the fine-K stream as the budgeted "context tokens" stream
@@ -383,6 +406,7 @@ impl DecodeState {
     pub fn clone_shared_into(&self, dst: &mut DecodeState) {
         debug_assert_eq!(self.d, dst.d, "head width mismatch");
         debug_assert_eq!(self.cache_q, dst.cache_q, "cache_q mismatch");
+        debug_assert_eq!(self.kv_dtype, dst.kv_dtype, "kv dtype mismatch");
         debug_assert!(
             dst.n_coarse <= self.n_coarse,
             "cannot share a shallower pyramid into a deeper state"
@@ -416,6 +440,7 @@ impl DecodeState {
             max_len: self.max_len,
             pool: self.pool.clone(),
             on_demand: self.on_demand,
+            kv_dtype: self.kv_dtype,
             ..DecodeState::default()
         };
         while dst.levels.len() < self.n_coarse {
@@ -509,9 +534,12 @@ impl DecodeState {
 /// `full`, `local` and `h1d` level-0 `decode_step` paths — callers
 /// either normalise `y` by `1/den` (single-level softmax) or feed
 /// `(m, den, y)` into a multi-level recombination. Iterates the paged
-/// caches by page-contiguous span, so the inner loops run over dense
-/// slices exactly as they did over the contiguous arena (and in the
-/// same order — results are bitwise unchanged).
+/// caches by page-contiguous span; the per-row dot/axpy inner loops go
+/// through the runtime-dispatched `tensor::kernels` table, which keeps
+/// results bitwise identical across ISAs (fixed 8-lane accumulation,
+/// no FMA). Compressed K/V views ([`PageDtype::F16`]/[`PageDtype::I8`])
+/// stream their packed slots straight into the dequantising kernel
+/// variants — no f32 materialisation of the history, ever.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_fine_rows(
     q_row: &[f32],
@@ -523,15 +551,17 @@ pub(crate) fn attend_fine_rows(
     wbuf: &mut Vec<f32>,
     y: &mut [f32],
 ) -> (f32, f32) {
-    let d = q_row.len();
     wbuf.clear();
+    let dtype = k.dtype();
+    let ks = k.stride();
     let mut m = f32::NEG_INFINITY;
     k.spans(lo, hi, |chunk| {
-        for krow in chunk.chunks_exact(d) {
-            let mut dot = 0.0f32;
-            for i in 0..d {
-                dot += q_row[i] * krow[i];
-            }
+        for krow in chunk.chunks_exact(ks) {
+            let dot = match dtype {
+                PageDtype::F32 => kernels::dot(q_row, krow),
+                PageDtype::F16 => kernels::dot_f16(q_row, krow),
+                PageDtype::I8 => kernels::dot_i8(q_row, krow),
+            };
             let sc = dot * scale;
             wbuf.push(sc);
             if sc > m {
@@ -542,13 +572,17 @@ pub(crate) fn attend_fine_rows(
     let mut den = 0.0f32;
     y.fill(0.0);
     let mut wi = 0usize;
+    let vs = v.stride();
+    debug_assert_eq!(v.dtype(), dtype, "K/V dtype mismatch");
     v.spans(lo, hi, |chunk| {
-        for vrow in chunk.chunks_exact(d) {
+        for vrow in chunk.chunks_exact(vs) {
             let w = (wbuf[wi] - m).exp();
             wi += 1;
             den += w;
-            for i in 0..d {
-                y[i] += w * vrow[i];
+            match dtype {
+                PageDtype::F32 => kernels::axpy(y, w, vrow),
+                PageDtype::F16 => kernels::axpy_f16(y, w, vrow),
+                PageDtype::I8 => kernels::axpy_i8(y, w, vrow),
             }
         }
     });

@@ -31,7 +31,11 @@
 //!                             (--page-len, prefix sharing via
 //!                             --prefix-cache); --reserve restores the
 //!                             contiguous-reservation baseline
-//!                             admission
+//!                             admission. --kv-dtype {f32,f16,int8}
+//!                             stores KV pages compressed (budget
+//!                             charges shrink proportionally) and
+//!                             --quant-weights routes every matmul
+//!                             through int8 per-row quantised weights
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
@@ -50,7 +54,7 @@ use htransformer::attention::{
 };
 use htransformer::hmatrix::toeplitz;
 use htransformer::model::{sample_logits, DecodeWorkspace, Model, ModelConfig, ModelWorkspace};
-use htransformer::tensor::{Batch, Qkv};
+use htransformer::tensor::{Batch, PageDtype, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::Rng;
@@ -332,17 +336,24 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<(), String> {
-    use htransformer::model::{run_sequential, synthetic_workload, ServeConfig, ServeEngine};
+    use htransformer::model::{run_sequential_dtype, synthetic_workload, ServeConfig, ServeEngine};
     use std::sync::Arc;
 
     // decoding wants a causal model, same defaulting rule as `generate`
     let default_causal = args.get("attention").unwrap_or("h1d") != "lowrank";
-    let cfg = ModelConfig::from_lookup(|k| {
+    let mut cfg = ModelConfig::from_lookup(|k| {
         args.get(k).or_else(|| match (k, default_causal) {
             ("causal", true) => Some("true"),
             _ => None,
         })
     })?;
+    // hyphenated CLI alias for the config key
+    if args.bool("quant-weights") {
+        cfg.quant_weights = true;
+    }
+    let kv_flag = args.str_or("kv-dtype", "f32");
+    let kv_dtype = PageDtype::parse(&kv_flag)
+        .ok_or_else(|| format!("--kv-dtype expects f32|f16|int8, got {kv_flag:?}"))?;
     let seed = args.u64_or("seed", 42);
     let n_requests = args.usize_or("requests", 16);
     let max_batch = args.usize_or("max-batch", 8);
@@ -417,7 +428,9 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         );
     }
 
-    let seq = run_sequential(&model, &requests)?;
+    // same-dtype sequential loop: the parity guard below pins the
+    // scheduler, not the (bounded-drift) compression
+    let seq = run_sequential_dtype(&model, &requests, kv_dtype)?;
     let workers = if threads == 0 {
         htransformer::util::threadpool::default_threads()
     } else {
@@ -430,6 +443,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         reserve,
         prefix_cache,
         threads: workers,
+        kv_dtype,
     };
     let mut engine = ServeEngine::new(Arc::clone(&model), scfg)?;
     let batched = engine.run(requests)?;
@@ -460,9 +474,11 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         batched.stats.peak_active
     );
     println!(
-        "paged KV ({}): page_len {page_len}, peak {} pages / {} ctx tokens, \
-         prefix-cache hit rate {:.0}% ({}/{} admissions), {} eviction(s)",
+        "paged KV ({}, {} pages, {} weights): page_len {page_len}, peak {} pages / {} ctx \
+         tokens, prefix-cache hit rate {:.0}% ({}/{} admissions), {} eviction(s)",
         if reserve { "reserved baseline" } else { "demand-grown" },
+        kv_dtype.as_str(),
+        if model.cfg.quant_weights { "int8" } else { "f32" },
         batched.stats.peak_pages,
         batched.stats.peak_ctx_tokens,
         100.0 * batched.stats.prefix_hit_rate(),

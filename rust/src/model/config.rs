@@ -70,6 +70,11 @@ pub struct ModelConfig {
     pub max_len: usize,
     pub causal: bool,
     pub attention: AttnSpec,
+    /// Store the weight matrices of every matmul (QKV/Wo/FFN/logits) in
+    /// per-row-scaled int8 alongside the f32 originals and route the
+    /// projections through the quantised kernels — bounded-drift, not
+    /// exact (see `model::QuantMat`).
+    pub quant_weights: bool,
 }
 
 impl Default for ModelConfig {
@@ -83,6 +88,7 @@ impl Default for ModelConfig {
             max_len: 512,
             causal: false,
             attention: AttnSpec::H1d { nr: 16 },
+            quant_weights: false,
         }
     }
 }
@@ -171,6 +177,7 @@ impl ModelConfig {
         let d_ff = pu(&mut get, "d_ff", d.d_ff)?;
         let max_len = pu(&mut get, "max_len", d.max_len)?;
         let causal = pb(&mut get, "causal", d.causal)?;
+        let quant_weights = pb(&mut get, "quant_weights", d.quant_weights)?;
         let attention = match get("attention").unwrap_or("h1d") {
             "full" => AttnSpec::Full,
             "h1d" => AttnSpec::H1d {
@@ -204,6 +211,7 @@ impl ModelConfig {
             max_len,
             causal,
             attention,
+            quant_weights,
         };
         cfg.validate()?;
         Ok(cfg)

@@ -37,11 +37,11 @@
 //! outright). The decode session is therefore *strictly causal* even
 //! where the batched h1d forward is only span-aligned causal.
 
-use super::{Model, ModelWorkspace, LN_EPS};
+use super::{matmul_q, Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
-use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
+use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into};
 use crate::tensor::paged::DEFAULT_PAGE_LEN;
-use crate::tensor::{Mat, PagePool};
+use crate::tensor::{Mat, PageDtype, PagePool};
 use crate::util::Rng;
 
 /// Owns everything a decode session needs besides the model: the
@@ -59,6 +59,10 @@ pub struct DecodeWorkspace {
     /// serve engine shares one demand-grown pool across sessions
     /// instead.
     pool: PagePool,
+    /// Storage dtype for the fine K/V pages of every state — applied to
+    /// each state at the next `prefill_with` (f16/int8 trade bounded
+    /// decode drift for smaller caches; see `tensor::PageDtype`).
+    kv_dtype: PageDtype,
     /// KV caches, `layer * n_heads + head` order.
     states: Vec<DecodeState>,
     /// `[1, D]` residual stream for the current position.
@@ -87,6 +91,7 @@ impl DecodeWorkspace {
         Self {
             prefill: ModelWorkspace::new(threads),
             pool: PagePool::new(DEFAULT_PAGE_LEN),
+            kv_dtype: PageDtype::default(),
             states: Vec::new(),
             x: Mat::default(),
             hn: Mat::default(),
@@ -108,6 +113,18 @@ impl DecodeWorkspace {
     /// Workspace whose prefill uses the host's available parallelism.
     pub fn parallel() -> Self {
         Self::new(crate::util::threadpool::default_threads())
+    }
+
+    /// Select the KV-cache page dtype for sessions prefillled through
+    /// this workspace (takes effect at the next [`Model::prefill_with`];
+    /// live states keep their current dtype until then).
+    pub fn set_kv_dtype(&mut self, dtype: PageDtype) {
+        self.kv_dtype = dtype;
+    }
+
+    /// The KV-cache page dtype sessions will decode with.
+    pub fn kv_dtype(&self) -> PageDtype {
+        self.kv_dtype
     }
 
     /// `(pointer, capacity)` of every heap buffer the workspace owns —
@@ -182,6 +199,7 @@ impl Model {
         }
         for st in &mut ws.states[..n_states] {
             st.attach_pool(&ws.pool, true);
+            st.set_kv_dtype(ws.kv_dtype);
             self.algo.decode_begin(st, cfg.max_len, cfg.d_head());
         }
 
@@ -305,11 +323,12 @@ impl<'m> DecodeSession<'m> {
         }
 
         for (layer, lp) in p.layers.iter().enumerate() {
+            let lq = self.model.layer_quant(layer);
             // pre-LN attention block at [1, D], heads through the caches
             layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
-            matmul_into(&ws.hn, &lp.wq, &mut ws.qrow);
-            matmul_into(&ws.hn, &lp.wk, &mut ws.krow);
-            matmul_into(&ws.hn, &lp.wv, &mut ws.vrow);
+            matmul_q(&ws.hn, &lp.wq, lq.map(|q| &q.wq), &mut ws.qrow);
+            matmul_q(&ws.hn, &lp.wk, lq.map(|q| &q.wk), &mut ws.krow);
+            matmul_q(&ws.hn, &lp.wv, lq.map(|q| &q.wv), &mut ws.vrow);
             ws.merged.reset_for_overwrite(1, d);
             for h in 0..n_heads {
                 self.model.algo.decode_step(
@@ -321,15 +340,15 @@ impl<'m> DecodeSession<'m> {
                     &mut ws.merged.row_mut(0)[h * dh..(h + 1) * dh],
                 );
             }
-            matmul_into(&ws.merged, &lp.wo, &mut ws.proj);
+            matmul_q(&ws.merged, &lp.wo, lq.map(|q| &q.wo), &mut ws.proj);
             add_assign(&mut ws.x, &ws.proj);
 
             // pre-LN feed-forward block
             layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
-            matmul_into(&ws.hn, &lp.ff_w1, &mut ws.ff);
+            matmul_q(&ws.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut ws.ff);
             add_bias_rows(&mut ws.ff, &lp.ff_b1);
             gelu(&mut ws.ff);
-            matmul_into(&ws.ff, &lp.ff_w2, &mut ws.proj);
+            matmul_q(&ws.ff, &lp.ff_w2, lq.map(|q| &q.ff_w2), &mut ws.proj);
             add_bias_rows(&mut ws.proj, &lp.ff_b2);
             add_assign(&mut ws.x, &ws.proj);
         }
@@ -381,10 +400,34 @@ mod tests {
                 max_len,
                 causal,
                 attention,
+                quant_weights: false,
             },
             7,
         )
         .unwrap()
+    }
+
+    #[test]
+    fn compressed_kv_decode_tracks_the_f32_cache() {
+        // f16 KV pages: decode drift against the exact f32 cache stays
+        // within half-precision noise at these scales
+        let model = tiny_model(AttnSpec::H1d { nr: 4 }, true, 48);
+        let mut rng = Rng::new(31);
+        let tokens: Vec<u32> = (0..11).map(|_| rng.below(29) as u32).collect();
+        let mut exact = model.prefill(&tokens).unwrap();
+        let mut ws = DecodeWorkspace::serial();
+        ws.set_kv_dtype(PageDtype::F16);
+        let mut f16 = model.prefill_with(ws, &tokens).unwrap();
+        let steps: Vec<u32> = (0..16).map(|_| rng.below(29) as u32).collect();
+        for &t in &steps {
+            let a = exact.step(t).unwrap().clone();
+            let b = f16.step(t).unwrap();
+            let mut worst = 0.0f32;
+            for j in 0..a.cols {
+                worst = worst.max((a.at(0, j) - b.at(0, j)).abs());
+            }
+            assert!(worst < 0.05, "f16 KV drift {worst} too large");
+        }
     }
 
     #[test]

@@ -38,19 +38,142 @@ pub mod serve;
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
 pub use serve::{
-    run_sequential, shared_prefix_workload, synthetic_workload, Completion, Request, ServeConfig,
-    ServeEngine, ServeReport, ServeStats,
+    run_sequential, run_sequential_dtype, shared_prefix_workload, synthetic_workload, Completion,
+    Request, ServeConfig, ServeEngine, ServeReport, ServeStats,
 };
 
 use crate::attention::{Attention, AttnWorkspace};
 use crate::tensor::ops::{
     add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into, matmul_nt_into,
 };
-use crate::tensor::{Batch, Mat, Qkv};
+use crate::tensor::{kernels, Batch, Mat, Qkv};
 use crate::util::Rng;
 
 /// LayerNorm epsilon, matching the L2 jax `_layer_norm`.
 const LN_EPS: f32 = 1e-6;
+
+/// A weight matrix quantised to int8 with one f32 scale per *output*
+/// row: row `o` holds the fan-in weights producing output feature `o`
+/// (`W` transposed for `x @ W` projections; the `[V, D]` embedding is
+/// already in that orientation for the tied logits head). The matmul
+/// runs `dot(int8 row, f32 activations) * scale` per output — a
+/// bounded-drift approximation (relative row error <= 0.5/127), never
+/// bitwise exact, which is why [`ModelConfig::quant_weights`] is
+/// opt-in and the f32 originals stay in [`ModelParams`].
+pub struct QuantMat {
+    /// Fan-out (number of output features / quantised rows).
+    rows: usize,
+    /// Fan-in (activation width).
+    cols: usize,
+    /// `[rows * cols]` row-major int8 weights.
+    data: Vec<i8>,
+    /// `[rows]` per-row dequantisation scales (`max_abs / 127`).
+    scales: Vec<f32>,
+}
+
+impl QuantMat {
+    fn quantise_rows(rows: usize, cols: usize, at: impl Fn(usize, usize) -> f32) -> QuantMat {
+        let mut data = vec![0i8; rows * cols];
+        let mut scales = vec![0.0f32; rows];
+        for o in 0..rows {
+            let mut max_abs = 0.0f32;
+            for k in 0..cols {
+                max_abs = max_abs.max(at(o, k).abs());
+            }
+            let scale = max_abs / 127.0;
+            scales[o] = scale;
+            if scale > 0.0 {
+                let inv = 1.0 / scale;
+                for k in 0..cols {
+                    data[o * cols + k] = (at(o, k) * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        QuantMat {
+            rows,
+            cols,
+            data,
+            scales,
+        }
+    }
+
+    /// Quantise a `[K, N]` projection applied as `x @ w` (rows become
+    /// the transposed output columns).
+    fn from_proj(w: &Mat) -> QuantMat {
+        Self::quantise_rows(w.cols, w.rows, |o, k| w.at(k, o))
+    }
+
+    /// Quantise a `[N, K]` matrix applied as `x @ w^T` (the
+    /// `matmul_nt_into` orientation — tied embedding logits head).
+    fn from_nt(w: &Mat) -> QuantMat {
+        Self::quantise_rows(w.rows, w.cols, |o, k| w.at(o, k))
+    }
+
+    /// `out[n] = x[n] @ dequant(self)^T` — the quantised replacement
+    /// for both `matmul_into(x, w, out)` (with [`QuantMat::from_proj`])
+    /// and `matmul_nt_into(x, w, out)` (with [`QuantMat::from_nt`]).
+    pub(crate) fn matmul_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.cols, "quant matmul shape mismatch");
+        out.reset_for_overwrite(x.rows, self.rows);
+        for n in 0..x.rows {
+            let xrow = x.row(n);
+            let orow = out.row_mut(n);
+            for (o, (dst, &scale)) in orow.iter_mut().zip(&self.scales).enumerate() {
+                let qrow = &self.data[o * self.cols..(o + 1) * self.cols];
+                *dst = kernels::dot_qi8(qrow, xrow) * scale;
+            }
+        }
+    }
+}
+
+/// Int8 mirrors of one layer's six weight matmuls.
+pub(crate) struct LayerQuant {
+    pub(crate) wq: QuantMat,
+    pub(crate) wk: QuantMat,
+    pub(crate) wv: QuantMat,
+    pub(crate) wo: QuantMat,
+    pub(crate) ff_w1: QuantMat,
+    pub(crate) ff_w2: QuantMat,
+}
+
+/// The full quantised weight set, derived from [`ModelParams`] when
+/// `quant_weights` is on (a cache, not parameters — `n_params` and
+/// checkpoints are unaffected).
+pub(crate) struct ModelQuant {
+    pub(crate) layers: Vec<LayerQuant>,
+    pub(crate) embed: QuantMat,
+}
+
+impl ModelQuant {
+    fn from_params(p: &ModelParams) -> ModelQuant {
+        ModelQuant {
+            layers: p
+                .layers
+                .iter()
+                .map(|lp| LayerQuant {
+                    wq: QuantMat::from_proj(&lp.wq),
+                    wk: QuantMat::from_proj(&lp.wk),
+                    wv: QuantMat::from_proj(&lp.wv),
+                    wo: QuantMat::from_proj(&lp.wo),
+                    ff_w1: QuantMat::from_proj(&lp.ff_w1),
+                    ff_w2: QuantMat::from_proj(&lp.ff_w2),
+                })
+                .collect(),
+            embed: QuantMat::from_nt(&p.embed),
+        }
+    }
+}
+
+/// `x @ w` through the int8 mirror when one is present, the exact f32
+/// path otherwise — the single dispatch point every weight matmul in
+/// the forward, decode and serve paths routes through.
+#[inline]
+pub(crate) fn matmul_q(x: &Mat, w: &Mat, q: Option<&QuantMat>, out: &mut Mat) {
+    match q {
+        Some(qm) => qm.matmul_into(x, out),
+        None => matmul_into(x, w, out),
+    }
+}
 
 /// One residual block's parameters (pre-LN attention + pre-LN FFN).
 #[derive(Clone, Debug)]
@@ -89,6 +212,8 @@ pub struct Model {
     pub cfg: ModelConfig,
     pub params: ModelParams,
     algo: Box<dyn Attention + Send + Sync>,
+    /// Int8 weight mirrors, present iff `cfg.quant_weights`.
+    pub(crate) quant: Option<ModelQuant>,
 }
 
 impl Model {
@@ -124,15 +249,18 @@ impl Model {
             })
             .collect();
         let algo = cfg.attention.build();
+        let params = ModelParams {
+            embed,
+            pos,
+            layers,
+            ln_f_scale: vec![1.0; d],
+            ln_f_bias: vec![0.0; d],
+        };
+        let quant = cfg.quant_weights.then(|| ModelQuant::from_params(&params));
         Ok(Model {
-            params: ModelParams {
-                embed,
-                pos,
-                layers,
-                ln_f_scale: vec![1.0; d],
-                ln_f_bias: vec![0.0; d],
-            },
+            params,
             algo,
+            quant,
             cfg,
         })
     }
@@ -169,7 +297,16 @@ impl Model {
     pub(crate) fn logits_into(&self, x: &Mat, hn: &mut Mat, logits: &mut Mat) {
         let p = &self.params;
         layernorm_rows_into(x, &p.ln_f_scale, &p.ln_f_bias, LN_EPS, hn);
-        matmul_nt_into(hn, &p.embed, logits);
+        match &self.quant {
+            Some(q) => q.embed.matmul_into(hn, logits),
+            None => matmul_nt_into(hn, &p.embed, logits),
+        }
+    }
+
+    /// The int8 mirror of layer `layer`'s matmuls, when quantised.
+    #[inline]
+    pub(crate) fn layer_quant(&self, layer: usize) -> Option<&LayerQuant> {
+        self.quant.as_ref().map(|q| &q.layers[layer])
     }
 
     /// Embedding plus every residual block, leaving the final residual
@@ -216,26 +353,27 @@ impl Model {
         }
 
         for (layer, lp) in p.layers.iter().enumerate() {
+            let lq = self.layer_quant(layer);
             // pre-LN attention block: x += merge(attn(split(LN(x) @ Wqkv))) @ Wo
             layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
-            matmul_into(&ws.hn, &lp.wq, &mut ws.proj);
+            matmul_q(&ws.hn, &lp.wq, lq.map(|q| &q.wq), &mut ws.proj);
             ws.qkv.q.split_heads_from(&ws.proj, batch, n_heads);
-            matmul_into(&ws.hn, &lp.wk, &mut ws.proj);
+            matmul_q(&ws.hn, &lp.wk, lq.map(|q| &q.wk), &mut ws.proj);
             ws.qkv.k.split_heads_from(&ws.proj, batch, n_heads);
-            matmul_into(&ws.hn, &lp.wv, &mut ws.proj);
+            matmul_q(&ws.hn, &lp.wv, lq.map(|q| &q.wv), &mut ws.proj);
             ws.qkv.v.split_heads_from(&ws.proj, batch, n_heads);
             observe(layer, &ws.qkv);
             self.algo.forward_batch_into(&mut ws.attn, &ws.qkv, cfg.causal, &mut ws.attn_out);
             ws.attn_out.merge_heads_into(&mut ws.merged);
-            matmul_into(&ws.merged, &lp.wo, &mut ws.proj);
+            matmul_q(&ws.merged, &lp.wo, lq.map(|q| &q.wo), &mut ws.proj);
             add_assign(&mut ws.x, &ws.proj);
 
             // pre-LN feed-forward block: x += GELU(LN(x) @ W1 + b1) @ W2 + b2
             layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
-            matmul_into(&ws.hn, &lp.ff_w1, &mut ws.ff);
+            matmul_q(&ws.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut ws.ff);
             add_bias_rows(&mut ws.ff, &lp.ff_b1);
             gelu(&mut ws.ff);
-            matmul_into(&ws.ff, &lp.ff_w2, &mut ws.proj);
+            matmul_q(&ws.ff, &lp.ff_w2, lq.map(|q| &q.ff_w2), &mut ws.proj);
             add_bias_rows(&mut ws.proj, &lp.ff_b2);
             add_assign(&mut ws.x, &ws.proj);
         }
@@ -338,6 +476,7 @@ mod tests {
             max_len: 40,
             causal,
             attention,
+            quant_weights: false,
         }
     }
 
@@ -417,6 +556,31 @@ mod tests {
                 assert_eq!(z1.at(i, j), z2.at(i, j), "row {i} leaked future info");
             }
         }
+    }
+
+    #[test]
+    fn quantised_weights_track_the_f32_logits() {
+        // int8 weights are a bounded-drift approximation: same tokens,
+        // same seed, logits stay close (the tight per-fixture cosine /
+        // max-abs bounds live in tests/model_forward.rs)
+        let mut rng = Rng::new(6);
+        let cfg = tiny_cfg(AttnSpec::H1d { nr: 4 }, true);
+        let model = Model::new(cfg.clone(), 17).unwrap();
+        let qcfg = ModelConfig {
+            quant_weights: true,
+            ..cfg
+        };
+        let qmodel = Model::new(qcfg, 17).unwrap();
+        assert_eq!(model.n_params(), qmodel.n_params(), "quant is a cache, not params");
+        let tokens = ramp_tokens(&mut rng, model.cfg.vocab_size, 19);
+        let mut ws = ModelWorkspace::serial();
+        let zf = model.forward(&mut ws, &tokens, 1).clone();
+        let zq = qmodel.forward(&mut ws, &tokens, 1).clone();
+        assert_eq!((zq.rows, zq.cols), (zf.rows, zf.cols));
+        assert!(zq.data.iter().all(|x| x.is_finite()));
+        let drift = zf.max_abs_diff(&zq);
+        assert!(drift > 0.0, "quantisation should perturb the logits");
+        assert!(drift < 1.0, "quantised logits drifted too far: {drift}");
     }
 
     #[test]

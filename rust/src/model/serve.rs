@@ -106,11 +106,11 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::{sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
+use super::{matmul_q, sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
-use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into};
+use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into};
 use crate::tensor::paged::DEFAULT_PAGE_LEN;
-use crate::tensor::{Mat, PagePool, PoolStats};
+use crate::tensor::{Mat, PageDtype, PagePool, PoolStats};
 use crate::util::bench::{derive_seed, synthetic_prompt};
 use crate::util::Rng;
 
@@ -138,6 +138,12 @@ pub struct ServeConfig {
     /// Worker threads for prefill and chunked decode rounds
     /// (`<= 1` means the calling thread).
     pub threads: usize,
+    /// Storage dtype for every session's fine K/V pages. `F16`/`I8`
+    /// pages hold the same `page_len` rows in fewer f32 slots, so each
+    /// budgeted page charges proportionally fewer context tokens
+    /// against `max_tokens` — compressed caches admit more concurrent
+    /// sessions under the same budget, at bounded decode drift.
+    pub kv_dtype: PageDtype,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +155,7 @@ impl Default for ServeConfig {
             reserve: false,
             prefix_cache: 8,
             threads: 1,
+            kv_dtype: PageDtype::F32,
         }
     }
 }
@@ -468,11 +475,12 @@ fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
     }
 
     for (layer, lp) in p.layers.iter().enumerate() {
+        let lq = model.layer_quant(layer);
         // pre-LN attention block at [n, D]; one weight read per matrix
         layernorm_rows_into(&buf.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut buf.hn);
-        matmul_into(&buf.hn, &lp.wq, &mut buf.q);
-        matmul_into(&buf.hn, &lp.wk, &mut buf.k);
-        matmul_into(&buf.hn, &lp.wv, &mut buf.v);
+        matmul_q(&buf.hn, &lp.wq, lq.map(|q| &q.wq), &mut buf.q);
+        matmul_q(&buf.hn, &lp.wk, lq.map(|q| &q.wk), &mut buf.k);
+        matmul_q(&buf.hn, &lp.wv, lq.map(|q| &q.wv), &mut buf.v);
         buf.merged.reset_for_overwrite(n, d);
         let mut layer_states: Vec<&mut [DecodeState]> = slots
             .iter_mut()
@@ -486,15 +494,15 @@ fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
             cfg.causal,
             &mut buf.merged,
         );
-        matmul_into(&buf.merged, &lp.wo, &mut buf.proj);
+        matmul_q(&buf.merged, &lp.wo, lq.map(|q| &q.wo), &mut buf.proj);
         add_assign(&mut buf.x, &buf.proj);
 
         // pre-LN feed-forward block
         layernorm_rows_into(&buf.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut buf.hn);
-        matmul_into(&buf.hn, &lp.ff_w1, &mut buf.ff);
+        matmul_q(&buf.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut buf.ff);
         add_bias_rows(&mut buf.ff, &lp.ff_b1);
         gelu(&mut buf.ff);
-        matmul_into(&buf.ff, &lp.ff_w2, &mut buf.proj);
+        matmul_q(&buf.ff, &lp.ff_w2, lq.map(|q| &q.ff_w2), &mut buf.proj);
         add_bias_rows(&mut buf.proj, &lp.ff_b2);
         add_assign(&mut buf.x, &buf.proj);
     }
@@ -521,6 +529,11 @@ fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
 pub struct ServeEngine {
     model: Arc<Model>,
     cfg: ServeConfig,
+    /// Context tokens one budgeted fine-K page charges under
+    /// `cfg.kv_dtype` (`page_len` for f32; fewer for f16/int8) — the
+    /// conversion factor between page counts and the `max_tokens`
+    /// budget, precomputed at construction.
+    kv_page_cost: usize,
     /// Shared KV page pool for every session's caches and the prefix
     /// cache; its accounting drives admission and growth (module docs).
     pool: PagePool,
@@ -561,7 +574,9 @@ impl ServeEngine {
             ));
         }
         let threads = cfg.threads.max(1);
+        let kv_page_cost = cfg.kv_dtype.page_ctx_cost(cfg.page_len, model.cfg.d_head());
         Ok(ServeEngine {
+            kv_page_cost,
             pool: PagePool::new(cfg.page_len),
             cache: Vec::new(),
             prefill: ModelWorkspace::new(threads),
@@ -618,9 +633,11 @@ impl ServeEngine {
             ));
         }
         // page-granular: the horizon this session could grow to, alone
+        // (each page charges kv_page_cost tokens — fewer when the KV
+        // pages are compressed)
         let granular = budget
             .div_ceil(self.cfg.page_len)
-            .saturating_mul(self.cfg.page_len);
+            .saturating_mul(self.kv_page_cost);
         if granular > self.cfg.max_tokens {
             return Err(format!(
                 "request {}: page-rounded context reservation {granular} exceeds the \
@@ -675,28 +692,30 @@ impl ServeEngine {
         }
     }
 
-    /// Whether `extra_pages` more context pages fit `max_tokens`.
-    fn fits_ctx(&self, extra_pages: usize) -> bool {
+    /// Whether `extra_tokens` more context tokens fit `max_tokens`
+    /// (tokens are dtype-weighted: the pool tracks each budgeted page
+    /// at its `ctx_cost`, so compressed pages count for less).
+    fn fits_ctx(&self, extra_tokens: usize) -> bool {
         if self.cfg.max_tokens == usize::MAX {
             return true;
         }
-        (self.pool.stats().ctx_live + extra_pages).saturating_mul(self.cfg.page_len)
-            <= self.cfg.max_tokens
+        self.pool.stats().ctx_tokens().saturating_add(extra_tokens) <= self.cfg.max_tokens
     }
 
-    /// Context pages admitting `req` would allocate right now. A free
+    /// Context tokens admitting `req` would charge right now. A free
     /// cache hit is predicted only when [`ServeEngine::cache_predicts_hit`]
     /// *guarantees* the hit path in `admit` will take it; otherwise the
     /// full prompt prefill is charged conservatively, so the context
     /// budget can never be exceeded by a predicted-hit-turned-miss.
-    fn admission_ctx_pages(&self, req: &Request) -> usize {
-        if self.cfg.reserve {
+    fn admission_ctx_tokens(&self, req: &Request) -> usize {
+        let pages = if self.cfg.reserve {
             (req.prompt.len() + req.max_new).div_ceil(self.cfg.page_len)
         } else if self.cache_limit() > 0 && self.cache_predicts_hit(req) {
             0
         } else {
             req.prompt.len().div_ceil(self.cfg.page_len)
-        }
+        };
+        pages.saturating_mul(self.kv_page_cost)
     }
 
     /// Sound hit predictor: the tokens match and the request's horizon
@@ -836,6 +855,7 @@ impl ServeEngine {
         }
         for st in &mut slot.states[..n_states] {
             st.attach_pool(&self.pool, self.cfg.reserve);
+            st.set_kv_dtype(self.cfg.kv_dtype);
         }
         // layer-0/head-0 fine K is the budgeted "context tokens" stream
         slot.states[0].mark_ctx_stream();
@@ -952,7 +972,7 @@ impl ServeEngine {
             }
             let needed = match self.pending.front() {
                 None => break,
-                Some(r) => self.admission_ctx_pages(r),
+                Some(r) => self.admission_ctx_tokens(r),
             };
             if !self.fits_ctx(needed) {
                 if self.drop_lru_cache_entry() {
@@ -976,7 +996,7 @@ impl ServeEngine {
                 let need: usize = self
                     .active
                     .iter()
-                    .map(|s| s.states[0].ctx_stage_cost())
+                    .map(|s| s.states[0].ctx_stage_cost() * self.kv_page_cost)
                     .sum();
                 if self.fits_ctx(need) {
                     break;
@@ -1095,7 +1115,19 @@ impl ServeEngine {
 /// a single `DecodeWorkspace` — identical request semantics and report
 /// shape, so it doubles as the parity oracle for `tests/serve.rs`.
 pub fn run_sequential(model: &Model, requests: &[Request]) -> Result<ServeReport, String> {
+    run_sequential_dtype(model, requests, PageDtype::F32)
+}
+
+/// [`run_sequential`] with the sessions' KV pages stored as `kv_dtype`
+/// — the one-at-a-time oracle for the engine's compressed-cache modes
+/// (`htx serve-bench --kv-dtype` uses it as the parity reference).
+pub fn run_sequential_dtype(
+    model: &Model,
+    requests: &[Request],
+    kv_dtype: PageDtype,
+) -> Result<ServeReport, String> {
     let mut ws = DecodeWorkspace::serial();
+    ws.set_kv_dtype(kv_dtype);
     let mut completions = Vec::with_capacity(requests.len());
     let mut stats = ServeStats::default();
     let t_all = Instant::now();
@@ -1228,10 +1260,84 @@ mod tests {
                 max_len,
                 causal: true,
                 attention,
+                quant_weights: false,
             },
             7,
         )
         .unwrap()
+    }
+
+    #[test]
+    fn compressed_kv_pages_admit_more_concurrent_sessions() {
+        // the f32 shape of tight_token_budget_serialises_admissions:
+        // each request grows to 4 pages; at page_len 4 and d_head 8 an
+        // f32 page charges 4 tokens (16 per session — a 20-token budget
+        // serialises), while an f16 page packs its 4x8 rows into 16
+        // slots = 2 tokens (8 per session — two sessions fit)
+        let model = Arc::new(tiny_model(AttnSpec::Full, 24));
+        let mk = |kv_dtype| ServeConfig {
+            max_batch: 4,
+            max_tokens: 20,
+            page_len: 4,
+            threads: 1,
+            kv_dtype,
+            ..ServeConfig::default()
+        };
+        let reqs = synthetic_workload(4, &[9], 5, 29, 0.0, 3);
+        let mut exact = ServeEngine::new(Arc::clone(&model), mk(PageDtype::F32)).unwrap();
+        let rf = exact.run(reqs.clone()).unwrap();
+        assert_eq!(rf.stats.peak_active, 1, "f32 baseline must serialise");
+        let mut packed = ServeEngine::new(Arc::clone(&model), mk(PageDtype::F16)).unwrap();
+        let rh = packed.run(reqs.clone()).unwrap();
+        assert!(
+            rh.stats.peak_active >= 2,
+            "f16 KV should at least double concurrency, got {}",
+            rh.stats.peak_active
+        );
+        assert!(rh.stats.peak_ctx_tokens <= 20, "budget exceeded");
+        assert_eq!(rh.completions.len(), 4);
+        // batched f16 decode matches the one-at-a-time f16 oracle
+        let seq = run_sequential_dtype(&model, &reqs, PageDtype::F16).unwrap();
+        assert_eq!(seq.tokens_by_id(), rh.tokens_by_id());
+    }
+
+    #[test]
+    fn int8_kv_and_quantised_weights_still_serve() {
+        // the lossiest configuration end to end: int8 KV pages plus
+        // int8 weights, batched engine vs sequential oracle
+        let model = Arc::new(
+            Model::new(
+                ModelConfig {
+                    vocab_size: 29,
+                    d_model: 16,
+                    n_heads: 2,
+                    n_layers: 2,
+                    d_ff: 24,
+                    max_len: 24,
+                    causal: true,
+                    attention: AttnSpec::H1d { nr: 4 },
+                    quant_weights: true,
+                },
+                7,
+            )
+            .unwrap(),
+        );
+        let cfg = ServeConfig {
+            max_batch: 3,
+            kv_dtype: PageDtype::I8,
+            threads: 1,
+            ..ServeConfig::default()
+        };
+        let reqs = synthetic_workload(5, &[6, 9], 4, 29, 0.0, 21);
+        let mut eng = ServeEngine::new(Arc::clone(&model), cfg).unwrap();
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.completions.len(), 5);
+        assert!(rep
+            .completions
+            .iter()
+            .all(|c| c.last_logits.iter().all(|x| x.is_finite())));
+        let seq = run_sequential_dtype(&model, &reqs, PageDtype::I8).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
     }
 
     #[test]

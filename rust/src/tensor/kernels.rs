@@ -1,0 +1,1148 @@
+//! Runtime-dispatched SIMD microkernels — the single place the crate's
+//! hot inner loops (dense matmuls, streaming softmax, LayerNorm
+//! moments, the paged-KV dot/axpy reads) touch vector hardware.
+//!
+//! ## Dispatch
+//!
+//! A [`KernelTable`] of plain function pointers is resolved **once** per
+//! process (`OnceLock`): AVX2 on x86_64 when
+//! `is_x86_feature_detected!("avx2")` reports support (plus F16C f16
+//! loads when available), NEON on aarch64 (baseline for the
+//! architecture), and the portable scalar fallback everywhere else.
+//! Setting `HTX_FORCE_SCALAR=1` in the environment forces the scalar
+//! table regardless of hardware — the CI leg that keeps both paths
+//! green. Adding an ISA = one module implementing the table's function
+//! signatures plus one arm in `detect()`; nothing else changes.
+//!
+//! ## The bitwise-parity contract
+//!
+//! Every reduction kernel follows one fixed **8-virtual-lane
+//! accumulation model**: element `e` accumulates into lane `e % 8`
+//! (exactly what an 8-wide vector loop does), tails go to the leading
+//! lanes, and the final reduction is the fixed tree
+//! `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`. No implementation may fuse
+//! multiply-add (FMA contracts the intermediate rounding and breaks
+//! parity), so AVX2 uses `mul` + `add`, never `fmadd`. Elementwise
+//! kernels (axpy, scale, add_assign) touch each element independently
+//! in order, which vectorizes without reordering anything. Under these
+//! rules every ISA produces **bitwise identical** results to
+//! [`scalar`] — pinned by `tests/simd_parity.rs` at ragged lengths —
+//! so routing a hot loop through the table never changes observable
+//! numerics, only speed.
+//!
+//! ## Compressed-row kernels
+//!
+//! The paged KV cache ([`crate::tensor::paged`]) can store f16 or int8
+//! rows bit-packed inside its `f32` page slots; the `*_f16` / `*_i8`
+//! kernels dequantise on the fly while streaming, so decode attention
+//! reads compressed pages directly. f16→f32 conversion is exact and
+//! int8 dequant is one rounding (`q as f32 * scale`), so the lane model
+//! keeps these bitwise ISA-independent too; the int8 and weight
+//! (`dot_qi8`) kernels share a single portable implementation and are
+//! exact across ISAs by construction, as are `gelu` and every other
+//! transcendental (libm stays scalar per element).
+
+use std::sync::OnceLock;
+
+/// Virtual accumulation width shared by every ISA (see module docs).
+pub const LANES: usize = 8;
+
+/// Fixed lane-reduction tree; part of the parity contract.
+#[inline]
+fn reduce8(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+}
+
+/// One resolved set of kernel entry points (see module docs).
+#[derive(Clone, Copy)]
+struct KernelTable {
+    isa: &'static str,
+    dot: fn(&[f32], &[f32]) -> f32,
+    dot_scaled: fn(&[f32], f32, &[f32], f32) -> f32,
+    sum: fn(&[f32]) -> f32,
+    sum_sq_diff: fn(&[f32], f32) -> f32,
+    axpy: fn(&mut [f32], f32, &[f32]),
+    scale: fn(&mut [f32], f32),
+    add_assign: fn(&mut [f32], &[f32]),
+    dot_f16: fn(&[f32], &[f32]) -> f32,
+    axpy_f16: fn(&mut [f32], f32, &[f32]),
+}
+
+const SCALAR_TABLE: KernelTable = KernelTable {
+    isa: "scalar",
+    dot: scalar::dot,
+    dot_scaled: scalar::dot_scaled,
+    sum: scalar::sum,
+    sum_sq_diff: scalar::sum_sq_diff,
+    axpy: scalar::axpy,
+    scale: scalar::scale,
+    add_assign: scalar::add_assign,
+    dot_f16: scalar::dot_f16,
+    axpy_f16: scalar::axpy_f16,
+};
+
+fn force_scalar() -> bool {
+    match std::env::var("HTX_FORCE_SCALAR") {
+        Ok(v) => !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("false")),
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> KernelTable {
+    if is_x86_feature_detected!("avx2") {
+        let mut t = KernelTable {
+            isa: "avx2",
+            dot: avx2::dot,
+            dot_scaled: avx2::dot_scaled,
+            sum: avx2::sum,
+            sum_sq_diff: avx2::sum_sq_diff,
+            axpy: avx2::axpy,
+            scale: avx2::scale,
+            add_assign: avx2::add_assign,
+            dot_f16: scalar::dot_f16,
+            axpy_f16: scalar::axpy_f16,
+        };
+        if is_x86_feature_detected!("f16c") {
+            t.isa = "avx2+f16c";
+            t.dot_f16 = avx2::dot_f16;
+            t.axpy_f16 = avx2::axpy_f16;
+        }
+        t
+    } else {
+        SCALAR_TABLE
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> KernelTable {
+    KernelTable {
+        isa: "neon",
+        dot: neon::dot,
+        dot_scaled: neon::dot_scaled,
+        sum: neon::sum,
+        sum_sq_diff: neon::sum_sq_diff,
+        axpy: neon::axpy,
+        scale: neon::scale,
+        add_assign: neon::add_assign,
+        dot_f16: scalar::dot_f16,
+        axpy_f16: scalar::axpy_f16,
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> KernelTable {
+    SCALAR_TABLE
+}
+
+#[inline]
+fn table() -> &'static KernelTable {
+    static TABLE: OnceLock<KernelTable> = OnceLock::new();
+    TABLE.get_or_init(|| if force_scalar() { SCALAR_TABLE } else { detect() })
+}
+
+/// Name of the instruction set the dispatcher resolved to
+/// (`"scalar"`, `"avx2"`, `"avx2+f16c"`, `"neon"`).
+pub fn active_isa() -> &'static str {
+    table().isa
+}
+
+/// `Σ a[i]·b[i]` under the 8-lane model.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    (table().dot)(a, b)
+}
+
+/// `Σ (a[i]·sa)·(b[i]·sb)` — the h1d coarse-level score read, where
+/// the cached pyramid sums are rescaled per element (qsum·0.5^level
+/// against ksum/count) exactly as the scalar loop did.
+#[inline]
+pub fn dot_scaled(a: &[f32], sa: f32, b: &[f32], sb: f32) -> f32 {
+    (table().dot_scaled)(a, sa, b, sb)
+}
+
+/// `Σ a[i]` under the 8-lane model.
+#[inline]
+pub fn sum(a: &[f32]) -> f32 {
+    (table().sum)(a)
+}
+
+/// `Σ (a[i]-mu)²` under the 8-lane model (LayerNorm variance pass).
+#[inline]
+pub fn sum_sq_diff(a: &[f32], mu: f32) -> f32 {
+    (table().sum_sq_diff)(a, mu)
+}
+
+/// `y[i] += a·x[i]` — elementwise, bitwise identical across ISAs.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    (table().axpy)(y, a, x)
+}
+
+/// `y[i] *= s` — elementwise, bitwise identical across ISAs.
+#[inline]
+pub fn scale(y: &mut [f32], s: f32) {
+    (table().scale)(y, s)
+}
+
+/// `y[i] += x[i]` — elementwise, bitwise identical across ISAs.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    (table().add_assign)(y, x)
+}
+
+/// Dot of a `q.len()`-element f32 row against an f16 bit-packed row
+/// (two halves per f32 slot, see [`encode_f16_row`]).
+#[inline]
+pub fn dot_f16(q: &[f32], slots: &[f32]) -> f32 {
+    (table().dot_f16)(q, slots)
+}
+
+/// `y[i] += w · decode_f16(slots, i)` over `y.len()` elements.
+#[inline]
+pub fn axpy_f16(y: &mut [f32], w: f32, slots: &[f32]) {
+    (table().axpy_f16)(y, w, slots)
+}
+
+/// Dot of a `q.len()`-element f32 row against an int8 row
+/// (`slots[0]` = per-row scale, then four bytes per slot, see
+/// [`encode_i8_row`]). Single portable implementation — exact across
+/// ISAs by construction.
+#[inline]
+pub fn dot_i8(q: &[f32], slots: &[f32]) -> f32 {
+    scalar::dot_i8(q, slots)
+}
+
+/// `y[i] += w · dequant_i8(slots, i)` over `y.len()` elements.
+#[inline]
+pub fn axpy_i8(y: &mut [f32], w: f32, slots: &[f32]) {
+    scalar::axpy_i8(y, w, slots)
+}
+
+/// Raw `Σ (w[i] as f32)·x[i]` against an int8 weight row (the caller
+/// applies the per-output-row scale once on the result) — the
+/// quantised-weight matmul inner loop. Portable lane-model
+/// implementation, exact across ISAs by construction.
+#[inline]
+pub fn dot_qi8(w: &[i8], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut cw = w.chunks_exact(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (ww, xx) in (&mut cw).zip(&mut cx) {
+        for ((l, &wi), xi) in lanes.iter_mut().zip(ww).zip(xx) {
+            *l += wi as f32 * xi;
+        }
+    }
+    for ((l, &wi), xi) in lanes.iter_mut().zip(cw.remainder()).zip(cx.remainder()) {
+        *l += wi as f32 * xi;
+    }
+    reduce8(&lanes)
+}
+
+/// GELU (tanh approximation, the L2 model's activation) applied in
+/// place. Stays scalar per element on every ISA — `tanh` is libm, so
+/// this is exact across ISAs by construction.
+pub fn gelu_slice(xs: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for x in xs.iter_mut() {
+        let x3 = *x * *x * *x;
+        *x = 0.5 * *x * (1.0 + (C * (*x + 0.044715 * x3)).tanh());
+    }
+}
+
+// ---------------------------------------------------------------------
+// f16 / int8 row packing (the paged-KV compressed storage formats)
+// ---------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// NaN stays NaN).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN (keep NaN-ness with a quiet payload bit)
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 112; // binary16 exponent field value
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal half (or underflow to zero)
+        if e < -10 {
+            return sign;
+        }
+        let full = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && half & 1 == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // round to nearest even; a mantissa carry correctly bumps the
+    // exponent (1.111.. -> 10.000), saturating into inf at e == 0x1e
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 == 1) {
+        half + 1
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal half: renormalise into an f32 normal
+            let mut e = 113i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Slots needed to pack `cols` f16 values (two per f32 slot).
+#[inline]
+pub fn f16_stride(cols: usize) -> usize {
+    cols.div_ceil(2)
+}
+
+/// Slots needed for an int8 row: one f32 scale + four bytes per slot.
+#[inline]
+pub fn i8_stride(cols: usize) -> usize {
+    1 + cols.div_ceil(4)
+}
+
+/// Pack `src` as f16 pairs into `dst` (`dst.len() == f16_stride(n)`;
+/// an odd tail leaves the unused high half zero).
+pub fn encode_f16_row(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), f16_stride(src.len()));
+    for (s, slot) in dst.iter_mut().enumerate() {
+        let lo = f32_to_f16(src[2 * s]) as u32;
+        let hi = if 2 * s + 1 < src.len() {
+            (f32_to_f16(src[2 * s + 1]) as u32) << 16
+        } else {
+            0
+        };
+        *slot = f32::from_bits(lo | hi);
+    }
+}
+
+/// Unpack an f16 row into `dst` (`dst.len()` = the row's column count).
+pub fn decode_f16_row(src: &[f32], dst: &mut [f32]) {
+    for (e, out) in dst.iter_mut().enumerate() {
+        *out = decode1_f16(src, e);
+    }
+}
+
+/// Quantise `src` as int8 with a per-row scale into `dst`
+/// (`dst.len() == i8_stride(n)`): `dst[0]` = scale = maxabs/127,
+/// elements stored as `round(x/scale)` clamped to ±127. Dequant is
+/// `q as f32 * scale` — a single rounding per element.
+pub fn encode_i8_row(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), i8_stride(src.len()));
+    let maxabs = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = maxabs / 127.0;
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    dst[0] = scale;
+    for (s, slot) in dst[1..].iter_mut().enumerate() {
+        let mut bits = 0u32;
+        for b in 0..4 {
+            let e = 4 * s + b;
+            if e >= src.len() {
+                break;
+            }
+            let q = (src[e] * inv).round().clamp(-127.0, 127.0) as i32;
+            bits |= ((q as u8) as u32) << (8 * b);
+        }
+        *slot = f32::from_bits(bits);
+    }
+}
+
+/// Dequantise an int8 row into `dst` (`dst.len()` = column count).
+pub fn decode_i8_row(src: &[f32], dst: &mut [f32]) {
+    let scale = src[0];
+    let packed = &src[1..];
+    for (e, out) in dst.iter_mut().enumerate() {
+        *out = decode1_i8(packed, e) * scale;
+    }
+}
+
+/// Decode element `e` of an f16 bit-packed row.
+#[inline]
+fn decode1_f16(slots: &[f32], e: usize) -> f32 {
+    let bits = slots[e / 2].to_bits();
+    let half = if e % 2 == 0 { bits as u16 } else { (bits >> 16) as u16 };
+    f16_to_f32(half)
+}
+
+/// Decode element `e` of an int8 packed payload (scale not applied).
+#[inline]
+fn decode1_i8(packed: &[f32], e: usize) -> f32 {
+    let bits = packed[e / 4].to_bits();
+    ((bits >> (8 * (e % 4))) & 0xff) as u8 as i8 as f32
+}
+
+// ---------------------------------------------------------------------
+// Portable reference implementations (the dispatch fallback and the
+// bitwise oracle for every SIMD path)
+// ---------------------------------------------------------------------
+
+/// Scalar kernels in the shared 8-lane accumulation model — always
+/// available, used directly by the parity tests as the oracle the
+/// dispatched table must match bitwise.
+pub mod scalar {
+    use super::{decode1_f16, decode1_i8, reduce8, LANES};
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for ((l, x), y) in lanes.iter_mut().zip(xa).zip(xb) {
+                *l += x * y;
+            }
+        }
+        for ((l, x), y) in lanes.iter_mut().zip(ca.remainder()).zip(cb.remainder()) {
+            *l += x * y;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn dot_scaled(a: &[f32], sa: f32, b: &[f32], sb: f32) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for ((l, x), y) in lanes.iter_mut().zip(xa).zip(xb) {
+                *l += (x * sa) * (y * sb);
+            }
+        }
+        for ((l, x), y) in lanes.iter_mut().zip(ca.remainder()).zip(cb.remainder()) {
+            *l += (x * sa) * (y * sb);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum(a: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        for xa in &mut ca {
+            for (l, x) in lanes.iter_mut().zip(xa) {
+                *l += x;
+            }
+        }
+        for (l, x) in lanes.iter_mut().zip(ca.remainder()) {
+            *l += x;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum_sq_diff(a: &[f32], mu: f32) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        for xa in &mut ca {
+            for (l, x) in lanes.iter_mut().zip(xa) {
+                let d = x - mu;
+                *l += d * d;
+            }
+        }
+        for (l, x) in lanes.iter_mut().zip(ca.remainder()) {
+            let d = x - mu;
+            *l += d * d;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yo, xi) in y.iter_mut().zip(x) {
+            *yo += a * xi;
+        }
+    }
+
+    pub fn scale(y: &mut [f32], s: f32) {
+        for yo in y.iter_mut() {
+            *yo *= s;
+        }
+    }
+
+    pub fn add_assign(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yo, xi) in y.iter_mut().zip(x) {
+            *yo += xi;
+        }
+    }
+
+    /// Decode 8 f16 values (4 slots) into `out`.
+    #[inline]
+    fn decode8_f16(slots: &[f32], out: &mut [f32; LANES]) {
+        for (s, &slot) in slots.iter().take(4).enumerate() {
+            let bits = slot.to_bits();
+            out[2 * s] = super::f16_to_f32(bits as u16);
+            out[2 * s + 1] = super::f16_to_f32((bits >> 16) as u16);
+        }
+    }
+
+    pub fn dot_f16(q: &[f32], slots: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut buf = [0.0f32; LANES];
+        let mut qc = q.chunks_exact(LANES);
+        let mut si = 0usize;
+        for xq in &mut qc {
+            decode8_f16(&slots[si..si + 4], &mut buf);
+            si += 4;
+            for ((l, x), y) in lanes.iter_mut().zip(xq).zip(&buf) {
+                *l += x * y;
+            }
+        }
+        for (e, &x) in qc.remainder().iter().enumerate() {
+            lanes[e] += x * decode1_f16(slots, 2 * si + e);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn axpy_f16(y: &mut [f32], w: f32, slots: &[f32]) {
+        let mut buf = [0.0f32; LANES];
+        let chunks = y.len() / LANES;
+        for c in 0..chunks {
+            decode8_f16(&slots[4 * c..4 * c + 4], &mut buf);
+            for (yo, x) in y[LANES * c..LANES * (c + 1)].iter_mut().zip(&buf) {
+                *yo += w * x;
+            }
+        }
+        for (e, yo) in y.iter_mut().enumerate().skip(chunks * LANES) {
+            *yo += w * decode1_f16(slots, e);
+        }
+    }
+
+    /// Decode 8 dequantised int8 values (2 payload slots) into `out`.
+    #[inline]
+    fn decode8_i8(packed: &[f32], scale: f32, out: &mut [f32; LANES]) {
+        for (s, &slot) in packed.iter().take(2).enumerate() {
+            let bits = slot.to_bits();
+            for b in 0..4 {
+                out[4 * s + b] = ((bits >> (8 * b)) & 0xff) as u8 as i8 as f32 * scale;
+            }
+        }
+    }
+
+    pub fn dot_i8(q: &[f32], slots: &[f32]) -> f32 {
+        let scale = slots[0];
+        let packed = &slots[1..];
+        let mut lanes = [0.0f32; LANES];
+        let mut buf = [0.0f32; LANES];
+        let mut qc = q.chunks_exact(LANES);
+        let mut pi = 0usize;
+        for xq in &mut qc {
+            decode8_i8(&packed[pi..pi + 2], scale, &mut buf);
+            pi += 2;
+            for ((l, x), y) in lanes.iter_mut().zip(xq).zip(&buf) {
+                *l += x * y;
+            }
+        }
+        for (e, &x) in qc.remainder().iter().enumerate() {
+            lanes[e] += x * (decode1_i8(packed, 4 * pi + e) * scale);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn axpy_i8(y: &mut [f32], w: f32, slots: &[f32]) {
+        let scale = slots[0];
+        let packed = &slots[1..];
+        let mut buf = [0.0f32; LANES];
+        let chunks = y.len() / LANES;
+        for c in 0..chunks {
+            decode8_i8(&packed[2 * c..2 * c + 2], scale, &mut buf);
+            for (yo, x) in y[LANES * c..LANES * (c + 1)].iter_mut().zip(&buf) {
+                *yo += w * x;
+            }
+        }
+        for (e, yo) in y.iter_mut().enumerate().skip(chunks * LANES) {
+            *yo += w * (decode1_i8(packed, e) * scale);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64, runtime-detected)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{decode1_f16, reduce8, LANES};
+    use std::arch::x86_64::*;
+
+    // SAFETY of every wrapper below: the dispatcher installs these only
+    // after is_x86_feature_detected!("avx2") (and "f16c" for the f16
+    // pair) returned true, and all pointer arithmetic stays inside the
+    // slices' bounds. No FMA anywhere — mul + add keeps the bitwise
+    // parity contract with the scalar lane model.
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * LANES));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * LANES));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let t = chunks * LANES;
+        for (e, (x, y)) in a[t..].iter().zip(&b[t..]).enumerate() {
+            lanes[e] += x * y;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_scaled_impl(a: &[f32], sa: f32, b: &[f32], sb: f32) -> f32 {
+        let chunks = a.len() / LANES;
+        let vsa = _mm256_set1_ps(sa);
+        let vsb = _mm256_set1_ps(sb);
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr().add(i * LANES)), vsa);
+            let vb = _mm256_mul_ps(_mm256_loadu_ps(b.as_ptr().add(i * LANES)), vsb);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let t = chunks * LANES;
+        for (e, (x, y)) in a[t..].iter().zip(&b[t..]).enumerate() {
+            lanes[e] += (x * sa) * (y * sb);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn dot_scaled(a: &[f32], sa: f32, b: &[f32], sb: f32) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        unsafe { dot_scaled_impl(a, sa, b, sb) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sum_impl(a: &[f32]) -> f32 {
+        let chunks = a.len() / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(a.as_ptr().add(i * LANES)));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (e, x) in a[chunks * LANES..].iter().enumerate() {
+            lanes[e] += x;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum(a: &[f32]) -> f32 {
+        unsafe { sum_impl(a) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sum_sq_diff_impl(a: &[f32], mu: f32) -> f32 {
+        let chunks = a.len() / LANES;
+        let vmu = _mm256_set1_ps(mu);
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(a.as_ptr().add(i * LANES)), vmu);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (e, x) in a[chunks * LANES..].iter().enumerate() {
+            let d = x - mu;
+            lanes[e] += d * d;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum_sq_diff(a: &[f32], mu: f32) -> f32 {
+        unsafe { sum_sq_diff_impl(a, mu) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_impl(y: &mut [f32], a: f32, x: &[f32]) {
+        let chunks = y.len() / LANES;
+        let va = _mm256_set1_ps(a);
+        for i in 0..chunks {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * LANES));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * LANES));
+            let r = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * LANES), r);
+        }
+        let t = chunks * LANES;
+        for (yo, xi) in y[t..].iter_mut().zip(&x[t..]) {
+            *yo += a * xi;
+        }
+    }
+
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        unsafe { axpy_impl(y, a, x) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_impl(y: &mut [f32], s: f32) {
+        let chunks = y.len() / LANES;
+        let vs = _mm256_set1_ps(s);
+        for i in 0..chunks {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * LANES));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * LANES), _mm256_mul_ps(vy, vs));
+        }
+        for yo in y[chunks * LANES..].iter_mut() {
+            *yo *= s;
+        }
+    }
+
+    pub fn scale(y: &mut [f32], s: f32) {
+        unsafe { scale_impl(y, s) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_assign_impl(y: &mut [f32], x: &[f32]) {
+        let chunks = y.len() / LANES;
+        for i in 0..chunks {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * LANES));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * LANES));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * LANES), _mm256_add_ps(vy, vx));
+        }
+        let t = chunks * LANES;
+        for (yo, xi) in y[t..].iter_mut().zip(&x[t..]) {
+            *yo += xi;
+        }
+    }
+
+    pub fn add_assign(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        unsafe { add_assign_impl(y, x) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    unsafe fn dot_f16_impl(q: &[f32], slots: &[f32]) -> f32 {
+        let chunks = q.len() / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            // 4 f32 slots = 8 packed halves in element order; cvtph is
+            // the exact f16 -> f32 conversion, so parity holds
+            let h = _mm_loadu_si128(slots.as_ptr().add(i * 4) as *const __m128i);
+            let vx = _mm256_cvtph_ps(h);
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i * LANES));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vq, vx));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let t = chunks * LANES;
+        for (e, &x) in q[t..].iter().enumerate() {
+            lanes[e] += x * decode1_f16(slots, t + e);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn dot_f16(q: &[f32], slots: &[f32]) -> f32 {
+        unsafe { dot_f16_impl(q, slots) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    unsafe fn axpy_f16_impl(y: &mut [f32], w: f32, slots: &[f32]) {
+        let chunks = y.len() / LANES;
+        let vw = _mm256_set1_ps(w);
+        for i in 0..chunks {
+            let h = _mm_loadu_si128(slots.as_ptr().add(i * 4) as *const __m128i);
+            let vx = _mm256_cvtph_ps(h);
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * LANES));
+            let r = _mm256_add_ps(vy, _mm256_mul_ps(vw, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * LANES), r);
+        }
+        let t = chunks * LANES;
+        for (e, yo) in y[t..].iter_mut().enumerate() {
+            *yo += w * decode1_f16(slots, t + e);
+        }
+    }
+
+    pub fn axpy_f16(y: &mut [f32], w: f32, slots: &[f32]) {
+        unsafe { axpy_f16_impl(y, w, slots) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64 baseline) — two 4-wide accumulators = the same 8-lane
+// model; vmul + vadd (never vfma) keeps the parity contract.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{reduce8, LANES};
+    use std::arch::aarch64::*;
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let mut lanes = [0.0f32; LANES];
+        // SAFETY: NEON is baseline on aarch64; all loads in bounds.
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let pa = a.as_ptr().add(i * LANES);
+                let pb = b.as_ptr().add(i * LANES);
+                acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+                acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc0);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        }
+        let t = chunks * LANES;
+        for (e, (x, y)) in a[t..].iter().zip(&b[t..]).enumerate() {
+            lanes[e] += x * y;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn dot_scaled(a: &[f32], sa: f32, b: &[f32], sb: f32) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let mut lanes = [0.0f32; LANES];
+        // SAFETY: as in `dot`.
+        unsafe {
+            let vsa = vdupq_n_f32(sa);
+            let vsb = vdupq_n_f32(sb);
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let pa = a.as_ptr().add(i * LANES);
+                let pb = b.as_ptr().add(i * LANES);
+                let a0 = vmulq_f32(vld1q_f32(pa), vsa);
+                let b0 = vmulq_f32(vld1q_f32(pb), vsb);
+                acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+                let a1 = vmulq_f32(vld1q_f32(pa.add(4)), vsa);
+                let b1 = vmulq_f32(vld1q_f32(pb.add(4)), vsb);
+                acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc0);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        }
+        let t = chunks * LANES;
+        for (e, (x, y)) in a[t..].iter().zip(&b[t..]).enumerate() {
+            lanes[e] += (x * sa) * (y * sb);
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum(a: &[f32]) -> f32 {
+        let chunks = a.len() / LANES;
+        let mut lanes = [0.0f32; LANES];
+        // SAFETY: as in `dot`.
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let pa = a.as_ptr().add(i * LANES);
+                acc0 = vaddq_f32(acc0, vld1q_f32(pa));
+                acc1 = vaddq_f32(acc1, vld1q_f32(pa.add(4)));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc0);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        }
+        for (e, x) in a[chunks * LANES..].iter().enumerate() {
+            lanes[e] += x;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn sum_sq_diff(a: &[f32], mu: f32) -> f32 {
+        let chunks = a.len() / LANES;
+        let mut lanes = [0.0f32; LANES];
+        // SAFETY: as in `dot`.
+        unsafe {
+            let vmu = vdupq_n_f32(mu);
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let pa = a.as_ptr().add(i * LANES);
+                let d0 = vsubq_f32(vld1q_f32(pa), vmu);
+                acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+                let d1 = vsubq_f32(vld1q_f32(pa.add(4)), vmu);
+                acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc0);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        }
+        for (e, x) in a[chunks * LANES..].iter().enumerate() {
+            let d = x - mu;
+            lanes[e] += d * d;
+        }
+        reduce8(&lanes)
+    }
+
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let chunks = y.len() / LANES;
+        // SAFETY: as in `dot`; stores stay inside `y`.
+        unsafe {
+            let va = vdupq_n_f32(a);
+            for i in 0..chunks {
+                let py = y.as_mut_ptr().add(i * LANES);
+                let px = x.as_ptr().add(i * LANES);
+                vst1q_f32(py, vaddq_f32(vld1q_f32(py), vmulq_f32(va, vld1q_f32(px))));
+                let py4 = py.add(4);
+                let px4 = px.add(4);
+                vst1q_f32(py4, vaddq_f32(vld1q_f32(py4), vmulq_f32(va, vld1q_f32(px4))));
+            }
+        }
+        let t = chunks * LANES;
+        for (yo, xi) in y[t..].iter_mut().zip(&x[t..]) {
+            *yo += a * xi;
+        }
+    }
+
+    pub fn scale(y: &mut [f32], s: f32) {
+        let chunks = y.len() / LANES;
+        // SAFETY: as in `axpy`.
+        unsafe {
+            let vs = vdupq_n_f32(s);
+            for i in 0..chunks {
+                let py = y.as_mut_ptr().add(i * LANES);
+                vst1q_f32(py, vmulq_f32(vld1q_f32(py), vs));
+                let py4 = py.add(4);
+                vst1q_f32(py4, vmulq_f32(vld1q_f32(py4), vs));
+            }
+        }
+        for yo in y[chunks * LANES..].iter_mut() {
+            *yo *= s;
+        }
+    }
+
+    pub fn add_assign(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let chunks = y.len() / LANES;
+        // SAFETY: as in `axpy`.
+        unsafe {
+            for i in 0..chunks {
+                let py = y.as_mut_ptr().add(i * LANES);
+                let px = x.as_ptr().add(i * LANES);
+                vst1q_f32(py, vaddq_f32(vld1q_f32(py), vld1q_f32(px)));
+                let py4 = py.add(4);
+                let px4 = px.add(4);
+                vst1q_f32(py4, vaddq_f32(vld1q_f32(py4), vld1q_f32(px4)));
+            }
+        }
+        let t = chunks * LANES;
+        for (yo, xi) in y[t..].iter_mut().zip(&x[t..]) {
+            *yo += xi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Ragged lengths straddling every chunk boundary the kernels see.
+    const LENS: [usize; 14] = [1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100];
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_bitwise() {
+        let mut rng = Rng::new(71);
+        for &n in &LENS {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(
+                dot_scaled(&a, 0.25, &b, 1.5).to_bits(),
+                scalar::dot_scaled(&a, 0.25, &b, 1.5).to_bits(),
+                "dot_scaled n={n}"
+            );
+            assert_eq!(sum(&a).to_bits(), scalar::sum(&a).to_bits(), "sum n={n}");
+            assert_eq!(
+                sum_sq_diff(&a, 0.3).to_bits(),
+                scalar::sum_sq_diff(&a, 0.3).to_bits(),
+                "sum_sq_diff n={n}"
+            );
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(&mut y1, 0.7, &a);
+            scalar::axpy(&mut y2, 0.7, &a);
+            assert_eq!(y1, y2, "axpy n={n}");
+            scale(&mut y1, 0.9);
+            scalar::scale(&mut y2, 0.9);
+            assert_eq!(y1, y2, "scale n={n}");
+            add_assign(&mut y1, &a);
+            scalar::add_assign(&mut y2, &a);
+            assert_eq!(y1, y2, "add_assign n={n}");
+        }
+    }
+
+    #[test]
+    fn f16_kernels_match_scalar_bitwise() {
+        let mut rng = Rng::new(72);
+        for &n in &LENS {
+            let q = rand_vec(&mut rng, n);
+            let src = rand_vec(&mut rng, n);
+            let mut slots = vec![0.0f32; f16_stride(n)];
+            encode_f16_row(&src, &mut slots);
+            assert_eq!(
+                dot_f16(&q, &slots).to_bits(),
+                scalar::dot_f16(&q, &slots).to_bits(),
+                "dot_f16 n={n}"
+            );
+            let mut y1 = q.clone();
+            let mut y2 = q.clone();
+            axpy_f16(&mut y1, 1.3, &slots);
+            scalar::axpy_f16(&mut y2, 1.3, &slots);
+            assert_eq!(y1, y2, "axpy_f16 n={n}");
+        }
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_on_representables_and_bounded_otherwise() {
+        // exactly representable values survive the round trip bitwise
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103_515_6e-5] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x} should be exact");
+        }
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to inf, underflow to (signed) zero
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1.0e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e-9)), 0.0);
+        // subnormal halves round-trip through the decoder exactly
+        for bits in [0x0001u16, 0x0200, 0x03ff, 0x8001] {
+            assert_eq!(f32_to_f16(f16_to_f32(bits)), bits, "subnormal {bits:#x}");
+        }
+        // relative error of one round trip <= 2^-11 for normal halves
+        let mut rng = Rng::new(73);
+        for _ in 0..2000 {
+            let x = rng.normal_f32() * 10.0;
+            let r = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (r - x).abs() <= x.abs() * 4.9e-4 + 1e-7,
+                "f16({x}) = {r} drifted too far"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_row_round_trip_respects_the_scale_bound() {
+        let mut rng = Rng::new(74);
+        for &n in &LENS {
+            let src = rand_vec(&mut rng, n);
+            let mut slots = vec![0.0f32; i8_stride(n)];
+            encode_i8_row(&src, &mut slots);
+            let mut back = vec![0.0f32; n];
+            decode_i8_row(&slots, &mut back);
+            let maxabs = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let tol = maxabs / 127.0 * 0.5 + 1e-7; // half a quantisation step
+            for (o, s) in back.iter().zip(&src) {
+                assert!((o - s).abs() <= tol, "n={n}: {o} vs {s} (tol {tol})");
+            }
+        }
+        // all-zero rows stay exactly zero (scale 0 guard)
+        let mut slots = vec![0.0f32; i8_stride(5)];
+        encode_i8_row(&[0.0; 5], &mut slots);
+        let mut back = vec![1.0f32; 5];
+        decode_i8_row(&slots, &mut back);
+        assert_eq!(back, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn compressed_dots_track_the_f32_dot() {
+        let mut rng = Rng::new(75);
+        for &n in &LENS {
+            let q = rand_vec(&mut rng, n);
+            let src = rand_vec(&mut rng, n);
+            let exact = dot(&q, &src);
+            let qnorm: f32 = q.iter().map(|x| x.abs()).sum();
+            let maxabs = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+
+            let mut f16s = vec![0.0f32; f16_stride(n)];
+            encode_f16_row(&src, &mut f16s);
+            let df16 = dot_f16(&q, &f16s);
+            assert!(
+                (df16 - exact).abs() <= qnorm * maxabs * 4.9e-4 + 1e-5,
+                "dot_f16 n={n}: {df16} vs {exact}"
+            );
+
+            let mut i8s = vec![0.0f32; i8_stride(n)];
+            encode_i8_row(&src, &mut i8s);
+            let di8 = dot_i8(&q, &i8s);
+            assert!(
+                (di8 - exact).abs() <= qnorm * (maxabs / 127.0 * 0.5 + 1e-7) + 1e-5,
+                "dot_i8 n={n}: {di8} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_qi8_matches_a_plain_dot_on_integral_weights() {
+        let mut rng = Rng::new(76);
+        for &n in &LENS {
+            let w: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let x = rand_vec(&mut rng, n);
+            let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            assert_eq!(
+                dot_qi8(&w, &x).to_bits(),
+                scalar::dot(&wf, &x).to_bits(),
+                "dot_qi8 n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn active_isa_reports_a_known_table() {
+        let isa = active_isa();
+        assert!(
+            ["scalar", "avx2", "avx2+f16c", "neon"].contains(&isa),
+            "unknown isa {isa}"
+        );
+    }
+
+    #[test]
+    fn gelu_slice_matches_reference_points() {
+        let mut xs = [-1.0f32, 0.0, 1.0];
+        gelu_slice(&mut xs);
+        assert!((xs[0] - (-0.158_808_01)).abs() < 1e-4);
+        assert_eq!(xs[1], 0.0);
+        assert!((xs[2] - 0.841_192).abs() < 1e-4);
+    }
+}

@@ -9,11 +9,12 @@
 //! enough to make the O(L^2) baselines honest without SIMD intrinsics.
 
 pub mod batch;
+pub mod kernels;
 pub mod ops;
 pub mod paged;
 
 pub use batch::{Batch, Qkv};
-pub use paged::{PagePool, PagedRows, PoolStats};
+pub use paged::{PageDtype, PagePool, PagedRows, PoolStats};
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -63,11 +64,15 @@ impl Mat {
         &mut self.data[i * self.cols + j]
     }
 
+    #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
@@ -141,10 +146,9 @@ impl Mat {
 
     /// Add `src` elementwise into row `i` (the coarsening-pyramid
     /// accumulation primitive).
+    #[inline]
     pub fn add_into_row(&mut self, i: usize, src: &[f32]) {
-        for (x, y) in self.row_mut(i).iter_mut().zip(src) {
-            *x += y;
-        }
+        kernels::add_assign(&mut self.row_mut(i)[..src.len()], src);
     }
 
     /// Overwrite in place from a `[rows, cols]` row-major slice,
@@ -158,9 +162,7 @@ impl Mat {
     }
 
     pub fn scale(&mut self, s: f32) {
-        for x in &mut self.data {
-            *x *= s;
-        }
+        kernels::scale(&mut self.data, s);
     }
 
     pub fn frobenius_norm(&self) -> f64 {

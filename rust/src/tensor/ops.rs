@@ -1,6 +1,15 @@
 //! Matrix operations: cache-blocked matmul, softmax, elementwise helpers.
+//!
+//! Inner loops route through the runtime-dispatched
+//! [`kernels`](super::kernels) table; the elementwise rewires
+//! (`matmul_into`'s axpy accumulation, GELU, bias adds) are bitwise
+//! identical to the historical scalar loops on every ISA, while the
+//! reductions (`matmul_nt_into`, softmax sums, LayerNorm moments) use
+//! the kernels' fixed 8-lane accumulation order — still deterministic
+//! and ISA-independent, just a different (better-conditioned) order
+//! than the old sequential folds.
 
-use super::Mat;
+use super::{kernels, Mat};
 
 /// C = A @ B (cache-blocked, k-unrolled).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -30,9 +39,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
                         continue;
                     }
                     let brow = &b.data[kk * n..(kk + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
+                    kernels::axpy(crow, aik, brow);
                 }
             }
         }
@@ -58,11 +65,7 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
         let crow = &mut c.data[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            crow[j] = acc;
+            crow[j] = kernels::dot(arow, brow);
         }
     }
 }
@@ -81,29 +84,24 @@ pub fn softmax_rows(m: &mut Mat) {
             }
             continue;
         }
-        let mut sum = 0.0f32;
         for x in row.iter_mut() {
             if *x <= NEG_MASK {
                 *x = 0.0;
             } else {
                 *x = (*x - mx).exp();
-                sum += *x;
             }
         }
+        // masked entries contribute an exact 0.0 to the lane sums
+        let sum = kernels::sum(row);
         if sum > 0.0 {
-            let inv = 1.0 / sum;
-            for x in row.iter_mut() {
-                *x *= inv;
-            }
+            kernels::scale(row, 1.0 / sum);
         }
     }
 }
 
 pub fn add_assign(a: &mut Mat, b: &Mat) {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
-    for (x, y) in a.data.iter_mut().zip(&b.data) {
-        *x += y;
-    }
+    kernels::add_assign(&mut a.data, &b.data);
 }
 
 /// Row-wise layer normalisation into a reused output:
@@ -116,17 +114,8 @@ pub fn layernorm_rows_into(x: &Mat, scale: &[f32], bias: &[f32], eps: f32, out: 
     let inv_d = 1.0 / x.cols as f32;
     for i in 0..x.rows {
         let row = x.row(i);
-        let mut mu = 0.0f32;
-        for v in row {
-            mu += v;
-        }
-        mu *= inv_d;
-        let mut var = 0.0f32;
-        for v in row {
-            let c = v - mu;
-            var += c * c;
-        }
-        var *= inv_d;
+        let mu = kernels::sum(row) * inv_d;
+        let var = kernels::sum_sq_diff(row, mu) * inv_d;
         let inv_std = 1.0 / (var + eps).sqrt();
         let orow = out.row_mut(i);
         for (t, v) in row.iter().enumerate() {
@@ -138,20 +127,14 @@ pub fn layernorm_rows_into(x: &Mat, scale: &[f32], bias: &[f32], eps: f32, out: 
 /// In-place GELU, tanh approximation (matches `jax.nn.gelu`'s default):
 /// `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
 pub fn gelu(m: &mut Mat) {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    for x in &mut m.data {
-        let x3 = *x * *x * *x;
-        *x = 0.5 * *x * (1.0 + (C * (*x + 0.044715 * x3)).tanh());
-    }
+    kernels::gelu_slice(&mut m.data);
 }
 
 /// Add a `[cols]` bias vector to every row of `m`.
 pub fn add_bias_rows(m: &mut Mat, bias: &[f32]) {
     assert_eq!(m.cols, bias.len(), "bias length mismatch");
     for i in 0..m.rows {
-        for (x, b) in m.row_mut(i).iter_mut().zip(bias) {
-            *x += b;
-        }
+        kernels::add_assign(m.row_mut(i), bias);
     }
 }
 

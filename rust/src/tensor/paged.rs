@@ -31,23 +31,95 @@
 //!
 //! `page_len` must be a power of two so `row(i)` is a shift/mask, not a
 //! division.
+//!
+//! ## Compressed page dtypes
+//!
+//! A view can store its rows as raw f32 ([`PageDtype::F32`]), as
+//! bit-packed IEEE binary16 ([`PageDtype::F16`], two halves per f32
+//! slot), or as int8 with an inline per-row scale ([`PageDtype::I8`],
+//! one scale slot + four bytes per slot). Pages stay untyped
+//! `Vec<f32>` buffers — the free list recycles across dtypes and
+//! widths — while the per-row **slot stride** shrinks from `cols` to
+//! `ceil(cols/2)` (f16) or `1 + ceil(cols/4)` (int8). Encoding happens
+//! in [`PagedRows::push_row`]; the decode kernels in
+//! [`kernels`](super::kernels) dequantise on the fly while streaming
+//! [`PagedRows::spans`], so compressed KV pages are read without ever
+//! materialising f32 rows. Context-budget accounting is dtype-weighted:
+//! a budgeted page charges `ceil(page_len * stride / cols)`
+//! "token-equivalents" ([`PageDtype::page_ctx_cost`]), so f16 pages
+//! cost half as many context tokens as f32 pages and a fixed
+//! `max_tokens` budget admits ~2x the concurrent sessions.
 
 use std::sync::{Arc, Mutex};
 
-use super::Mat;
+use super::{kernels, Mat};
+
+/// Storage format of a [`PagedRows`] view's rows (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PageDtype {
+    /// One f32 slot per element (exact; the default).
+    #[default]
+    F32,
+    /// Two IEEE binary16 halves per f32 slot (~2x density, ≤2^-11
+    /// relative rounding per element on encode; decode is exact).
+    F16,
+    /// Per-row f32 scale in slot 0, then four int8 codes per slot
+    /// (~4x density on wide rows; one quantisation step of drift).
+    I8,
+}
+
+impl PageDtype {
+    /// f32 slots occupied by one `[cols]` row in this dtype.
+    #[inline]
+    pub fn stride(self, cols: usize) -> usize {
+        match self {
+            PageDtype::F32 => cols,
+            PageDtype::F16 => kernels::f16_stride(cols),
+            PageDtype::I8 => kernels::i8_stride(cols),
+        }
+    }
+
+    /// Context-token charge of one budgeted page: its slot footprint
+    /// expressed in f32-row-equivalents, `ceil(page_len·stride/cols)`.
+    /// F32 pages charge exactly `page_len` (the historical accounting);
+    /// compressed pages charge proportionally less.
+    #[inline]
+    pub fn page_ctx_cost(self, page_len: usize, cols: usize) -> usize {
+        (page_len * self.stride(cols)).div_ceil(cols.max(1))
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PageDtype::F32 => "f32",
+            PageDtype::F16 => "f16",
+            PageDtype::I8 => "int8",
+        }
+    }
+
+    /// Parse a CLI-facing name (`f32`, `f16`, `int8`/`i8`).
+    pub fn parse(s: &str) -> Option<PageDtype> {
+        match s {
+            "f32" => Some(PageDtype::F32),
+            "f16" => Some(PageDtype::F16),
+            "int8" | "i8" => Some(PageDtype::I8),
+            _ => None,
+        }
+    }
+}
 
 /// Default rows per page — small enough that short prompts waste little,
 /// large enough that span iteration amortises the page hop.
 pub const DEFAULT_PAGE_LEN: usize = 16;
 
-/// One fixed-size block of `page_len * cols` f32 rows. `budgeted` marks
-/// pages charged against the serve context budget (set at alloc time
-/// from the owning [`PagedRows`]); it is a property of the page for its
-/// whole life so release-time accounting matches alloc-time accounting.
+/// One fixed-size block of `page_len * stride` f32 slots. `ctx_cost`
+/// is the page's context-token charge — non-zero marks it budgeted
+/// (set at alloc time from the owning [`PagedRows`], dtype-weighted);
+/// it is a property of the page for its whole life so release-time
+/// accounting matches alloc-time accounting.
 #[derive(Debug)]
 pub(crate) struct Page {
     pub(crate) data: Vec<f32>,
-    budgeted: bool,
+    ctx_cost: usize,
 }
 
 #[derive(Debug, Default)]
@@ -56,10 +128,14 @@ struct PoolInner {
     free: Vec<Vec<f32>>,
     /// Unique pages currently held by at least one view or cache.
     live: usize,
-    /// Budgeted subset of `live` (the context-token accounting).
+    /// Budgeted subset of `live` (the context-page accounting).
     ctx_live: usize,
+    /// Dtype-weighted sum of the budgeted pages' `ctx_cost` — the
+    /// context-token measure `ServeConfig::max_tokens` bounds.
+    ctx_tokens: usize,
     peak_live: usize,
     peak_ctx_live: usize,
+    peak_ctx_tokens: usize,
 }
 
 /// Aggregate pool accounting; see [`PagePool::stats`].
@@ -70,6 +146,9 @@ pub struct PoolStats {
     pub live: usize,
     /// Budgeted ("context") subset of `live`.
     pub ctx_live: usize,
+    /// Dtype-weighted context-token sum (see [`PoolStats::ctx_tokens`]).
+    ctx_tokens: usize,
+    peak_ctx_tokens: usize,
     /// Recycled buffers waiting on the free list.
     pub free: usize,
     /// Buffers the pool owns in total (`live + free`) — the growth
@@ -80,14 +159,16 @@ pub struct PoolStats {
 }
 
 impl PoolStats {
-    /// Page-granular context tokens currently allocated (shared pages
-    /// counted once) — what `ServeConfig::max_tokens` bounds.
+    /// Context tokens currently allocated (shared pages counted once,
+    /// each page charging its dtype-weighted [`PageDtype::page_ctx_cost`];
+    /// for pure-f32 pools this equals `ctx_live * page_len` exactly) —
+    /// what `ServeConfig::max_tokens` bounds.
     pub fn ctx_tokens(&self) -> usize {
-        self.ctx_live * self.page_len
+        self.ctx_tokens
     }
 
     pub fn peak_ctx_tokens(&self) -> usize {
-        self.peak_ctx_live * self.page_len
+        self.peak_ctx_tokens
     }
 }
 
@@ -122,22 +203,28 @@ impl PagePool {
         Arc::ptr_eq(&self.inner, &other.inner)
     }
 
-    fn alloc(&self, cols: usize, budgeted: bool) -> Arc<Page> {
+    /// Allocate one `[page_len, slots]` page; `ctx_cost > 0` charges it
+    /// against the context budget for its whole life.
+    fn alloc(&self, slots: usize, ctx_cost: usize) -> Arc<Page> {
         let mut inner = self.inner.lock().expect("page pool lock");
         let mut data = inner.free.pop().unwrap_or_default();
         data.clear();
-        data.resize(self.page_len * cols, 0.0);
+        data.resize(self.page_len * slots, 0.0);
         inner.live += 1;
         if inner.live > inner.peak_live {
             inner.peak_live = inner.live;
         }
-        if budgeted {
+        if ctx_cost > 0 {
             inner.ctx_live += 1;
+            inner.ctx_tokens += ctx_cost;
             if inner.ctx_live > inner.peak_ctx_live {
                 inner.peak_ctx_live = inner.ctx_live;
             }
+            if inner.ctx_tokens > inner.peak_ctx_tokens {
+                inner.peak_ctx_tokens = inner.ctx_tokens;
+            }
         }
-        Arc::new(Page { data, budgeted })
+        Arc::new(Page { data, ctx_cost })
     }
 
     /// Drop one reference; when it is the last, the buffer returns to
@@ -154,8 +241,9 @@ impl PagePool {
         let mut inner = self.inner.lock().expect("page pool lock");
         if let Ok(p) = Arc::try_unwrap(page) {
             inner.live -= 1;
-            if p.budgeted {
+            if p.ctx_cost > 0 {
                 inner.ctx_live -= 1;
+                inner.ctx_tokens -= p.ctx_cost;
             }
             inner.free.push(p.data);
         }
@@ -167,6 +255,8 @@ impl PagePool {
             page_len: self.page_len,
             live: inner.live,
             ctx_live: inner.ctx_live,
+            ctx_tokens: inner.ctx_tokens,
+            peak_ctx_tokens: inner.peak_ctx_tokens,
             free: inner.free.len(),
             total: inner.live + inner.free.len(),
             peak_live: inner.peak_live,
@@ -198,11 +288,15 @@ impl PagePool {
 #[derive(Debug, Default)]
 pub struct PagedRows {
     cols: usize,
+    /// f32 slots per row (`dtype.stride(cols)`; == `cols` for F32).
+    stride: usize,
     /// Committed rows.
     len: usize,
     page_len: usize,
     shift: u32,
     mask: usize,
+    /// Row storage format (see [`PageDtype`]).
+    dtype: PageDtype,
     /// New pages this view allocates are charged to the context budget.
     budgeted: bool,
     /// Page table. May hold one staged page beyond the committed rows
@@ -214,20 +308,22 @@ pub struct PagedRows {
 
 impl PagedRows {
     /// Adopt `pool`/`cols` (releasing any pages held under a different
-    /// pool or width) and truncate to zero rows.
+    /// pool, width, or slot stride) and truncate to zero rows.
     fn adopt(&mut self, pool: &PagePool, cols: usize) {
+        let stride = self.dtype.stride(cols);
         let same = self
             .pool
             .as_ref()
             .map(|p| p.ptr_eq(pool))
             .unwrap_or(false);
-        if !same || self.cols != cols {
+        if !same || self.cols != cols || self.stride != stride {
             self.release_all();
             self.pool = Some(pool.clone());
             self.page_len = pool.page_len();
             self.shift = pool.page_len().trailing_zeros();
             self.mask = pool.page_len() - 1;
             self.cols = cols;
+            self.stride = stride;
         }
         self.len = 0;
     }
@@ -260,6 +356,32 @@ impl PagedRows {
         self.budgeted
     }
 
+    /// Set the row storage format (sticky across begins, like
+    /// `set_budgeted`). Call before `begin_*`; the stride change takes
+    /// effect at the next begin, which releases incompatible pages.
+    pub fn set_dtype(&mut self, dtype: PageDtype) {
+        self.dtype = dtype;
+    }
+
+    pub fn dtype(&self) -> PageDtype {
+        self.dtype
+    }
+
+    /// f32 slots per row under the current dtype.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Context-token charge of each budgeted page this view allocates.
+    #[inline]
+    fn alloc_ctx_cost(&self) -> usize {
+        if self.budgeted {
+            self.dtype.page_ctx_cost(self.page_len, self.cols)
+        } else {
+            0
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.len
     }
@@ -280,9 +402,36 @@ impl PagedRows {
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        debug_assert_eq!(
+            self.dtype,
+            PageDtype::F32,
+            "row() reads raw f32 rows; compressed views go through \
+             row_slots()/decode_row_into() or the dequantising kernels"
+        );
         let data = &self.pages[i >> self.shift].data;
-        let off = (i & self.mask) * self.cols;
-        &data[off..off + self.cols]
+        let off = (i & self.mask) * self.stride;
+        &data[off..off + self.stride]
+    }
+
+    /// Raw packed slots of row `i` (any dtype) — what the dequantising
+    /// kernels consume. For F32 views this is the row itself.
+    #[inline]
+    pub fn row_slots(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        let data = &self.pages[i >> self.shift].data;
+        let off = (i & self.mask) * self.stride;
+        &data[off..off + self.stride]
+    }
+
+    /// Dequantise row `i` into `out` (`out.len() == cols`).
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let slots = self.row_slots(i);
+        match self.dtype {
+            PageDtype::F32 => out.copy_from_slice(slots),
+            PageDtype::F16 => kernels::decode_f16_row(slots, out),
+            PageDtype::I8 => kernels::decode_i8_row(slots, out),
+        }
     }
 
     #[inline]
@@ -291,8 +440,11 @@ impl PagedRows {
     }
 
     /// Call `f` once per page-contiguous span of rows `lo..=hi`, in
-    /// order, with a `[span_rows * cols]` slice — the tight-loop form
-    /// the streaming-softmax decode kernel iterates.
+    /// order, with a `[span_rows * stride]` slice — the tight-loop form
+    /// the streaming-softmax decode kernel iterates. For F32 views the
+    /// slice is the rows themselves; for compressed views it is the
+    /// packed slots, `stride()` per row, which the `kernels` f16/int8
+    /// dot/axpy entry points dequantise on the fly.
     pub fn spans<F: FnMut(&[f32])>(&self, lo: usize, hi: usize, mut f: F) {
         debug_assert!(lo <= hi && hi < self.len);
         let mut r = lo;
@@ -301,7 +453,7 @@ impl PagedRows {
             let o = r & self.mask;
             let rows = (hi + 1 - r).min(self.page_len - o);
             let data = &self.pages[ti].data;
-            f(&data[o * self.cols..(o + rows) * self.cols]);
+            f(&data[o * self.stride..(o + rows) * self.stride]);
             r += rows;
         }
     }
@@ -315,7 +467,7 @@ impl PagedRows {
         let ti = self.len >> self.shift;
         if ti == self.pages.len() {
             let pool = self.pool.as_ref().expect("PagedRows used before begin");
-            let page = pool.alloc(self.cols, self.budgeted);
+            let page = pool.alloc(self.stride, self.alloc_ctx_cost());
             self.pages.push(page);
         } else {
             self.make_private(ti);
@@ -348,20 +500,27 @@ impl PagedRows {
         let need = rows.div_ceil(self.page_len.max(1));
         while self.pages.len() < need {
             let pool = self.pool.as_ref().expect("PagedRows used before begin");
-            let page = pool.alloc(self.cols, self.budgeted);
+            let page = pool.alloc(self.stride, self.alloc_ctx_cost());
             self.pages.push(page);
         }
     }
 
-    /// Append one `[cols]` row (copy-on-write / page fault handled
-    /// here when not pre-staged).
+    /// Append one `[cols]` row, encoding it into the view's dtype
+    /// (copy-on-write / page fault handled here when not pre-staged).
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.cols, "push_row width mismatch");
         self.stage_append();
         let ti = self.len >> self.shift;
-        let off = (self.len & self.mask) * self.cols;
+        let off = (self.len & self.mask) * self.stride;
+        let stride = self.stride;
+        let dtype = self.dtype;
         let page = Arc::get_mut(&mut self.pages[ti]).expect("staged page is private");
-        page.data[off..off + self.cols].copy_from_slice(row);
+        let dst = &mut page.data[off..off + stride];
+        match dtype {
+            PageDtype::F32 => dst.copy_from_slice(row),
+            PageDtype::F16 => kernels::encode_f16_row(row, dst),
+            PageDtype::I8 => kernels::encode_i8_row(row, dst),
+        }
         self.len += 1;
     }
 
@@ -372,13 +531,16 @@ impl PagedRows {
     pub fn add_into_row(&mut self, i: usize, src: &[f32]) {
         assert_eq!(src.len(), self.cols, "add_into_row width mismatch");
         assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        debug_assert_eq!(
+            self.dtype,
+            PageDtype::F32,
+            "in-place accumulation needs raw f32 rows (pyramid sums stay F32)"
+        );
         let ti = i >> self.shift;
         self.make_private(ti);
         let off = (i & self.mask) * self.cols;
         let page = Arc::get_mut(&mut self.pages[ti]).expect("private page");
-        for (x, y) in page.data[off..off + self.cols].iter_mut().zip(src) {
-            *x += y;
-        }
+        kernels::add_assign(&mut page.data[off..off + src.len()], src);
     }
 
     fn make_private(&mut self, ti: usize) {
@@ -386,7 +548,7 @@ impl PagedRows {
             return;
         }
         let pool = self.pool.as_ref().expect("PagedRows used before begin");
-        let mut fresh = pool.alloc(self.cols, self.budgeted);
+        let mut fresh = pool.alloc(self.stride, self.alloc_ctx_cost());
         {
             let dst = Arc::get_mut(&mut fresh).expect("fresh page is private");
             dst.data.copy_from_slice(&self.pages[ti].data);
@@ -422,6 +584,8 @@ impl PagedRows {
         dst.shift = self.shift;
         dst.mask = self.mask;
         dst.cols = self.cols;
+        dst.stride = self.stride;
+        dst.dtype = self.dtype;
         dst.budgeted = self.budgeted;
         dst.pages.extend(self.pages.iter().cloned());
         dst.len = self.len;
@@ -432,13 +596,25 @@ impl PagedRows {
     /// its history through this.
     pub fn copy_to_mat(&self, m: &mut Mat) {
         m.reset_for_overwrite(self.len, self.cols);
-        let mut r = 0usize;
-        while r < self.len {
-            let ti = r >> self.shift;
-            let rows = (self.len - r).min(self.page_len);
-            let src = &self.pages[ti].data[..rows * self.cols];
-            m.data[r * self.cols..(r + rows) * self.cols].copy_from_slice(src);
-            r += rows;
+        if self.dtype == PageDtype::F32 {
+            let mut r = 0usize;
+            while r < self.len {
+                let ti = r >> self.shift;
+                let rows = (self.len - r).min(self.page_len);
+                let src = &self.pages[ti].data[..rows * self.cols];
+                m.data[r * self.cols..(r + rows) * self.cols].copy_from_slice(src);
+                r += rows;
+            }
+        } else {
+            for i in 0..self.len {
+                let slots = self.row_slots(i);
+                let out = &mut m.data[i * self.cols..(i + 1) * self.cols];
+                match self.dtype {
+                    PageDtype::F16 => kernels::decode_f16_row(slots, out),
+                    PageDtype::I8 => kernels::decode_i8_row(slots, out),
+                    PageDtype::F32 => unreachable!(),
+                }
+            }
         }
     }
 
@@ -612,5 +788,129 @@ mod tests {
     fn pool_rejects_non_power_of_two_page_len() {
         let r = std::panic::catch_unwind(|| PagePool::new(6));
         assert!(r.is_err());
+    }
+
+    fn compressed_round_trip(dtype: PageDtype, tol_of_maxabs: f32) {
+        let pool = PagePool::new(4);
+        let mut pr = PagedRows::default();
+        pr.set_dtype(dtype);
+        pr.begin_released(&pool, 6);
+        assert_eq!(pr.stride(), dtype.stride(6));
+        let mut rng = crate::util::Rng::new(42);
+        let rows: Vec<Vec<f32>> = (0..11)
+            .map(|_| (0..6).map(|_| rng.normal_f32()).collect())
+            .collect();
+        for r in &rows {
+            pr.push_row(r);
+        }
+        assert_eq!(pr.rows(), 11);
+        let mut back = vec![0.0f32; 6];
+        for (i, r) in rows.iter().enumerate() {
+            pr.decode_row_into(i, &mut back);
+            let maxabs = r.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            for (o, s) in back.iter().zip(r) {
+                assert!(
+                    (o - s).abs() <= maxabs * tol_of_maxabs + 1e-6,
+                    "{dtype:?} row {i}: {o} vs {s}"
+                );
+            }
+        }
+        // copy_to_mat decodes identically to decode_row_into
+        let mut m = Mat::default();
+        pr.copy_to_mat(&mut m);
+        for i in 0..11 {
+            pr.decode_row_into(i, &mut back);
+            assert_eq!(m.row(i), &back[..], "{dtype:?} copy_to_mat row {i}");
+        }
+        // spans walk the packed slots: stride per row, page-contiguous
+        let mut slots = 0usize;
+        pr.spans(0, 10, |chunk| slots += chunk.len());
+        assert_eq!(slots, 11 * pr.stride());
+    }
+
+    #[test]
+    fn f16_views_round_trip_within_half_precision() {
+        compressed_round_trip(PageDtype::F16, 4.9e-4);
+    }
+
+    #[test]
+    fn i8_views_round_trip_within_one_quant_step() {
+        compressed_round_trip(PageDtype::I8, 0.5 / 127.0);
+    }
+
+    #[test]
+    fn compressed_pages_charge_fewer_context_tokens() {
+        let pool = PagePool::new(4);
+        // f32 control: 8 rows of width 4 = 2 pages x 4 tokens
+        let mut a = PagedRows::default();
+        a.begin_released(&pool, 4);
+        a.set_budgeted(true);
+        for i in 0..8 {
+            a.push_row(&[i as f32; 4]);
+        }
+        assert_eq!(pool.stats().ctx_tokens(), 8);
+        // f16 at the same shape: stride 2, each page charges 2 tokens
+        assert_eq!(PageDtype::F16.page_ctx_cost(4, 4), 2);
+        let mut b = PagedRows::default();
+        b.set_dtype(PageDtype::F16);
+        b.begin_released(&pool, 4);
+        b.set_budgeted(true);
+        for i in 0..8 {
+            b.push_row(&[i as f32; 4]);
+        }
+        assert_eq!(pool.stats().ctx_live, 4);
+        assert_eq!(pool.stats().ctx_tokens(), 8 + 4, "f16 pages cost half");
+        drop(b);
+        assert_eq!(pool.stats().ctx_tokens(), 8);
+        drop(a);
+        assert_eq!(pool.stats().ctx_tokens(), 0);
+        assert_eq!(pool.stats().peak_ctx_tokens(), 12);
+        // int8 width 64: 1 + 16 slots, so a 4-row page charges
+        // ceil(4 * 17 / 64) = 2 token-equivalents
+        assert_eq!(PageDtype::I8.page_ctx_cost(4, 64), 2);
+    }
+
+    #[test]
+    fn dtype_change_releases_incompatible_pages_on_begin() {
+        let pool = PagePool::new(4);
+        let mut pr = PagedRows::default();
+        pr.begin_released(&pool, 6);
+        pr.push_row(&[1.0; 6]);
+        assert_eq!(pool.stats().live, 1);
+        pr.set_dtype(PageDtype::F16);
+        pr.begin_released(&pool, 6);
+        assert_eq!(pool.stats().live, 0, "old-stride pages must release");
+        pr.push_row(&[2.0; 6]);
+        assert_eq!(pr.stride(), 3);
+        let mut back = vec![0.0f32; 6];
+        pr.decode_row_into(0, &mut back);
+        assert_eq!(back, vec![2.0; 6], "2.0 is f16-exact");
+    }
+
+    #[test]
+    fn shared_compressed_pages_cow_without_reencoding_drift() {
+        // COW copies raw slots, so the clone decodes bit-identically
+        let pool = PagePool::new(4);
+        let mut a = PagedRows::default();
+        a.set_dtype(PageDtype::F16);
+        a.begin_released(&pool, 3);
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..6 {
+            let row: Vec<f32> = (0..3).map(|_| rng.normal_f32()).collect();
+            a.push_row(&row);
+        }
+        let mut b = PagedRows::default();
+        a.clone_shared_into(&mut b);
+        assert_eq!(b.dtype(), PageDtype::F16);
+        b.push_row(&[0.5, 0.25, 1.0]); // COWs the shared tail page
+        let (mut ra, mut rb) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        for i in 0..6 {
+            a.decode_row_into(i, &mut ra);
+            b.decode_row_into(i, &mut rb);
+            assert_eq!(ra, rb, "row {i} must survive COW bitwise");
+        }
+        b.decode_row_into(6, &mut rb);
+        assert_eq!(rb, vec![0.5, 0.25, 1.0]);
+        assert_eq!(a.rows(), 6);
     }
 }

@@ -60,6 +60,7 @@ fn model_for(spec: AttnSpec, n_layers: usize, max_len: usize) -> Model {
             max_len,
             causal,
             attention: spec,
+            quant_weights: false,
         },
         13,
     )

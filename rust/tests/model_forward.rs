@@ -24,6 +24,7 @@ fn cfg(attention: AttnSpec, causal: bool, max_len: usize) -> ModelConfig {
         max_len,
         causal,
         attention,
+        quant_weights: false,
     }
 }
 
@@ -233,4 +234,39 @@ fn model_workspace_survives_shape_cycles_without_reallocating_the_arena() {
         "grow -> shrink -> grow re-allocated the model arena"
     );
     assert_eq!(first_big.data, again.data, "shape cycling changed results");
+}
+
+#[test]
+fn quantised_weights_bound_logit_drift_on_the_forward_fixture() {
+    // int8 per-row weights are a bounded-drift path, not exact: pin the
+    // bound. Cosine similarity of the flattened logits stays >= 0.999
+    // and no single logit moves by more than 0.5 on the same fixture
+    // the parity tests use.
+    let mut rng = Rng::new(2027);
+    for (spec, nr) in [(AttnSpec::Full, 0usize), (AttnSpec::H1d { nr: 4 }, 4)] {
+        let base = cfg(spec.clone(), true, 64);
+        let quant = ModelConfig {
+            quant_weights: true,
+            ..base.clone()
+        };
+        let mf = Model::new(base, 3).unwrap();
+        let mq = Model::new(quant, 3).unwrap();
+        let tokens = random_tokens(&mut rng, mf.cfg.vocab_size, 2 * 48);
+        let mut ws = ModelWorkspace::serial();
+        let zf = mf.forward(&mut ws, &tokens, 2).clone();
+        let zq = mq.forward(&mut ws, &tokens, 2).clone();
+        assert_eq!((zf.rows, zf.cols), (zq.rows, zq.cols), "nr={nr}");
+        let (mut dot, mut nf, mut nq) = (0.0f64, 0.0f64, 0.0f64);
+        for (&a, &b) in zf.data.iter().zip(&zq.data) {
+            assert!(b.is_finite(), "nr={nr}: quantised logit not finite");
+            dot += a as f64 * b as f64;
+            nf += a as f64 * a as f64;
+            nq += b as f64 * b as f64;
+        }
+        let cosine = dot / (nf.sqrt() * nq.sqrt()).max(f64::MIN_POSITIVE);
+        assert!(cosine >= 0.999, "nr={nr}: cosine {cosine}");
+        let drift = zf.max_abs_diff(&zq);
+        assert!(drift > 0.0, "nr={nr}: int8 path suspiciously exact");
+        assert!(drift < 0.5, "nr={nr}: max |logit drift| = {drift}");
+    }
 }

@@ -67,6 +67,7 @@ fn model_for(spec: AttnSpec, max_len: usize) -> Model {
             max_len,
             causal,
             attention: spec,
+            quant_weights: false,
         },
         13,
     )

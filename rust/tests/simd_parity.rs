@@ -1,0 +1,146 @@
+//! SIMD dispatch contracts, from outside the crate:
+//!
+//!  1. **bitwise parity** — every runtime-dispatched kernel returns
+//!     bit-identical results to the portable scalar oracle
+//!     (`kernels::scalar`) at ragged lengths. Under `HTX_FORCE_SCALAR=1`
+//!     (the CI scalar leg) both sides are the same code and the test is
+//!     a tautology; on AVX2/NEON hosts it pins the 8-lane accumulation
+//!     model the vector paths must reproduce.
+//!  2. **compressed-KV decode parity** — a full-attention decode over
+//!     f16 KV pages is bitwise equal to the f32 decode fed the same
+//!     rows pre-rounded through the f16 codec: dequant-on-read inside
+//!     the kernels is rounding, never reassociation.
+//!  3. **codec bounds** — f16 round-trips equal per-element rounding;
+//!     int8 round-trips stay within half a quantisation step.
+
+use htransformer::attention::{Attention, DecodeState, Full};
+use htransformer::tensor::kernels::{self, scalar};
+use htransformer::tensor::PageDtype;
+use htransformer::util::Rng;
+
+/// Ragged lengths around every chunk boundary of the 8-lane model.
+const LENS: [usize; 14] = [1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100];
+
+fn noisy(rng: &mut Rng, n: usize) -> Vec<f32> {
+    // mix magnitudes so reduction-order bugs can't hide behind
+    // uniformly-scaled inputs
+    (0..n)
+        .map(|i| rng.normal_f32() * if i % 3 == 0 { 100.0 } else { 0.01 })
+        .collect()
+}
+
+#[test]
+fn dispatched_kernels_match_the_scalar_oracle_bitwise() {
+    let isa = kernels::active_isa();
+    assert!(
+        ["scalar", "avx2", "avx2+f16c", "neon"].contains(&isa),
+        "unknown ISA {isa:?}"
+    );
+    let mut rng = Rng::new(0x51D);
+    for &n in &LENS {
+        let a = noisy(&mut rng, n);
+        let b = noisy(&mut rng, n);
+        assert_eq!(
+            kernels::dot(&a, &b).to_bits(),
+            scalar::dot(&a, &b).to_bits(),
+            "{isa} dot n={n}"
+        );
+        assert_eq!(
+            kernels::dot_scaled(&a, 0.37, &b, -1.25).to_bits(),
+            scalar::dot_scaled(&a, 0.37, &b, -1.25).to_bits(),
+            "{isa} dot_scaled n={n}"
+        );
+        assert_eq!(
+            kernels::sum(&a).to_bits(),
+            scalar::sum(&a).to_bits(),
+            "{isa} sum n={n}"
+        );
+        assert_eq!(
+            kernels::sum_sq_diff(&a, 0.123).to_bits(),
+            scalar::sum_sq_diff(&a, 0.123).to_bits(),
+            "{isa} sum_sq_diff n={n}"
+        );
+        let (mut y1, mut y2) = (b.clone(), b.clone());
+        kernels::axpy(&mut y1, 0.77, &a);
+        scalar::axpy(&mut y2, 0.77, &a);
+        assert_eq!(bits(&y1), bits(&y2), "{isa} axpy n={n}");
+        kernels::scale(&mut y1, -3.5);
+        scalar::scale(&mut y2, -3.5);
+        assert_eq!(bits(&y1), bits(&y2), "{isa} scale n={n}");
+        kernels::add_assign(&mut y1, &a);
+        scalar::add_assign(&mut y2, &a);
+        assert_eq!(bits(&y1), bits(&y2), "{isa} add_assign n={n}");
+
+        let mut f16_row = vec![0.0f32; kernels::f16_stride(n)];
+        kernels::encode_f16_row(&a, &mut f16_row);
+        assert_eq!(
+            kernels::dot_f16(&b, &f16_row).to_bits(),
+            scalar::dot_f16(&b, &f16_row).to_bits(),
+            "{isa} dot_f16 n={n}"
+        );
+        kernels::axpy_f16(&mut y1, 0.31, &f16_row);
+        scalar::axpy_f16(&mut y2, 0.31, &f16_row);
+        assert_eq!(bits(&y1), bits(&y2), "{isa} axpy_f16 n={n}");
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn f16_kv_decode_is_bitwise_the_f32_decode_of_rounded_rows() {
+    // d = 5 leaves a ragged half-slot in every packed row
+    let (l, d) = (23usize, 5usize);
+    let mut rng = Rng::new(0xF16);
+    let algo = Full;
+    let mut st_f16 = DecodeState::default();
+    st_f16.set_kv_dtype(PageDtype::F16);
+    algo.decode_begin(&mut st_f16, l, d);
+    let mut st_ref = DecodeState::default();
+    algo.decode_begin(&mut st_ref, l, d);
+    let round = |xs: &[f32]| -> Vec<f32> {
+        xs.iter()
+            .map(|&x| kernels::f16_to_f32(kernels::f32_to_f16(x)))
+            .collect()
+    };
+    let (mut out_c, mut out_r) = (vec![0.0f32; d], vec![0.0f32; d]);
+    for t in 0..l {
+        let q = noisy(&mut rng, d);
+        let k = noisy(&mut rng, d);
+        let v = noisy(&mut rng, d);
+        algo.decode_step(&mut st_f16, &q, &k, &v, true, &mut out_c);
+        algo.decode_step(&mut st_ref, &q, &round(&k), &round(&v), true, &mut out_r);
+        assert_eq!(bits(&out_c), bits(&out_r), "step {t}");
+    }
+}
+
+#[test]
+fn compressed_row_codecs_stay_within_their_rounding_bounds() {
+    let mut rng = Rng::new(0x1_8);
+    for &n in &LENS {
+        let src = noisy(&mut rng, n);
+        let mut f16_row = vec![0.0f32; kernels::f16_stride(n)];
+        let mut back = vec![0.0f32; n];
+        kernels::encode_f16_row(&src, &mut f16_row);
+        kernels::decode_f16_row(&f16_row, &mut back);
+        for (i, (&x, &y)) in src.iter().zip(&back).enumerate() {
+            assert_eq!(
+                y.to_bits(),
+                kernels::f16_to_f32(kernels::f32_to_f16(x)).to_bits(),
+                "f16 n={n} elem {i}"
+            );
+        }
+        let mut i8_row = vec![0.0f32; kernels::i8_stride(n)];
+        kernels::encode_i8_row(&src, &mut i8_row);
+        kernels::decode_i8_row(&i8_row, &mut back);
+        let maxabs = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let step = maxabs / 127.0;
+        for (i, (&x, &y)) in src.iter().zip(&back).enumerate() {
+            assert!(
+                (x - y).abs() <= 0.5 * step + 1e-6,
+                "int8 n={n} elem {i}: |{x} - {y}| > step/2 = {step}/2"
+            );
+        }
+    }
+}
