@@ -35,6 +35,15 @@
 //! `decode.rs` instead: their per-step full recompute makes a serving
 //! loop pathological by construction, not a regression signal.
 //!
+//! A fourth section drives the HTTP front end (`model::net`) over a
+//! loopback socket at 1 and 2 engine workers: the same shared-prefix
+//! workload streams through real sockets, chunked responses and the
+//! least-loaded/consistent-hash router, pinned bitwise to the
+//! sequential oracle. Its `serve/<attention>/net-w<N>` points carry
+//! per-request latency percentiles (`latency_ms_p50/p95/p99`), a
+//! mid-run queue-depth / pages-in-use gauge sample, the prefix-cache
+//! hit rate and per-worker session counts next to `per_token_us`.
+//!
 //! A third section pins the compressed-KV subsystem: the same
 //! shared-prefix workload runs at a TIGHT fixed `max_tokens` budget
 //! with f32, f16 and int8 KV pages. Compressed pages charge the budget
@@ -54,9 +63,10 @@
 
 use std::sync::Arc;
 
+use htransformer::model::net::client;
 use htransformer::model::{
     run_sequential, run_sequential_dtype, shared_prefix_workload, synthetic_workload, AttnSpec,
-    Model, ModelConfig, ServeConfig, ServeEngine, ServeReport,
+    Model, ModelConfig, NetConfig, NetServer, ServeConfig, ServeEngine, ServeReport,
 };
 use htransformer::tensor::PageDtype;
 use htransformer::util::bench::{commit_id, Table};
@@ -426,6 +436,129 @@ fn main() {
         "\nf16 pages charge half the context tokens per page and int8 ~0.28x, so the \
          same max_tokens budget holds >= 1.8x (f16) the concurrent sessions the f32 \
          engine does; generated tokens stay pinned to the same-dtype sequential loop."
+    );
+
+    // ---- network front end over loopback ---------------------------
+    // The same shared-prefix workload, but every token crosses a real
+    // socket: N concurrent HTTP clients stream chunked responses from
+    // `htx serve`'s engine workers. w1 isolates the wire overhead on
+    // one engine; w2 adds the least-loaded/consistent-hash router.
+    println!(
+        "\n### network front end: loopback HTTP streaming \
+         (one {shared_prompt}-token prompt x {} requests, {} tokens each) ###\n",
+        sh.requests, sh.gen
+    );
+    let mut t4 = Table::new(&[
+        "attention", "workers", "tokens/s", "per-token", "p50", "p95", "hit rate", "queue mid",
+        "pages mid",
+    ]);
+    {
+        let name = "h1d";
+        let cfg = ModelConfig {
+            vocab_size: sh.vocab,
+            d_model: sh.d_model,
+            n_heads: sh.n_heads,
+            n_layers: sh.n_layers,
+            d_ff: sh.d_ff,
+            max_len,
+            causal: true,
+            attention: AttnSpec::H1d { nr: 16 },
+            quant_weights: false,
+        };
+        let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
+        let requests =
+            shared_prefix_workload(sh.requests, shared_prompt, sh.gen, sh.vocab, 0.0, 23);
+        let seq = run_sequential(&model, &requests).expect("sequential run");
+        let want: std::collections::BTreeMap<u64, Vec<u32>> =
+            seq.completions.iter().map(|c| (c.id, c.tokens.clone())).collect();
+        for workers in [1usize, 2] {
+            let server = NetServer::start(
+                Arc::clone(&model),
+                "127.0.0.1:0",
+                NetConfig {
+                    workers,
+                    serve: ServeConfig {
+                        max_batch: 8,
+                        threads,
+                        ..ServeConfig::default()
+                    },
+                    ..NetConfig::default()
+                },
+            )
+            .expect("net server");
+            let addr = server.local_addr().to_string();
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = requests
+                .iter()
+                .map(|r| {
+                    let (addr, r) = (addr.clone(), r.clone());
+                    std::thread::spawn(move || {
+                        let toks = client::generate(&addr, &r.prompt, r.max_new, 0.0, r.seed)
+                            .expect("streamed generation");
+                        (r.id, toks)
+                    })
+                })
+                .collect();
+            // one gauge sample while sessions are in flight
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let mid = client::metrics(&addr).expect("mid-run metrics");
+            let gu = |m: &Json, k: &str| m.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let (queue_mid, pages_mid) = (gu(&mid, "queue_depth"), gu(&mid, "pages_in_use"));
+            let sessions_mid: Vec<Json> = mid
+                .get("workers")
+                .and_then(|w| w.as_arr())
+                .map(|ws| {
+                    ws.iter().map(|w| num(gu(w, "active_sessions"))).collect()
+                })
+                .unwrap_or_default();
+            for h in handles {
+                let (id, toks) = h.join().expect("client thread");
+                assert_eq!(
+                    toks,
+                    want[&id],
+                    "{name} net-w{workers}: wire stream diverged from the oracle"
+                );
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            let m = server.shutdown();
+            let total = (sh.requests * sh.gen) as f64;
+            let per_token_us = wall_s * 1e6 / total;
+            let lat = m.get("latency_ms").expect("latency_ms section");
+            let (p50, p95, p99) = (gu(lat, "p50"), gu(lat, "p95"), gu(lat, "p99"));
+            let hit_rate = gu(&m, "prefix_hit_rate");
+            t4.row(&[
+                name.to_string(),
+                format!("w{workers}"),
+                format!("{:.0}", total / wall_s),
+                format!("{per_token_us:.1}µs"),
+                format!("{p50:.1}ms"),
+                format!("{p95:.1}ms"),
+                format!("{:.0}%", 100.0 * hit_rate),
+                format!("{queue_mid:.0}"),
+                format!("{pages_mid:.0}"),
+            ]);
+            points.push(obj(vec![
+                ("id", s(&format!("serve/{name}/net-w{workers}"))),
+                ("attention", s(name)),
+                ("mode", s("network")),
+                ("workers", num(workers as f64)),
+                ("per_token_us", num(per_token_us)),
+                ("tokens_per_sec", num(total / wall_s)),
+                ("latency_ms_p50", num(p50)),
+                ("latency_ms_p95", num(p95)),
+                ("latency_ms_p99", num(p99)),
+                ("queue_depth_mid", num(queue_mid)),
+                ("pages_in_use_mid", num(pages_mid)),
+                ("prefix_hit_rate", num(hit_rate)),
+                ("per_worker_sessions_mid", Json::Arr(sessions_mid)),
+            ]));
+        }
+    }
+    t4.print();
+    println!(
+        "\nevery token crossed a real socket: chunked NDJSON framing, per-connection \
+         threads and the router cost a bounded per-token overhead vs the in-process \
+         engine rows above; 2 workers shard sessions across page pools."
     );
 
     let doc = obj(vec![

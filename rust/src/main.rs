@@ -31,17 +31,42 @@
 //!                             (--page-len, prefix sharing via
 //!                             --prefix-cache); --reserve restores the
 //!                             contiguous-reservation baseline
-//!                             admission. --kv-dtype {f32,f16,int8}
+//!                             admission. --kv-dtype {f32|f16|int8}
+//!                             (i8 is accepted as an int8 alias)
 //!                             stores KV pages compressed (budget
 //!                             charges shrink proportionally) and
 //!                             --quant-weights routes every matmul
 //!                             through int8 per-row quantised weights
+//!   serve --listen ADDR       HTTP/1.1 serving front end over the
+//!                             continuous-batching engine: POST
+//!                             /generate with token-id prompts streams
+//!                             chunked NDJSON tokens; GET /metrics
+//!                             reports latency percentiles, queue
+//!                             depth, pages-in-use and prefix-hit
+//!                             rate. Requests shard across --workers
+//!                             engine workers (per-worker page pools,
+//!                             least-loaded routing with a
+//!                             consistent-hash tiebreak on the prompt
+//!                             prefix). Engine knobs match serve-bench
+//!                             (--max-batch, --max-tokens, --page-len,
+//!                             --prefix-cache, --reserve, --kv-dtype,
+//!                             --quant-weights, --worker-threads);
+//!                             front-end knobs: --max-queue (503
+//!                             backpressure cap), --read-timeout-ms /
+//!                             --write-timeout-ms (per-connection
+//!                             socket timeouts), --metrics-jsonl PATH
+//!                             (per-request JSONL records). SIGINT
+//!                             drains in-flight sessions, then prints
+//!                             the final /metrics snapshot
 //!
 //! Artifact-backed subcommands (need `--features xla` + `make artifacts`):
 //!   list                      show the model zoo from the manifest
 //!   train   --model NAME      train a model on its synthetic task
 //!   eval    --model NAME      evaluate (fresh init or --checkpoint)
 //!   serve   --model NAME      demo the batching inference server
+//!                             (without --listen; the HTTP front end
+//!                             above takes precedence when --listen is
+//!                             given)
 //!
 //! All heavy math runs in AOT-compiled XLA artifacts; python is never on
 //! this binary's path. The CPU subcommands run the crate's own batched
@@ -73,6 +98,9 @@ fn main() {
         Some("infer") => cmd_infer(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        // `serve --listen` is the CPU HTTP front end; without --listen
+        // the name falls through to the xla artifact demo server
+        Some("serve") if args.get("listen").is_some() => cmd_serve_net(&args),
         #[cfg(feature = "xla")]
         Some("list") => xla_cmds::cmd_list(&args).map_err(|e| format!("{e:#}")),
         #[cfg(feature = "xla")]
@@ -81,11 +109,18 @@ fn main() {
         Some("eval") => xla_cmds::cmd_eval(&args).map_err(|e| format!("{e:#}")),
         #[cfg(feature = "xla")]
         Some("serve") => xla_cmds::cmd_serve(&args).map_err(|e| format!("{e:#}")),
+        #[cfg(not(feature = "xla"))]
+        Some("serve") => Err(
+            "serve needs --listen <addr> for the HTTP front end \
+             (the artifact demo server needs --features xla)"
+                .to_string(),
+        ),
         other => {
             eprintln!(
-                "usage: htx <rankmap|scaling|infer|generate|serve-bench|list|train|eval|serve> \
-                 [flags]\n\
-                 (got {other:?}; list/train/eval/serve need --features xla; see DESIGN.md)"
+                "usage: htx <rankmap|scaling|infer|generate|serve-bench|serve \
+                 --listen|list|train|eval> [flags]\n\
+                 (got {other:?}; list/train/eval and serve-without---listen need \
+                 --features xla; see DESIGN.md)"
             );
             std::process::exit(2);
         }
@@ -486,6 +521,113 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         batched.stats.prefix_lookups,
         batched.stats.evictions
     );
+    Ok(())
+}
+
+/// SIGINT flag for the serving front end, set from the signal handler.
+static SIGINT: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_sigint() {
+    // No libc crate in the vendored set — bind the libc symbol directly.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_sigint(_signum: i32) {
+        SIGINT.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    const SIGINT_NUM: i32 = 2;
+    unsafe {
+        signal(SIGINT_NUM, on_sigint as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint() {
+    // No portable std signal API; ctrl-c falls back to hard exit here.
+}
+
+fn cmd_serve_net(args: &Args) -> Result<(), String> {
+    use htransformer::model::{NetConfig, NetServer, ServeConfig};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    let listen = args.get("listen").ok_or("serve needs --listen <addr>")?.to_string();
+    // decoding wants a causal model, same defaulting rule as `generate`
+    let default_causal = args.get("attention").unwrap_or("h1d") != "lowrank";
+    let mut cfg = ModelConfig::from_lookup(|k| {
+        args.get(k).or_else(|| match (k, default_causal) {
+            ("causal", true) => Some("true"),
+            _ => None,
+        })
+    })?;
+    // hyphenated CLI alias for the config key
+    if args.bool("quant-weights") {
+        cfg.quant_weights = true;
+    }
+    let kv_flag = args.str_or("kv-dtype", "f32");
+    let kv_dtype = PageDtype::parse(&kv_flag)
+        .ok_or_else(|| format!("--kv-dtype expects f32|f16|int8 (alias i8), got {kv_flag:?}"))?;
+    let seed = args.u64_or("seed", 42);
+    let workers = args.usize_or("workers", 2);
+    let worker_threads = args.usize_or("worker-threads", 1);
+    let max_batch = args.usize_or("max-batch", 8);
+    let max_tokens = args.usize_or("max-tokens", 0); // 0 = unlimited
+    let page_len = args.usize_or("page-len", 16);
+    let reserve = args.bool("reserve");
+    let prefix_cache = args.usize_or("prefix-cache", 8);
+    let max_queue = args.usize_or("max-queue", 64);
+    let read_timeout_ms = args.u64_or("read-timeout-ms", 10_000);
+    let write_timeout_ms = args.u64_or("write-timeout-ms", 10_000);
+    let metrics_jsonl = args.get("metrics-jsonl").map(std::path::PathBuf::from);
+    if workers == 0 {
+        return Err("--workers must be at least 1".to_string());
+    }
+
+    let model = Arc::new(Model::new(cfg, seed)?);
+    let cfg = &model.cfg;
+    println!(
+        "model: {} layers x {} heads, d_model {}, vocab {}, attention {}{} ({} params)",
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_model,
+        cfg.vocab_size,
+        model.attention_name(),
+        if cfg.causal { " (causal)" } else { "" },
+        model.n_params()
+    );
+    let net_cfg = NetConfig {
+        workers,
+        max_queue,
+        read_timeout: Duration::from_millis(read_timeout_ms),
+        write_timeout: Duration::from_millis(write_timeout_ms),
+        metrics_jsonl,
+        serve: ServeConfig {
+            max_batch,
+            max_tokens: if max_tokens == 0 { usize::MAX } else { max_tokens },
+            page_len,
+            reserve,
+            prefix_cache,
+            threads: worker_threads,
+            kv_dtype,
+        },
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(model, &listen, net_cfg)?;
+    // the e2e harness greps this exact line to discover the bound port
+    println!("listening on {}", server.local_addr());
+    println!(
+        "{workers} worker(s) x {worker_threads} thread(s), max_batch {max_batch}, \
+         page_len {page_len}, kv {}, queue cap {max_queue} (503 past that); ctrl-c drains",
+        kv_dtype.as_str()
+    );
+    install_sigint();
+    while !SIGINT.load(Ordering::SeqCst) && !server.shutdown_flag().load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    eprintln!("shutting down: draining in-flight sessions");
+    let final_metrics = server.shutdown();
+    println!("{}", final_metrics.to_string());
     Ok(())
 }
 

@@ -29,14 +29,21 @@
 //! through shared ragged-batch decode rounds
 //! (`Attention::decode_step_batch`), amortising every weight matrix
 //! over the active batch (`tests/serve.rs` pins batched-vs-sequential
-//! parity and the session-pool zero-alloc invariant).
+//! parity and the session-pool zero-alloc invariant). The [`net`]
+//! submodule puts that engine behind real sockets: a dependency-free
+//! HTTP/1.1 front end (`htx serve --listen`) sharding requests across
+//! per-worker engines with streaming responses, backpressure and a
+//! `/metrics` endpoint (`tests/net.rs` pins network-vs-sequential
+//! token parity and the disconnect page-release contract).
 
 pub mod config;
 pub mod decode;
+pub mod net;
 pub mod serve;
 
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
+pub use net::{NetConfig, NetServer};
 pub use serve::{
     run_sequential, run_sequential_dtype, shared_prefix_workload, synthetic_workload, Completion,
     Request, ServeConfig, ServeEngine, ServeReport, ServeStats,

@@ -1,0 +1,1151 @@
+//! Dependency-free HTTP/1.1 serving front end over [`ServeEngine`] —
+//! the first layer of the stack real clients can hit (`htx serve
+//! --listen`).
+//!
+//! ## Sharding
+//!
+//! One [`NetServer`] runs `workers` independent [`ServeEngine`]s over
+//! a single shared `Arc<Model>`. Each worker owns its engine — and
+//! therefore its own `PagePool`, prefix cache and session pool — on a
+//! dedicated scheduler thread, so decode rounds on different workers
+//! proceed in parallel without sharing any mutable state. Requests are
+//! routed **least-loaded first** (load = queued + active + in-flight
+//! submissions), with ties broken by a **consistent hash of the prompt
+//! prefix**: when several workers are equally idle, identical system
+//! prompts land on the same worker, so the per-worker prefix cache
+//! keeps its locality even though pools are not shared.
+//!
+//! ## Wire protocol
+//!
+//! * `POST /generate` — body is a JSON object with token-id prompts:
+//!   `{"prompt": [1,2,3], "max_new": 16, "temperature": 0.0,
+//!   "seed": 7}` (`temperature`/`seed` optional). The response streams
+//!   with `Transfer-Encoding: chunked`: one NDJSON line `{"token": t}`
+//!   per generated token as decode rounds complete, then a final
+//!   `{"done": true, "tokens": n}` line. Tokens are bitwise what
+//!   [`run_sequential`](super::run_sequential) produces for the same
+//!   request — scheduling, sharding and routing never change outputs.
+//! * `GET /metrics` — JSON snapshot: per-request latency percentiles,
+//!   queue depth, pages in use, prefix-hit rate, per-worker session
+//!   counts and counters.
+//! * `GET /healthz` — readiness probe.
+//!
+//! Error mapping: malformed syntax or body → `400`; a request the
+//! engine can never run (over `max_len`, over the page budget,
+//! oversized body) → `413`; every admission queue at its `max_queue`
+//! cap → `503` (the page-accounted queue *is* the backpressure
+//! signal); read timeout → `408`. Every connection gets per-socket
+//! read/write timeouts; one request per connection
+//! (`Connection: close`).
+//!
+//! ## Lifecycle
+//!
+//! A client disconnect mid-stream cancels its session
+//! ([`ServeEngine::cancel`]): pages return to the pool and no
+//! completion is recorded — `tests/net.rs` pins pool stats returning
+//! to baseline. [`NetServer::shutdown`] (wired to SIGINT by `htx
+//! serve`) stops accepting, lets in-flight sessions drain to
+//! completion, joins every thread and returns the final `/metrics`
+//! snapshot.
+
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{Model, Request, ServeConfig, ServeEngine};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::jsonl::JsonlSink;
+use crate::util::stats::percentile_or_zero;
+
+/// Network front-end knobs on top of a per-worker [`ServeConfig`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Engine workers (>= 1): independent `ServeEngine`s over one
+    /// shared model, each with its own page pool and scheduler thread.
+    pub workers: usize,
+    /// Per-worker admission-queue cap; when every worker's load is at
+    /// or beyond it, `POST /generate` answers `503` instead of
+    /// enqueueing — backpressure rides the page-accounted queue.
+    pub max_queue: usize,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout.
+    pub write_timeout: Duration,
+    /// Request body cap in bytes (larger bodies answer `413`).
+    pub max_body_bytes: usize,
+    /// Optional JSONL sink: one record per finished request
+    /// (completed, rejected or disconnected).
+    pub metrics_jsonl: Option<std::path::PathBuf>,
+    /// The per-worker engine configuration.
+    pub serve: ServeConfig,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_queue: 64,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            max_body_bytes: 1 << 20,
+            metrics_jsonl: None,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// Events a worker streams back to the connection handler that owns a
+/// request.
+enum Event {
+    /// Passed validation and entered the worker's admission queue.
+    Accepted,
+    /// Failed validation; the message classifies the HTTP status.
+    Rejected(String),
+    /// Newly generated tokens since the last event.
+    Tokens(Vec<u32>),
+    /// The session completed; every token has been streamed.
+    Done,
+}
+
+enum WorkerMsg {
+    Submit { req: Request, events: Sender<Event> },
+    Cancel(u64),
+}
+
+/// Lock-free per-worker gauges, published by the scheduler thread
+/// after every tick and read by the router and `/metrics`.
+#[derive(Default)]
+struct WorkerGauges {
+    /// Requests dispatched but not yet picked up by the worker loop —
+    /// the router counts them into load so a burst doesn't all land on
+    /// one worker before its first tick.
+    inflight: AtomicUsize,
+    queued: AtomicUsize,
+    active: AtomicUsize,
+    pages_live: AtomicUsize,
+    ctx_tokens: AtomicUsize,
+    generated: AtomicUsize,
+    prefix_lookups: AtomicUsize,
+    prefix_hits: AtomicUsize,
+    evictions: AtomicUsize,
+    cancelled: AtomicUsize,
+}
+
+impl WorkerGauges {
+    fn load(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+            + self.queued.load(Ordering::Relaxed)
+            + self.active.load(Ordering::Relaxed)
+    }
+}
+
+struct WorkerHandle {
+    tx: Mutex<Sender<WorkerMsg>>,
+    gauges: Arc<WorkerGauges>,
+}
+
+/// Request-stream counters and the per-request latency reservoir.
+#[derive(Default)]
+struct NetMetrics {
+    requests: u64,
+    completed: u64,
+    rejected: u64,
+    busy_rejected: u64,
+    disconnects: u64,
+    /// Wall ms from dispatch to `Done`, completed requests only.
+    latency_ms: Vec<f64>,
+}
+
+struct Shared {
+    model: Arc<Model>,
+    cfg: NetConfig,
+    workers: Vec<WorkerHandle>,
+    metrics: Mutex<NetMetrics>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    /// Open connections (handler threads alive) — shutdown drains to 0.
+    conns: Arc<AtomicUsize>,
+    jsonl: Option<JsonlSink>,
+}
+
+/// FNV-1a over the first [`ROUTE_PREFIX_TOKENS`] prompt tokens — the
+/// consistent-hash routing key. Hashing only a bounded prefix keeps
+/// routing O(1) and still pins shared-system-prompt traffic (which
+/// agrees on exactly that prefix) to one worker's cache.
+const ROUTE_PREFIX_TOKENS: usize = 32;
+
+fn route_hash(prompt: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in prompt.iter().take(ROUTE_PREFIX_TOKENS) {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl Shared {
+    /// Least-loaded worker, consistent-hash tiebreak; `None` when every
+    /// worker is at the `max_queue` backpressure cap (the 503 path).
+    fn route(&self, prompt: &[u32]) -> Option<usize> {
+        let loads: Vec<usize> = self.workers.iter().map(|w| w.gauges.load()).collect();
+        let min = *loads.iter().min().expect(">= 1 worker");
+        if min >= self.cfg.max_queue {
+            return None;
+        }
+        let tied: Vec<usize> = (0..loads.len()).filter(|&i| loads[i] == min).collect();
+        Some(tied[(route_hash(prompt) % tied.len() as u64) as usize])
+    }
+
+    /// The `/metrics` document (also the shutdown report and the CI
+    /// artifact): request counters, per-request latency percentiles,
+    /// aggregate queue depth / pages-in-use / prefix-hit-rate, and
+    /// per-worker session counts.
+    fn metrics_json(&self) -> Json {
+        let (requests, completed, rejected, busy, disconnects, lat) = {
+            let m = self.metrics.lock().expect("metrics poisoned");
+            let mut lat = m.latency_ms.clone();
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            (m.requests, m.completed, m.rejected, m.busy_rejected, m.disconnects, lat)
+        };
+        let mut workers = Vec::new();
+        let (mut queue_depth, mut active, mut pages, mut ctx) = (0usize, 0usize, 0usize, 0usize);
+        let (mut lookups, mut hits, mut evictions, mut cancelled, mut generated) =
+            (0usize, 0usize, 0usize, 0usize, 0usize);
+        for (i, w) in self.workers.iter().enumerate() {
+            let g = &w.gauges;
+            let (wq, wa) = (g.queued.load(Ordering::Relaxed), g.active.load(Ordering::Relaxed));
+            let (wp, wc) =
+                (g.pages_live.load(Ordering::Relaxed), g.ctx_tokens.load(Ordering::Relaxed));
+            queue_depth += wq + g.inflight.load(Ordering::Relaxed);
+            active += wa;
+            pages += wp;
+            ctx += wc;
+            lookups += g.prefix_lookups.load(Ordering::Relaxed);
+            hits += g.prefix_hits.load(Ordering::Relaxed);
+            evictions += g.evictions.load(Ordering::Relaxed);
+            cancelled += g.cancelled.load(Ordering::Relaxed);
+            generated += g.generated.load(Ordering::Relaxed);
+            workers.push(obj(vec![
+                ("worker", num(i as f64)),
+                ("queued", num(wq as f64)),
+                ("active_sessions", num(wa as f64)),
+                ("pages_in_use", num(wp as f64)),
+                ("ctx_tokens", num(wc as f64)),
+                ("generated", num(g.generated.load(Ordering::Relaxed) as f64)),
+                ("prefix_hits", num(g.prefix_hits.load(Ordering::Relaxed) as f64)),
+            ]));
+        }
+        let hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+        obj(vec![
+            ("requests_total", num(requests as f64)),
+            ("completed_total", num(completed as f64)),
+            ("rejected_total", num(rejected as f64)),
+            ("busy_rejected_total", num(busy as f64)),
+            ("disconnects_total", num(disconnects as f64)),
+            ("generated_total", num(generated as f64)),
+            ("queue_depth", num(queue_depth as f64)),
+            ("active_sessions", num(active as f64)),
+            ("pages_in_use", num(pages as f64)),
+            ("ctx_tokens", num(ctx as f64)),
+            ("prefix_hit_rate", num(hit_rate)),
+            ("evictions_total", num(evictions as f64)),
+            ("cancelled_total", num(cancelled as f64)),
+            (
+                "latency_ms",
+                obj(vec![
+                    ("count", num(lat.len() as f64)),
+                    ("p50", num(percentile_or_zero(&lat, 50.0))),
+                    ("p95", num(percentile_or_zero(&lat, 95.0))),
+                    ("p99", num(percentile_or_zero(&lat, 99.0))),
+                    ("max", num(lat.last().copied().unwrap_or(0.0))),
+                ]),
+            ),
+            ("workers_total", num(self.workers.len() as f64)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+
+    fn record_jsonl(&self, record: Json) {
+        if let Some(sink) = &self.jsonl {
+            let _ = sink.append(&record);
+        }
+    }
+}
+
+/// Per-session bookkeeping on the worker thread: the event channel
+/// plus the stream watermark (tokens already sent). An out-of-pages
+/// eviction clears and later regenerates identical tokens, so the
+/// watermark simply pauses the stream instead of double-sending.
+struct SessionTx {
+    tx: Sender<Event>,
+    sent: usize,
+}
+
+/// One engine worker's scheduler loop: drain control messages, tick
+/// the engine, stream progress, publish gauges; on shutdown keep
+/// ticking until in-flight sessions drain.
+fn worker_loop(
+    mut engine: ServeEngine,
+    rx: Receiver<WorkerMsg>,
+    gauges: Arc<WorkerGauges>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut sessions: HashMap<u64, SessionTx> = HashMap::new();
+    let mut disconnected = false;
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => handle_msg(&mut engine, &mut sessions, &gauges, msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        let has_work = engine.queued() > 0 || engine.active_sessions() > 0;
+        if has_work {
+            engine.tick();
+            stream_progress(&mut engine, &mut sessions);
+        }
+        publish_gauges(&engine, &gauges);
+        if !has_work {
+            if disconnected || shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(msg) => handle_msg(&mut engine, &mut sessions, &gauges, msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+    }
+    // refuse anything still queued in the channel at exit so no
+    // handler blocks on a channel whose worker is gone
+    while let Ok(msg) = rx.try_recv() {
+        if let WorkerMsg::Submit { events, .. } = msg {
+            gauges.inflight.fetch_sub(1, Ordering::Relaxed);
+            let _ = events.send(Event::Rejected("server shutting down".to_string()));
+        }
+    }
+}
+
+fn handle_msg(
+    engine: &mut ServeEngine,
+    sessions: &mut HashMap<u64, SessionTx>,
+    gauges: &WorkerGauges,
+    msg: WorkerMsg,
+) {
+    match msg {
+        WorkerMsg::Submit { req, events } => {
+            gauges.inflight.fetch_sub(1, Ordering::Relaxed);
+            let id = req.id;
+            match engine.submit(req) {
+                Ok(()) => {
+                    if events.send(Event::Accepted).is_ok() {
+                        sessions.insert(id, SessionTx { tx: events, sent: 0 });
+                    } else {
+                        engine.cancel(id);
+                    }
+                }
+                Err(e) => {
+                    let _ = events.send(Event::Rejected(e));
+                }
+            }
+        }
+        WorkerMsg::Cancel(id) => {
+            // idempotent with the worker-detected dead-handler path:
+            // whichever notices first releases the pages
+            engine.cancel(id);
+            sessions.remove(&id);
+        }
+    }
+}
+
+/// Stream newly generated tokens to each session's handler and close
+/// out completions; a failed send means the handler (and client) are
+/// gone, so the session is cancelled and its pages released.
+fn stream_progress(engine: &mut ServeEngine, sessions: &mut HashMap<u64, SessionTx>) {
+    let mut dead: Vec<u64> = Vec::new();
+    engine.for_each_active(|id, tokens| {
+        if let Some(sess) = sessions.get_mut(&id) {
+            if tokens.len() > sess.sent {
+                if sess.tx.send(Event::Tokens(tokens[sess.sent..].to_vec())).is_ok() {
+                    sess.sent = tokens.len();
+                } else {
+                    dead.push(id);
+                }
+            }
+        }
+    });
+    for id in dead {
+        engine.cancel(id);
+        sessions.remove(&id);
+    }
+    for c in engine.take_completions() {
+        if let Some(sess) = sessions.remove(&c.id) {
+            if c.tokens.len() > sess.sent {
+                let _ = sess.tx.send(Event::Tokens(c.tokens[sess.sent..].to_vec()));
+            }
+            let _ = sess.tx.send(Event::Done);
+        }
+    }
+}
+
+fn publish_gauges(engine: &ServeEngine, gauges: &WorkerGauges) {
+    let ps = engine.pool_stats();
+    let st = engine.stats();
+    gauges.queued.store(engine.queued(), Ordering::Relaxed);
+    gauges.active.store(engine.active_sessions(), Ordering::Relaxed);
+    gauges.pages_live.store(ps.live, Ordering::Relaxed);
+    gauges.ctx_tokens.store(ps.ctx_tokens(), Ordering::Relaxed);
+    gauges.generated.store(st.generated, Ordering::Relaxed);
+    gauges.prefix_lookups.store(st.prefix_lookups, Ordering::Relaxed);
+    gauges.prefix_hits.store(st.prefix_hits, Ordering::Relaxed);
+    gauges.evictions.store(st.evictions, Ordering::Relaxed);
+    gauges.cancelled.store(st.cancelled, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// HTTP plumbing
+// ---------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+enum HttpError {
+    /// 400 — unparseable request line, headers or body framing.
+    Bad(String),
+    /// 408 — the socket read timed out mid-request.
+    Timeout,
+    /// 413 — declared body longer than the configured cap.
+    TooLarge(String),
+    /// The peer vanished; nothing to answer.
+    Closed,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one HTTP/1.1 request (start line, headers, `Content-Length`
+/// body). Hand-rolled on purpose: the vendor set has no HTTP crate,
+/// and the subset we speak — no chunked request bodies, no keep-alive
+/// — fits in a page of code.
+fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpRequest, HttpError> {
+    const MAX_HEAD: usize = 16 * 1024;
+    let mut head: Vec<u8> = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    // byte-at-a-time until CRLFCRLF: header sections are tiny and this
+    // never over-reads into the body
+    loop {
+        match stream.read(&mut byte) {
+            Ok(0) => {
+                return if head.is_empty() {
+                    Err(HttpError::Closed)
+                } else {
+                    Err(HttpError::Bad("truncated request head".to_string()))
+                };
+            }
+            Ok(_) => head.push(byte[0]),
+            Err(e) if is_timeout(&e) => return Err(HttpError::Timeout),
+            Err(_) => return Err(HttpError::Closed),
+        }
+        if head.len() > MAX_HEAD {
+            return Err(HttpError::TooLarge("request head exceeds 16 KiB".to_string()));
+        }
+        if head.ends_with(b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8(head).map_err(|_| HttpError::Bad("non-UTF8 head".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let start = lines.next().unwrap_or("");
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad(format!("malformed request line: {start:?}")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim();
+        if k == "content-length" {
+            content_length = v
+                .parse::<usize>()
+                .map_err(|_| HttpError::Bad(format!("bad content-length: {v:?}")))?;
+        } else if k == "transfer-encoding" {
+            return Err(HttpError::Bad("chunked request bodies unsupported".to_string()));
+        }
+    }
+    if content_length > max_body {
+        return Err(HttpError::TooLarge(format!(
+            "body of {content_length} bytes exceeds the {max_body}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        match stream.read_exact(&mut body) {
+            Ok(()) => {}
+            Err(e) if is_timeout(&e) => return Err(HttpError::Timeout),
+            Err(_) => return Err(HttpError::Bad("truncated body".to_string())),
+        }
+    }
+    Ok(HttpRequest { method, path, body })
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete (non-streaming) response with `Content-Length`.
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> io::Result<()> {
+    let text = body.to_string();
+    let retry = if status == 503 { "Retry-After: 1\r\n" } else { "" };
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        text.len(),
+        retry
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())
+}
+
+fn write_error(stream: &mut TcpStream, status: u16, msg: &str) {
+    let _ = write_response(stream, status, &obj(vec![("error", s(msg))]));
+}
+
+fn write_stream_head(stream: &mut TcpStream) -> io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )
+}
+
+fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> io::Result<()> {
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")
+}
+
+fn write_last_chunk(stream: &mut TcpStream) -> io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")
+}
+
+// ---------------------------------------------------------------------
+// /generate handler
+// ---------------------------------------------------------------------
+
+/// Parse the `POST /generate` body into a [`Request`] (id assigned by
+/// the caller). Errors are user errors → 400.
+fn parse_generate_body(body: &[u8]) -> Result<Request, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt_v = v.get("prompt").ok_or("missing \"prompt\"")?;
+    let arr = prompt_v.as_arr().ok_or("\"prompt\" must be an array of token ids")?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for t in arr {
+        let n = t.as_f64().ok_or("prompt tokens must be numbers")?;
+        if n.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&n) {
+            return Err(format!("prompt token {n} is not a u32 token id"));
+        }
+        prompt.push(n as u32);
+    }
+    let max_new = v
+        .get("max_new")
+        .ok_or("missing \"max_new\"")?
+        .as_usize()
+        .ok_or("\"max_new\" must be a positive integer")?;
+    let temperature = v.get("temperature").and_then(|t| t.as_f64()).unwrap_or(0.0) as f32;
+    let seed = v.get("seed").and_then(|t| t.as_i64()).unwrap_or(0) as u64;
+    Ok(Request { id: 0, prompt, max_new, temperature, seed })
+}
+
+/// Engine validation messages that mean "this can never fit", mapped
+/// to 413 rather than 400.
+fn rejection_status(msg: &str) -> u16 {
+    if msg.contains("max_len") || msg.contains("max_tokens") || msg.contains("overflows") {
+        413
+    } else {
+        400
+    }
+}
+
+fn handle_generate(shared: &Shared, stream: &mut TcpStream, body: &[u8]) {
+    let t0 = Instant::now();
+    {
+        let mut m = shared.metrics.lock().expect("metrics poisoned");
+        m.requests += 1;
+    }
+    let mut req = match parse_generate_body(body) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.metrics.lock().expect("metrics poisoned").rejected += 1;
+            write_error(stream, 400, &e);
+            return;
+        }
+    };
+    // cheap pre-check so an absurd horizon never crosses a channel
+    if req.prompt.len().saturating_add(req.max_new) > shared.model.cfg.max_len {
+        shared.metrics.lock().expect("metrics poisoned").rejected += 1;
+        write_error(
+            stream,
+            413,
+            &format!(
+                "prompt {} + max_new {} exceeds model max_len {}",
+                req.prompt.len(),
+                req.max_new,
+                shared.model.cfg.max_len
+            ),
+        );
+        return;
+    }
+    req.id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let Some(worker) = shared.route(&req.prompt) else {
+        shared.metrics.lock().expect("metrics poisoned").busy_rejected += 1;
+        write_error(stream, 503, "all admission queues full");
+        return;
+    };
+    let id = req.id;
+    let prompt_len = req.prompt.len();
+    let (events_tx, events_rx) = mpsc::channel();
+    let wh = &shared.workers[worker];
+    wh.gauges.inflight.fetch_add(1, Ordering::Relaxed);
+    if wh
+        .tx
+        .lock()
+        .expect("worker sender poisoned")
+        .send(WorkerMsg::Submit { req, events: events_tx })
+        .is_err()
+    {
+        wh.gauges.inflight.fetch_sub(1, Ordering::Relaxed);
+        write_error(stream, 503, "worker unavailable");
+        return;
+    }
+    // first event decides the status line: Accepted → 200 + stream,
+    // Rejected → mapped error. Validation runs on the worker's next
+    // loop iteration, so this wait is short even under load.
+    match events_rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Event::Accepted) => {}
+        Ok(Event::Rejected(msg)) => {
+            shared.metrics.lock().expect("metrics poisoned").rejected += 1;
+            shared.record_jsonl(obj(vec![
+                ("event", s("rejected")),
+                ("id", num(id as f64)),
+                ("worker", num(worker as f64)),
+                ("error", s(&msg)),
+            ]));
+            write_error(stream, rejection_status(&msg), &msg);
+            return;
+        }
+        Ok(_) | Err(_) => {
+            write_error(stream, 500, "worker dropped the request");
+            return;
+        }
+    }
+    if write_stream_head(stream).is_err() {
+        let _ = wh.tx.lock().expect("worker sender poisoned").send(WorkerMsg::Cancel(id));
+        shared.metrics.lock().expect("metrics poisoned").disconnects += 1;
+        return;
+    }
+    let mut sent = 0usize;
+    let mut line = String::new();
+    loop {
+        match events_rx.recv() {
+            Ok(Event::Tokens(tokens)) => {
+                line.clear();
+                for t in &tokens {
+                    line.push_str("{\"token\":");
+                    line.push_str(&t.to_string());
+                    line.push_str("}\n");
+                }
+                sent += tokens.len();
+                if write_chunk(stream, line.as_bytes()).is_err() {
+                    // client went away mid-stream: cancel the session
+                    // so its pages release; the worker may also notice
+                    // first via its own failed send — both paths meet
+                    // at ServeEngine::cancel, which is idempotent
+                    let _ =
+                        wh.tx.lock().expect("worker sender poisoned").send(WorkerMsg::Cancel(id));
+                    shared.metrics.lock().expect("metrics poisoned").disconnects += 1;
+                    shared.record_jsonl(obj(vec![
+                        ("event", s("disconnect")),
+                        ("id", num(id as f64)),
+                        ("worker", num(worker as f64)),
+                        ("streamed", num(sent as f64)),
+                    ]));
+                    return;
+                }
+            }
+            Ok(Event::Done) => {
+                let done = format!("{{\"done\":true,\"tokens\":{sent}}}\n");
+                let ok = write_chunk(stream, done.as_bytes()).is_ok()
+                    && write_last_chunk(stream).is_ok();
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                {
+                    let mut m = shared.metrics.lock().expect("metrics poisoned");
+                    m.completed += 1;
+                    m.latency_ms.push(wall_ms);
+                }
+                shared.record_jsonl(obj(vec![
+                    ("event", s("completed")),
+                    ("id", num(id as f64)),
+                    ("worker", num(worker as f64)),
+                    ("prompt_len", num(prompt_len as f64)),
+                    ("tokens", num(sent as f64)),
+                    ("wall_ms", num(wall_ms)),
+                    ("delivered", Json::Bool(ok)),
+                ]));
+                return;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                // worker gone mid-stream (shutdown refused the tail);
+                // the chunked body just ends without the done line
+                let _ = write_last_chunk(stream);
+                return;
+            }
+        }
+    }
+}
+
+fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream, shared.cfg.max_body_bytes) {
+        Ok(r) => r,
+        Err(HttpError::Bad(e)) => return write_error(&mut stream, 400, &e),
+        Err(HttpError::Timeout) => return write_error(&mut stream, 408, "request read timed out"),
+        Err(HttpError::TooLarge(e)) => return write_error(&mut stream, 413, &e),
+        Err(HttpError::Closed) => return,
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/generate") => handle_generate(shared, &mut stream, &req.body),
+        ("GET", "/metrics") => {
+            let _ = write_response(&mut stream, 200, &shared.metrics_json());
+        }
+        ("GET", "/healthz") => {
+            let _ = write_response(&mut stream, 200, &obj(vec![("ok", Json::Bool(true))]));
+        }
+        ("POST", _) | ("GET", _) => write_error(&mut stream, 404, "unknown path"),
+        _ => write_error(&mut stream, 405, "method not allowed"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server lifecycle
+// ---------------------------------------------------------------------
+
+/// Decrements the open-connection gauge when a handler exits, however
+/// it exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running network front end; see the module docs.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    worker_joins: Vec<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0`) and start the accept loop
+    /// plus `cfg.workers` engine scheduler threads.
+    pub fn start(model: Arc<Model>, listen: &str, cfg: NetConfig) -> Result<NetServer, String> {
+        if cfg.workers == 0 {
+            return Err("workers must be >= 1".to_string());
+        }
+        let listener =
+            TcpListener::bind(listen).map_err(|e| format!("bind {listen} failed: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("set_nonblocking failed: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr failed: {e}"))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let jsonl = match &cfg.metrics_jsonl {
+            Some(path) => Some(
+                JsonlSink::append_to(path)
+                    .map_err(|e| format!("open {} failed: {e}", path.display()))?,
+            ),
+            None => None,
+        };
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut worker_joins = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let engine = ServeEngine::new(Arc::clone(&model), cfg.serve.clone())?;
+            let (tx, rx) = mpsc::channel();
+            let gauges = Arc::new(WorkerGauges::default());
+            let g = Arc::clone(&gauges);
+            let sd = Arc::clone(&shutdown);
+            let join = std::thread::Builder::new()
+                .name(format!("htx-worker-{w}"))
+                .spawn(move || worker_loop(engine, rx, g, sd))
+                .map_err(|e| format!("spawn worker {w} failed: {e}"))?;
+            workers.push(WorkerHandle { tx: Mutex::new(tx), gauges });
+            worker_joins.push(join);
+        }
+        let shared = Arc::new(Shared {
+            model,
+            cfg,
+            workers,
+            metrics: Mutex::new(NetMetrics::default()),
+            next_id: AtomicU64::new(1),
+            shutdown: Arc::clone(&shutdown),
+            conns: Arc::new(AtomicUsize::new(0)),
+            jsonl,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("htx-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| format!("spawn accept loop failed: {e}"))?;
+        Ok(NetServer { shared, accept: Some(accept), worker_joins, addr })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The flag a signal handler flips to request shutdown; the accept
+    /// loop polls it, so flipping it is async-signal-safe.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shared.shutdown)
+    }
+
+    /// Current `/metrics` snapshot, in-process.
+    pub fn metrics_json(&self) -> Json {
+        self.shared.metrics_json()
+    }
+
+    /// Graceful shutdown: stop accepting, let open connections and
+    /// their in-flight sessions drain to completion, join every
+    /// thread; returns the final metrics snapshot. Also the SIGINT
+    /// path (`htx serve` flips [`NetServer::shutdown_flag`] from the
+    /// signal handler and calls this from the main thread).
+    pub fn shutdown(mut self) -> Json {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // open connections finish streaming their sessions; workers
+        // only exit once pending + active are empty
+        while self.shared.conns.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for h in self.worker_joins.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.metrics_json()
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let conn_shared = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("htx-conn".to_string())
+                    .spawn(move || {
+                        let _guard = ConnGuard(Arc::clone(&conn_shared.conns));
+                        handle_connection(&conn_shared, stream);
+                    });
+                if spawned.is_err() {
+                    shared.conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if is_timeout(&e) => std::thread::sleep(Duration::from_millis(2)),
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocking client helpers (tests, benches, the CI loopback job)
+// ---------------------------------------------------------------------
+
+/// Minimal blocking HTTP client for the front end's protocol — shared
+/// by `tests/net.rs`, `benches/serve.rs` and the CI loopback job so
+/// they all speak bytes over a real socket rather than poking the
+/// engine in-process.
+pub mod client {
+    use super::*;
+
+    /// A parsed (fully read) response.
+    pub struct Response {
+        pub status: u16,
+        pub body: String,
+    }
+
+    fn read_status_and_headers(
+        reader: &mut BufReader<TcpStream>,
+    ) -> Result<(u16, bool, usize), String> {
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| format!("read status: {e}"))?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|sc| sc.parse().ok())
+            .ok_or_else(|| format!("bad status line: {line:?}"))?;
+        let mut chunked = false;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).map_err(|e| format!("read header: {e}"))?;
+            let t = h.trim();
+            if t.is_empty() {
+                break;
+            }
+            let lower = t.to_ascii_lowercase();
+            if lower.starts_with("transfer-encoding:") && lower.contains("chunked") {
+                chunked = true;
+            } else if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().map_err(|e| format!("bad length: {e}"))?;
+            }
+        }
+        Ok((status, chunked, content_length))
+    }
+
+    /// Read one chunk of a chunked body; `Ok(None)` on the final chunk.
+    fn read_chunk(reader: &mut BufReader<TcpStream>) -> Result<Option<Vec<u8>>, String> {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line).map_err(|e| format!("read chunk size: {e}"))?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| format!("bad chunk size: {size_line:?}"))?;
+        if size == 0 {
+            let mut crlf = String::new();
+            let _ = reader.read_line(&mut crlf);
+            return Ok(None);
+        }
+        let mut data = vec![0u8; size + 2]; // chunk + trailing CRLF
+        reader.read_exact(&mut data).map_err(|e| format!("read chunk: {e}"))?;
+        data.truncate(size);
+        Ok(Some(data))
+    }
+
+    fn send_request(addr: &str, head_and_body: &str) -> Result<BufReader<TcpStream>, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .map_err(|e| format!("timeout: {e}"))?;
+        let mut w = stream.try_clone().map_err(|e| format!("clone: {e}"))?;
+        w.write_all(head_and_body.as_bytes()).map_err(|e| format!("write: {e}"))?;
+        Ok(BufReader::new(stream))
+    }
+
+    fn post_generate_raw(addr: &str, body: &str) -> Result<BufReader<TcpStream>, String> {
+        send_request(
+            addr,
+            &format!(
+                "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    /// Send raw request bytes and read the full response — the
+    /// malformed-input path for error tests.
+    pub fn raw(addr: &str, request: &str) -> Result<Response, String> {
+        let mut reader = send_request(addr, request)?;
+        let (status, chunked, content_length) = read_status_and_headers(&mut reader)?;
+        let mut body = Vec::new();
+        if chunked {
+            while let Some(mut c) = read_chunk(&mut reader)? {
+                body.append(&mut c);
+            }
+        } else {
+            body.resize(content_length, 0);
+            reader.read_exact(&mut body).map_err(|e| format!("read body: {e}"))?;
+        }
+        Ok(Response {
+            status,
+            body: String::from_utf8_lossy(&body).into_owned(),
+        })
+    }
+
+    fn generate_body(prompt: &[u32], max_new: usize, temperature: f32, seed: u64) -> String {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        format!(
+            "{{\"prompt\":[{}],\"max_new\":{max_new},\"temperature\":{temperature},\"seed\":{seed}}}",
+            toks.join(",")
+        )
+    }
+
+    /// POST a generation request and collect the streamed tokens.
+    /// Verifies the final `done` line's token count.
+    pub fn generate(
+        addr: &str,
+        prompt: &[u32],
+        max_new: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Result<Vec<u32>, String> {
+        let body = generate_body(prompt, max_new, temperature, seed);
+        let mut reader = post_generate_raw(addr, &body)?;
+        let (status, chunked, content_length) = read_status_and_headers(&mut reader)?;
+        if status != 200 {
+            let mut b = vec![0u8; content_length];
+            let _ = reader.read_exact(&mut b);
+            return Err(format!("status {status}: {}", String::from_utf8_lossy(&b)));
+        }
+        if !chunked {
+            return Err("expected a chunked streaming response".to_string());
+        }
+        let mut text = String::new();
+        while let Some(c) = read_chunk(&mut reader)? {
+            text.push_str(&String::from_utf8_lossy(&c));
+        }
+        let mut tokens = Vec::new();
+        let mut done = false;
+        for line in text.lines() {
+            let v = Json::parse(line).map_err(|e| format!("bad stream line {line:?}: {e}"))?;
+            if let Some(t) = v.get("token").and_then(|t| t.as_i64()) {
+                tokens.push(t as u32);
+            } else if v.get("done").and_then(|d| d.as_bool()) == Some(true) {
+                let n = v.get("tokens").and_then(|n| n.as_usize()).unwrap_or(usize::MAX);
+                if n != tokens.len() {
+                    return Err(format!("done line claims {n} tokens, streamed {}", tokens.len()));
+                }
+                done = true;
+            }
+        }
+        if !done {
+            return Err("stream ended without a done line".to_string());
+        }
+        Ok(tokens)
+    }
+
+    /// POST a generation request, read until `drop_after` tokens have
+    /// streamed, then drop the connection — the injected-disconnect
+    /// client. Returns the tokens seen before hanging up.
+    pub fn generate_and_disconnect(
+        addr: &str,
+        prompt: &[u32],
+        max_new: usize,
+        seed: u64,
+        drop_after: usize,
+    ) -> Result<Vec<u32>, String> {
+        let body = generate_body(prompt, max_new, 0.0, seed);
+        let mut reader = post_generate_raw(addr, &body)?;
+        let (status, chunked, _) = read_status_and_headers(&mut reader)?;
+        if status != 200 || !chunked {
+            return Err(format!("expected a 200 chunked stream, got {status}"));
+        }
+        let mut tokens = Vec::new();
+        while tokens.len() < drop_after {
+            match read_chunk(&mut reader)? {
+                Some(c) => {
+                    for line in String::from_utf8_lossy(&c).lines() {
+                        if let Some(t) = Json::parse(line)
+                            .ok()
+                            .and_then(|v| v.get("token").and_then(|t| t.as_i64()))
+                        {
+                            tokens.push(t as u32);
+                        }
+                    }
+                }
+                None => break, // finished before we could hang up
+            }
+        }
+        Ok(tokens) // reader drops here: RST/FIN mid-stream
+    }
+
+    /// GET `/metrics` as parsed JSON.
+    pub fn metrics(addr: &str) -> Result<Json, String> {
+        let resp = raw(addr, &format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\n\r\n"))?;
+        if resp.status != 200 {
+            return Err(format!("metrics status {}", resp.status));
+        }
+        Json::parse(&resp.body).map_err(|e| format!("metrics body: {e}"))
+    }
+
+    /// Poll `/healthz` until the server answers or `timeout` expires.
+    pub fn wait_ready(addr: &str, timeout: Duration) -> Result<(), String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match raw(addr, &format!("GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n")) {
+                Ok(r) if r.status == 200 => return Ok(()),
+                _ if Instant::now() >= deadline => {
+                    return Err(format!("server at {addr} not ready after {timeout:?}"))
+                }
+                _ => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_prefers_consistent_hash_among_ties() {
+        // route() is pure over gauges; build a Shared-free check of the
+        // tiebreak math instead: equal loads → hash picks, stable
+        let h1 = route_hash(&[1, 2, 3]);
+        let h2 = route_hash(&[1, 2, 3]);
+        assert_eq!(h1, h2, "hash must be deterministic");
+        assert_ne!(route_hash(&[1, 2, 3]), route_hash(&[3, 2, 1]));
+        // only the first ROUTE_PREFIX_TOKENS tokens matter
+        let long_a: Vec<u32> = (0..100).collect();
+        let mut long_b = long_a.clone();
+        long_b[ROUTE_PREFIX_TOKENS + 1] = 999;
+        assert_eq!(route_hash(&long_a), route_hash(&long_b));
+    }
+
+    #[test]
+    fn generate_body_parses_and_rejects() {
+        let r = parse_generate_body(br#"{"prompt":[1,2,3],"max_new":4,"seed":9}"#).unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.seed, 9);
+        assert_eq!(r.temperature, 0.0);
+        assert!(parse_generate_body(b"not json").is_err());
+        assert!(parse_generate_body(br#"{"max_new":4}"#).unwrap_err().contains("prompt"));
+        assert!(parse_generate_body(br#"{"prompt":[1.5],"max_new":4}"#).is_err());
+        assert!(parse_generate_body(br#"{"prompt":[-1],"max_new":4}"#).is_err());
+        assert!(parse_generate_body(br#"{"prompt":[1]}"#).unwrap_err().contains("max_new"));
+    }
+
+    #[test]
+    fn rejection_statuses_classify() {
+        assert_eq!(rejection_status("prompt 9 + max_new 9 exceeds model max_len 8"), 413);
+        assert_eq!(rejection_status("reservation 64 exceeds the max_tokens budget"), 413);
+        assert_eq!(rejection_status("request 1: empty prompt"), 400);
+        assert_eq!(rejection_status("request 1: token id 99 >= vocab 29"), 400);
+    }
+}

@@ -219,6 +219,10 @@ pub struct ServeStats {
     pub prefix_hits: usize,
     /// Sessions evicted and requeued by the out-of-pages policy.
     pub evictions: usize,
+    /// Requests cancelled via [`ServeEngine::cancel`] (client
+    /// disconnects); their pages were released and no [`Completion`]
+    /// was emitted.
+    pub cancelled: usize,
     /// Peak page-granular context tokens allocated (shared pages
     /// counted once) — what `max_tokens` bounds.
     pub peak_ctx_tokens: usize,
@@ -249,17 +253,27 @@ impl ServeStats {
 
     /// Per-token latency percentile in µs: every token generated in a
     /// round observes that round's wall time (`pct` in 0..=100).
-    pub fn latency_us(&self, pct: f64) -> f64 {
+    /// `None` when no decode round ran — a zero-completion run (every
+    /// request rejected at admission, or a stats read before the first
+    /// round) has no latency distribution to index into; the old
+    /// `(samples.len() - 1)` rank math must never see that case.
+    pub fn try_latency_us(&self, pct: f64) -> Option<f64> {
         let mut samples: Vec<f64> = Vec::new();
         for (s, n) in self.round_s.iter().zip(&self.round_tokens) {
             samples.extend(std::iter::repeat(*s * 1e6).take(*n));
         }
         if samples.is_empty() {
-            return 0.0;
+            return None;
         }
         samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-        let idx = ((pct / 100.0) * (samples.len() - 1) as f64).round() as usize;
-        samples[idx.min(samples.len() - 1)]
+        let idx = ((pct.clamp(0.0, 100.0) / 100.0) * (samples.len() - 1) as f64).round() as usize;
+        Some(samples[idx.min(samples.len() - 1)])
+    }
+
+    /// [`ServeStats::try_latency_us`] with the empty case reported as
+    /// `0.0` — the `BENCH_serve.json` convention.
+    pub fn latency_us(&self, pct: f64) -> f64 {
+        self.try_latency_us(pct).unwrap_or(0.0)
     }
 
     /// Mean active sessions per decode round (batch fill).
@@ -682,6 +696,49 @@ impl ServeEngine {
     /// Completions accumulated so far (drains the internal buffer).
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Visit every active session's generated-so-far tokens. The net
+    /// front end calls this after each [`ServeEngine::tick`] to stream
+    /// newly generated tokens; callers keep their own per-request
+    /// watermark, so an out-of-pages eviction (which clears and later
+    /// regenerates bitwise-identical tokens) simply pauses the stream
+    /// instead of double-sending.
+    pub fn for_each_active(&self, mut f: impl FnMut(u64, &[u32])) {
+        for slot in &self.active {
+            f(slot.id, &slot.tokens);
+        }
+    }
+
+    /// Cancel a request by id — a client disconnect mid-stream. A
+    /// pending request is dropped from the queue; an active session is
+    /// torn down in place: its pages return to the pool, its generated
+    /// tokens come off the `generated` count (they were never
+    /// delivered) and **no** [`Completion`] is emitted. The slot
+    /// recycles through the session pool exactly like a retirement, so
+    /// cancellation leaks nothing — `capacity_snapshot` is invariant
+    /// across a cancel + same-shape re-admission. Returns whether the
+    /// id was found (pending or active).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            self.pending.remove(i);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        if let Some(i) = self.active.iter().position(|s| s.id == id) {
+            let mut slot = self.active.remove(i);
+            slot.request = None;
+            self.stats.generated -= slot.tokens.len();
+            slot.tokens.clear();
+            slot.logits.clear();
+            for st in &mut slot.states {
+                st.release_pages();
+            }
+            self.free.push(slot);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        false
     }
 
     fn cache_limit(&self) -> usize {
@@ -1570,6 +1627,104 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 5);
+    }
+
+    #[test]
+    fn latency_percentiles_survive_zero_completion_runs() {
+        // a run where every request is rejected at admission produces
+        // stats with no decode rounds: the percentile rank math
+        // ((len - 1) on an empty sample set) must be guarded, not hit
+        let stats = ServeStats::default();
+        assert_eq!(stats.try_latency_us(50.0), None);
+        assert_eq!(stats.latency_us(50.0), 0.0);
+        assert_eq!(stats.latency_us(99.0), 0.0);
+        assert_eq!(stats.per_token_us(), 0.0);
+        // the engine-level shape of the same case: submits all fail,
+        // run() drains nothing, and the report's percentiles are 0.0
+        let model = Arc::new(tiny_model(AttnSpec::Full, 16));
+        let mut eng = ServeEngine::new(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let bad = Request {
+            id: 0,
+            prompt: vec![99], // out of vocab: rejected
+            max_new: 2,
+            temperature: 0.0,
+            seed: 1,
+        };
+        assert!(eng.submit(bad).is_err());
+        let rep = eng.run(Vec::new()).unwrap();
+        assert!(rep.completions.is_empty());
+        assert_eq!(rep.stats.try_latency_us(95.0), None);
+        assert_eq!(rep.stats.latency_us(95.0), 0.0);
+        // a one-round run clamps out-of-range pct instead of panicking
+        let rep = eng.run(synthetic_workload(1, &[4], 2, 29, 0.0, 1)).unwrap();
+        assert!(rep.stats.try_latency_us(200.0).is_some());
+    }
+
+    #[test]
+    fn cancel_releases_pages_and_recycles_the_slot() {
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 32));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 2,
+                prefix_cache: 0, // cache off so live pages pin to zero
+                threads: 1,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let reqs = synthetic_workload(2, &[6], 8, 29, 0.0, 5);
+        for r in reqs.clone() {
+            eng.submit(r).unwrap();
+        }
+        // admit both and run a couple of rounds mid-stream
+        eng.tick();
+        eng.tick();
+        assert_eq!(eng.active_sessions(), 2);
+        let mut streamed = 0;
+        eng.for_each_active(|_, toks| streamed += toks.len());
+        assert!(streamed >= 2, "both sessions should have tokens by now");
+        // cancel one mid-stream: pages released, no completion emitted
+        assert!(eng.cancel(reqs[0].id));
+        assert!(!eng.cancel(reqs[0].id), "double-cancel finds nothing");
+        assert_eq!(eng.active_sessions(), 1);
+        while eng.tick() {}
+        let comps = eng.take_completions();
+        assert_eq!(comps.len(), 1, "cancelled request must not complete");
+        assert_eq!(comps[0].id, reqs[1].id);
+        assert_eq!(eng.stats().cancelled, 1);
+        assert_eq!(eng.pool_stats().live, 0, "cancel must release every page");
+        // the survivor's tokens are unaffected by the cancellation
+        let seq = run_sequential(&model, &reqs[1..]).unwrap();
+        assert_eq!(seq.completions[0].tokens, comps[0].tokens);
+        // a cancelled-then-identical workload reuses the recycled slot:
+        // the workspace snapshot is invariant across cancel/re-admit
+        let snap = eng.capacity_snapshot();
+        for r in reqs.clone() {
+            eng.submit(r).unwrap();
+        }
+        eng.tick();
+        eng.tick();
+        assert!(eng.cancel(reqs[0].id));
+        while eng.tick() {}
+        eng.take_completions();
+        assert_eq!(eng.capacity_snapshot(), snap, "cancel path must not allocate");
+    }
+
+    #[test]
+    fn cancel_pending_request_never_runs() {
+        let model = Arc::new(tiny_model(AttnSpec::Full, 16));
+        let mut eng = ServeEngine::new(Arc::clone(&model), ServeConfig::default()).unwrap();
+        let reqs = synthetic_workload(2, &[4], 3, 29, 0.0, 9);
+        for r in reqs.clone() {
+            eng.submit(r).unwrap();
+        }
+        assert!(eng.cancel(reqs[1].id), "pending request is cancellable");
+        assert_eq!(eng.queued(), 1);
+        while eng.tick() {}
+        let comps = eng.take_completions();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].id, reqs[0].id);
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Append-only JSONL telemetry records plus atomic JSON snapshots.
+//!
+//! The serving front end emits two kinds of artifacts: a per-request
+//! record stream (one JSON object per line, append-only, cheap enough
+//! to leave on in production) and point-in-time snapshots like the
+//! final `/metrics` state. Records go through [`JsonlSink`] — each
+//! line is a single `write_all`, so concurrent appenders interleave
+//! whole records, never bytes. Snapshots go through [`write_atomic`] —
+//! write-to-temp plus rename, so a reader never observes a torn file.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::Json;
+
+/// A shared append-only JSONL file; `append` is `&self`, so one sink
+/// can be handed to every connection handler behind an `Arc`.
+pub struct JsonlSink {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl JsonlSink {
+    /// Open `path` for appending, creating it if missing. Existing
+    /// records are preserved — restarts extend the stream.
+    pub fn append_to(path: &Path) -> io::Result<JsonlSink> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlSink {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record as a single line. The line is built first and
+    /// written with one `write_all`, so records from concurrent
+    /// appenders never interleave mid-line.
+    pub fn append(&self, record: &Json) -> io::Result<()> {
+        let mut line = record.to_string();
+        line.push('\n');
+        let mut file = self.file.lock().expect("jsonl sink poisoned");
+        file.write_all(line.as_bytes())
+    }
+}
+
+/// Write `value` to `path` atomically: serialise to `path.tmp`, flush,
+/// then rename over the destination. Readers see either the old
+/// snapshot or the new one, never a prefix.
+pub fn write_atomic(path: &Path, value: &Json) -> io::Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(value.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, s};
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("htx-jsonl-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn sink_appends_one_record_per_line() {
+        let path = tmp_path("sink");
+        let _ = std::fs::remove_file(&path);
+        let sink = JsonlSink::append_to(&path).unwrap();
+        sink.append(&obj(vec![("a", num(1.0))])).unwrap();
+        sink.append(&obj(vec![("b", s("x"))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Json::parse(lines[0]).unwrap().get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(Json::parse(lines[1]).unwrap().get("b").unwrap().as_str(), Some("x"));
+        // reopening appends, never truncates
+        drop(sink);
+        let sink = JsonlSink::append_to(&path).unwrap();
+        sink.append(&obj(vec![("c", num(3.0))])).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let path = tmp_path("atomic");
+        write_atomic(&path, &obj(vec![("v", num(1.0))])).unwrap();
+        write_atomic(&path, &obj(vec![("v", num(2.0))])).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(v.get("v").unwrap().as_usize(), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod jsonl;
 pub mod quickcheck;
 pub mod rng;
 pub mod stats;

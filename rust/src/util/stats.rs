@@ -37,18 +37,30 @@ impl Welford {
     }
 }
 
-/// Percentile over a sorted slice (linear interpolation).
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+/// Percentile over a sorted slice (linear interpolation). Returns
+/// `None` on an empty slice instead of indexing `len - 1` past it — a
+/// zero-sample run (every request rejected at admission, a metrics
+/// scrape before the first completion) is an answerable query, not a
+/// panic.
+pub fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         sorted[lo]
     } else {
         let frac = rank - lo as f64;
         sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-    }
+    })
+}
+
+/// [`percentile`] with the zero-sample case collapsed to `0.0` — the
+/// reporting convention of `ServeStats` and the `/metrics` endpoint.
+pub fn percentile_or_zero(sorted: &[f64], p: f64) -> f64 {
+    percentile(sorted, p).unwrap_or(0.0)
 }
 
 /// Fixed-bucket histogram for latency tracking (log-spaced buckets).
@@ -148,9 +160,19 @@ mod tests {
     #[test]
     fn percentile_interpolates() {
         let xs = [1.0, 2.0, 3.0, 4.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 4.0);
-        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(4.0));
+        assert!((percentile(&xs, 50.0).unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_none_not_a_panic() {
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile_or_zero(&[], 99.0), 0.0);
+        // out-of-range pct clamps instead of indexing out of bounds
+        let xs = [1.0, 2.0];
+        assert_eq!(percentile(&xs, 150.0), Some(2.0));
+        assert_eq!(percentile(&xs, -5.0), Some(1.0));
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Integration suite for the HTTP/1.1 serving front end over the
+//! continuous-batching engine.
+//!
+//! Contracts pinned here:
+//!  1. **wire parity** — tokens streamed over a loopback socket through
+//!     two sharded engine workers are bitwise the `run_sequential`
+//!     oracle's, greedy and seeded-sampling requests alike.
+//!  2. **error mapping** — malformed bodies answer 400, prompts or
+//!     bodies that can never fit answer 413, unknown paths 404, bad
+//!     methods 405; none of them leak a session or a page.
+//!  3. **disconnect safety** — a client that hangs up mid-stream gets
+//!     its session cancelled and its pages released; the pool gauge
+//!     returns to baseline and the server keeps serving correct tokens.
+//!  4. **shutdown drain** — a shutdown issued while sessions are
+//!     streaming lets every accepted request finish with a complete,
+//!     oracle-identical token stream before the server exits.
+//!  5. **subprocess e2e** — the real `htx serve --listen` binary on a
+//!     loopback socket survives a concurrent mixed workload (valid,
+//!     malformed, disconnecting clients), matches the in-process
+//!     oracle bitwise, exposes `/metrics`, and exits cleanly on SIGINT
+//!     after draining (the CI loopback job runs exactly this test and
+//!     uploads the `/metrics` snapshot via `HTX_E2E_METRICS_OUT`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use htransformer::model::net::client;
+use htransformer::model::{
+    run_sequential, synthetic_workload, AttnSpec, Model, ModelConfig, NetConfig, NetServer,
+    Request, ServeConfig, ServeReport,
+};
+use htransformer::util::Json;
+
+fn model_for(max_len: usize) -> Arc<Model> {
+    Arc::new(
+        Model::new(
+            ModelConfig {
+                vocab_size: 31,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 24,
+                max_len,
+                causal: true,
+                attention: AttnSpec::H1d { nr: 4 },
+                quant_weights: false,
+            },
+            13,
+        )
+        .unwrap(),
+    )
+}
+
+/// Front-end config for tests: the prefix cache is off so every page
+/// gauge drains to exactly zero once sessions finish.
+fn net_cfg(workers: usize) -> NetConfig {
+    NetConfig {
+        workers,
+        serve: ServeConfig {
+            max_batch: 4,
+            prefix_cache: 0,
+            threads: 1,
+            ..ServeConfig::default()
+        },
+        ..NetConfig::default()
+    }
+}
+
+fn by_id(report: &ServeReport) -> BTreeMap<u64, Vec<u32>> {
+    report.completions.iter().map(|c| (c.id, c.tokens.clone())).collect()
+}
+
+fn get_usize(m: &Json, key: &str) -> usize {
+    m.get(key).and_then(|v| v.as_usize()).unwrap_or_else(|| panic!("missing {key} in {m:?}"))
+}
+
+fn post(addr: &str, body: &str) -> client::Response {
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    client::raw(addr, &req).unwrap()
+}
+
+#[test]
+fn malformed_requests_answer_400_without_leaking_sessions() {
+    let model = model_for(48);
+    let server = NetServer::start(Arc::clone(&model), "127.0.0.1:0", net_cfg(1)).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // body-level parse failures
+    assert_eq!(post(&addr, "this is not json").status, 400);
+    assert_eq!(post(&addr, "{\"max_new\":4}").status, 400); // missing prompt
+    assert_eq!(post(&addr, "{\"prompt\":\"hi\",\"max_new\":4}").status, 400);
+    assert_eq!(post(&addr, "{\"prompt\":[1,2]}").status, 400); // missing max_new
+    assert_eq!(post(&addr, "{\"prompt\":[1.5],\"max_new\":4}").status, 400);
+    assert_eq!(post(&addr, "{\"prompt\":[1],\"max_new\":4,").status, 400); // truncated JSON
+    // engine-level user errors still map to 400 over the wire
+    assert_eq!(post(&addr, "{\"prompt\":[1000],\"max_new\":4}").status, 400); // vocab is 31
+    assert_eq!(post(&addr, "{\"prompt\":[],\"max_new\":4}").status, 400); // empty prompt
+    // routing misses and framing errors
+    assert_eq!(client::raw(&addr, "GET /nope HTTP/1.1\r\n\r\n").unwrap().status, 404);
+    assert_eq!(client::raw(&addr, "DELETE /generate HTTP/1.1\r\n\r\n").unwrap().status, 405);
+    let chunked_req = "POST /generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+    assert_eq!(client::raw(&addr, chunked_req).unwrap().status, 400);
+
+    let m = server.shutdown();
+    assert_eq!(get_usize(&m, "rejected_total"), 8);
+    assert_eq!(get_usize(&m, "completed_total"), 0);
+    assert_eq!(get_usize(&m, "active_sessions"), 0);
+    assert_eq!(get_usize(&m, "pages_in_use"), 0, "a rejected request held pages");
+}
+
+#[test]
+fn oversized_prompts_and_bodies_answer_413() {
+    let model = model_for(32);
+    let mut cfg = net_cfg(1);
+    cfg.max_body_bytes = 256;
+    cfg.serve.max_tokens = 16; // one page of budget
+    let server = NetServer::start(Arc::clone(&model), "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // prompt + max_new past model max_len: rejected before dispatch
+    let toks: Vec<String> = (0..30).map(|i| (i % 7).to_string()).collect();
+    let over_len = format!("{{\"prompt\":[{}],\"max_new\":8}}", toks.join(","));
+    let resp = post(&addr, &over_len);
+    assert_eq!(resp.status, 413, "{}", resp.body);
+    assert!(resp.body.contains("max_len"), "{}", resp.body);
+
+    // fits max_len but can never fit the engine's page budget: the
+    // worker's rejection message classifies as 413 over the wire
+    let resp = post(&addr, "{\"prompt\":[1,2,3,4,5,6,7,8],\"max_new\":16}");
+    assert_eq!(resp.status, 413, "{}", resp.body);
+
+    // declared body above the configured cap: refused before reading
+    let big = format!("{{\"prompt\":[{}]}}", "1,".repeat(300));
+    let resp = post(&addr, &big);
+    assert_eq!(resp.status, 413, "{}", resp.body);
+
+    let m = server.shutdown();
+    assert_eq!(get_usize(&m, "completed_total"), 0);
+    assert_eq!(get_usize(&m, "pages_in_use"), 0);
+}
+
+#[test]
+fn loopback_streams_match_run_sequential_bitwise_across_two_workers() {
+    let model = model_for(48);
+    // mixed workload: greedy plus seeded sampling, assorted lengths
+    let mut reqs = synthetic_workload(8, &[3, 9, 14], 6, model.cfg.vocab_size, 0.0, 99);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 3 == 1 {
+            r.temperature = 0.8;
+        }
+    }
+    let want = by_id(&run_sequential(&model, &reqs).unwrap());
+
+    let server = NetServer::start(Arc::clone(&model), "127.0.0.1:0", net_cfg(2)).unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let (addr, r) = (addr.clone(), r.clone());
+            std::thread::spawn(move || {
+                let toks =
+                    client::generate(&addr, &r.prompt, r.max_new, r.temperature, r.seed).unwrap();
+                (r.id, toks)
+            })
+        })
+        .collect();
+    let mut got = BTreeMap::new();
+    for h in handles {
+        let (id, toks) = h.join().unwrap();
+        got.insert(id, toks);
+    }
+    assert_eq!(got, want, "network streams diverged from the sequential oracle");
+
+    let m = server.shutdown();
+    assert_eq!(get_usize(&m, "requests_total"), 8);
+    assert_eq!(get_usize(&m, "completed_total"), 8);
+    assert_eq!(get_usize(&m, "workers_total"), 2);
+    assert_eq!(get_usize(&m, "active_sessions"), 0);
+    assert_eq!(get_usize(&m, "queue_depth"), 0);
+    assert_eq!(get_usize(&m, "pages_in_use"), 0, "drained server still holds pages");
+    let lat = m.get("latency_ms").expect("latency_ms section");
+    assert_eq!(lat.get("count").and_then(|v| v.as_usize()), Some(8));
+    let (p50, p95) = (lat.get("p50").unwrap().as_f64(), lat.get("p95").unwrap().as_f64());
+    assert!(p95.unwrap() >= p50.unwrap(), "p95 {p95:?} < p50 {p50:?}");
+    assert_eq!(m.get("workers").and_then(|w| w.as_arr()).map(|w| w.len()), Some(2));
+}
+
+#[test]
+fn client_disconnect_mid_stream_releases_pages_and_serving_continues() {
+    let model = model_for(48);
+    let server = NetServer::start(Arc::clone(&model), "127.0.0.1:0", net_cfg(1)).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // hang up after two streamed tokens of a 32-token generation
+    let prompt: Vec<u32> = (0..8u32).map(|i| (i * 3) % 31).collect();
+    let seen = client::generate_and_disconnect(&addr, &prompt, 32, 7, 2).unwrap();
+    assert!(seen.len() >= 2, "never saw streamed tokens before hanging up");
+
+    // either detection path (handler write failure or worker send
+    // failure) must cancel the session and release every page
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = client::metrics(&addr).unwrap();
+        if get_usize(&m, "active_sessions") == 0 && get_usize(&m, "pages_in_use") == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "pages leaked after client disconnect: {m:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the server keeps serving correct tokens afterwards
+    let req = Request { id: 0, prompt: prompt.clone(), max_new: 5, temperature: 0.0, seed: 0 };
+    let want = by_id(&run_sequential(&model, &[req]).unwrap());
+    let got = client::generate(&addr, &prompt, 5, 0.0, 0).unwrap();
+    assert_eq!(got, want[&0], "post-disconnect generation diverged");
+
+    let m = server.shutdown();
+    assert_eq!(get_usize(&m, "cancelled_total"), 1, "exactly one session cancels: {m:?}");
+    assert_eq!(get_usize(&m, "completed_total"), 1);
+    assert_eq!(get_usize(&m, "pages_in_use"), 0);
+}
+
+#[test]
+fn shutdown_drains_inflight_sessions_to_complete_streams() {
+    let model = model_for(48);
+    let reqs = synthetic_workload(4, &[12], 30, model.cfg.vocab_size, 0.0, 55);
+    let want = by_id(&run_sequential(&model, &reqs).unwrap());
+
+    let server = NetServer::start(Arc::clone(&model), "127.0.0.1:0", net_cfg(2)).unwrap();
+    let addr = server.local_addr().to_string();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let (addr, r) = (addr.clone(), r.clone());
+            std::thread::spawn(move || {
+                (r.id, client::generate(&addr, &r.prompt, r.max_new, 0.0, r.seed))
+            })
+        })
+        .collect();
+
+    // wait until every request is admitted by a worker, so shutdown
+    // exercises the drain path rather than the refusal path
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = server.metrics_json();
+        if get_usize(&m, "active_sessions") + get_usize(&m, "completed_total") >= reqs.len() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "requests never admitted: {m:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let final_m = server.shutdown();
+
+    let mut got = BTreeMap::new();
+    for h in handles {
+        let (id, toks) = h.join().unwrap();
+        got.insert(id, toks.expect("drain must complete accepted streams"));
+    }
+    assert_eq!(got, want, "shutdown drain truncated or corrupted a stream");
+    assert_eq!(get_usize(&final_m, "completed_total"), reqs.len());
+    assert_eq!(get_usize(&final_m, "active_sessions"), 0);
+    assert_eq!(get_usize(&final_m, "pages_in_use"), 0);
+
+    // the listener is gone: new connections are refused
+    assert!(client::metrics(&addr).is_err(), "server accepted after shutdown");
+}
+
+/// The CI loopback job: drives the real binary over a real socket and
+/// uploads its `/metrics` snapshot (written when `HTX_E2E_METRICS_OUT`
+/// is set).
+#[test]
+#[cfg(unix)]
+fn subprocess_e2e_loopback_parity_metrics_and_sigint_drain() {
+    use std::io::{BufRead, BufReader, Read};
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_htx"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--vocab_size",
+            "31",
+            "--d_model",
+            "16",
+            "--n_heads",
+            "2",
+            "--n_layers",
+            "2",
+            "--d_ff",
+            "24",
+            "--max_len",
+            "48",
+            "--block_size",
+            "4",
+            "--seed",
+            "13",
+            "--prefix-cache",
+            "0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn htx serve");
+    let mut stdout = BufReader::new(child.stdout.take().expect("child stdout"));
+    let addr = loop {
+        let mut line = String::new();
+        if stdout.read_line(&mut line).expect("read child stdout") == 0 {
+            let _ = child.kill();
+            panic!("server exited before printing its address");
+        }
+        if let Some(a) = line.trim().strip_prefix("listening on ") {
+            break a.to_string();
+        }
+    };
+    client::wait_ready(&addr, Duration::from_secs(20)).unwrap();
+
+    // the same model the subprocess builds from its flags, as oracle
+    let model = model_for(48);
+    let reqs = synthetic_workload(3, &[4, 8], 10, model.cfg.vocab_size, 0.0, 321);
+    let want = by_id(&run_sequential(&model, &reqs).unwrap());
+
+    // concurrent mixed workload: valid streams, a malformed request
+    // and a client that disconnects mid-stream
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let (addr, r) = (addr.clone(), r.clone());
+            std::thread::spawn(move || {
+                (r.id, client::generate(&addr, &r.prompt, r.max_new, 0.0, r.seed).unwrap())
+            })
+        })
+        .collect();
+    assert_eq!(post(&addr, "definitely not json").status, 400);
+    let dropped = client::generate_and_disconnect(&addr, &[1, 2, 3, 4], 30, 9, 2).unwrap();
+    assert!(dropped.len() >= 2);
+    let mut got = BTreeMap::new();
+    for h in handles {
+        let (id, toks) = h.join().unwrap();
+        got.insert(id, toks);
+    }
+    assert_eq!(got, want, "subprocess streams diverged from the in-process oracle");
+
+    // the disconnected session's pages must drain to zero
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let metrics = loop {
+        let m = client::metrics(&addr).unwrap();
+        if get_usize(&m, "active_sessions") == 0 && get_usize(&m, "pages_in_use") == 0 {
+            break m;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("subprocess leaked pages after disconnect: {m:?}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(get_usize(&metrics, "completed_total"), 3);
+    assert_eq!(get_usize(&metrics, "cancelled_total"), 1);
+    assert_eq!(get_usize(&metrics, "rejected_total"), 1);
+    assert_eq!(get_usize(&metrics, "workers_total"), 2);
+    assert!(metrics.get("latency_ms").is_some());
+    if let Ok(path) = std::env::var("HTX_E2E_METRICS_OUT") {
+        htransformer::util::jsonl::write_atomic(std::path::Path::new(&path), &metrics)
+            .expect("write metrics snapshot");
+    }
+
+    // SIGINT → graceful drain → clean exit with a final metrics line
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    assert_eq!(unsafe { kill(child.id() as i32, 2) }, 0, "sending SIGINT failed");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        if let Some(st) = child.try_wait().expect("try_wait") {
+            break st;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("server did not exit after SIGINT");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "SIGINT exit status: {status:?}");
+    let mut rest = String::new();
+    stdout.read_to_string(&mut rest).expect("read remaining stdout");
+    let final_line = rest
+        .lines()
+        .rev()
+        .find(|l| l.trim_start().starts_with('{'))
+        .expect("final metrics JSON on stdout");
+    let final_m = Json::parse(final_line.trim()).expect("parse final metrics");
+    assert!(get_usize(&final_m, "completed_total") >= 3);
+}

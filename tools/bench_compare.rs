@@ -25,12 +25,16 @@
 //!
 //! Baseline lifecycle: a baseline with `"bootstrap": true` reports but
 //! never fails the job — it seeds the trajectory until a PR commits
-//! real runner numbers. `--write-merged PATH` emits the current points
-//! as a fresh non-bootstrap baseline (CI uploads it as an artifact;
-//! copy it over `BENCH_baseline.json` to ratchet). Points present in
-//! the baseline but missing from the current runs fail the gate: if a
-//! PR changes the bench matrix, it must update the baseline in the
-//! same change.
+//! real runner numbers. Individual points may also carry
+//! `"bootstrap": true` inside an armed baseline: such points report
+//! their ratios but never fail and are excluded from the median
+//! normaliser, so a PR can add new bench coverage (seeded with
+//! estimates) without disarming the gate for everything else. Either
+//! way `--write-merged PATH` emits the current points as a fresh fully
+//! armed baseline (CI uploads it as an artifact; copy it over
+//! `BENCH_baseline.json` to ratchet). Points present in the baseline
+//! but missing from the current runs fail the gate: if a PR changes
+//! the bench matrix, it must update the baseline in the same change.
 
 use htransformer::util::bench::Table;
 use htransformer::util::cli::Args;
@@ -115,11 +119,15 @@ fn run() -> Result<i32, String> {
     }
 
     // match by id; collect raw ratios for the median normaliser
-    let mut matched: Vec<(String, f64, f64)> = Vec::new(); // (id, base, cur)
+    let mut matched: Vec<(String, f64, f64, bool)> = Vec::new(); // (id, base, cur, seed)
     let mut missing: Vec<String> = Vec::new();
-    for (id, base_us, _) in &base_points {
+    for (id, base_us, raw) in &base_points {
+        // a per-point bootstrap marker: the baseline value is a seed
+        // estimate, not a measurement — report, never fail, and keep
+        // it out of the runner-speed normaliser
+        let seed = raw.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
         match cur_points.iter().find(|(i, _, _)| i == id) {
-            Some((_, cur_us, _)) => matched.push((id.clone(), *base_us, *cur_us)),
+            Some((_, cur_us, _)) => matched.push((id.clone(), *base_us, *cur_us, seed)),
             None => missing.push(id.clone()),
         }
     }
@@ -128,7 +136,13 @@ fn run() -> Result<i32, String> {
         .map(|(id, _, _)| id)
         .filter(|id| !base_points.iter().any(|(b, _, _)| b == *id))
         .collect();
-    let m = median(matched.iter().map(|(_, b, c)| c / b.max(1e-9)).collect());
+    let m = median(
+        matched
+            .iter()
+            .filter(|(_, _, _, seed)| !seed)
+            .map(|(_, b, c, _)| c / b.max(1e-9))
+            .collect(),
+    );
 
     println!(
         "bench_compare: {} matched point(s), median speed ratio {m:.3} \
@@ -138,10 +152,13 @@ fn run() -> Result<i32, String> {
     );
     let mut t = Table::new(&["point", "baseline", "current", "ratio", "normalised", "verdict"]);
     let mut regressed = 0usize;
-    for (id, base_us, cur_us) in &matched {
+    for (id, base_us, cur_us, seed) in &matched {
         let ratio = cur_us / base_us.max(1e-9);
         let norm = ratio / m.max(1e-9);
-        let verdict = if norm > threshold {
+        let verdict = if *seed {
+            // seed estimate: informational until measured numbers land
+            "bootstrap"
+        } else if norm > threshold {
             regressed += 1;
             "REGRESSED"
         } else if ratio > raw_threshold {
