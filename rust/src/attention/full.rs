@@ -78,6 +78,12 @@ impl Attention for Full {
         }
     }
 
+    fn prefix_share_align(&self, lcp: usize) -> usize {
+        // softmax attention is strictly causal: row i reads rows 0..=i
+        // only, so any split point is prefix-pure
+        lcp
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * l * 4
     }

@@ -346,6 +346,28 @@ impl Attention for H1d {
         h1d_decode_step(self.nr, self.overlap_masks, state, q_row, k_row, v_row, out)
     }
 
+    fn prefix_share_align(&self, lcp: usize) -> usize {
+        // K/V-side h1d is strictly causal, but the coarse *query* of a
+        // cell averages every fine row in it (Eq. 25), so row i's output
+        // reads forward to the end of its deepest contributing cell.
+        // Level n (cell width 2^n rows) contributes to row i iff
+        // i >= nr·2^n; a cut at p is prefix-pure iff the deepest level
+        // contributing to row p-1, m = floor(log2((p-1)/nr)), has a
+        // cell boundary exactly at p — i.e. 2^m divides p. Rounding
+        // down re-deepens nothing (p only shrinks), but m must be
+        // recomputed each time; p <= 2·nr has no contributing coarse
+        // level and is always pure.
+        let mut p = lcp;
+        while p > 2 * self.nr {
+            let m = ((p - 1) / self.nr).ilog2();
+            if p % (1usize << m) == 0 {
+                return p;
+            }
+            p &= !((1usize << m) - 1);
+        }
+        p
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         // level-0: 3 bands of L*Nr scores; coarse levels: 2 bands over a
         // geometrically shrinking sequence — ~5 L Nr total (paper §7).

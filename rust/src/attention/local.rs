@@ -99,6 +99,12 @@ impl Attention for LocalWindow {
         }
     }
 
+    fn prefix_share_align(&self, lcp: usize) -> usize {
+        // the causal window reads rows i-radius..=i — strictly causal,
+        // so any split point is prefix-pure
+        lcp
+    }
+
     fn attn_memory_bytes(&self, l: usize, _d: usize) -> usize {
         l * (2 * self.radius + 1) * 4
     }

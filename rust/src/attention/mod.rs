@@ -188,6 +188,27 @@ pub trait Attention {
         }
     }
 
+    /// Largest prefix length `p <= lcp` at which this algorithm's
+    /// causal prefill is *prefix-pure*: every fine Q/K/V row `< p` (and
+    /// the residual stream feeding it at every layer) is a bitwise-pure
+    /// function of tokens `0..p`, independent of whatever follows. Such
+    /// a `p` is where the radix cache may share cached pages with a
+    /// prompt that continues differently, and where a chunked prefill
+    /// may pause and later resume exactly.
+    ///
+    /// The default returns 0 — "never share" — which is always sound;
+    /// algorithms opt in. Strictly causal attention (`full`, `local`)
+    /// returns `lcp` unchanged. `h1d` is K/V-causal but its coarse
+    /// *queries* average over whole cells, so rows near a cut can read
+    /// later rows of their own cell; it rounds down to the coarsest
+    /// cell boundary reached from `lcp` (see `H1d::prefix_share_align`).
+    /// Length-global algorithms (`lowrank`'s projection, `blocksparse`'s
+    /// length-seeded key sets) keep the default 0.
+    fn prefix_share_align(&self, lcp: usize) -> usize {
+        let _ = lcp;
+        0
+    }
+
     /// Attention-state memory in bytes for sequence length `l` — the
     /// quantity the paper's O(L) memory claim is about (excludes Q/K/V/Z
     /// themselves, which are O(Ld) for every algorithm).

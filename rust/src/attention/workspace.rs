@@ -428,6 +428,150 @@ impl DecodeState {
         }
     }
 
+    /// Switch on fine-Q caching for a state a `decode_begin` override
+    /// left without it (h1d's incremental step never reads fine Q
+    /// rows). The serve engine calls this right after `decode_begin`
+    /// when partial-prefix sharing is enabled: rebuilding a pyramid
+    /// boundary partial from cached history needs the fine Q rows that
+    /// fed it, so sharing-eligible sessions must keep them. Must run
+    /// before the first append; in reserved mode the Q pages are
+    /// pre-faulted here to preserve the zero-alloc append contract.
+    pub fn force_q_cache(&mut self) {
+        debug_assert_eq!(self.len, 0, "enable the Q cache before any append");
+        if self.cache_q {
+            return;
+        }
+        self.cache_q = true;
+        if !self.on_demand {
+            self.q.reserve_rows(self.max_len);
+        }
+    }
+
+    /// Share only the first `p` cached tokens into `dst` — the
+    /// radix-cache partial-prefix hit path. Fine K/V (and Q) pages
+    /// covering rows `0..p` are shared by refcount
+    /// ([`PagedRows::clone_prefix_into`]); coarse pyramid rows are
+    /// shared only where the coarse span is *complete* within the
+    /// prefix — or wholesale, boundary partials included, when `p`
+    /// equals the donor's full length (an exact clone needs no replay
+    /// at the donor's own depth). Each level's boundary partial on a
+    /// strict prefix — plus any level deeper than this donor
+    /// maintains — is replayed from the
+    /// shared fine history in exactly the append order, so the
+    /// resulting state is bitwise what `p` sequential
+    /// [`DecodeState::append`]s of the same rows would build (for F32
+    /// fine caches; compressed K/V replays from the dequantised rows,
+    /// one rounding of drift). `dst` must be freshly
+    /// `decode_begin`-configured with the same `d`/`cache_q`/dtype and
+    /// `p <= dst.max_len`; unlike [`DecodeState::clone_shared_into`]
+    /// the donor pyramid may be *shallower* than `dst`'s — missing
+    /// levels are rebuilt wholly from fine rows, which is how a cached
+    /// prompt serves a later admission with a deeper horizon.
+    pub fn clone_prefix_into(&self, dst: &mut DecodeState, p: usize) {
+        debug_assert_eq!(self.d, dst.d, "head width mismatch");
+        debug_assert_eq!(self.cache_q, dst.cache_q, "cache_q mismatch");
+        debug_assert_eq!(self.kv_dtype, dst.kv_dtype, "kv dtype mismatch");
+        debug_assert!(p <= self.len, "prefix {p} exceeds cached {}", self.len);
+        debug_assert!(p <= dst.max_len, "prefix {p} exceeds dst horizon");
+        dst.len = p;
+        self.k.clone_prefix_into(&mut dst.k, p);
+        self.v.clone_prefix_into(&mut dst.v, p);
+        if self.cache_q {
+            self.q.clone_prefix_into(&mut dst.q, p);
+        }
+        if dst.n_coarse == 0 || p == 0 {
+            for lv in dst.levels.iter_mut().take(dst.n_coarse) {
+                lv.qsum.release_all();
+                lv.ksum.release_all();
+                lv.vsum.release_all();
+                lv.count.clear();
+            }
+            return;
+        }
+        // An exact whole-history clone (`p == self.len`) also shares
+        // each level's boundary-partial row: the donor's accumulation
+        // of rows `0..p` is bitwise the sequential build, so only
+        // levels deeper than the donor's need any replay. A strict
+        // prefix cannot — the donor's own partial has later rows
+        // folded in — so its levels share full blocks and replay the
+        // boundary partial.
+        let exact = p == self.len;
+        // per-level replay start: after the last donor coarse row
+        // usable as-is (a level the donor does not maintain replays
+        // from 0); the earliest of them bounds the fine-row walk below
+        let start_of = |i: usize| -> usize {
+            if i >= self.n_coarse {
+                0
+            } else if exact {
+                p
+            } else {
+                (p >> (i + 1)) << (i + 1)
+            }
+        };
+        let mut replay_from = p;
+        for i in 0..dst.n_coarse {
+            let lv = &mut dst.levels[i];
+            if i < self.n_coarse {
+                let take = if exact {
+                    p.div_ceil(1 << (i + 1))
+                } else {
+                    p >> (i + 1)
+                };
+                let slv = &self.levels[i];
+                slv.qsum.clone_prefix_into(&mut lv.qsum, take);
+                slv.ksum.clone_prefix_into(&mut lv.ksum, take);
+                slv.vsum.clone_prefix_into(&mut lv.vsum, take);
+                lv.count.clear();
+                lv.count.extend_from_slice(&slv.count[..take]);
+            } else {
+                lv.qsum.release_all();
+                lv.ksum.release_all();
+                lv.vsum.release_all();
+                lv.count.clear();
+            }
+            replay_from = replay_from.min(start_of(i));
+        }
+        if replay_from >= p {
+            return;
+        }
+        assert!(
+            self.cache_q,
+            "pyramid replay reads the fine Q history; the donor must cache Q \
+             (see DecodeState::force_q_cache)"
+        );
+        let d = self.d;
+        let f32_kv = self.kv_dtype == PageDtype::F32;
+        let (mut kbuf, mut vbuf) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for t in replay_from..p {
+            let qr = self.q.row(t);
+            let (kr, vr): (&[f32], &[f32]) = if f32_kv {
+                (self.k.row(t), self.v.row(t))
+            } else {
+                self.k.decode_row_into(t, &mut kbuf);
+                self.v.decode_row_into(t, &mut vbuf);
+                (&kbuf, &vbuf)
+            };
+            for i in 0..dst.n_coarse {
+                if t < start_of(i) {
+                    continue;
+                }
+                let lv = &mut dst.levels[i];
+                let idx = t >> (i + 1);
+                if idx == lv.count.len() {
+                    lv.qsum.push_row(qr);
+                    lv.ksum.push_row(kr);
+                    lv.vsum.push_row(vr);
+                    lv.count.push(1.0);
+                } else {
+                    lv.qsum.add_into_row(idx, qr);
+                    lv.ksum.add_into_row(idx, kr);
+                    lv.vsum.add_into_row(idx, vr);
+                    lv.count[idx] += 1.0;
+                }
+            }
+        }
+    }
+
     /// Detached copy of this state sharing the same pages — what the
     /// serve prefix cache stores per `(layer, head)` right after a
     /// prefill (cache entries are never stepped, so the per-step

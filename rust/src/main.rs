@@ -21,15 +21,22 @@
 //!                             closed-loop synthetic workload
 //!                             (--requests, --prompt-mix, --gen; or
 //!                             --shared-prompt N for one shared
-//!                             N-token prompt) driven through
-//!                             `model::serve`'s scheduler at
+//!                             N-token prompt; or --system-prompt N
+//!                             for the multi-tenant regime — one
+//!                             shared N-token system prompt plus a
+//!                             distinct suffix per request) driven
+//!                             through `model::serve`'s scheduler at
 //!                             --max-batch / --max-tokens budgets and
 //!                             compared against the sequential
 //!                             one-session-at-a-time loop (aggregate
 //!                             tokens/s, p50/p95 per-token latency,
 //!                             speedup). KV memory is paged
-//!                             (--page-len, prefix sharing via
-//!                             --prefix-cache); --reserve restores the
+//!                             (--page-len; radix-tree whole- and
+//!                             partial-prefix sharing via
+//!                             --prefix-cache); --prefill-chunk N
+//!                             interleaves long prompt prefills with
+//!                             decode rounds N tokens at a time;
+//!                             --reserve restores the
 //!                             contiguous-reservation baseline
 //!                             admission. --kv-dtype {f32|f16|int8}
 //!                             (i8 is accepted as an int8 alias)
@@ -49,7 +56,8 @@
 //!                             consistent-hash tiebreak on the prompt
 //!                             prefix). Engine knobs match serve-bench
 //!                             (--max-batch, --max-tokens, --page-len,
-//!                             --prefix-cache, --reserve, --kv-dtype,
+//!                             --prefix-cache, --prefill-chunk,
+//!                             --reserve, --kv-dtype,
 //!                             --quant-weights, --worker-threads);
 //!                             front-end knobs: --max-queue (503
 //!                             backpressure cap), --read-timeout-ms /
@@ -399,7 +407,9 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
     let page_len = args.usize_or("page-len", 16);
     let reserve = args.bool("reserve"); // contiguous-reservation baseline
     let prefix_cache = args.usize_or("prefix-cache", 8);
+    let prefill_chunk = args.usize_or("prefill-chunk", 0); // 0 = whole-prompt prefill
     let shared_prompt = args.usize_or("shared-prompt", 0); // 0 = mixed prompts
+    let system_prompt = args.usize_or("system-prompt", 0); // 0 = no shared system prefix
     let mix: Vec<usize> = args
         .str_or("prompt-mix", "16,32,48")
         .split(',')
@@ -425,6 +435,18 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
             cfg.max_len
         ));
     }
+    if shared_prompt > 0 && system_prompt > 0 {
+        return Err("--shared-prompt and --system-prompt are mutually exclusive".to_string());
+    }
+    // --system-prompt N: multi-tenant regime, suffix lengths from the
+    // first --prompt-mix entry
+    if system_prompt > 0 && system_prompt + mix[0] + gen > cfg.max_len {
+        return Err(format!(
+            "--system-prompt {system_prompt} + suffix {} + gen {gen} exceeds max_len {} \
+             (raise --max_len)",
+            mix[0], cfg.max_len
+        ));
+    }
     let model = Arc::new(Model::new(cfg, seed)?);
     let cfg = &model.cfg;
     println!(
@@ -446,6 +468,16 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
             temperature,
             seed ^ 0x5EB,
         )
+    } else if system_prompt > 0 {
+        htransformer::model::multi_tenant_workload(
+            n_requests,
+            system_prompt,
+            mix[0],
+            gen,
+            cfg.vocab_size,
+            temperature,
+            seed ^ 0x5EB,
+        )
     } else {
         synthetic_workload(n_requests, &mix, gen, cfg.vocab_size, temperature, seed ^ 0x5EB)
     };
@@ -453,6 +485,14 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         println!(
             "workload: {n_requests} requests sharing one {shared_prompt}-token prompt, \
              {gen} tokens each ({} total to generate)\n",
+            n_requests * gen
+        );
+    } else if system_prompt > 0 {
+        println!(
+            "workload: {n_requests} requests sharing one {system_prompt}-token system \
+             prompt + {}-token distinct suffixes, {gen} tokens each ({} total to \
+             generate)\n",
+            mix[0],
             n_requests * gen
         );
     } else {
@@ -477,6 +517,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         page_len,
         reserve,
         prefix_cache,
+        prefill_chunk,
         threads: workers,
         kv_dtype,
     };
@@ -521,6 +562,30 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         batched.stats.prefix_lookups,
         batched.stats.evictions
     );
+    let total_prompt = batched.stats.prefill_tokens + batched.stats.prefill_tokens_saved;
+    println!(
+        "radix prefix sharing: {} of {} prompt tokens prefilled, {} saved ({:.0}% of the \
+         prompt work)",
+        batched.stats.prefill_tokens,
+        total_prompt,
+        batched.stats.prefill_tokens_saved,
+        100.0 * batched.stats.prefill_tokens_saved as f64 / total_prompt.max(1) as f64
+    );
+    if let (Some(p50), Some(p99)) = (
+        batched.stats.try_tick_latency_us(50.0),
+        batched.stats.try_tick_latency_us(99.0),
+    ) {
+        println!(
+            "inter-token tick latency (prefill chunks included{}): p50 {:.1}µs, p99 {:.1}µs",
+            if prefill_chunk > 0 {
+                format!(", --prefill-chunk {prefill_chunk}")
+            } else {
+                String::new()
+            },
+            p50,
+            p99
+        );
+    }
     Ok(())
 }
 
@@ -576,6 +641,7 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
     let page_len = args.usize_or("page-len", 16);
     let reserve = args.bool("reserve");
     let prefix_cache = args.usize_or("prefix-cache", 8);
+    let prefill_chunk = args.usize_or("prefill-chunk", 0);
     let max_queue = args.usize_or("max-queue", 64);
     let read_timeout_ms = args.u64_or("read-timeout-ms", 10_000);
     let write_timeout_ms = args.u64_or("write-timeout-ms", 10_000);
@@ -608,6 +674,7 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
             page_len,
             reserve,
             prefix_cache,
+            prefill_chunk,
             threads: worker_threads,
             kv_dtype,
         },

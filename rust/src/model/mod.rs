@@ -39,17 +39,18 @@
 pub mod config;
 pub mod decode;
 pub mod net;
+pub mod radix;
 pub mod serve;
 
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
 pub use net::{NetConfig, NetServer};
 pub use serve::{
-    run_sequential, run_sequential_dtype, shared_prefix_workload, synthetic_workload, Completion,
-    Request, ServeConfig, ServeEngine, ServeReport, ServeStats,
+    multi_tenant_workload, run_sequential, run_sequential_dtype, shared_prefix_workload,
+    synthetic_workload, Completion, Request, ServeConfig, ServeEngine, ServeReport, ServeStats,
 };
 
-use crate::attention::{Attention, AttnWorkspace};
+use crate::attention::{Attention, AttnWorkspace, DecodeState};
 use crate::tensor::ops::{
     add_assign, add_bias_rows, gelu, layernorm_rows_into, matmul_into, matmul_nt_into,
 };
@@ -376,6 +377,151 @@ impl Model {
             add_assign(&mut ws.x, &ws.proj);
 
             // pre-LN feed-forward block: x += GELU(LN(x) @ W1 + b1) @ W2 + b2
+            layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
+            matmul_q(&ws.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut ws.ff);
+            add_bias_rows(&mut ws.ff, &lp.ff_b1);
+            gelu(&mut ws.ff);
+            matmul_q(&ws.ff, &lp.ff_w2, lq.map(|q| &q.ff_w2), &mut ws.proj);
+            add_bias_rows(&mut ws.proj, &lp.ff_b2);
+            add_assign(&mut ws.x, &ws.proj);
+        }
+    }
+
+    /// Resume a single-sequence prefill from per-`(layer, head)` decode
+    /// caches that already hold `p` tokens: run the trunk over only the
+    /// `s = suffix.len()` new tokens (positions `p..p+s`), assembling
+    /// each layer's *full-length* Q/K/V — rows `0..p` gathered from the
+    /// cached fine pages, rows `p..` freshly projected — so the batched
+    /// attention kernel sees exactly the input a whole-prompt
+    /// [`Model::run_trunk`] would have built, then appending the suffix
+    /// rows into `states` (the same bulk-load `run_trunk`'s observer
+    /// performs, suffix-only). Leaves the suffix residual rows in
+    /// `ws.x`; with F32 KV caches those are bitwise the last `s` rows
+    /// of the whole-prompt trunk, because every non-attention op is
+    /// row-local and attention reruns over identical full-length
+    /// inputs. Compressed caches gather *dequantised* prefix rows where
+    /// the original prefill fed unrounded ones — deterministic, but one
+    /// rounding of drift.
+    ///
+    /// Soundness of the cached rows themselves (that rows `0..p` of a
+    /// longer or shorter prefill agree) is the caller's contract:
+    /// `p` must be 0, the caches' own full prompt, or a cut point
+    /// blessed by [`Attention::prefix_share_align`] on a causal model.
+    /// `states` is flattened `[layer][head]` exactly as `model::serve`
+    /// stores it; all states must sit at the same `p`. Attention cost
+    /// is O(full-length attention) per call — resuming in chunks keeps
+    /// admission latency bounded, not total prefill work.
+    pub(crate) fn run_trunk_resume(
+        &self,
+        ws: &mut ModelWorkspace,
+        suffix: &[u32],
+        states: &mut [DecodeState],
+    ) {
+        let cfg = &self.cfg;
+        let s = suffix.len();
+        assert!(s > 0, "empty suffix");
+        let (d, n_heads) = (cfg.d_model, cfg.n_heads);
+        let dh = d / n_heads;
+        assert_eq!(
+            states.len(),
+            cfg.n_layers * n_heads,
+            "one decode state per (layer, head)"
+        );
+        let p0 = states[0].len;
+        debug_assert!(
+            states.iter().all(|st| st.len == p0),
+            "ragged resume states"
+        );
+        let l = p0 + s;
+        assert!(
+            l <= cfg.max_len,
+            "resumed sequence length {l} outside 1..={}",
+            cfg.max_len
+        );
+        let p = &self.params;
+
+        // suffix residual stream at positions p0..l
+        ws.x.reset_for_overwrite(s, d);
+        for (i, &t) in suffix.iter().enumerate() {
+            let tok = t as usize;
+            assert!(tok < cfg.vocab_size, "token id {tok} >= vocab {}", cfg.vocab_size);
+            let row = ws.x.row_mut(i);
+            for ((o, e), ps) in row.iter_mut().zip(p.embed.row(tok)).zip(p.pos.row(p0 + i)) {
+                *o = e + ps;
+            }
+        }
+
+        for (layer, lp) in p.layers.iter().enumerate() {
+            let lq = self.layer_quant(layer);
+            layernorm_rows_into(&ws.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut ws.hn);
+            // full-length Q/K/V: cached prefix rows + suffix projections
+            // (suffix projections are row-local, so they are bitwise the
+            // corresponding rows of the whole-prompt projection)
+            matmul_q(&ws.hn, &lp.wq, lq.map(|q| &q.wq), &mut ws.proj);
+            ws.qkv.q.reset_for_overwrite(1, n_heads, l, dh);
+            for h in 0..n_heads {
+                let st = &states[layer * n_heads + h];
+                let head = ws.qkv.q.head_mut(h);
+                for t in 0..p0 {
+                    st.q.decode_row_into(t, &mut head[t * dh..(t + 1) * dh]);
+                }
+                for i in 0..s {
+                    head[(p0 + i) * dh..(p0 + i + 1) * dh]
+                        .copy_from_slice(&ws.proj.row(i)[h * dh..(h + 1) * dh]);
+                }
+            }
+            matmul_q(&ws.hn, &lp.wk, lq.map(|q| &q.wk), &mut ws.proj);
+            ws.qkv.k.reset_for_overwrite(1, n_heads, l, dh);
+            for h in 0..n_heads {
+                let st = &states[layer * n_heads + h];
+                let head = ws.qkv.k.head_mut(h);
+                for t in 0..p0 {
+                    st.k.decode_row_into(t, &mut head[t * dh..(t + 1) * dh]);
+                }
+                for i in 0..s {
+                    head[(p0 + i) * dh..(p0 + i + 1) * dh]
+                        .copy_from_slice(&ws.proj.row(i)[h * dh..(h + 1) * dh]);
+                }
+            }
+            matmul_q(&ws.hn, &lp.wv, lq.map(|q| &q.wv), &mut ws.proj);
+            ws.qkv.v.reset_for_overwrite(1, n_heads, l, dh);
+            for h in 0..n_heads {
+                let st = &states[layer * n_heads + h];
+                let head = ws.qkv.v.head_mut(h);
+                for t in 0..p0 {
+                    st.v.decode_row_into(t, &mut head[t * dh..(t + 1) * dh]);
+                }
+                for i in 0..s {
+                    head[(p0 + i) * dh..(p0 + i + 1) * dh]
+                        .copy_from_slice(&ws.proj.row(i)[h * dh..(h + 1) * dh]);
+                }
+            }
+            // bulk-load the suffix rows (run_trunk's observe, suffix-only)
+            for h in 0..n_heads {
+                let st = &mut states[layer * n_heads + h];
+                debug_assert_eq!(st.len, p0, "state advanced out of turn");
+                self.algo.decode_load_prefix(
+                    st,
+                    &ws.qkv.q.head(h)[p0 * dh..],
+                    &ws.qkv.k.head(h)[p0 * dh..],
+                    &ws.qkv.v.head(h)[p0 * dh..],
+                );
+            }
+            self.algo
+                .forward_batch_into(&mut ws.attn, &ws.qkv, cfg.causal, &mut ws.attn_out);
+            // merge only the suffix rows of the attention output
+            ws.merged.reset_for_overwrite(s, d);
+            for i in 0..s {
+                let orow = ws.merged.row_mut(i);
+                for h in 0..n_heads {
+                    let head = ws.attn_out.head(h);
+                    orow[h * dh..(h + 1) * dh]
+                        .copy_from_slice(&head[(p0 + i) * dh..(p0 + i + 1) * dh]);
+                }
+            }
+            matmul_q(&ws.merged, &lp.wo, lq.map(|q| &q.wo), &mut ws.proj);
+            add_assign(&mut ws.x, &ws.proj);
+
             layernorm_rows_into(&ws.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut ws.hn);
             matmul_q(&ws.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut ws.ff);
             add_bias_rows(&mut ws.ff, &lp.ff_b1);

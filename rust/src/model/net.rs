@@ -132,6 +132,10 @@ struct WorkerGauges {
     generated: AtomicUsize,
     prefix_lookups: AtomicUsize,
     prefix_hits: AtomicUsize,
+    prefill_tokens: AtomicUsize,
+    prefill_tokens_saved: AtomicUsize,
+    /// Prompt tokens the worker's radix cache currently retains.
+    prefix_cache_tokens: AtomicUsize,
     evictions: AtomicUsize,
     cancelled: AtomicUsize,
 }
@@ -216,6 +220,7 @@ impl Shared {
         let (mut queue_depth, mut active, mut pages, mut ctx) = (0usize, 0usize, 0usize, 0usize);
         let (mut lookups, mut hits, mut evictions, mut cancelled, mut generated) =
             (0usize, 0usize, 0usize, 0usize, 0usize);
+        let (mut prefilled, mut saved, mut cache_tokens) = (0usize, 0usize, 0usize);
         for (i, w) in self.workers.iter().enumerate() {
             let g = &w.gauges;
             let (wq, wa) = (g.queued.load(Ordering::Relaxed), g.active.load(Ordering::Relaxed));
@@ -230,6 +235,9 @@ impl Shared {
             evictions += g.evictions.load(Ordering::Relaxed);
             cancelled += g.cancelled.load(Ordering::Relaxed);
             generated += g.generated.load(Ordering::Relaxed);
+            prefilled += g.prefill_tokens.load(Ordering::Relaxed);
+            saved += g.prefill_tokens_saved.load(Ordering::Relaxed);
+            cache_tokens += g.prefix_cache_tokens.load(Ordering::Relaxed);
             workers.push(obj(vec![
                 ("worker", num(i as f64)),
                 ("queued", num(wq as f64)),
@@ -253,6 +261,9 @@ impl Shared {
             ("pages_in_use", num(pages as f64)),
             ("ctx_tokens", num(ctx as f64)),
             ("prefix_hit_rate", num(hit_rate)),
+            ("prefill_tokens_total", num(prefilled as f64)),
+            ("prefill_tokens_saved_total", num(saved as f64)),
+            ("prefix_cache_tokens", num(cache_tokens as f64)),
             ("evictions_total", num(evictions as f64)),
             ("cancelled_total", num(cancelled as f64)),
             (
@@ -407,6 +418,9 @@ fn publish_gauges(engine: &ServeEngine, gauges: &WorkerGauges) {
     gauges.generated.store(st.generated, Ordering::Relaxed);
     gauges.prefix_lookups.store(st.prefix_lookups, Ordering::Relaxed);
     gauges.prefix_hits.store(st.prefix_hits, Ordering::Relaxed);
+    gauges.prefill_tokens.store(st.prefill_tokens, Ordering::Relaxed);
+    gauges.prefill_tokens_saved.store(st.prefill_tokens_saved, Ordering::Relaxed);
+    gauges.prefix_cache_tokens.store(engine.prefix_cache_tokens(), Ordering::Relaxed);
     gauges.evictions.store(st.evictions, Ordering::Relaxed);
     gauges.cancelled.store(st.cancelled, Ordering::Relaxed);
 }

@@ -26,21 +26,37 @@
 //!   PR-4 contiguous-reservation semantics (the baseline the serve
 //!   bench compares against): the full `prompt + max_new` horizon is
 //!   pre-faulted and charged at admission.
-//! * **Identical prompts share pages.** A copy-on-write prefix cache
-//!   keyed on prompt-token hashes keeps the per-`(layer, head)` page
-//!   tables of recent prefills; a same-prompt admission clones them
-//!   (refcount bumps — no page copies, no forward pass), making the
-//!   shared-system-prompt workload O(1)-per-duplicate at prefill and
-//!   counting the shared pages **once** against `max_tokens`. Shared
-//!   pages are immutable: a session's first mutation of a boundary page
-//!   (appending into a partially-filled tail, accumulating an h1d
-//!   pyramid partial sum) copies it first, so only pages holding
-//!   still-accumulating partials privatise — h1d pyramid pages stay
-//!   shared exactly for fully-completed coarse blocks. Sharing is
-//!   whole-prompt (a hit requires the full token sequence to match):
-//!   prefill outputs are a pure function of the prompt, so the cloned
-//!   state is bitwise what a fresh prefill would produce for **every**
-//!   algorithm, including the non-causal and length-dependent ones.
+//! * **Prompt *prefixes* share pages.** A radix tree over prompt token
+//!   sequences ([`super::radix::RadixCache`]) keeps the
+//!   per-`(layer, head)` page tables of recent prefills. An admission
+//!   walks the trie for the longest common prefix with any cached
+//!   prompt and clones the covering pages (refcount bumps — no page
+//!   copies), prefilling only the unmatched suffix, so the
+//!   shared-system-prompt workload pays prefill for each distinct
+//!   suffix instead of each full prompt and counts the shared pages
+//!   **once** against `max_tokens`. How much of the match is shareable
+//!   is the engine's call: fine K/V/Q pages split at any
+//!   `page_len`-aligned cut the algorithm declares prefix-pure
+//!   ([`crate::attention::Attention::prefix_share_align`] — any causal
+//!   cut for `full`/`local`, completed-coarse-cell cuts for `h1d`,
+//!   nothing for the length-dependent `lowrank`/`blocksparse`), while
+//!   h1d pyramid pages are shared only for fully-completed coarse
+//!   blocks, with boundary partials replayed from the shared fine
+//!   pages (`DecodeState::clone_prefix_into`). An exact whole-prompt
+//!   match stays a free hit for **every** algorithm, including the
+//!   non-causal and length-dependent ones (prefill outputs are a pure
+//!   function of the full prompt), and skips the forward pass outright.
+//!   Shared pages are immutable: a session's first mutation of a
+//!   boundary page copies it first, so only pages holding
+//!   still-accumulating partials privatise.
+//! * **Prefill is chunkable.** With `prefill_chunk > 0` a prefilling
+//!   session runs its prompt through the trunk `prefill_chunk` tokens
+//!   at a time, one chunk per tick interleaved with decode rounds —
+//!   long-prompt arrivals stop stalling in-flight streams for a whole
+//!   prompt's forward pass. Each chunk ends at a prefix-pure cut and
+//!   resumes via the same partial-prefix machinery (a chunked prefill
+//!   is a self-resume), so chunking never changes tokens; algorithms
+//!   with no interior pure cuts prefill in one shot regardless.
 //!
 //! ## Scheduler state machine
 //!
@@ -94,6 +110,8 @@
 //! * `reserve` — contiguous-reservation admission (the paged-off
 //!   baseline; disables the prefix cache);
 //! * `prefix_cache` — retained prompt-cache entries (0 disables);
+//! * `prefill_chunk` — max prompt tokens prefilled per tick
+//!   (0 = whole prompt at admission);
 //! * `threads` — worker count for prefill head dispatch and chunked
 //!   decode rounds (`<= 1` runs on the calling thread).
 //!
@@ -106,6 +124,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::radix::{CachedPrefix, RadixCache};
 use super::{matmul_q, sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
 use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into};
@@ -130,11 +149,22 @@ pub struct ServeConfig {
     pub page_len: usize,
     /// Pre-fault and charge the full `prompt + max_new` horizon at
     /// admission — the PR-4 contiguous-reservation baseline semantics
-    /// (no demand growth, no eviction, prefix cache disabled).
+    /// (no demand growth, no eviction, prefix cache and chunked
+    /// prefill disabled).
     pub reserve: bool,
     /// Retained prefix-cache entries (0 disables the cache; ignored in
     /// `reserve` mode).
     pub prefix_cache: usize,
+    /// Maximum prompt tokens prefilled per tick. `0` prefills the
+    /// whole (unshared) prompt at admission, the classic behaviour.
+    /// Positive values interleave prefill chunks with decode rounds so
+    /// a long-prompt arrival cannot stall in-flight streams for a
+    /// whole forward pass; chunk boundaries land on the next
+    /// prefix-pure cut at or after the nominal chunk end, so chunking
+    /// never changes generated tokens. Algorithms with no interior
+    /// pure cuts (`lowrank`/`blocksparse`, or any non-causal model)
+    /// prefill in one shot regardless of this knob.
+    pub prefill_chunk: usize,
     /// Worker threads for prefill and chunked decode rounds
     /// (`<= 1` means the calling thread).
     pub threads: usize,
@@ -154,6 +184,7 @@ impl Default for ServeConfig {
             page_len: DEFAULT_PAGE_LEN,
             reserve: false,
             prefix_cache: 8,
+            prefill_chunk: 0,
             threads: 1,
             kv_dtype: PageDtype::F32,
         }
@@ -200,8 +231,16 @@ pub struct ServeStats {
     pub rounds: usize,
     /// Tokens generated (prefill-sampled first tokens included).
     pub generated: usize,
-    /// Prompt tokens prefilled (prefix-cache hits prefill nothing).
+    /// Prompt tokens actually run through the prefill trunk. A
+    /// whole-prompt cache hit prefills nothing; a partial-prefix hit
+    /// prefills only the unshared suffix.
     pub prefill_tokens: usize,
+    /// Prompt tokens *not* prefilled because a radix-cache prefix
+    /// covered them (whole-prompt and partial hits both count) — the
+    /// headline saving of the shared-system-prompt regime:
+    /// `prefill_tokens + prefill_tokens_saved` is the workload's total
+    /// prompt tokens.
+    pub prefill_tokens_saved: usize,
     /// Total wall time across ticks (admission + rounds), seconds.
     pub wall_s: f64,
     /// Wall time of each decode round. Admission/prefill time is
@@ -209,6 +248,13 @@ pub struct ServeStats {
     /// the p50/p95 derived from these samples measures the same thing
     /// as the sequential baseline's per-`step` samples.
     pub round_s: Vec<f64>,
+    /// Wall time of each tick that ran a decode round, measured from
+    /// after the admission loop: interleaved prefill chunks + growth
+    /// staging + the round itself. Under chunked prefill this is the
+    /// honest inter-token gap an in-flight stream observes (a decode
+    /// token arrives once per tick), which `round_s` alone understates;
+    /// indexed 1:1 with `round_tokens`.
+    pub tick_s: Vec<f64>,
     /// Tokens produced by each round (= active sessions that round).
     pub round_tokens: Vec<usize>,
     /// Peak concurrently active sessions.
@@ -276,6 +322,30 @@ impl ServeStats {
         self.try_latency_us(pct).unwrap_or(0.0)
     }
 
+    /// Inter-token latency percentile in µs over whole ticks
+    /// (`tick_s`): every token generated in a tick's round observes
+    /// that tick's full wall time, including any prefill chunks
+    /// interleaved before the round. The number chunked prefill must
+    /// keep bounded when long prompts arrive mid-stream; `None` when
+    /// no decode round ran.
+    pub fn try_tick_latency_us(&self, pct: f64) -> Option<f64> {
+        let mut samples: Vec<f64> = Vec::new();
+        for (s, n) in self.tick_s.iter().zip(&self.round_tokens) {
+            samples.extend(std::iter::repeat(*s * 1e6).take(*n));
+        }
+        if samples.is_empty() {
+            return None;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let idx = ((pct.clamp(0.0, 100.0) / 100.0) * (samples.len() - 1) as f64).round() as usize;
+        Some(samples[idx.min(samples.len() - 1)])
+    }
+
+    /// [`ServeStats::try_tick_latency_us`] with the empty case as `0.0`.
+    pub fn tick_latency_us(&self, pct: f64) -> f64 {
+        self.try_tick_latency_us(pct).unwrap_or(0.0)
+    }
+
     /// Mean active sessions per decode round (batch fill).
     pub fn mean_occupancy(&self) -> f64 {
         if self.round_tokens.is_empty() {
@@ -321,43 +391,6 @@ impl ServeReport {
     }
 }
 
-/// FNV-1a over the prompt token ids — the prefix-cache key (full token
-/// equality is re-checked on every hit, so collisions cost a compare,
-/// never a wrong share).
-fn hash_tokens(tokens: &[u32]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &t in tokens {
-        h ^= t as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
-}
-
-/// One retained prompt prefill: the per-`(layer, head)` states sharing
-/// the prompt's pages (never stepped — scratch stays empty) plus the
-/// final-position residual row for first-token logits on a hit.
-struct CacheEntry {
-    prompt: Vec<u32>,
-    hash: u64,
-    states: Vec<DecodeState>,
-    last_x: Vec<f32>,
-    /// Pyramid depth the states were prefilled at; a hit requires the
-    /// admitting session to need no deeper pyramid (shallower levels
-    /// are a prefix of deeper ones, so sharing down is exact).
-    n_coarse: usize,
-    /// Largest `prompt + max_new` horizon this entry is known to serve.
-    /// Pyramid depth is monotone in the horizon, so a request whose own
-    /// horizon fits inside it is **guaranteed** to satisfy the
-    /// `n_coarse` check above — the admission accounting predicts a
-    /// free hit only under this guarantee, keeping the context budget
-    /// sound. A deeper request is conservatively charged a full
-    /// prefill; if it still hits (its depth fits anyway — always for
-    /// the non-hierarchical algorithms), the hit **ratchets** this
-    /// horizon so later duplicates are predicted correctly, and if it
-    /// misses, its re-prefill replaces the entry at the deeper horizon.
-    horizon: usize,
-}
-
 /// One pooled session: the per-`(layer, head)` KV states plus request
 /// bookkeeping. Slots recycle through the engine's free pool — page
 /// tables, token and logits buffers are grow-only, so same-shape
@@ -384,8 +417,13 @@ struct SessionSlot {
     /// `layer * n_heads + head` order, like `DecodeWorkspace`.
     states: Vec<DecodeState>,
     /// The original request, kept so an out-of-pages eviction can
-    /// requeue it verbatim.
+    /// requeue it verbatim (and so chunked prefill can read the
+    /// remaining prompt suffix).
     request: Option<Request>,
+    /// Prompt tokens already in the states (cache-shared prefix plus
+    /// prefilled chunks). A session decodes only once this reaches
+    /// `prompt_len`; until then it sits in the engine's prefilling set.
+    prefilled: usize,
     admitted_round: usize,
     done: bool,
 }
@@ -405,6 +443,7 @@ impl SessionSlot {
             logits: Vec::new(),
             states: Vec::new(),
             request: None,
+            prefilled: 0,
             admitted_round: 0,
             done: false,
         }
@@ -551,8 +590,23 @@ pub struct ServeEngine {
     /// Shared KV page pool for every session's caches and the prefix
     /// cache; its accounting drives admission and growth (module docs).
     pool: PagePool,
-    /// Prefix cache, LRU at the front / MRU at the back.
-    cache: Vec<CacheEntry>,
+    /// Radix-tree prefix cache over prompt token sequences; entries
+    /// hold page-sharing state snapshots, LRU-evicted by last hit.
+    cache: RadixCache,
+    /// Whether partial-prefix sharing and chunked-prefill resume apply
+    /// at all: the model is causal, its algorithm admits interior
+    /// prefix-pure cuts (`prefix_share_align` — true for
+    /// `full`/`local`/`h1d`, false for the length-dependent
+    /// `lowrank`/`blocksparse`) and the KV pages are exact (`F32`).
+    /// Compressed pages would resume a suffix from *dequantised* prefix
+    /// rows — a fresh prefill reads exact activations, so the resumed
+    /// tokens could drift; sharing-incapable configurations still get
+    /// bitwise exact whole-prompt hits.
+    share_capable: bool,
+    /// Sessions still running their prompt through the trunk in
+    /// `prefill_chunk`-token pieces, admission order; they hold a
+    /// `max_batch` slot but don't decode until the prompt completes.
+    prefilling: Vec<SessionSlot>,
     /// Shared batched-forward arena for admission prefills; its
     /// attention pool doubles as the decode-round worker pool (one set
     /// of OS threads per engine — prefill and rounds never overlap).
@@ -589,10 +643,16 @@ impl ServeEngine {
         }
         let threads = cfg.threads.max(1);
         let kv_page_cost = cfg.kv_dtype.page_ctx_cost(cfg.page_len, model.cfg.d_head());
+        let cache_limit = if cfg.reserve { 0 } else { cfg.prefix_cache };
+        let share_capable = model.cfg.causal
+            && model.algo.prefix_share_align(model.cfg.max_len.max(2)) > 0
+            && cfg.kv_dtype == PageDtype::F32;
         Ok(ServeEngine {
             kv_page_cost,
             pool: PagePool::new(cfg.page_len),
-            cache: Vec::new(),
+            cache: RadixCache::new(cache_limit),
+            share_capable,
+            prefilling: Vec::with_capacity(cfg.max_batch),
             prefill: ModelWorkspace::new(threads),
             adm_x: Mat::default(),
             adm_hn: Mat::default(),
@@ -673,9 +733,10 @@ impl ServeEngine {
         self.pending.len()
     }
 
-    /// Currently active sessions.
+    /// Sessions currently holding a slot: decoding plus (under chunked
+    /// prefill) still prefilling their prompt.
     pub fn active_sessions(&self) -> usize {
-        self.active.len()
+        self.active.len() + self.prefilling.len()
     }
 
     /// Run-so-far metrics (reset by [`ServeEngine::run`]).
@@ -693,6 +754,12 @@ impl ServeEngine {
         self.cache.len()
     }
 
+    /// Prompt tokens currently covered by prefix-cache entries (token
+    /// measure of the trie, pages may overlap between entries).
+    pub fn prefix_cache_tokens(&self) -> usize {
+        self.cache.cached_tokens()
+    }
+
     /// Completions accumulated so far (drains the internal buffer).
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
@@ -705,7 +772,7 @@ impl ServeEngine {
     /// regenerates bitwise-identical tokens) simply pauses the stream
     /// instead of double-sending.
     pub fn for_each_active(&self, mut f: impl FnMut(u64, &[u32])) {
-        for slot in &self.active {
+        for slot in self.active.iter().chain(self.prefilling.iter()) {
             f(slot.id, &slot.tokens);
         }
     }
@@ -725,8 +792,15 @@ impl ServeEngine {
             self.stats.cancelled += 1;
             return true;
         }
-        if let Some(i) = self.active.iter().position(|s| s.id == id) {
-            let mut slot = self.active.remove(i);
+        let found = if let Some(i) = self.active.iter().position(|s| s.id == id) {
+            Some(self.active.remove(i))
+        } else {
+            self.prefilling
+                .iter()
+                .position(|s| s.id == id)
+                .map(|i| self.prefilling.remove(i))
+        };
+        if let Some(mut slot) = found {
             slot.request = None;
             self.stats.generated -= slot.tokens.len();
             slot.tokens.clear();
@@ -742,11 +816,7 @@ impl ServeEngine {
     }
 
     fn cache_limit(&self) -> usize {
-        if self.cfg.reserve {
-            0
-        } else {
-            self.cfg.prefix_cache
-        }
+        self.cache.limit()
     }
 
     /// Whether `extra_tokens` more context tokens fit `max_tokens`
@@ -759,75 +829,103 @@ impl ServeEngine {
         self.pool.stats().ctx_tokens().saturating_add(extra_tokens) <= self.cfg.max_tokens
     }
 
+    /// Largest cut `<= lcp` that is both `page_len`-aligned and
+    /// algorithm-pure — the tokens a partial-prefix hit may actually
+    /// share. Page alignment makes the fine-page split copy-free and
+    /// keeps the page-count accounting exact; purity
+    /// ([`crate::attention::Attention::prefix_share_align`]) guarantees
+    /// the cached rows are bitwise what a fresh prefill of the new
+    /// prompt would produce up to the cut. The two constraints are
+    /// interleaved to a fixpoint: aligning can break purity and vice
+    /// versa, but each step only shrinks `p`, so the loop terminates
+    /// (at worst at 0).
+    fn share_len(&self, lcp: usize) -> usize {
+        let pl = self.cfg.page_len;
+        let mut p = lcp & !(pl - 1);
+        loop {
+            let b = self.model.algo.prefix_share_align(p) & !(pl - 1);
+            if b == p {
+                return p;
+            }
+            p = b;
+        }
+    }
+
+    /// [`ServeEngine::share_len`] capped to leave at least one suffix
+    /// token: the admission path always runs a real forward over the
+    /// tail to produce the first-token logits (only an *exact*
+    /// whole-prompt hit skips the trunk, via the cached residual row).
+    fn partial_share_len(&self, lcp: usize, prompt_len: usize) -> usize {
+        self.share_len(lcp.min(prompt_len.saturating_sub(1)))
+    }
+
     /// Context tokens admitting `req` would charge right now. A free
-    /// cache hit is predicted only when [`ServeEngine::cache_predicts_hit`]
-    /// *guarantees* the hit path in `admit` will take it; otherwise the
-    /// full prompt prefill is charged conservatively, so the context
-    /// budget can never be exceeded by a predicted-hit-turned-miss.
+    /// whole-prompt hit is predicted only when the trie holds an entry
+    /// for exactly this prompt *and* the engine forces the fine-Q
+    /// history on (sharing-capable algorithms) — then `admit`'s hit
+    /// path is guaranteed to take it, pyramid depth notwithstanding
+    /// (deeper levels replay from the cached fine rows). Otherwise the
+    /// unshared suffix — the whole prompt for sharing-incapable
+    /// algorithms, which may still hit opportunistically — is charged
+    /// conservatively, so the context budget can never be exceeded by
+    /// a predicted-hit-turned-miss.
     fn admission_ctx_tokens(&self, req: &Request) -> usize {
-        let pages = if self.cfg.reserve {
-            (req.prompt.len() + req.max_new).div_ceil(self.cfg.page_len)
-        } else if self.cache_limit() > 0 && self.cache_predicts_hit(req) {
-            0
-        } else {
-            req.prompt.len().div_ceil(self.cfg.page_len)
-        };
+        let pl = self.cfg.page_len;
+        if self.cfg.reserve {
+            return (req.prompt.len() + req.max_new)
+                .div_ceil(pl)
+                .saturating_mul(self.kv_page_cost);
+        }
+        let mut pages = req.prompt.len().div_ceil(pl);
+        if self.cache_limit() > 0 && self.share_capable {
+            if let Some((lcp, entry_len)) = self.cache.predict(&req.prompt) {
+                if lcp == req.prompt.len() && entry_len == lcp {
+                    return 0;
+                }
+                // shared pages are already counted in the pool (the
+                // entry holds them); the session is charged only its
+                // unshared suffix pages
+                pages -= self.partial_share_len(lcp, req.prompt.len()) / pl;
+            }
+        }
         pages.saturating_mul(self.kv_page_cost)
     }
 
-    /// Sound hit predictor: the tokens match and the request's horizon
-    /// fits inside the entry's. Pyramid depth (`n_coarse`) is monotone
-    /// in the horizon for every algorithm, so this implies the
-    /// `n_coarse >= min_coarse` check `cache_position` performs —
-    /// predicted hits always hit.
-    fn cache_predicts_hit(&self, req: &Request) -> bool {
-        let h = hash_tokens(&req.prompt);
-        let horizon = req.prompt.len() + req.max_new;
-        self.cache
+    /// Context tokens the outstanding chunks of prefilling sessions
+    /// will still fault. Admission and growth keep this charged on top
+    /// of the pool's live count, so interleaved chunk appends can never
+    /// overrun `max_tokens` mid-prompt.
+    fn prefill_debt(&self) -> usize {
+        let pl = self.cfg.page_len;
+        self.prefilling
             .iter()
-            .any(|e| e.hash == h && horizon <= e.horizon && e.prompt == req.prompt)
+            .map(|s| (s.prompt_len.div_ceil(pl) - s.prefilled.div_ceil(pl)) * self.kv_page_cost)
+            .sum()
     }
 
-    fn cache_position(&self, prompt: &[u32], min_coarse: usize) -> Option<usize> {
-        let h = hash_tokens(prompt);
-        self.cache
-            .iter()
-            .position(|e| e.hash == h && e.n_coarse >= min_coarse && e.prompt == prompt)
-    }
-
-    /// Drop the least-recently-used cache entry to free page budget.
-    /// Returns false when the cache is already empty. Freed pages are
-    /// only those no live session still shares.
-    fn drop_lru_cache_entry(&mut self) -> bool {
-        if self.cache.is_empty() {
-            return false;
+    /// End of the prefill chunk starting at `from`: the nominal
+    /// `prefill_chunk` tokens, extended to the next algorithm-pure cut
+    /// so the next chunk's resume sees bitwise-correct cached rows.
+    /// (Chunk cuts need purity only, not page alignment — nothing is
+    /// shared across states at a chunk boundary.) The final chunk ends
+    /// at the prompt itself, pure or not: nothing resumes after it.
+    fn next_chunk_end(&self, from: usize, prompt_len: usize) -> usize {
+        let mut e = (from + self.cfg.prefill_chunk).min(prompt_len);
+        while e < prompt_len && self.model.algo.prefix_share_align(e) != e {
+            e += 1;
         }
-        self.cache.remove(0);
-        true
+        e
     }
 
     fn cache_insert(&mut self, prompt: &[u32], states: &[DecodeState], last_x: &[f32]) {
-        let hash = hash_tokens(prompt);
-        if let Some(i) = self
-            .cache
-            .iter()
-            .position(|e| e.hash == hash && e.prompt == prompt)
-        {
-            // replace (a re-prefill at a deeper horizon supersedes it)
-            self.cache.remove(i);
-        }
-        let entry = CacheEntry {
-            prompt: prompt.to_vec(),
-            hash,
-            states: states.iter().map(|s| s.snapshot_shared()).collect(),
-            last_x: last_x.to_vec(),
-            n_coarse: states.first().map(|s| s.n_coarse).unwrap_or(0),
-            horizon: states.first().map(|s| s.max_len).unwrap_or(0),
-        };
-        self.cache.push(entry);
-        while self.cache.len() > self.cache_limit() {
-            self.cache.remove(0);
-        }
+        self.cache.insert(
+            prompt,
+            CachedPrefix {
+                len: prompt.len(),
+                states: states.iter().map(|s| s.snapshot_shared()).collect(),
+                last_x: last_x.to_vec(),
+            },
+        );
     }
 
     /// `(pointer, capacity)` of every workspace buffer the engine owns
@@ -843,7 +941,12 @@ impl ServeEngine {
     /// not workspace and are excluded).
     pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
         let mut out: Vec<(usize, usize)> = Vec::new();
-        for slot in self.active.iter().chain(self.free.iter()) {
+        for slot in self
+            .active
+            .iter()
+            .chain(self.prefilling.iter())
+            .chain(self.free.iter())
+        {
             out.push((slot.states.as_ptr() as usize, slot.states.capacity()));
             for st in &slot.states {
                 out.extend(st.buffer_snapshot());
@@ -851,14 +954,7 @@ impl ServeEngine {
             out.push((slot.tokens.as_ptr() as usize, slot.tokens.capacity()));
             out.push((slot.logits.as_ptr() as usize, slot.logits.capacity()));
         }
-        for e in &self.cache {
-            out.push((e.prompt.as_ptr() as usize, e.prompt.capacity()));
-            out.push((e.last_x.as_ptr() as usize, e.last_x.capacity()));
-            out.push((e.states.as_ptr() as usize, e.states.capacity()));
-            for st in &e.states {
-                out.extend(st.buffer_snapshot());
-            }
-        }
+        self.cache.buffer_snapshot_into(&mut out);
         for b in &self.bufs {
             out.extend(b.snapshot());
         }
@@ -875,12 +971,14 @@ impl ServeEngine {
     }
 
     /// Admit one request into a (recycled) session slot: wire its
-    /// per-`(layer, head)` states to the shared page pool, then either
-    /// clone the prefix-cache entry for an identical prompt (no
-    /// forward pass, no page copies) or run the batched prefill
-    /// forward, and sample the first token from the prompt's final
-    /// logits. A request whose `max_new` is 1 completes here and never
-    /// enters a decode round.
+    /// per-`(layer, head)` states to the shared page pool, walk the
+    /// radix cache — an exact whole-prompt entry clones every page and
+    /// skips the forward pass; a partial-prefix entry (sharing-capable
+    /// algorithms) donates its aligned pure prefix — then prefill the
+    /// unmatched suffix (inline, or staged into the chunked-prefill
+    /// set) and sample the first token from the prompt's final logits.
+    /// A request whose `max_new` is 1 completes here and never enters
+    /// a decode round.
     ///
     /// KEEP IN SYNC with `Model::prefill_with` (decode.rs): same
     /// state-begin + `run_trunk` observer sequence, pooled instead of
@@ -906,6 +1004,7 @@ impl ServeEngine {
         slot.logits.clear();
         slot.logits.reserve(mcfg.vocab_size);
         slot.admitted_round = self.stats.rounds;
+        slot.prefilled = 0;
         slot.done = false;
         while slot.states.len() < n_states {
             slot.states.push(DecodeState::default());
@@ -919,76 +1018,238 @@ impl ServeEngine {
         for st in &mut slot.states[..n_states] {
             model.algo.decode_begin(st, slot.budget, mcfg.d_head());
         }
-
-        // prefix cache: an identical prompt clones the cached page
-        // tables (refcount bumps) instead of re-running the prefill
-        let mut hit = false;
-        if self.cache_limit() > 0 {
-            self.stats.prefix_lookups += 1;
-            let min_coarse = slot.states[0].n_coarse;
-            if let Some(i) = self.cache_position(&req.prompt, min_coarse) {
-                let mut entry = self.cache.remove(i);
-                for (st, cst) in slot.states[..n_states].iter_mut().zip(&entry.states) {
-                    cst.clone_shared_into(st);
-                }
-                self.adm_x.reset_for_overwrite(1, d_model);
-                self.adm_x.row_mut(0).copy_from_slice(&entry.last_x);
-                // this hit proves the entry's depth serves this horizon:
-                // ratchet it so later duplicates are *predicted* as hits
-                // by admission_ctx_pages instead of being conservatively
-                // charged a prefill they will never run
-                entry.horizon = entry.horizon.max(slot.budget);
-                self.cache.push(entry); // back to the MRU position
-                self.stats.prefix_hits += 1;
-                hit = true;
+        // partial-prefix resume and chunked prefill both rebuild /
+        // gather from the fine Q history, so sharing-eligible sessions
+        // must keep it (full/local/h1d `decode_begin` default it off —
+        // their decode step never reads fine Q rows)
+        if self.share_capable
+            && !self.cfg.reserve
+            && (self.cache_limit() > 0 || self.cfg.prefill_chunk > 0)
+        {
+            for st in &mut slot.states[..n_states] {
+                st.force_q_cache();
             }
         }
-        if !hit {
-            // one batched forward over the prompt; the observer
-            // bulk-loads every (layer, head) cache — the decode.rs
-            // prefill, pooled
-            let states = &mut slot.states;
-            model.run_trunk(&mut self.prefill, &req.prompt, 1, |layer, qkv| {
-                for h in 0..n_heads {
-                    model.algo.decode_load_prefix(
-                        &mut states[layer * n_heads + h],
-                        qkv.q.head(h),
-                        qkv.k.head(h),
-                        qkv.v.head(h),
-                    );
+
+        // radix cache: exact whole-prompt entries clone every page
+        // (boundary partials included — bitwise) and skip the trunk;
+        // partial hits donate their aligned pure prefix pages and
+        // leave only the suffix to prefill
+        let mut p0 = 0usize; // prompt tokens already in the states
+        let mut exact = false;
+        if self.cache_limit() > 0 {
+            self.stats.prefix_lookups += 1;
+            if let Some(hit) = self.cache.lookup(&req.prompt) {
+                let dst_coarse = slot.states[0].n_coarse;
+                if hit.lcp == req.prompt.len()
+                    && hit.entry_len == hit.lcp
+                    && (hit.cache_q || hit.n_coarse >= dst_coarse)
+                {
+                    // whole-prompt hit (any algorithm): a pyramid
+                    // deeper than the entry's rebuilds from the cached
+                    // fine Q rows inside clone_prefix_into
+                    for (st, cst) in slot.states[..n_states].iter_mut().zip(&hit.states) {
+                        cst.clone_prefix_into(st, hit.lcp);
+                    }
+                    self.adm_x.reset_for_overwrite(1, d_model);
+                    self.adm_x.row_mut(0).copy_from_slice(&hit.last_x);
+                    self.stats.prefix_hits += 1;
+                    self.stats.prefill_tokens_saved += req.prompt.len();
+                    p0 = req.prompt.len();
+                    exact = true;
+                } else if self.share_capable && hit.cache_q {
+                    let p = self.partial_share_len(hit.lcp, req.prompt.len());
+                    if p > 0 {
+                        for (st, cst) in slot.states[..n_states].iter_mut().zip(&hit.states) {
+                            cst.clone_prefix_into(st, p);
+                        }
+                        self.stats.prefix_hits += 1;
+                        self.stats.prefill_tokens_saved += p;
+                        p0 = p;
+                    }
                 }
-            });
-            self.stats.prefill_tokens += req.prompt.len();
+            }
+        }
+
+        if !exact {
+            // chunked prefill: a suffix longer than one chunk runs
+            // through the trunk across later ticks, interleaved with
+            // decode rounds (sharing-capable algorithms only — the
+            // resume needs pure cuts)
+            let suffix_len = req.prompt.len() - p0;
+            if self.cfg.prefill_chunk > 0
+                && self.share_capable
+                && !self.cfg.reserve
+                && suffix_len > self.cfg.prefill_chunk
+            {
+                slot.prefilled = p0;
+                slot.request = Some(req);
+                self.prefilling.push(slot);
+                self.stats.peak_active = self
+                    .stats
+                    .peak_active
+                    .max(self.active.len() + self.prefilling.len());
+                return;
+            }
+            // inline prefill of the whole (remaining) prompt: one
+            // batched forward; the observer bulk-loads every
+            // (layer, head) cache — the decode.rs prefill, pooled
+            if p0 == 0 {
+                let states = &mut slot.states;
+                model.run_trunk(&mut self.prefill, &req.prompt, 1, |layer, qkv| {
+                    for h in 0..n_heads {
+                        model.algo.decode_load_prefix(
+                            &mut states[layer * n_heads + h],
+                            qkv.q.head(h),
+                            qkv.k.head(h),
+                            qkv.v.head(h),
+                        );
+                    }
+                });
+            } else {
+                model.run_trunk_resume(
+                    &mut self.prefill,
+                    &req.prompt[p0..],
+                    &mut slot.states[..n_states],
+                );
+            }
+            self.stats.prefill_tokens += suffix_len;
             self.adm_x.reset_for_overwrite(1, d_model);
             self.adm_x
                 .row_mut(0)
-                .copy_from_slice(self.prefill.x.row(req.prompt.len() - 1));
+                .copy_from_slice(self.prefill.x.row(suffix_len - 1));
             if self.cache_limit() > 0 {
                 let last_x = self.adm_x.row(0).to_vec();
                 self.cache_insert(&req.prompt, &slot.states[..n_states], &last_x);
             }
         }
 
-        // first-token logits from the last prompt position
+        slot.prefilled = req.prompt.len();
+        slot.request = Some(req);
+        self.sample_first_token(slot);
+    }
+
+    /// Shared admission tail: head logits from the prompt's final
+    /// residual row (already in `adm_x`), sample the first token, and
+    /// route the session into the decode set — or straight to
+    /// completion at `max_new == 1`, which never enters a round.
+    fn sample_first_token(&mut self, mut slot: SessionSlot) {
+        let model = Arc::clone(&self.model);
         model.logits_into(&self.adm_x, &mut self.adm_hn, &mut self.adm_logits);
         let row = self.adm_logits.row(0);
         let t = sample_logits(row, slot.temperature, &mut slot.rng) as u32;
         slot.tokens.push(t);
         self.stats.generated += 1;
-        slot.request = Some(req);
         if slot.tokens.len() >= slot.max_new {
             slot.done = true;
             slot.logits.clear();
             slot.logits.extend_from_slice(row);
             // the session held a slot during its prefill even though it
             // never enters a decode round — count it as active
-            self.stats.peak_active = self.stats.peak_active.max(self.active.len() + 1);
+            self.stats.peak_active = self
+                .stats
+                .peak_active
+                .max(self.active.len() + self.prefilling.len() + 1);
             self.retire(slot);
         } else {
             slot.next_token = t;
             self.active.push(slot);
-            self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+            self.stats.peak_active = self
+                .stats
+                .peak_active
+                .max(self.active.len() + self.prefilling.len());
         }
+    }
+
+    /// Advance every prefilling session by one prompt chunk (admission
+    /// order). Chunks end at the next pure cut
+    /// ([`ServeEngine::next_chunk_end`]); the next chunk resumes from
+    /// the session's own cached rows (`Model::run_trunk_resume` — a
+    /// self-resume, so chunking never changes tokens). A session whose
+    /// prompt completes stores the prefix in the radix cache, samples
+    /// its first token from the final residual row and joins the
+    /// decode set.
+    fn advance_prefill_chunks(&mut self, n_states: usize) {
+        let model = Arc::clone(&self.model);
+        let n_heads = model.cfg.n_heads;
+        let d_model = model.cfg.d_model;
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            let (from, plen) = {
+                let s = &self.prefilling[i];
+                (s.prefilled, s.prompt_len)
+            };
+            let to = self.next_chunk_end(from, plen);
+            {
+                let slot = &mut self.prefilling[i];
+                let req = slot.request.as_ref().expect("prefilling slot keeps its request");
+                let chunk = &req.prompt[from..to];
+                if from == 0 {
+                    // first chunk of an unshared prompt: positions
+                    // 0..to are a whole-prompt prefill of length `to`
+                    let states = &mut slot.states;
+                    model.run_trunk(&mut self.prefill, chunk, 1, |layer, qkv| {
+                        for h in 0..n_heads {
+                            model.algo.decode_load_prefix(
+                                &mut states[layer * n_heads + h],
+                                qkv.q.head(h),
+                                qkv.k.head(h),
+                                qkv.v.head(h),
+                            );
+                        }
+                    });
+                } else {
+                    model.run_trunk_resume(&mut self.prefill, chunk, &mut slot.states[..n_states]);
+                }
+                slot.prefilled = to;
+            }
+            self.stats.prefill_tokens += to - from;
+            if to < plen {
+                i += 1;
+                continue;
+            }
+            // prompt complete: cache it, sample the first token
+            let slot = self.prefilling.remove(i);
+            self.adm_x.reset_for_overwrite(1, d_model);
+            self.adm_x
+                .row_mut(0)
+                .copy_from_slice(self.prefill.x.row(to - from - 1));
+            if self.cache_limit() > 0 {
+                let last_x = self.adm_x.row(0).to_vec();
+                let req = slot.request.as_ref().expect("prefilling slot keeps its request");
+                let prompt = &req.prompt;
+                self.cache.insert(
+                    prompt,
+                    CachedPrefix {
+                        len: prompt.len(),
+                        states: slot.states[..n_states]
+                            .iter()
+                            .map(|s| s.snapshot_shared())
+                            .collect(),
+                        last_x,
+                    },
+                );
+            }
+            self.sample_first_token(slot);
+        }
+    }
+
+    /// Out-of-pages eviction: release the slot's pages, requeue its
+    /// request at the queue head (it re-runs from its own RNG stream,
+    /// regenerating identical tokens) and recycle the slot.
+    fn evict_requeue(&mut self, mut slot: SessionSlot) {
+        let req = slot.request.take().expect("evicted slot keeps its request");
+        for st in &mut slot.states {
+            st.release_pages();
+        }
+        // the discarded tokens will be regenerated after the requeue,
+        // so they come off the generated count
+        self.stats.generated -= slot.tokens.len();
+        slot.tokens.clear();
+        slot.logits.clear();
+        self.pending.push_front(req);
+        self.free.push(slot);
+        self.stats.evictions += 1;
     }
 
     /// Emit a [`Completion`], return the slot's pages to the pool and
@@ -1013,26 +1274,28 @@ impl ServeEngine {
         self.free.push(slot);
     }
 
-    /// One scheduling round: admit what fits, stage this round's page
-    /// growth (evicting under pressure), run one ragged decode round
-    /// over the active set, retire finished sessions. Returns whether
-    /// work remains (pending or active requests).
+    /// One scheduling round: admit what fits, advance one prefill
+    /// chunk per prefilling session, stage this round's page growth
+    /// (evicting under pressure), run one ragged decode round over the
+    /// active set, retire finished sessions. Returns whether work
+    /// remains (pending, prefilling or active requests).
     pub fn tick(&mut self) -> bool {
         let t0 = Instant::now();
         let n_states = self.model.cfg.n_layers * self.model.cfg.n_heads;
 
         // admission: head-of-line FIFO within the batch and context
-        // budgets; under page pressure the LRU cache entries go first
+        // budgets (outstanding chunk debt stays charged); under page
+        // pressure the LRU cache entries go first
         loop {
-            if self.active.len() >= self.cfg.max_batch {
+            if self.active.len() + self.prefilling.len() >= self.cfg.max_batch {
                 break;
             }
             let needed = match self.pending.front() {
                 None => break,
                 Some(r) => self.admission_ctx_tokens(r),
             };
-            if !self.fits_ctx(needed) {
-                if self.drop_lru_cache_entry() {
+            if !self.fits_ctx(needed.saturating_add(self.prefill_debt())) {
+                if self.cache.evict_lru() {
                     continue;
                 }
                 break;
@@ -1041,24 +1304,40 @@ impl ServeEngine {
             self.admit(req);
         }
 
+        // tick clock: everything from here until the round completes
+        // is what an in-flight stream waits through for its next token
+        // (tick_s); admission prefills above land in wall_s only
+        let t_tick = Instant::now();
+
+        // interleaved chunked prefill: one chunk per prefilling
+        // session; finished prompts join the decode set this round
+        if !self.prefilling.is_empty() {
+            self.advance_prefill_chunks(n_states);
+        }
+
         // demand-grown rounds: pre-fault every page this round's
         // appends will touch, so worker-thread appends are lock-free.
-        // Out of pages → drop cache entries (LRU), then evict the
-        // youngest session(s) and requeue at the queue head: FIFO order
-        // is preserved (older sessions never lose their slot to younger
-        // ones) and the requeued request regenerates identical tokens
-        // from its own RNG stream.
+        // Out of pages → drop cache entries (LRU), then evict
+        // still-prefilling sessions, then the youngest decoding
+        // session(s), requeueing each at the queue head — older
+        // decoding sessions never lose their slot, and a requeued
+        // request regenerates identical tokens from its own RNG stream.
         if !self.cfg.reserve && !self.active.is_empty() {
             loop {
                 let need: usize = self
                     .active
                     .iter()
                     .map(|s| s.states[0].ctx_stage_cost() * self.kv_page_cost)
-                    .sum();
+                    .sum::<usize>()
+                    .saturating_add(self.prefill_debt());
                 if self.fits_ctx(need) {
                     break;
                 }
-                if self.drop_lru_cache_entry() {
+                if self.cache.evict_lru() {
+                    continue;
+                }
+                if let Some(slot) = self.prefilling.pop() {
+                    self.evict_requeue(slot);
                     continue;
                 }
                 if self.active.len() <= 1 {
@@ -1066,19 +1345,8 @@ impl ServeEngine {
                     // page-rounded horizon by max_tokens
                     break;
                 }
-                let mut slot = self.active.pop().expect("non-empty active set");
-                let req = slot.request.take().expect("active slot keeps its request");
-                for st in &mut slot.states {
-                    st.release_pages();
-                }
-                // the discarded tokens will be regenerated after the
-                // requeue, so they come off the generated count
-                self.stats.generated -= slot.tokens.len();
-                slot.tokens.clear();
-                slot.logits.clear();
-                self.pending.push_front(req);
-                self.free.push(slot);
-                self.stats.evictions += 1;
+                let slot = self.active.pop().expect("non-empty active set");
+                self.evict_requeue(slot);
             }
             for slot in &mut self.active {
                 for st in &mut slot.states[..n_states] {
@@ -1131,6 +1399,7 @@ impl ServeEngine {
             self.stats.generated += n;
             self.stats.round_tokens.push(n);
             self.stats.round_s.push(t_round.elapsed().as_secs_f64());
+            self.stats.tick_s.push(t_tick.elapsed().as_secs_f64());
             // eviction: retire finished sessions, preserving order
             let mut i = 0;
             while i < self.active.len() {
@@ -1143,7 +1412,7 @@ impl ServeEngine {
             }
         }
         self.stats.wall_s += t0.elapsed().as_secs_f64();
-        !self.active.is_empty() || !self.pending.is_empty()
+        !self.active.is_empty() || !self.prefilling.is_empty() || !self.pending.is_empty()
     }
 
     /// Submit every request and tick until the queue drains; returns
@@ -1297,6 +1566,37 @@ pub fn shared_prefix_workload(
             max_new,
             temperature,
             seed: derive_seed(seed, i as u64),
+        })
+        .collect()
+}
+
+/// Multi-tenant workload: every request opens with one shared
+/// `system_len`-token system prompt and continues with its own
+/// `suffix_len` distinct tokens — the regime the radix cache turns
+/// into one system-prompt prefill plus per-request suffix prefills,
+/// with the shared pages allocated (and budgeted) once.
+pub fn multi_tenant_workload(
+    n: usize,
+    system_len: usize,
+    suffix_len: usize,
+    max_new: usize,
+    vocab: usize,
+    temperature: f32,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let system = synthetic_prompt(system_len, vocab, &mut rng);
+    (0..n)
+        .map(|i| {
+            let mut prompt = system.clone();
+            prompt.extend(synthetic_prompt(suffix_len, vocab, &mut rng));
+            Request {
+                id: i as u64,
+                prompt,
+                max_new,
+                temperature,
+                seed: derive_seed(seed, i as u64),
+            }
         })
         .collect()
 }
@@ -1551,12 +1851,12 @@ mod tests {
     }
 
     #[test]
-    fn deeper_horizon_same_prompt_is_a_predicted_miss_and_replaces_the_entry() {
-        // an entry cached at a shallow pyramid must never be *predicted*
-        // as a free hit for a request needing a deeper one: the
-        // admission accounting charges the full prefill (budget stays
-        // sound), the hit path misses, and the re-prefill replaces the
-        // entry at the deeper horizon so later twins hit again
+    fn deeper_horizon_same_prompt_rebuilds_the_pyramid_and_still_hits() {
+        // an entry cached at a shallow pyramid serves a deeper-horizon
+        // twin exactly: the forced fine-Q history lets the hit path
+        // rebuild the extra coarse levels by replay inside
+        // clone_prefix_into, so the admission predictor may promise
+        // the free hit (budget stays sound) and no twin re-prefills
         let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 28));
         let mut eng = ServeEngine::new(
             Arc::clone(&model),
@@ -1588,7 +1888,7 @@ mod tests {
             temperature: 0.0,
             seed: 4,
         };
-        // same prompt and horizon as b: must hit b's replaced entry
+        // same prompt and horizon as b: hits the same shallow entry
         let c = Request {
             id: 2,
             prompt: prompt.clone(),
@@ -1600,18 +1900,210 @@ mod tests {
         let rep = eng.run(reqs.clone()).unwrap();
         assert_eq!(rep.completions.len(), 3);
         assert_eq!(
-            rep.stats.prefix_hits, 1,
-            "only the equal-horizon twin may hit (deeper request must re-prefill)"
+            rep.stats.prefix_hits, 2,
+            "both twins hit, horizon depth notwithstanding"
         );
-        assert_eq!(rep.stats.prefill_tokens, 2 * 6);
+        assert_eq!(rep.stats.prefill_tokens, 6, "only the first admission prefills");
+        assert_eq!(rep.stats.prefill_tokens_saved, 2 * 6);
         assert_eq!(rep.stats.evictions, 0);
         assert!(
             rep.stats.peak_ctx_tokens <= 48,
-            "conservative prediction must keep the budget: peak {}",
+            "predicted hits must keep the budget: peak {}",
             rep.stats.peak_ctx_tokens
         );
         let seq = run_sequential(&model, &reqs).unwrap();
         assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+    }
+
+    #[test]
+    fn partial_prefix_hit_prefills_only_the_suffix() {
+        // multi-tenant regime: one 8-token system prompt, distinct
+        // 4-token user suffixes. At page_len 4 and h1d nr 2 the cut at
+        // 8 is page-aligned and prefix-pure, so admissions 2..4 clone
+        // the system-prompt pages and prefill 4 tokens instead of 12 —
+        // with tokens bitwise what unshared sequential decoding yields
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 32));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 4,
+                page_len: 4,
+                threads: 1,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let reqs = multi_tenant_workload(4, 8, 4, 4, 29, 0.0, 11);
+        assert!(reqs.iter().all(|r| r.prompt.len() == 12));
+        assert!(reqs[1..].iter().all(|r| r.prompt[..8] == reqs[0].prompt[..8]));
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.completions.len(), 4);
+        assert_eq!(rep.stats.prefix_hits, 3, "every follower shares the system prompt");
+        assert_eq!(
+            rep.stats.prefill_tokens + rep.stats.prefill_tokens_saved,
+            4 * 12,
+            "prefilled + saved must cover the workload's prompt tokens"
+        );
+        assert_eq!(rep.stats.prefill_tokens_saved, 3 * 8);
+        assert_eq!(
+            rep.stats.prefill_tokens,
+            12 + 3 * 4,
+            "followers prefill only their suffix"
+        );
+        // >= 2x prefill-token saving, the acceptance bar
+        assert!(rep.stats.prefill_tokens * 2 <= 4 * 12);
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+    }
+
+    #[test]
+    fn partial_sharing_skips_sharing_incapable_algorithms() {
+        // blocksparse's length-seeded random key sets leave no
+        // prefix-pure cuts (prefix_share_align == 0): partial hits must
+        // not be taken, but exact whole-prompt duplicates still hit
+        let model = Arc::new(tiny_model(
+            AttnSpec::BlockSparse {
+                window: 2,
+                n_global: 1,
+                n_random: 1,
+                seed: 9,
+            },
+            32,
+        ));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 4,
+                page_len: 4,
+                threads: 1,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let mut reqs = multi_tenant_workload(3, 8, 4, 3, 29, 0.0, 13);
+        // request 3 duplicates request 2's whole prompt
+        reqs[2].prompt = reqs[1].prompt.clone();
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        assert_eq!(
+            rep.stats.prefix_hits, 1,
+            "only the exact duplicate may hit a non-causal-pure algorithm"
+        );
+        assert_eq!(rep.stats.prefill_tokens, 2 * 12);
+        assert_eq!(rep.stats.prefill_tokens_saved, 12);
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+    }
+
+    #[test]
+    fn chunked_prefill_is_token_identical_and_samples_tick_latency() {
+        // chunk boundaries land on pure cuts and resume from the
+        // session's own cached rows, so chunking changes scheduling
+        // only: tokens must be bitwise the unchunked engine's (and the
+        // sequential oracle's), and every decode round gains a tick_s
+        // sample covering the interleaved chunk work
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 64));
+        let mk = |chunk: usize| ServeConfig {
+            max_batch: 3,
+            page_len: 4,
+            prefill_chunk: chunk,
+            threads: 1,
+            ..ServeConfig::default()
+        };
+        let reqs = synthetic_workload(3, &[20, 24], 6, 29, 0.0, 19);
+        let mut whole = ServeEngine::new(Arc::clone(&model), mk(0)).unwrap();
+        let rw = whole.run(reqs.clone()).unwrap();
+        let mut chunked = ServeEngine::new(Arc::clone(&model), mk(5)).unwrap();
+        let rc = chunked.run(reqs.clone()).unwrap();
+        assert_eq!(rw.tokens_by_id(), rc.tokens_by_id(), "chunking changed tokens");
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rc.tokens_by_id());
+        assert_eq!(
+            rc.stats.tick_s.len(),
+            rc.stats.round_s.len(),
+            "one tick sample per decode round"
+        );
+        assert!(rc.stats.try_tick_latency_us(99.0).is_some());
+        // the whole workload's prompt tokens were still prefilled
+        // exactly once each
+        let total: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+        assert_eq!(rc.stats.prefill_tokens + rc.stats.prefill_tokens_saved, total);
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_decode_with_a_late_long_prompt() {
+        // a long prompt arriving while a short stream decodes must not
+        // stall it: with chunking the prefilling session advances one
+        // chunk per tick while the in-flight stream keeps producing a
+        // token per tick
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 64));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 2,
+                page_len: 4,
+                prefill_chunk: 4,
+                threads: 1,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let short = Request {
+            id: 0,
+            prompt: vec![1, 2, 3, 4],
+            max_new: 10,
+            temperature: 0.0,
+            seed: 1,
+        };
+        let long = Request {
+            id: 1,
+            prompt: (0..24).map(|t| (t % 13) as u32).collect(),
+            max_new: 3,
+            temperature: 0.0,
+            seed: 2,
+        };
+        eng.submit(short.clone()).unwrap();
+        eng.tick(); // short admitted, decoding
+        eng.submit(long.clone()).unwrap();
+        let mut decoded_during_prefill = 0;
+        for _ in 0..4 {
+            let before: usize = {
+                let mut t = 0;
+                eng.for_each_active(|id, toks| {
+                    if id == 0 {
+                        t = toks.len();
+                    }
+                });
+                t
+            };
+            eng.tick();
+            let after: usize = {
+                let mut t = 0;
+                eng.for_each_active(|id, toks| {
+                    if id == 0 {
+                        t = toks.len();
+                    }
+                });
+                t
+            };
+            decoded_during_prefill += after.saturating_sub(before);
+        }
+        assert!(
+            decoded_during_prefill >= 3,
+            "the short stream must keep decoding while the long prompt chunks \
+             (got {decoded_during_prefill} tokens across 4 ticks)"
+        );
+        while eng.tick() {}
+        let comps = eng.take_completions();
+        assert_eq!(comps.len(), 2);
+        // both streams bitwise match the sequential oracle
+        let seq = run_sequential(&model, &[short, long]).unwrap();
+        let mut by_id = comps.clone();
+        by_id.sort_by_key(|c| c.id);
+        for (s, c) in seq.completions.iter().zip(&by_id) {
+            assert_eq!(s.id, c.id);
+            assert_eq!(s.tokens, c.tokens);
+        }
     }
 
     #[test]

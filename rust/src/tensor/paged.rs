@@ -591,6 +591,32 @@ impl PagedRows {
         dst.len = self.len;
     }
 
+    /// Share only the pages covering the first `rows` committed rows
+    /// into `dst` (refcount bumps — no page copies): the partial-prefix
+    /// cache-hit path. `dst` is truncated to `rows`; a page whose tail
+    /// holds rows beyond the shared prefix is still shared whole —
+    /// `dst`'s first append into it copies-on-write, so the donor's
+    /// suffix rows are never visible to or clobbered by `dst`.
+    pub fn clone_prefix_into(&self, dst: &mut PagedRows, rows: usize) {
+        assert!(
+            rows <= self.len,
+            "prefix of {rows} rows from a view holding {}",
+            self.len
+        );
+        dst.release_all();
+        dst.pool = self.pool.clone();
+        dst.page_len = self.page_len;
+        dst.shift = self.shift;
+        dst.mask = self.mask;
+        dst.cols = self.cols;
+        dst.stride = self.stride;
+        dst.dtype = self.dtype;
+        dst.budgeted = self.budgeted;
+        let need = rows.div_ceil(self.page_len.max(1));
+        dst.pages.extend(self.pages.iter().take(need).cloned());
+        dst.len = rows;
+    }
+
     /// Materialise the committed rows into a dense `[len, cols]` matrix
     /// (page-span copies) — the cached-recompute decode fallback reads
     /// its history through this.
@@ -725,6 +751,35 @@ mod tests {
         assert_eq!(pool.stats().live, 4);
         assert_eq!(a.row(0), &[0.0, 1.0]);
         assert_eq!(b.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn clone_prefix_shares_covering_pages_and_cows_the_boundary() {
+        let pool = PagePool::new(4);
+        let a = filled(&pool, 2, 10); // 3 pages: rows 0..4, 4..8, 8..10
+        assert_eq!(pool.stats().live, 3);
+        let mut b = PagedRows::default();
+        // 6 rows: page 0 shared whole, page 1 shared though half-covered
+        a.clone_prefix_into(&mut b, 6);
+        assert_eq!(pool.stats().live, 3, "prefix sharing allocates nothing");
+        assert_eq!((b.rows(), b.n_pages()), (6, 2));
+        for i in 0..6 {
+            assert_eq!(b.row(i), a.row(i));
+        }
+        // appending at row 6 lands in the shared boundary page: COW, and
+        // the donor's rows 6..8 in that page are untouched
+        b.push_row(&[100.0, 200.0]);
+        assert_eq!(pool.stats().live, 4);
+        assert_eq!(b.row(6), &[100.0, 200.0]);
+        assert_eq!(a.row(6), &[12.0, 13.0]);
+        // page-aligned prefix shares exactly the full pages
+        let mut c = PagedRows::default();
+        a.clone_prefix_into(&mut c, 4);
+        assert_eq!((c.rows(), c.n_pages()), (4, 1));
+        // empty prefix shares nothing
+        let mut e = PagedRows::default();
+        a.clone_prefix_into(&mut e, 0);
+        assert_eq!((e.rows(), e.n_pages()), (0, 0));
     }
 
     #[test]

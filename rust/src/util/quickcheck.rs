@@ -36,6 +36,28 @@ impl Shrink for u64 {
     }
 }
 
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u8 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
 impl Shrink for f32 {
     fn shrink(&self) -> Vec<Self> {
         let mut out = Vec::new();

@@ -35,9 +35,10 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use htransformer::model::{
-    run_sequential, shared_prefix_workload, synthetic_workload, AttnSpec, Model, ModelConfig,
-    Request, ServeConfig, ServeEngine,
+    multi_tenant_workload, run_sequential, run_sequential_dtype, shared_prefix_workload,
+    synthetic_workload, AttnSpec, Model, ModelConfig, Request, ServeConfig, ServeEngine,
 };
+use htransformer::tensor::PageDtype;
 use htransformer::util::quickcheck::forall;
 
 fn zoo() -> Vec<AttnSpec> {
@@ -351,6 +352,119 @@ fn shared_prompts_match_unshared_for_every_algorithm() {
         let rep = eng.run(reqs.clone()).unwrap();
         assert_eq!(seq.tokens_by_id(), rep.tokens_by_id(), "{name}");
         assert_eq!(rep.stats.prefix_hits, 2, "{name}: 2 of 3 admissions must hit");
+    }
+}
+
+#[test]
+fn multi_tenant_shared_system_prompts_match_unshared_for_every_algorithm() {
+    // the radix-cache acceptance pin, zoo-wide and across KV dtypes:
+    // "one shared system prompt + distinct user suffixes" produces
+    // bitwise the tokens of unshared one-at-a-time runs. Causal
+    // prefix-pure algorithms (full/local/h1d) on exact f32 pages take
+    // partial-prefix hits and prefill only their suffixes — at least a
+    // 2x prefill-token saving on this workload; the rest (length-global
+    // lowrank/blocksparse, and every compressed-KV engine, where a
+    // resume from dequantised rows could drift) must fall back to full
+    // prefills and still match bitwise.
+    for dtype in [PageDtype::F32, PageDtype::F16] {
+        for spec in zoo() {
+            let sharing_capable = dtype == PageDtype::F32
+                && matches!(
+                    spec,
+                    AttnSpec::Full | AttnSpec::H1d { .. } | AttnSpec::Local { .. }
+                );
+            let model = Arc::new(model_for(spec, 48));
+            let name = model.attention_name();
+            // system prompt of 16 = one default page, a pure cut for
+            // the whole causal zoo; suffixes are 5 distinct tokens
+            let reqs = multi_tenant_workload(4, 16, 5, 5, model.cfg.vocab_size, 0.0, 23);
+            let seq = run_sequential_dtype(&model, &reqs, dtype).unwrap();
+            let mut eng = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch: 4,
+                    kv_dtype: dtype,
+                    ..ServeConfig::default()
+                },
+            )
+            .unwrap();
+            let rep = eng.run(reqs.clone()).unwrap();
+            assert_eq!(rep.completions.len(), reqs.len(), "{name} {dtype:?}");
+            assert_eq!(
+                seq.tokens_by_id(),
+                rep.tokens_by_id(),
+                "{name} {dtype:?}: sharing changed tokens"
+            );
+            let total_prompt: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+            assert_eq!(
+                rep.stats.prefill_tokens + rep.stats.prefill_tokens_saved,
+                total_prompt,
+                "{name} {dtype:?}: prefilled + saved must cover every prompt token"
+            );
+            if sharing_capable {
+                assert_eq!(
+                    rep.stats.prefix_hits, 3,
+                    "{name} {dtype:?}: every follower shares the system prompt"
+                );
+                assert_eq!(rep.stats.prefill_tokens_saved, 3 * 16, "{name} {dtype:?}");
+                assert!(
+                    rep.stats.prefill_tokens * 2 <= total_prompt,
+                    "{name} {dtype:?}: expected >= 2x prefill saving, prefilled {} of {}",
+                    rep.stats.prefill_tokens,
+                    total_prompt
+                );
+            } else {
+                assert_eq!(
+                    rep.stats.prefill_tokens_saved, 0,
+                    "{name} {dtype:?}: no sharing without pure cuts / exact pages"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_unchunked_for_every_sharing_algorithm() {
+    // chunk cuts are algorithm-pure and the resume is a self-resume
+    // from the session's own f32 pages, so any chunk size is a pure
+    // scheduling change: tokens stay bitwise across chunk sizes and
+    // against the sequential oracle
+    for spec in [
+        AttnSpec::Full,
+        AttnSpec::H1d { nr: 4 },
+        AttnSpec::Local { radius: 3 },
+    ] {
+        let model = Arc::new(model_for(spec, 48));
+        let name = model.attention_name();
+        let reqs = synthetic_workload(4, &[19, 27], 6, model.cfg.vocab_size, 0.0, 41);
+        let seq = run_sequential(&model, &reqs).unwrap();
+        let mut want_rounds = 0usize;
+        for chunk in [0usize, 3, 7, 64] {
+            let mut eng = ServeEngine::new(
+                Arc::clone(&model),
+                ServeConfig {
+                    max_batch: 4,
+                    prefill_chunk: chunk,
+                    ..ServeConfig::default()
+                },
+            )
+            .unwrap();
+            let rep = eng.run(reqs.clone()).unwrap();
+            assert_eq!(
+                seq.tokens_by_id(),
+                rep.tokens_by_id(),
+                "{name} chunk {chunk}: chunking changed tokens"
+            );
+            assert_eq!(rep.stats.tick_s.len(), rep.stats.round_s.len(), "{name}");
+            if chunk == 0 {
+                want_rounds = rep.stats.rounds;
+            } else {
+                assert!(
+                    rep.stats.rounds >= want_rounds,
+                    "{name} chunk {chunk}: chunked prefill can only add rounds"
+                );
+            }
+        }
     }
 }
 
