@@ -4,6 +4,9 @@
 //! the sequential one-session-at-a-time loop.
 //!
 //!   cargo run --release --example cpu_serve
+//!
+//! How the engine works inside (paged KV, radix prefix cache,
+//! speculative decoding): docs/ARCHITECTURE.md.
 
 use std::sync::Arc;
 

@@ -14,6 +14,9 @@
 //!   curl -N -d '{"prompt":[1,2,3],"max_new":16}' \
 //!        http://127.0.0.1:8080/generate
 //!   curl http://127.0.0.1:8080/metrics
+//!
+//! Flag-by-flag server reference and tuning guide:
+//! docs/OPERATIONS.md; stack walkthrough: docs/ARCHITECTURE.md.
 
 use std::sync::Arc;
 use std::time::Duration;

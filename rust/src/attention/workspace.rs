@@ -638,6 +638,97 @@ impl DecodeState {
         self.len = t + 1;
     }
 
+    /// Budgeted-page cost of appending `n` tokens on the context stream
+    /// — a multi-token [`DecodeState::ctx_stage_cost`]. The speculative
+    /// scheduler charges a round's worst-case growth (`k + 1` tokens)
+    /// through this before committing to the round.
+    pub fn ctx_append_cost(&self, n: usize) -> usize {
+        self.k.append_cost(n)
+    }
+
+    /// Roll the cached context back to its first `new_len` tokens — the
+    /// speculative-decode rejection path. Fine K/V (and Q) pages wholly
+    /// beyond the new length return to the pool
+    /// ([`PagedRows::truncate_rows`]); each pyramid level keeps its
+    /// complete coarse rows and, when the new length splits a coarse
+    /// span, rebuilds that level's boundary partial by replaying the
+    /// surviving fine rows in exactly the append order — bitwise what
+    /// `new_len` sequential [`DecodeState::append`]s would have built
+    /// (the same replay [`DecodeState::clone_prefix_into`] performs on
+    /// a partial-prefix hit). Pyramid states must cache fine Q
+    /// ([`DecodeState::force_q_cache`]) and keep F32 fine K/V — a
+    /// compressed replay would fold dequantised rows into the partials
+    /// and drift; callers gate that combination off.
+    pub fn truncate_to(&mut self, new_len: usize) {
+        assert!(
+            new_len <= self.len,
+            "truncate_to({new_len}) beyond the {} cached tokens",
+            self.len
+        );
+        if new_len == self.len {
+            return;
+        }
+        self.k.truncate_rows(new_len);
+        self.v.truncate_rows(new_len);
+        if self.cache_q {
+            self.q.truncate_rows(new_len);
+        }
+        self.len = new_len;
+        if self.n_coarse == 0 {
+            return;
+        }
+        // Complete coarse rows survive as-is; a level whose last span is
+        // split by the cut rebuilds its boundary partial from the fine
+        // history below.
+        let mut replay_from = new_len;
+        for (i, lv) in self.levels.iter_mut().enumerate().take(self.n_coarse) {
+            let complete = new_len >> (i + 1);
+            lv.qsum.truncate_rows(complete);
+            lv.ksum.truncate_rows(complete);
+            lv.vsum.truncate_rows(complete);
+            lv.count.truncate(complete);
+            replay_from = replay_from.min(complete << (i + 1));
+        }
+        if replay_from >= new_len {
+            return;
+        }
+        assert!(
+            self.cache_q,
+            "pyramid truncation replays the fine Q history; enable the Q \
+             cache (see DecodeState::force_q_cache) before appending"
+        );
+        assert_eq!(
+            self.kv_dtype,
+            PageDtype::F32,
+            "pyramid truncation replays fine K/V rows; compressed caches \
+             would rebuild boundary partials from dequantised rows"
+        );
+        for t in replay_from..new_len {
+            let qr = self.q.row(t);
+            let kr = self.k.row(t);
+            let vr = self.v.row(t);
+            for i in 0..self.n_coarse {
+                let complete = new_len >> (i + 1);
+                if t < (complete << (i + 1)) {
+                    continue;
+                }
+                let lv = &mut self.levels[i];
+                let idx = t >> (i + 1);
+                if idx == lv.count.len() {
+                    lv.qsum.push_row(qr);
+                    lv.ksum.push_row(kr);
+                    lv.vsum.push_row(vr);
+                    lv.count.push(1.0);
+                } else {
+                    lv.qsum.add_into_row(idx, qr);
+                    lv.ksum.add_into_row(idx, kr);
+                    lv.vsum.add_into_row(idx, vr);
+                    lv.count[idx] += 1.0;
+                }
+            }
+        }
+    }
+
     /// Context capacity still unused (`max_len - len`) — the quantity
     /// the serve scheduler's admission budget reasons about, and the
     /// guard every batched decode round asserts before appending.
@@ -1007,6 +1098,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn truncate_to_matches_a_sequential_rebuild() {
+        // rolling back to new_len must leave fine caches AND pyramid
+        // partials bitwise equal to a state that only ever appended the
+        // first new_len rows — the speculative-rollback parity contract
+        let mut rng = Rng::new(21);
+        let (l, d) = (13usize, 3usize);
+        let rows: Vec<Vec<f32>> = (0..l)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        for new_len in [0usize, 1, 4, 7, 8, 11, 13] {
+            let mut st = DecodeState::default();
+            st.begin(l, d, true, 3);
+            for r in &rows {
+                st.append(r, r, r);
+            }
+            st.truncate_to(new_len);
+            assert_eq!(st.len, new_len);
+            let mut want = DecodeState::default();
+            want.begin(l, d, true, 3);
+            for r in rows.iter().take(new_len) {
+                want.append(r, r, r);
+            }
+            assert_eq!(st.k.rows(), want.k.rows(), "len {new_len}");
+            for t in 0..new_len {
+                assert_eq!(st.k.row(t), want.k.row(t), "len {new_len} fine row {t}");
+                assert_eq!(st.q.row(t), want.q.row(t));
+                assert_eq!(st.v.row(t), want.v.row(t));
+            }
+            for i in 0..3usize {
+                let (a, b) = (&st.levels[i], &want.levels[i]);
+                assert_eq!(a.count, b.count, "len {new_len} level {i} counts");
+                for ci in 0..a.count.len() {
+                    assert_eq!(
+                        a.qsum.row(ci),
+                        b.qsum.row(ci),
+                        "len {new_len} level {i} row {ci}"
+                    );
+                    assert_eq!(a.ksum.row(ci), b.ksum.row(ci));
+                    assert_eq!(a.vsum.row(ci), b.vsum.row(ci));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_to_releases_exactly_the_rolled_back_pages() {
+        let pool = PagePool::new(4);
+        let mut st = DecodeState::default();
+        st.attach_pool(&pool, false);
+        st.begin(32, 4, true, 2);
+        let r = [1.0f32, 2.0, 3.0, 4.0];
+        for _ in 0..8 {
+            st.append(&r, &r, &r);
+        }
+        let live8 = pool.stats().live;
+        for _ in 0..5 {
+            st.append(&r, &r, &r);
+        }
+        assert!(pool.stats().live > live8, "growth must fault pages");
+        st.truncate_to(8);
+        assert_eq!(pool.stats().live, live8, "rollback must release the new pages");
+        // the rolled-back state keeps appending correctly
+        st.append(&r, &r, &r);
+        assert_eq!(st.len, 9);
+        st.release_pages();
+        assert_eq!(pool.stats().live, 0, "retire releases everything");
     }
 
     #[test]

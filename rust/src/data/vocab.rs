@@ -1,7 +1,7 @@
 //! Word-level vocabulary / tokenizer for text corpora.
 //!
 //! The One-Billion-Word benchmark tokenises at the word level with a
-//! frequency-cut vocabulary and an <unk> id.  This module provides the
+//! frequency-cut vocabulary and an `<unk>` id.  This module provides the
 //! same machinery for the rust-side corpus pipeline: build a vocab from
 //! a token stream by frequency, encode/decode, and persist to a simple
 //! text format — so checkpointed LMs can be served against a stable id

@@ -33,7 +33,15 @@
 //!     CPU-only builds (see `rust/Cargo.toml`).
 //!
 //! See `DESIGN.md` (repo root) for the layer map and the experiment
-//! index (paper tables/figures → modules → benches).
+//! index (paper tables/figures → modules → benches),
+//! `docs/ARCHITECTURE.md` for the bottom-to-top walkthrough of the
+//! serving stack, and `docs/OPERATIONS.md` for the `htx serve
+//! --listen` operator guide.
+
+// Module docs deliberately link internal helpers by name (`spec_round`,
+// `KernelTable`, ...) for source readers; public rustdoc renders those
+// links as plain text rather than erroring under `-D warnings`.
+#![allow(rustdoc::private_intra_doc_links)]
 
 pub mod attention;
 #[cfg(feature = "xla")]

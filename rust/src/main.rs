@@ -16,7 +16,16 @@
 //!                             or --temperature T); reports per-token
 //!                             latency — the serving-style path where
 //!                             h1d's incremental cost stays ~flat while
-//!                             full attention grows with context
+//!                             full attention grows with context.
+//!                             --spec-k N turns on draft-and-verify
+//!                             speculative decoding: a cheap draft
+//!                             sibling built from the target's own
+//!                             weights (--spec-draft, e.g.
+//!                             `local:8,layers:1`) proposes N tokens
+//!                             per round and the target verifies them
+//!                             in one batched pass — same tokens as
+//!                             plain decoding (greedy: bitwise), fewer
+//!                             target passes
 //!   serve-bench               continuous-batching throughput: a
 //!                             closed-loop synthetic workload
 //!                             (--requests, --prompt-mix, --gen; or
@@ -43,7 +52,10 @@
 //!                             stores KV pages compressed (budget
 //!                             charges shrink proportionally) and
 //!                             --quant-weights routes every matmul
-//!                             through int8 per-row quantised weights
+//!                             through int8 per-row quantised weights;
+//!                             --spec-k / --spec-draft run every decode
+//!                             round speculatively (acceptance rate and
+//!                             effective tokens/step are reported)
 //!   serve --listen ADDR       HTTP/1.1 serving front end over the
 //!                             continuous-batching engine: POST
 //!                             /generate with token-id prompts streams
@@ -57,8 +69,9 @@
 //!                             prefix). Engine knobs match serve-bench
 //!                             (--max-batch, --max-tokens, --page-len,
 //!                             --prefix-cache, --prefill-chunk,
-//!                             --reserve, --kv-dtype,
-//!                             --quant-weights, --worker-threads);
+//!                             --reserve, --kv-dtype, --quant-weights,
+//!                             --worker-threads, --spec-k /
+//!                             --spec-draft);
 //!                             front-end knobs: --max-queue (503
 //!                             backpressure cap), --read-timeout-ms /
 //!                             --write-timeout-ms (per-connection
@@ -86,7 +99,9 @@ use htransformer::attention::{
     Attention, AttnWorkspace, BlockSparse, Full, H1d, LocalWindow, LowRank,
 };
 use htransformer::hmatrix::toeplitz;
-use htransformer::model::{sample_logits, DecodeWorkspace, Model, ModelConfig, ModelWorkspace};
+use htransformer::model::{
+    sample_logits, DecodeWorkspace, Model, ModelConfig, ModelWorkspace, SpecDraft,
+};
 use htransformer::tensor::{Batch, PageDtype, Qkv};
 use htransformer::util::bench::{bench_for, fmt_time, Table};
 use htransformer::util::cli::Args;
@@ -301,6 +316,10 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let n_gen = args.usize_or("gen", 32);
     let temperature = args.f64_or("temperature", 0.0) as f32;
     let threads = args.usize_or("threads", 0); // 0 = host parallelism
+    let spec_k = args.usize_or("spec-k", 0); // 0 = plain decoding
+    if args.get("spec-draft").is_some() && spec_k == 0 {
+        return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
+    }
     if prompt_len == 0 {
         return Err("--prompt-len must be >= 1".to_string());
     }
@@ -327,6 +346,58 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let prompt: Vec<u32> = (0..prompt_len)
         .map(|_| rng.below(cfg.vocab_size as u64) as u32)
         .collect();
+
+    if spec_k > 0 {
+        if !cfg.causal {
+            return Err(
+                "--spec-k needs a causal model (draft-and-verify replays strictly \
+                 left-to-right decode steps)"
+                    .to_string(),
+            );
+        }
+        let spec = SpecDraft::parse(&args.str_or("spec-draft", "local:8,layers:1"))?;
+        let draft = spec.build(&model)?;
+        println!(
+            "draft: {} — {} layer(s), {} params, proposing up to {spec_k} token(s)/round",
+            spec.label(),
+            draft.cfg.n_layers,
+            draft.n_params()
+        );
+        let t0 = std::time::Instant::now();
+        let (out_tokens, totals) = htransformer::model::spec::generate(
+            &model,
+            &draft,
+            spec_k,
+            &prompt,
+            n_gen,
+            temperature,
+            &mut rng,
+        )?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "sampled {} tokens ({}, seed {seed}):",
+            out_tokens.len(),
+            if temperature > 0.0 {
+                format!("temperature {temperature}")
+            } else {
+                "greedy".to_string()
+            }
+        );
+        let rendered: Vec<String> = out_tokens.iter().map(|t| t.to_string()).collect();
+        println!("  {}", rendered.join(" "));
+        println!(
+            "speculation: {} target round(s), {}/{} proposals accepted ({:.0}%), \
+             {:.2} tokens/round; prefill+decode {} ({:.0} tokens/s)",
+            totals.rounds,
+            totals.accepted,
+            totals.proposed,
+            100.0 * totals.acceptance_rate(),
+            totals.tokens_per_round(),
+            fmt_time(wall),
+            out_tokens.len() as f64 / wall.max(1e-9)
+        );
+        return Ok(());
+    }
 
     let ws = if threads == 0 {
         DecodeWorkspace::parallel()
@@ -408,6 +479,15 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
     let reserve = args.bool("reserve"); // contiguous-reservation baseline
     let prefix_cache = args.usize_or("prefix-cache", 8);
     let prefill_chunk = args.usize_or("prefill-chunk", 0); // 0 = whole-prompt prefill
+    let spec_k = args.usize_or("spec-k", 0); // 0 = plain decode rounds
+    if args.get("spec-draft").is_some() && spec_k == 0 {
+        return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
+    }
+    let spec_draft = if spec_k > 0 {
+        Some(SpecDraft::parse(&args.str_or("spec-draft", "local:8,layers:1"))?)
+    } else {
+        None
+    };
     let shared_prompt = args.usize_or("shared-prompt", 0); // 0 = mixed prompts
     let system_prompt = args.usize_or("system-prompt", 0); // 0 = no shared system prefix
     let mix: Vec<usize> = args
@@ -520,6 +600,8 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         prefill_chunk,
         threads: workers,
         kv_dtype,
+        spec_draft: spec_draft.clone(),
+        spec_k,
     };
     let mut engine = ServeEngine::new(Arc::clone(&model), scfg)?;
     let batched = engine.run(requests)?;
@@ -571,6 +653,18 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         batched.stats.prefill_tokens_saved,
         100.0 * batched.stats.prefill_tokens_saved as f64 / total_prompt.max(1) as f64
     );
+    if let Some(spec) = &spec_draft {
+        println!(
+            "speculative decoding (draft {}, k={spec_k}): {} round(s), {}/{} proposals \
+             accepted ({:.0}%), {:.2} effective tokens/step",
+            spec.label(),
+            batched.stats.spec_rounds,
+            batched.stats.draft_accepted,
+            batched.stats.draft_proposed,
+            100.0 * batched.stats.spec_acceptance_rate(),
+            batched.stats.spec_tokens_per_step()
+        );
+    }
     if let (Some(p50), Some(p99)) = (
         batched.stats.try_tick_latency_us(50.0),
         batched.stats.try_tick_latency_us(99.0),
@@ -642,6 +736,15 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
     let reserve = args.bool("reserve");
     let prefix_cache = args.usize_or("prefix-cache", 8);
     let prefill_chunk = args.usize_or("prefill-chunk", 0);
+    let spec_k = args.usize_or("spec-k", 0); // 0 = plain decode rounds
+    if args.get("spec-draft").is_some() && spec_k == 0 {
+        return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
+    }
+    let spec_draft = if spec_k > 0 {
+        Some(SpecDraft::parse(&args.str_or("spec-draft", "local:8,layers:1"))?)
+    } else {
+        None
+    };
     let max_queue = args.usize_or("max-queue", 64);
     let read_timeout_ms = args.u64_or("read-timeout-ms", 10_000);
     let write_timeout_ms = args.u64_or("write-timeout-ms", 10_000);
@@ -677,6 +780,8 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
             prefill_chunk,
             threads: worker_threads,
             kv_dtype,
+            spec_draft: spec_draft.clone(),
+            spec_k,
         },
         ..NetConfig::default()
     };
@@ -685,8 +790,12 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
     println!("listening on {}", server.local_addr());
     println!(
         "{workers} worker(s) x {worker_threads} thread(s), max_batch {max_batch}, \
-         page_len {page_len}, kv {}, queue cap {max_queue} (503 past that); ctrl-c drains",
-        kv_dtype.as_str()
+         page_len {page_len}, kv {}, queue cap {max_queue} (503 past that){}; ctrl-c drains",
+        kv_dtype.as_str(),
+        match &spec_draft {
+            Some(spec) => format!(", speculative (draft {}, k={spec_k})", spec.label()),
+            None => String::new(),
+        }
     );
     install_sigint();
     while !SIGINT.load(Ordering::SeqCst) && !server.shutdown_flag().load(Ordering::SeqCst) {

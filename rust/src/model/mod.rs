@@ -34,17 +34,24 @@
 //! HTTP/1.1 front end (`htx serve --listen`) sharding requests across
 //! per-worker engines with streaming responses, backpressure and a
 //! `/metrics` endpoint (`tests/net.rs` pins network-vs-sequential
-//! token parity and the disconnect page-release contract).
+//! token parity and the disconnect page-release contract). The [`spec`]
+//! submodule layers draft-and-verify speculative decoding over all of
+//! it: a cheap zoo sibling built from the same weights proposes tokens,
+//! the target verifies them in one batched decode-semantics pass, and
+//! rejected tails roll back through the paged KV cache — with output
+//! bitwise identical to plain decoding at any temperature.
 
 pub mod config;
 pub mod decode;
 pub mod net;
 pub mod radix;
 pub mod serve;
+pub mod spec;
 
 pub use config::{AttnSpec, ModelConfig};
 pub use decode::{sample_logits, DecodeSession, DecodeWorkspace};
 pub use net::{NetConfig, NetServer};
+pub use spec::SpecDraft;
 pub use serve::{
     multi_tenant_workload, run_sequential, run_sequential_dtype, shared_prefix_workload,
     synthetic_workload, Completion, Request, ServeConfig, ServeEngine, ServeReport, ServeStats,

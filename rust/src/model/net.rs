@@ -26,8 +26,11 @@
 //!   [`run_sequential`](super::run_sequential) produces for the same
 //!   request — scheduling, sharding and routing never change outputs.
 //! * `GET /metrics` — JSON snapshot: per-request latency percentiles,
-//!   queue depth, pages in use, prefix-hit rate, per-worker session
-//!   counts and counters.
+//!   queue depth, pages in use, prefix-hit rate, speculative-decoding
+//!   acceptance (`spec_acceptance_rate`, `spec_tokens_per_step` — zero
+//!   when speculation is off), per-worker session counts and counters.
+//!   `docs/OPERATIONS.md` documents every field with units and healthy
+//!   ranges.
 //! * `GET /healthz` — readiness probe.
 //!
 //! Error mapping: malformed syntax or body → `400`; a request the
@@ -138,6 +141,11 @@ struct WorkerGauges {
     prefix_cache_tokens: AtomicUsize,
     evictions: AtomicUsize,
     cancelled: AtomicUsize,
+    /// Speculative-decoding work counters (zero when `spec_draft` is
+    /// off): target verify rounds, draft proposals and acceptances.
+    spec_rounds: AtomicUsize,
+    draft_proposed: AtomicUsize,
+    draft_accepted: AtomicUsize,
 }
 
 impl WorkerGauges {
@@ -221,6 +229,7 @@ impl Shared {
         let (mut lookups, mut hits, mut evictions, mut cancelled, mut generated) =
             (0usize, 0usize, 0usize, 0usize, 0usize);
         let (mut prefilled, mut saved, mut cache_tokens) = (0usize, 0usize, 0usize);
+        let (mut spec_rounds, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
         for (i, w) in self.workers.iter().enumerate() {
             let g = &w.gauges;
             let (wq, wa) = (g.queued.load(Ordering::Relaxed), g.active.load(Ordering::Relaxed));
@@ -238,6 +247,9 @@ impl Shared {
             prefilled += g.prefill_tokens.load(Ordering::Relaxed);
             saved += g.prefill_tokens_saved.load(Ordering::Relaxed);
             cache_tokens += g.prefix_cache_tokens.load(Ordering::Relaxed);
+            spec_rounds += g.spec_rounds.load(Ordering::Relaxed);
+            proposed += g.draft_proposed.load(Ordering::Relaxed);
+            accepted += g.draft_accepted.load(Ordering::Relaxed);
             workers.push(obj(vec![
                 ("worker", num(i as f64)),
                 ("queued", num(wq as f64)),
@@ -249,6 +261,12 @@ impl Shared {
             ]));
         }
         let hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+        let spec_accept = if proposed > 0 { accepted as f64 / proposed as f64 } else { 0.0 };
+        let spec_tps = if spec_rounds > 0 {
+            (accepted + spec_rounds) as f64 / spec_rounds as f64
+        } else {
+            0.0
+        };
         obj(vec![
             ("requests_total", num(requests as f64)),
             ("completed_total", num(completed as f64)),
@@ -266,6 +284,11 @@ impl Shared {
             ("prefix_cache_tokens", num(cache_tokens as f64)),
             ("evictions_total", num(evictions as f64)),
             ("cancelled_total", num(cancelled as f64)),
+            ("spec_rounds_total", num(spec_rounds as f64)),
+            ("draft_proposed_total", num(proposed as f64)),
+            ("draft_accepted_total", num(accepted as f64)),
+            ("spec_acceptance_rate", num(spec_accept)),
+            ("spec_tokens_per_step", num(spec_tps)),
             (
                 "latency_ms",
                 obj(vec![
@@ -423,6 +446,9 @@ fn publish_gauges(engine: &ServeEngine, gauges: &WorkerGauges) {
     gauges.prefix_cache_tokens.store(engine.prefix_cache_tokens(), Ordering::Relaxed);
     gauges.evictions.store(st.evictions, Ordering::Relaxed);
     gauges.cancelled.store(st.cancelled, Ordering::Relaxed);
+    gauges.spec_rounds.store(st.spec_rounds, Ordering::Relaxed);
+    gauges.draft_proposed.store(st.draft_proposed, Ordering::Relaxed);
+    gauges.draft_accepted.store(st.draft_accepted, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------

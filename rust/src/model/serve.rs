@@ -78,7 +78,9 @@
 //!     through a ragged batched step: embeddings for all `n` sessions
 //!     are assembled into `[n, D]` rows, each layer runs its LayerNorm
 //!     / Q/K/V / output / FFN matmuls **once for the whole batch**, and
-//!     attention goes through [`Attention::decode_step_batch`]. With
+//!     attention goes through
+//!     [`Attention::decode_step_batch`](crate::attention::Attention::decode_step_batch).
+//!     With
 //!     `threads > 1` the active set is split into contiguous chunks
 //!     that run on the crate thread pool.
 //!  4. **Completion / eviction** — sessions that reached their
@@ -113,7 +115,19 @@
 //! * `prefill_chunk` — max prompt tokens prefilled per tick
 //!   (0 = whole prompt at admission);
 //! * `threads` — worker count for prefill head dispatch and chunked
-//!   decode rounds (`<= 1` runs on the calling thread).
+//!   decode rounds (`<= 1` runs on the calling thread);
+//! * `spec_draft` / `spec_k` — speculative decoding
+//!   ([`super::spec`]): a draft sibling built from the target's own
+//!   weights proposes up to `spec_k` tokens per round and the target
+//!   verifies the whole proposal in one batched decode-semantics pass,
+//!   so a round can emit up to `spec_k + 1` tokens per session.
+//!   Accepted prefixes commit; rejected tails roll back through
+//!   [`DecodeState::truncate_to`], returning their pages to the pool.
+//!   Output is bitwise identical to non-speculative serving at any
+//!   temperature, so every parity guard above — and eviction's
+//!   regenerate-on-requeue contract — still holds. Each session
+//!   carries a small draft KV cache (always F32, unbudgeted overhead
+//!   outside `max_tokens`).
 //!
 //! Entry points: `htx serve-bench` (closed-loop synthetic workload,
 //! paged vs reserved), `benches/serve.rs` (emits `BENCH_serve.json`,
@@ -124,7 +138,9 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::config::AttnSpec;
 use super::radix::{CachedPrefix, RadixCache};
+use super::spec::{begin_draft, spec_round, SpecBufs, SpecDraft, SpecSlot, SpecTotals};
 use super::{matmul_q, sample_logits, DecodeWorkspace, Model, ModelWorkspace, LN_EPS};
 use crate::attention::DecodeState;
 use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into};
@@ -174,6 +190,20 @@ pub struct ServeConfig {
     /// against `max_tokens` — compressed caches admit more concurrent
     /// sessions under the same budget, at bounded decode drift.
     pub kv_dtype: PageDtype,
+    /// Speculative-decoding draft spec (`None` disables speculation).
+    /// The draft model is built once, at engine construction, from the
+    /// target's own weights ([`SpecDraft::build`]); every session then
+    /// carries its own small draft KV cache (always F32, unbudgeted)
+    /// alongside its target states. Greedy and sampled outputs stay
+    /// bitwise identical to non-speculative serving. Requires a causal
+    /// target; a pyramid (`h1d`) target additionally requires exact
+    /// F32 `kv_dtype` pages — rollback replays the fine history into
+    /// the boundary partials.
+    pub spec_draft: Option<SpecDraft>,
+    /// Maximum draft tokens proposed per speculative round; each round
+    /// emits between 1 and `spec_k + 1` tokens per session. `0` with a
+    /// configured draft degenerates to plain one-token rounds.
+    pub spec_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -187,6 +217,8 @@ impl Default for ServeConfig {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: PageDtype::F32,
+            spec_draft: None,
+            spec_k: 0,
         }
     }
 }
@@ -255,7 +287,9 @@ pub struct ServeStats {
     /// token arrives once per tick), which `round_s` alone understates;
     /// indexed 1:1 with `round_tokens`.
     pub tick_s: Vec<f64>,
-    /// Tokens produced by each round (= active sessions that round).
+    /// Tokens produced by each round — the active sessions that round,
+    /// or, under speculation, the sum of every session's emitted
+    /// tokens (1..=`spec_k + 1` each).
     pub round_tokens: Vec<usize>,
     /// Peak concurrently active sessions.
     pub peak_active: usize,
@@ -275,6 +309,18 @@ pub struct ServeStats {
     /// Peak unique KV pages alive in the pool, all streams (fine K/V,
     /// Q history, pyramid levels).
     pub peak_pages: usize,
+    /// Speculative rounds executed — one per active session per decode
+    /// round when a draft is configured. Work counters: rounds whose
+    /// tokens were later discarded by an eviction still count (the
+    /// requeued request re-runs them), so these measure speculation
+    /// effort, while `generated` measures net tokens.
+    pub spec_rounds: usize,
+    /// Draft tokens proposed across all speculative rounds.
+    pub draft_proposed: usize,
+    /// Draft proposals the target accepted. Each round emits its
+    /// accepted prefix plus one unconditional sample, so spec-round
+    /// tokens total `draft_accepted + spec_rounds`.
+    pub draft_accepted: usize,
 }
 
 impl ServeStats {
@@ -346,7 +392,9 @@ impl ServeStats {
         self.try_tick_latency_us(pct).unwrap_or(0.0)
     }
 
-    /// Mean active sessions per decode round (batch fill).
+    /// Mean tokens per decode round — active sessions per round (batch
+    /// fill) without speculation; with a draft configured, emitted
+    /// tokens per round across the batch.
     pub fn mean_occupancy(&self) -> f64 {
         if self.round_tokens.is_empty() {
             0.0
@@ -361,6 +409,28 @@ impl ServeStats {
             0.0
         } else {
             self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Fraction of draft proposals the target accepted (0 when the
+    /// draft never proposed — speculation off or `spec_k == 0`).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
+        }
+    }
+
+    /// Tokens emitted per speculative round — the effective
+    /// tokens-per-step of the target model (`> 1.0` is the speculation
+    /// win; exactly 1.0 at `spec_k == 0` or with every proposal
+    /// rejected).
+    pub fn spec_tokens_per_step(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            (self.draft_accepted + self.spec_rounds) as f64 / self.spec_rounds as f64
         }
     }
 }
@@ -416,6 +486,9 @@ struct SessionSlot {
     logits: Vec<f32>,
     /// `layer * n_heads + head` order, like `DecodeWorkspace`.
     states: Vec<DecodeState>,
+    /// Draft decode caches when speculation is on ([`begin_draft`]
+    /// order — the draft's own layer/head count); empty otherwise.
+    draft_states: Vec<DecodeState>,
     /// The original request, kept so an out-of-pages eviction can
     /// requeue it verbatim (and so chunked prefill can read the
     /// remaining prompt suffix).
@@ -442,6 +515,7 @@ impl SessionSlot {
             tokens: Vec::new(),
             logits: Vec::new(),
             states: Vec::new(),
+            draft_states: Vec::new(),
             request: None,
             prefilled: 0,
             admitted_round: 0,
@@ -576,6 +650,57 @@ fn step_slots(model: &Model, slots: &mut [SessionSlot], buf: &mut StepBuf) {
     }
 }
 
+/// One speculative round for every session in `slots` — the
+/// [`step_slots`] counterpart when a draft is configured. Each session
+/// runs [`spec_round`]: the draft proposes up to `k` tokens, the
+/// target verifies `pending + proposals` in one batched
+/// decode-semantics pass, the accepted prefix commits and the rejected
+/// tail rolls back to the pool. Within a session the verify pass
+/// batches over proposal rows; across sessions the engine parallelises
+/// by splitting the active set into worker chunks, exactly like the
+/// plain round. Page faults here take the pool lock (appends are not
+/// pre-staged beyond the first row — rejected speculative pages would
+/// make eager staging wasteful), which the shared-pool mutex makes
+/// safe from worker threads.
+///
+/// Emitted tokens extend `slot.tokens` and advance `slot.pos`, so
+/// completion, retirement, streaming (`for_each_active`) and eviction
+/// replay all behave as if the tokens had arrived one round at a time.
+fn spec_step_slots(
+    target: &Model,
+    draft: &Model,
+    k: usize,
+    slots: &mut [SessionSlot],
+    bufs: &mut SpecBufs,
+) -> SpecTotals {
+    let mut totals = SpecTotals::default();
+    for slot in slots.iter_mut() {
+        let req = slot.request.as_ref().expect("active slot keeps its request");
+        let mut sslot = SpecSlot {
+            prompt: &req.prompt,
+            history: &slot.tokens,
+            pos: slot.pos,
+            max_emit: slot.max_new - slot.tokens.len(),
+            temperature: slot.temperature,
+            rng: &mut slot.rng,
+            states: &mut slot.states,
+            draft_states: &mut slot.draft_states,
+        };
+        let out = spec_round(target, draft, k, &mut sslot, bufs);
+        totals.add(&out);
+        slot.pos += out.emitted;
+        slot.tokens.extend_from_slice(&bufs.emitted);
+        if slot.tokens.len() >= slot.max_new {
+            slot.done = true;
+            slot.logits.clear();
+            slot.logits.extend_from_slice(bufs.target.logits().row(out.accepted));
+        } else {
+            slot.next_token = *bufs.emitted.last().expect("a round emits at least one token");
+        }
+    }
+    totals
+}
+
 /// The continuous-batching scheduler; see the module docs. Owns the
 /// model through an `Arc` so chunked rounds can travel through the
 /// thread pool's `'static` jobs.
@@ -623,6 +748,11 @@ pub struct ServeEngine {
     chunk_store: Vec<Vec<SessionSlot>>,
     /// Per-worker step buffers.
     bufs: Vec<StepBuf>,
+    /// Draft model for speculative rounds, built at construction from
+    /// `cfg.spec_draft` (`None` = plain one-token rounds).
+    draft: Option<Arc<Model>>,
+    /// Per-worker speculative scratch (verify + propose buffers).
+    spec_bufs: Vec<SpecBufs>,
     completions: Vec<Completion>,
     stats: ServeStats,
 }
@@ -647,6 +777,29 @@ impl ServeEngine {
         let share_capable = model.cfg.causal
             && model.algo.prefix_share_align(model.cfg.max_len.max(2)) > 0
             && cfg.kv_dtype == PageDtype::F32;
+        let draft = match &cfg.spec_draft {
+            Some(spec) => {
+                if !model.cfg.causal {
+                    return Err(
+                        "speculative decoding needs a causal target (draft-and-verify \
+                         replays strictly left-to-right decode steps)"
+                            .to_string(),
+                    );
+                }
+                if matches!(model.cfg.attention, AttnSpec::H1d { .. })
+                    && cfg.kv_dtype != PageDtype::F32
+                {
+                    return Err(
+                        "speculative decoding on an h1d target needs exact F32 KV pages \
+                         (kv_dtype): rollback replays the fine history into the pyramid \
+                         boundary partials"
+                            .to_string(),
+                    );
+                }
+                Some(Arc::new(spec.build(&model)?))
+            }
+            None => None,
+        };
         Ok(ServeEngine {
             kv_page_cost,
             pool: PagePool::new(cfg.page_len),
@@ -662,6 +815,8 @@ impl ServeEngine {
             free: Vec::with_capacity(cfg.max_batch),
             chunk_store: (0..threads).map(|_| Vec::with_capacity(cfg.max_batch)).collect(),
             bufs: (0..threads).map(|_| StepBuf::default()).collect(),
+            draft,
+            spec_bufs: (0..threads).map(|_| SpecBufs::default()).collect(),
             completions: Vec::new(),
             stats: ServeStats::default(),
             model,
@@ -805,7 +960,7 @@ impl ServeEngine {
             self.stats.generated -= slot.tokens.len();
             slot.tokens.clear();
             slot.logits.clear();
-            for st in &mut slot.states {
+            for st in slot.states.iter_mut().chain(slot.draft_states.iter_mut()) {
                 st.release_pages();
             }
             self.free.push(slot);
@@ -948,7 +1103,8 @@ impl ServeEngine {
             .chain(self.free.iter())
         {
             out.push((slot.states.as_ptr() as usize, slot.states.capacity()));
-            for st in &slot.states {
+            out.push((slot.draft_states.as_ptr() as usize, slot.draft_states.capacity()));
+            for st in slot.states.iter().chain(slot.draft_states.iter()) {
                 out.extend(st.buffer_snapshot());
             }
             out.push((slot.tokens.as_ptr() as usize, slot.tokens.capacity()));
@@ -957,6 +1113,9 @@ impl ServeEngine {
         self.cache.buffer_snapshot_into(&mut out);
         for b in &self.bufs {
             out.extend(b.snapshot());
+        }
+        for b in &self.spec_bufs {
+            out.extend(b.capacity_snapshot());
         }
         for c in &self.chunk_store {
             out.push((c.as_ptr() as usize, c.capacity()));
@@ -1029,6 +1188,17 @@ impl ServeEngine {
             for st in &mut slot.states[..n_states] {
                 st.force_q_cache();
             }
+        }
+        // speculation: pyramid targets must keep the fine-Q history so
+        // rejected tails can rebuild boundary partials on rollback, and
+        // every session carries its own (small, unbudgeted) draft KV
+        if let Some(draft) = &self.draft {
+            for st in &mut slot.states[..n_states] {
+                if st.n_coarse > 0 && !st.cache_q {
+                    st.force_q_cache();
+                }
+            }
+            begin_draft(draft, &mut slot.draft_states, &self.pool);
         }
 
         // radix cache: exact whole-prompt entries clone every page
@@ -1239,7 +1409,7 @@ impl ServeEngine {
     /// regenerating identical tokens) and recycle the slot.
     fn evict_requeue(&mut self, mut slot: SessionSlot) {
         let req = slot.request.take().expect("evicted slot keeps its request");
-        for st in &mut slot.states {
+        for st in slot.states.iter_mut().chain(slot.draft_states.iter_mut()) {
             st.release_pages();
         }
         // the discarded tokens will be regenerated after the requeue,
@@ -1268,7 +1438,7 @@ impl ServeEngine {
         slot.tokens.clear();
         slot.logits.clear();
         slot.request = None;
-        for st in &mut slot.states {
+        for st in slot.states.iter_mut().chain(slot.draft_states.iter_mut()) {
             st.release_pages();
         }
         self.free.push(slot);
@@ -1323,11 +1493,18 @@ impl ServeEngine {
         // decoding sessions never lose their slot, and a requeued
         // request regenerates identical tokens from its own RNG stream.
         if !self.cfg.reserve && !self.active.is_empty() {
+            // a speculative round may append up to spec_k + 1 tokens per
+            // session (the worst case commits everything); charge that
+            // horizon so a round can never overrun max_tokens mid-verify
+            let spec_k = if self.draft.is_some() { self.cfg.spec_k } else { 0 };
             loop {
                 let need: usize = self
                     .active
                     .iter()
-                    .map(|s| s.states[0].ctx_stage_cost() * self.kv_page_cost)
+                    .map(|s| {
+                        let j = (spec_k + 1).min(s.max_new - s.tokens.len());
+                        s.states[0].ctx_append_cost(j) * self.kv_page_cost
+                    })
                     .sum::<usize>()
                     .saturating_add(self.prefill_debt());
                 if self.fits_ctx(need) {
@@ -1365,39 +1542,94 @@ impl ServeEngine {
         let n = self.active.len();
         if n > 0 {
             let t_round = Instant::now();
-            match self.prefill.attn.pool() {
-                Some(pool) if n > 1 => {
-                    let workers = pool.size().min(n);
-                    // deterministic contiguous split: chunk c covers
-                    // active rows [c*n/workers, (c+1)*n/workers)
-                    let mut jobs: Vec<(Vec<SessionSlot>, StepBuf)> = Vec::with_capacity(workers);
-                    for c in (0..workers).rev() {
-                        let lo = c * n / workers;
-                        let mut chunk = self.chunk_store.pop().expect("chunk container");
-                        chunk.clear();
-                        chunk.extend(self.active.drain(lo..));
-                        let buf = self.bufs.pop().expect("step buffer");
-                        jobs.push((chunk, buf));
+            let round_tokens = if let Some(draft) = self.draft.clone() {
+                // speculative round: every session drafts + verifies,
+                // emitting 1..=spec_k + 1 tokens; worker-chunk split
+                // identical to the plain round below
+                let k = self.cfg.spec_k;
+                let totals = match self.prefill.attn.pool() {
+                    Some(pool) if n > 1 => {
+                        let workers = pool.size().min(n);
+                        let mut jobs: Vec<(Vec<SessionSlot>, SpecBufs)> =
+                            Vec::with_capacity(workers);
+                        for c in (0..workers).rev() {
+                            let lo = c * n / workers;
+                            let mut chunk = self.chunk_store.pop().expect("chunk container");
+                            chunk.clear();
+                            chunk.extend(self.active.drain(lo..));
+                            let buf = self.spec_bufs.pop().expect("spec buffer");
+                            jobs.push((chunk, buf));
+                        }
+                        jobs.reverse();
+                        let model = Arc::clone(&self.model);
+                        let done = pool.map(jobs, move |(mut chunk, mut buf)| {
+                            let t = spec_step_slots(
+                                model.as_ref(),
+                                draft.as_ref(),
+                                k,
+                                &mut chunk,
+                                &mut buf,
+                            );
+                            (chunk, buf, t)
+                        });
+                        let mut totals = SpecTotals::default();
+                        for (mut chunk, buf, t) in done {
+                            self.active.append(&mut chunk);
+                            self.chunk_store.push(chunk);
+                            self.spec_bufs.push(buf);
+                            totals.merge(&t);
+                        }
+                        totals
                     }
-                    jobs.reverse();
-                    let model = Arc::clone(&self.model);
-                    let done = pool.map(jobs, move |(mut chunk, mut buf)| {
-                        step_slots(model.as_ref(), &mut chunk, &mut buf);
-                        (chunk, buf)
-                    });
-                    for (mut chunk, buf) in done {
-                        self.active.append(&mut chunk);
-                        self.chunk_store.push(chunk);
-                        self.bufs.push(buf);
+                    _ => spec_step_slots(
+                        self.model.as_ref(),
+                        draft.as_ref(),
+                        k,
+                        &mut self.active,
+                        &mut self.spec_bufs[0],
+                    ),
+                };
+                self.stats.spec_rounds += totals.rounds as usize;
+                self.stats.draft_proposed += totals.proposed as usize;
+                self.stats.draft_accepted += totals.accepted as usize;
+                totals.emitted as usize
+            } else {
+                match self.prefill.attn.pool() {
+                    Some(pool) if n > 1 => {
+                        let workers = pool.size().min(n);
+                        // deterministic contiguous split: chunk c covers
+                        // active rows [c*n/workers, (c+1)*n/workers)
+                        let mut jobs: Vec<(Vec<SessionSlot>, StepBuf)> =
+                            Vec::with_capacity(workers);
+                        for c in (0..workers).rev() {
+                            let lo = c * n / workers;
+                            let mut chunk = self.chunk_store.pop().expect("chunk container");
+                            chunk.clear();
+                            chunk.extend(self.active.drain(lo..));
+                            let buf = self.bufs.pop().expect("step buffer");
+                            jobs.push((chunk, buf));
+                        }
+                        jobs.reverse();
+                        let model = Arc::clone(&self.model);
+                        let done = pool.map(jobs, move |(mut chunk, mut buf)| {
+                            step_slots(model.as_ref(), &mut chunk, &mut buf);
+                            (chunk, buf)
+                        });
+                        for (mut chunk, buf) in done {
+                            self.active.append(&mut chunk);
+                            self.chunk_store.push(chunk);
+                            self.bufs.push(buf);
+                        }
+                    }
+                    _ => {
+                        step_slots(self.model.as_ref(), &mut self.active, &mut self.bufs[0]);
                     }
                 }
-                _ => {
-                    step_slots(self.model.as_ref(), &mut self.active, &mut self.bufs[0]);
-                }
-            }
+                n
+            };
             self.stats.rounds += 1;
-            self.stats.generated += n;
-            self.stats.round_tokens.push(n);
+            self.stats.generated += round_tokens;
+            self.stats.round_tokens.push(round_tokens);
             self.stats.round_s.push(t_round.elapsed().as_secs_f64());
             self.stats.tick_s.push(t_tick.elapsed().as_secs_f64());
             // eviction: retire finished sessions, preserving order
@@ -2229,5 +2461,154 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 4);
+    }
+
+    fn spec_cfg(draft: &str, k: usize, threads: usize) -> ServeConfig {
+        ServeConfig {
+            spec_draft: Some(SpecDraft::parse(draft).unwrap()),
+            spec_k: k,
+            threads,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn speculative_serve_matches_sequential_across_the_zoo_and_threads() {
+        // the tentpole pin: greedy AND sampled speculative serving is
+        // bitwise the sequential oracle, for pyramid and full targets,
+        // serial and pooled rounds alike — and the acceptance counters
+        // sum exactly to the emitted tokens
+        for attn in [AttnSpec::H1d { nr: 4 }, AttnSpec::Full] {
+            let model = Arc::new(tiny_model(attn, 64));
+            for temperature in [0.0f32, 0.7] {
+                let reqs = synthetic_workload(6, &[7, 11], 12, 29, temperature, 23);
+                let seq = run_sequential(&model, &reqs).unwrap();
+                for threads in [1usize, 2] {
+                    let mut eng = ServeEngine::new(
+                        Arc::clone(&model),
+                        spec_cfg("local:4,layers:1", 3, threads),
+                    )
+                    .unwrap();
+                    let rep = eng.run(reqs.clone()).unwrap();
+                    assert_eq!(
+                        seq.tokens_by_id(),
+                        rep.tokens_by_id(),
+                        "speculative serving diverged (threads {threads}, temp {temperature})"
+                    );
+                    let mut by_id = rep.completions.clone();
+                    by_id.sort_by_key(|c| c.id);
+                    for (s, c) in seq.completions.iter().zip(&by_id) {
+                        assert_eq!(s.last_logits, c.last_logits, "last_logits drifted");
+                    }
+                    let st = &rep.stats;
+                    assert!(st.spec_rounds > 0 && st.draft_proposed > 0);
+                    assert!(st.draft_accepted <= st.draft_proposed);
+                    // every spec round emits accepted + 1 tokens, plus
+                    // one prefill-sampled first token per request
+                    assert_eq!(
+                        st.draft_accepted + st.spec_rounds + reqs.len(),
+                        st.generated,
+                        "acceptance accounting must sum to emitted tokens"
+                    );
+                    assert_eq!(st.generated, 6 * 12);
+                    assert!(st.spec_tokens_per_step() >= 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_k_zero_degenerates_to_plain_one_token_rounds() {
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 48));
+        let reqs = synthetic_workload(4, &[6, 9], 8, 29, 0.0, 31);
+        let seq = run_sequential(&model, &reqs).unwrap();
+        let mut eng =
+            ServeEngine::new(Arc::clone(&model), spec_cfg("local:2,layers:1", 0, 1)).unwrap();
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+        let st = &rep.stats;
+        assert_eq!(st.draft_proposed, 0, "k = 0 must never run the draft");
+        assert_eq!(st.spec_rounds + reqs.len(), st.generated, "one token per round");
+        assert_eq!(st.spec_tokens_per_step(), 1.0);
+        assert_eq!(st.spec_acceptance_rate(), 0.0);
+    }
+
+    #[test]
+    fn eviction_under_speculation_replays_identical_tokens() {
+        // tight page budget: a session gets evicted mid-stream and
+        // requeued; the speculative replay must regenerate the same
+        // tokens, and the draft's pages must release with the target's
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 24));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                max_batch: 3,
+                max_tokens: 20,
+                page_len: 4,
+                prefix_cache: 0, // live pages must pin to zero at the end
+                ..spec_cfg("local:2,layers:1", 3, 1)
+            },
+        )
+        .unwrap();
+        let reqs = synthetic_workload(3, &[7], 9, 29, 0.0, 41);
+        let rep = eng.run(reqs.clone()).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        assert!(rep.stats.evictions > 0, "the budget should force an eviction");
+        assert!(rep.stats.peak_ctx_tokens <= 20, "budget exceeded");
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+        assert_eq!(
+            eng.pool_stats().live,
+            0,
+            "target and draft pages must all return to the pool"
+        );
+    }
+
+    #[test]
+    fn speculation_config_gates_surface_at_construction() {
+        // pyramid target + compressed KV: rollback would replay from
+        // dequantised rows, so the engine refuses the combination
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 24));
+        let err = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                kv_dtype: PageDtype::F16,
+                ..spec_cfg("local:2,layers:1", 2, 1)
+            },
+        )
+        .err()
+        .expect("h1d + f16 KV + speculation must be rejected");
+        assert!(err.contains("F32"), "{err}");
+        // full-attention targets may combine speculation with
+        // compressed KV (no pyramid partials to replay) — and still
+        // match the compressed sequential oracle
+        let full = Arc::new(tiny_model(AttnSpec::Full, 24));
+        let mut eng = ServeEngine::new(
+            Arc::clone(&full),
+            ServeConfig {
+                kv_dtype: PageDtype::F16,
+                ..spec_cfg("local:2,layers:1", 2, 1)
+            },
+        )
+        .unwrap();
+        let reqs = synthetic_workload(3, &[6], 5, 29, 0.0, 51);
+        let rep = eng.run(reqs.clone()).unwrap();
+        let seq = run_sequential_dtype(&full, &reqs, PageDtype::F16).unwrap();
+        assert_eq!(seq.tokens_by_id(), rep.tokens_by_id());
+        // a bad draft spec surfaces at construction, not at first tick
+        let err = ServeEngine::new(
+            full,
+            ServeConfig {
+                spec_draft: Some(SpecDraft {
+                    local_radius: None,
+                    n_layers: Some(9),
+                }),
+                spec_k: 2,
+                ..ServeConfig::default()
+            },
+        )
+        .err()
+        .expect("an over-deep draft must be rejected");
+        assert!(err.contains("layer count"), "{err}");
     }
 }

@@ -1,0 +1,902 @@
+//! Draft-and-verify speculative decoding over the attention zoo.
+//!
+//! The zoo already contains natural draft models: a `local`-attention
+//! and/or fewer-layer sibling built **from the same weights** proposes
+//! `k` tokens per round, the target model scores the whole proposal in
+//! one batched pass, and the accepted prefix commits while the rejected
+//! tail rolls back — [`crate::tensor::paged::PagedRows`] page release
+//! makes the rollback O(pages), which is exactly why the KV cache is
+//! paged. Per emitted token the target pays the same attention work as
+//! plain decoding, but its weight matmuls amortise over `k + 1` rows.
+//!
+//! Invariants this module maintains (and its tests pin):
+//!
+//!  * **Bitwise parity.** A verify pass feeds each row through
+//!    [`Attention::decode_step`](crate::attention::Attention::decode_step)
+//!    per head — *decode* semantics, strictly causal — while every
+//!    non-attention op (LayerNorm, projections, FFN, logits head) is
+//!    row-local, so batching rows changes nothing. Tokens are therefore
+//!    always sampled from logits bitwise equal to what sequential
+//!    decoding would produce, at any temperature: greedy *and* sampled
+//!    speculative output is identical to non-speculative output, token
+//!    for token and RNG draw for RNG draw.
+//!  * **Rollback.** After scoring `k + 1` rows with `a` proposals
+//!    accepted, [`DecodeState::truncate_to`] rewinds the target to
+//!    `pos + a + 1` tokens (h1d pyramid boundary partials rebuilt
+//!    bitwise from the fine history — pyramid targets need F32 fine
+//!    K/V and the fine-Q cache) and releases the rolled-back pages to
+//!    the shared pool. Zero-leak: a state never holds more pages than
+//!    its committed length needs.
+//!  * **Draft sync.** The draft keeps its own (small, paged, always
+//!    F32) KV caches. Entering a round, `draft.len <= pos`; the round
+//!    catches the draft up from the token history, so an evicted or
+//!    freshly admitted session needs no separate draft prefill.
+//!  * **Forward progress.** Even an all-rejected round emits one token
+//!    — row 0 of the verify pass scores the pending token, whose
+//!    sample is unconditional (the plain decode step in disguise), so
+//!    `k = 0` degenerates to exactly non-speculative decoding.
+
+use super::config::AttnSpec;
+use super::{matmul_q, sample_logits, Model, ModelQuant, ModelWorkspace, LN_EPS};
+use crate::attention::DecodeState;
+use crate::tensor::ops::{add_assign, add_bias_rows, gelu, layernorm_rows_into};
+use crate::tensor::paged::DEFAULT_PAGE_LEN;
+use crate::tensor::{Mat, PageDtype, PagePool};
+use crate::util::Rng;
+
+/// How to derive a draft model from the target: swap the attention for
+/// a cheap `local` window and/or keep only the first `n` layers. Both
+/// reuse the target's own weights (embeddings, layer parameters and the
+/// tied logits head are cloned, not retrained) — the zoo's
+/// drop-in-replacement property applied as a speculation mechanism.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecDraft {
+    /// Replace the target's attention with `local` at this radius.
+    pub local_radius: Option<usize>,
+    /// Keep only the first `n` layers of the target trunk.
+    pub n_layers: Option<usize>,
+}
+
+impl SpecDraft {
+    /// Parse a CLI draft spec: comma-separated `local:<radius>` and/or
+    /// `layers:<n>` (e.g. `local:8`, `layers:1`, `local:8,layers:1`).
+    pub fn parse(s: &str) -> Result<SpecDraft, String> {
+        let mut draft = SpecDraft {
+            local_radius: None,
+            n_layers: None,
+        };
+        for part in s.split(',') {
+            let part = part.trim();
+            if let Some(r) = part.strip_prefix("local:") {
+                let r: usize = r
+                    .parse()
+                    .map_err(|_| format!("bad local radius '{r}' in draft spec"))?;
+                if r == 0 {
+                    return Err("draft local radius must be >= 1".to_string());
+                }
+                draft.local_radius = Some(r);
+            } else if let Some(n) = part.strip_prefix("layers:") {
+                let n: usize = n
+                    .parse()
+                    .map_err(|_| format!("bad layer count '{n}' in draft spec"))?;
+                draft.n_layers = Some(n);
+            } else {
+                return Err(format!(
+                    "unknown draft spec part '{part}' (expected local:<radius> and/or layers:<n>)"
+                ));
+            }
+        }
+        if draft.local_radius.is_none() && draft.n_layers.is_none() {
+            return Err("empty draft spec (expected local:<radius> and/or layers:<n>)".to_string());
+        }
+        Ok(draft)
+    }
+
+    /// Canonical form of the spec, `parse`-compatible.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(r) = self.local_radius {
+            parts.push(format!("local:{r}"));
+        }
+        if let Some(n) = self.n_layers {
+            parts.push(format!("layers:{n}"));
+        }
+        parts.join(",")
+    }
+
+    /// Build the draft [`Model`] from the target's weights: clone the
+    /// parameters, drop the truncated layers, instantiate the draft
+    /// attention, and re-derive the int8 mirrors when the target runs
+    /// quantised. The draft must actually be cheaper-or-different —
+    /// a spec that reproduces the target config is rejected.
+    pub fn build(&self, target: &Model) -> Result<Model, String> {
+        let mut cfg = target.cfg.clone();
+        if let Some(r) = self.local_radius {
+            cfg.attention = AttnSpec::Local { radius: r };
+        }
+        if let Some(n) = self.n_layers {
+            if n == 0 || n > target.cfg.n_layers {
+                return Err(format!(
+                    "draft layer count {n} outside 1..={}",
+                    target.cfg.n_layers
+                ));
+            }
+            cfg.n_layers = n;
+        }
+        if cfg == target.cfg {
+            return Err(format!(
+                "draft spec '{}' reproduces the target config; nothing to speculate with",
+                self.label()
+            ));
+        }
+        cfg.validate()?;
+        let mut params = target.params.clone();
+        params.layers.truncate(cfg.n_layers);
+        let algo = cfg.attention.build();
+        let quant = cfg.quant_weights.then(|| ModelQuant::from_params(&params));
+        Ok(Model {
+            cfg,
+            params,
+            algo,
+            quant,
+        })
+    }
+}
+
+/// Activation buffers for one [`decode_rows`] pass — the `[j, D]`
+/// generalisation of the single-token decode step's scratch. Grow-only,
+/// like every workspace in the crate: repeated rounds at one row count
+/// allocate nothing.
+#[derive(Default)]
+pub struct SpecBuf {
+    /// `[j, D]` residual stream.
+    x: Mat,
+    /// `[j, D]` LayerNorm output.
+    hn: Mat,
+    /// `[j, D]` Q/K/V projection rows (head `h` = columns `h*dh..`).
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// `[j, D]` per-head attention outputs, written in place.
+    merged: Mat,
+    /// `[j, D]` projection / residual-delta scratch.
+    proj: Mat,
+    /// `[j, d_ff]` FFN hidden activations.
+    ff: Mat,
+    /// `[j, V]` logits (filled only when requested).
+    logits: Mat,
+}
+
+impl SpecBuf {
+    /// The logits the last [`decode_rows`] call produced (row `i` =
+    /// fed row `i`'s next-token distribution).
+    pub fn logits(&self) -> &Mat {
+        &self.logits
+    }
+
+    /// `(pointer, capacity)` of every heap buffer — the zero-alloc
+    /// tripwire, same pattern as `ModelWorkspace::capacity_snapshot`.
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        [
+            &self.x,
+            &self.hn,
+            &self.q,
+            &self.k,
+            &self.v,
+            &self.merged,
+            &self.proj,
+            &self.ff,
+            &self.logits,
+        ]
+        .iter()
+        .map(|m| (m.data.as_ptr() as usize, m.data.capacity()))
+        .collect()
+    }
+}
+
+/// Per-worker speculation scratch: one [`SpecBuf`] for the target's
+/// verify pass, one for the draft's propose steps, plus the token
+/// scratch vectors a round fills.
+#[derive(Default)]
+pub struct SpecBufs {
+    /// Verify-pass buffers; after [`spec_round`] returns,
+    /// `target.logits().row(outcome.accepted)` is the distribution the
+    /// final emitted token was sampled from (the serve engine's
+    /// `last_logits` contract).
+    pub target: SpecBuf,
+    /// Draft catch-up / propose buffers.
+    pub draft: SpecBuf,
+    /// Tokens emitted by the last round, in order (`accepted + 1` of
+    /// them).
+    pub emitted: Vec<u32>,
+    /// Draft proposals for the last round (`j - 1` of them).
+    proposals: Vec<u32>,
+    /// Rows fed to the verify pass (`pending` + proposals).
+    fed: Vec<u32>,
+    /// Draft catch-up token scratch.
+    catchup: Vec<u32>,
+}
+
+impl SpecBufs {
+    /// `(pointer, capacity)` of every heap buffer (both [`SpecBuf`]s
+    /// plus the token scratch vectors) — lets the serve engine's
+    /// zero-alloc tripwire cover speculation scratch too.
+    pub fn capacity_snapshot(&self) -> Vec<(usize, usize)> {
+        let mut out = self.target.capacity_snapshot();
+        out.extend(self.draft.capacity_snapshot());
+        for v in [&self.emitted, &self.proposals, &self.fed, &self.catchup] {
+            out.push((v.as_ptr() as usize, v.capacity()));
+        }
+        out
+    }
+}
+
+/// Outcome of one speculative round.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecOutcome {
+    /// Draft tokens proposed this round (`j - 1`).
+    pub proposed: usize,
+    /// Proposals accepted (`<= proposed`).
+    pub accepted: usize,
+    /// Tokens emitted (`accepted + 1` — always at least one).
+    pub emitted: usize,
+}
+
+/// Running totals across rounds, with the two headline ratios.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecTotals {
+    pub rounds: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    pub emitted: u64,
+}
+
+impl SpecTotals {
+    pub fn add(&mut self, o: &SpecOutcome) {
+        self.rounds += 1;
+        self.proposed += o.proposed as u64;
+        self.accepted += o.accepted as u64;
+        self.emitted += o.emitted as u64;
+    }
+
+    /// Fold another accumulator in (per-worker partials → run totals).
+    pub fn merge(&mut self, o: &SpecTotals) {
+        self.rounds += o.rounds;
+        self.proposed += o.proposed;
+        self.accepted += o.accepted;
+        self.emitted += o.emitted;
+    }
+
+    /// Fraction of draft proposals the target accepted (0 when the
+    /// draft never ran).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Effective tokens emitted per target round (`> 1.0` is the
+    /// speculation win).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// (Re)initialise a session's draft KV caches: one [`DecodeState`] per
+/// draft `(layer, head)`, demand-grown from the shared `pool`, always
+/// F32 (the draft rolls back every round; compressed pages would make
+/// pyramid rebuilds lossy), fine-Q cached whenever the draft keeps a
+/// pyramid so [`DecodeState::truncate_to`] can replay boundary
+/// partials. Call once per session, before the first [`spec_round`] —
+/// the serve engine does this at admission, mirroring its target-state
+/// loop.
+pub fn begin_draft(draft: &Model, states: &mut Vec<DecodeState>, pool: &PagePool) {
+    let n = draft.cfg.n_layers * draft.cfg.n_heads;
+    while states.len() < n {
+        states.push(DecodeState::default());
+    }
+    states.truncate(n);
+    for st in states.iter_mut() {
+        st.attach_pool(pool, false);
+        st.set_kv_dtype(PageDtype::F32);
+        draft.algo.decode_begin(st, draft.cfg.max_len, draft.cfg.d_head());
+        if st.n_coarse > 0 && !st.cache_q {
+            st.force_q_cache();
+        }
+    }
+}
+
+/// Feed `tokens` (at positions `start_pos..`) through the model under
+/// **decode-step semantics**: every layer's LayerNorm / projections /
+/// FFN run batched at `[j, D]` — row-local ops, bitwise equal to `j`
+/// single-row passes — while each head's attention advances
+/// sequentially through `Attention::decode_step`, appending each row to
+/// its cache before the next row attends. The result (and every cache
+/// side effect) is therefore bitwise identical to `j` consecutive
+/// `DecodeSession::step` calls, at one weight-matmul amortisation.
+/// With `want_logits`, `buf.logits` receives the `[j, vocab]`
+/// next-token distributions.
+///
+/// KEEP IN SYNC with `DecodeSession::step` and `serve::step_slots` —
+/// this is the same layer schedule at `[j, D]`.
+pub fn decode_rows(
+    model: &Model,
+    states: &mut [DecodeState],
+    tokens: &[u32],
+    start_pos: usize,
+    buf: &mut SpecBuf,
+    want_logits: bool,
+) {
+    let cfg = &model.cfg;
+    let j = tokens.len();
+    assert!(j > 0, "empty row batch");
+    assert!(
+        start_pos + j <= cfg.max_len,
+        "rows {start_pos}..{} overrun max_len {}",
+        start_pos + j,
+        cfg.max_len
+    );
+    let (d, n_heads, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+    assert_eq!(
+        states.len(),
+        cfg.n_layers * n_heads,
+        "one decode state per (layer, head)"
+    );
+    debug_assert!(
+        states.iter().all(|st| st.len == start_pos),
+        "ragged decode states"
+    );
+    let p = &model.params;
+
+    // token + learned positional embedding for the fed rows
+    buf.x.reset_for_overwrite(j, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let tok = t as usize;
+        assert!(tok < cfg.vocab_size, "token id {tok} >= vocab {}", cfg.vocab_size);
+        let row = buf.x.row_mut(i);
+        for ((o, e), ps) in row.iter_mut().zip(p.embed.row(tok)).zip(p.pos.row(start_pos + i)) {
+            *o = e + ps;
+        }
+    }
+
+    for (layer, lp) in p.layers.iter().enumerate() {
+        let lq = model.layer_quant(layer);
+        // pre-LN attention block: matmuls batched, heads stepped row
+        // by row through the caches (strictly causal decode order)
+        layernorm_rows_into(&buf.x, &lp.ln1_scale, &lp.ln1_bias, LN_EPS, &mut buf.hn);
+        matmul_q(&buf.hn, &lp.wq, lq.map(|q| &q.wq), &mut buf.q);
+        matmul_q(&buf.hn, &lp.wk, lq.map(|q| &q.wk), &mut buf.k);
+        matmul_q(&buf.hn, &lp.wv, lq.map(|q| &q.wv), &mut buf.v);
+        buf.merged.reset_for_overwrite(j, d);
+        for i in 0..j {
+            for h in 0..n_heads {
+                model.algo.decode_step(
+                    &mut states[layer * n_heads + h],
+                    &buf.q.row(i)[h * dh..(h + 1) * dh],
+                    &buf.k.row(i)[h * dh..(h + 1) * dh],
+                    &buf.v.row(i)[h * dh..(h + 1) * dh],
+                    cfg.causal,
+                    &mut buf.merged.row_mut(i)[h * dh..(h + 1) * dh],
+                );
+            }
+        }
+        matmul_q(&buf.merged, &lp.wo, lq.map(|q| &q.wo), &mut buf.proj);
+        add_assign(&mut buf.x, &buf.proj);
+
+        // pre-LN feed-forward block
+        layernorm_rows_into(&buf.x, &lp.ln2_scale, &lp.ln2_bias, LN_EPS, &mut buf.hn);
+        matmul_q(&buf.hn, &lp.ff_w1, lq.map(|q| &q.ff_w1), &mut buf.ff);
+        add_bias_rows(&mut buf.ff, &lp.ff_b1);
+        gelu(&mut buf.ff);
+        matmul_q(&buf.ff, &lp.ff_w2, lq.map(|q| &q.ff_w2), &mut buf.proj);
+        add_bias_rows(&mut buf.proj, &lp.ff_b2);
+        add_assign(&mut buf.x, &buf.proj);
+    }
+
+    if want_logits {
+        model.logits_into(&buf.x, &mut buf.hn, &mut buf.logits);
+    }
+}
+
+/// Borrowed view of one session's speculative state — the pieces of a
+/// serve-engine session slot (or a standalone [`generate`] loop) a
+/// round mutates.
+pub struct SpecSlot<'a> {
+    /// The session's prompt.
+    pub prompt: &'a [u32],
+    /// Tokens generated so far, the still-pending last sample included.
+    pub history: &'a [u32],
+    /// Target cache length — always `prompt.len() + history.len() - 1`
+    /// (everything consumed except the pending token).
+    pub pos: usize,
+    /// Emission budget left (`max_new - history.len()`, floor 1).
+    pub max_emit: usize,
+    /// Sampling temperature (`<= 0` = greedy).
+    pub temperature: f32,
+    /// The session's seeded RNG; consumed once per emitted token, in
+    /// emission order — exactly the sequential-decode stream.
+    pub rng: &'a mut Rng,
+    /// Target decode caches, `layer * n_heads + head` order.
+    pub states: &'a mut [DecodeState],
+    /// Draft decode caches (see [`begin_draft`]).
+    pub draft_states: &'a mut [DecodeState],
+}
+
+/// One draft-propose / target-verify / commit-or-rollback round.
+///
+/// With horizon `j = min(k + 1, max_emit, max_len - pos)`:
+///  1. the draft catches up to `pos` from the token history, then
+///     greedily proposes `j - 1` tokens `d_1..d_{j-1}`;
+///  2. the target scores `[pending, d_1, .., d_{j-1}]` in one
+///     [`decode_rows`] pass, yielding logits `L_0..L_{j-1}`;
+///  3. tokens are sampled sequentially: `t_{i+1} = sample(L_i)`,
+///     accepted while `t_{i+1} == d_{i+1}` — row `i + 1`'s logits are
+///     only valid if the row fed there matched the sampled stream;
+///  4. target and draft roll back to `pos + accepted + 1` via
+///     [`DecodeState::truncate_to`], releasing the rejected pages.
+///
+/// Emitted tokens land in `bufs.emitted`; the caller advances its
+/// position by `outcome.emitted` and appends them to the history. The
+/// final emitted token's source distribution survives in
+/// `bufs.target.logits().row(outcome.accepted)`.
+pub fn spec_round(
+    target: &Model,
+    draft: &Model,
+    k: usize,
+    slot: &mut SpecSlot<'_>,
+    bufs: &mut SpecBufs,
+) -> SpecOutcome {
+    let seq_len = slot.prompt.len() + slot.history.len();
+    assert_eq!(slot.pos + 1, seq_len, "pos out of sync with the token history");
+    assert!(slot.max_emit >= 1, "nothing left to emit");
+    assert!(slot.pos < target.cfg.max_len, "context already full");
+    let pending = *slot.history.last().expect("a pending token");
+    let j = (k + 1).min(slot.max_emit).min(target.cfg.max_len - slot.pos);
+    bufs.emitted.clear();
+    bufs.proposals.clear();
+
+    if j > 1 {
+        assert_eq!(
+            slot.draft_states.len(),
+            draft.cfg.n_layers * draft.cfg.n_heads,
+            "begin_draft must run before spec_round"
+        );
+        // draft catch-up: feed every history token it has not seen,
+        // except the pending one (fed below as the first propose step)
+        let dlen = slot.draft_states[0].len;
+        debug_assert!(dlen <= slot.pos, "draft ran ahead of the target");
+        if dlen < slot.pos {
+            bufs.catchup.clear();
+            for i in dlen..slot.pos {
+                bufs.catchup.push(if i < slot.prompt.len() {
+                    slot.prompt[i]
+                } else {
+                    slot.history[i - slot.prompt.len()]
+                });
+            }
+            decode_rows(draft, slot.draft_states, &bufs.catchup, dlen, &mut bufs.draft, false);
+        }
+        // greedy proposals: feed the pending token, then each argmax
+        let mut tok = pending;
+        for step in 0..j - 1 {
+            decode_rows(
+                draft,
+                slot.draft_states,
+                &[tok],
+                slot.pos + step,
+                &mut bufs.draft,
+                true,
+            );
+            tok = sample_logits(bufs.draft.logits.row(0), 0.0, slot.rng) as u32;
+            bufs.proposals.push(tok);
+        }
+    }
+
+    // verify: one batched decode-semantics pass over pending + proposals
+    bufs.fed.clear();
+    bufs.fed.push(pending);
+    bufs.fed.extend_from_slice(&bufs.proposals);
+    decode_rows(target, slot.states, &bufs.fed, slot.pos, &mut bufs.target, true);
+
+    // sequential accept: each row's sample is valid only if the row fed
+    // after it matched; the first mismatch ends the round
+    let mut accepted = 0;
+    for i in 0..j {
+        let t = sample_logits(bufs.target.logits.row(i), slot.temperature, slot.rng) as u32;
+        bufs.emitted.push(t);
+        if i + 1 < j && t == bufs.proposals[i] {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+
+    // commit the accepted prefix, roll back the rejected tail
+    let new_pos = slot.pos + accepted + 1;
+    for st in slot.states.iter_mut() {
+        st.truncate_to(new_pos);
+    }
+    if j > 1 {
+        let keep = slot.draft_states[0].len.min(new_pos);
+        for st in slot.draft_states.iter_mut() {
+            st.truncate_to(keep);
+        }
+    }
+    SpecOutcome {
+        proposed: j - 1,
+        accepted,
+        emitted: accepted + 1,
+    }
+}
+
+/// Single-session speculative generation — the `htx generate --spec-k`
+/// path. Prefills the target exactly like `Model::prefill` (one batched
+/// forward bulk-loading the caches), samples the first token from the
+/// prefill logits, then emits the rest through [`spec_round`]s. With
+/// the same seed and temperature the returned tokens are identical to
+/// a `prefill` + `step` loop (greedy: bitwise; sampled: same RNG
+/// stream — see the module docs).
+pub fn generate(
+    target: &Model,
+    draft: &Model,
+    k: usize,
+    prompt: &[u32],
+    max_new: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Result<(Vec<u32>, SpecTotals), String> {
+    let cfg = &target.cfg;
+    if prompt.is_empty() {
+        return Err("speculative generate needs at least one prompt token".to_string());
+    }
+    if prompt.len() > cfg.max_len {
+        return Err(format!(
+            "prompt length {} exceeds max_len {}",
+            prompt.len(),
+            cfg.max_len
+        ));
+    }
+    if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= cfg.vocab_size) {
+        return Err(format!("token id {bad} >= vocab {}", cfg.vocab_size));
+    }
+    if max_new == 0 {
+        return Ok((Vec::new(), SpecTotals::default()));
+    }
+    let n_heads = cfg.n_heads;
+    let pool = PagePool::new(DEFAULT_PAGE_LEN);
+    let mut states: Vec<DecodeState> = Vec::new();
+    for _ in 0..cfg.n_layers * n_heads {
+        states.push(DecodeState::default());
+    }
+    for st in &mut states {
+        st.attach_pool(&pool, false);
+        target.algo.decode_begin(st, cfg.max_len, cfg.d_head());
+        if st.n_coarse > 0 && !st.cache_q {
+            st.force_q_cache();
+        }
+    }
+
+    // whole-prompt prefill, bulk-loading the caches (Model::prefill)
+    let mut ws = ModelWorkspace::serial();
+    {
+        let states = &mut states;
+        target.run_trunk(&mut ws, prompt, 1, |layer, qkv| {
+            for h in 0..n_heads {
+                let st = &mut states[layer * n_heads + h];
+                target
+                    .algo
+                    .decode_load_prefix(st, qkv.q.head(h), qkv.k.head(h), qkv.v.head(h));
+            }
+        });
+    }
+    let mut bufs = SpecBufs::default();
+    bufs.target.x.reset_for_overwrite(1, cfg.d_model);
+    bufs.target.x.row_mut(0).copy_from_slice(ws.x.row(prompt.len() - 1));
+    target.logits_into(&bufs.target.x, &mut bufs.target.hn, &mut bufs.target.logits);
+    let first = sample_logits(bufs.target.logits.row(0), temperature, rng) as u32;
+
+    let mut draft_states = Vec::new();
+    begin_draft(draft, &mut draft_states, &pool);
+    let mut tokens = vec![first];
+    let mut pos = prompt.len();
+    let mut totals = SpecTotals::default();
+    while tokens.len() < max_new && pos < cfg.max_len {
+        let mut slot = SpecSlot {
+            prompt,
+            history: &tokens,
+            pos,
+            max_emit: max_new - tokens.len(),
+            temperature,
+            rng,
+            states: &mut states,
+            draft_states: &mut draft_states,
+        };
+        let out = spec_round(target, draft, k, &mut slot, &mut bufs);
+        totals.add(&out);
+        tokens.extend_from_slice(&bufs.emitted);
+        pos += out.emitted;
+    }
+    Ok((tokens, totals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AttnSpec, ModelConfig};
+    use crate::tensor::paged::PagedRows;
+
+    fn tiny(attention: AttnSpec, max_len: usize) -> Model {
+        Model::new(
+            ModelConfig {
+                vocab_size: 29,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_ff: 24,
+                max_len,
+                causal: true,
+                attention,
+                quant_weights: false,
+            },
+            7,
+        )
+        .unwrap()
+    }
+
+    fn fresh_states(model: &Model, pool: &PagePool) -> Vec<DecodeState> {
+        let mut states: Vec<DecodeState> = Vec::new();
+        for _ in 0..model.cfg.n_layers * model.cfg.n_heads {
+            states.push(DecodeState::default());
+        }
+        for st in &mut states {
+            st.attach_pool(pool, false);
+            model.algo.decode_begin(st, model.cfg.max_len, model.cfg.d_head());
+            if st.n_coarse > 0 && !st.cache_q {
+                st.force_q_cache();
+            }
+        }
+        states
+    }
+
+    /// The non-speculative oracle: `prefill` + `step`, sampling with
+    /// the same rule `generate` uses.
+    fn sequential_generate(
+        model: &Model,
+        prompt: &[u32],
+        max_new: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        let mut session = model.prefill(prompt).unwrap();
+        let mut out = Vec::new();
+        let mut next = sample_logits(session.logits().row(0), temperature, &mut rng) as u32;
+        out.push(next);
+        while out.len() < max_new && session.remaining() > 0 {
+            let logits = session.step(next).unwrap().clone();
+            next = sample_logits(logits.row(0), temperature, &mut rng) as u32;
+            out.push(next);
+        }
+        out
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let d = SpecDraft::parse("local:8").unwrap();
+        assert_eq!(d.local_radius, Some(8));
+        assert_eq!(d.n_layers, None);
+        let d = SpecDraft::parse("local:8,layers:1").unwrap();
+        assert_eq!((d.local_radius, d.n_layers), (Some(8), Some(1)));
+        assert_eq!(SpecDraft::parse(&d.label()).unwrap(), d);
+        assert!(SpecDraft::parse("").unwrap_err().contains("unknown"));
+        assert!(SpecDraft::parse("local:0").unwrap_err().contains(">= 1"));
+        assert!(SpecDraft::parse("local:x").unwrap_err().contains("bad local radius"));
+        assert!(SpecDraft::parse("window:4").unwrap_err().contains("unknown"));
+    }
+
+    #[test]
+    fn draft_build_truncates_layers_and_shares_weights() {
+        let target = tiny(AttnSpec::H1d { nr: 4 }, 32);
+        let spec = SpecDraft {
+            local_radius: Some(3),
+            n_layers: Some(1),
+        };
+        let draft = spec.build(&target).unwrap();
+        assert_eq!(draft.cfg.n_layers, 1);
+        assert_eq!(draft.params.layers.len(), 1);
+        assert_eq!(draft.attention_name(), "local");
+        // weights are the target's own, not re-initialised
+        assert_eq!(draft.params.embed.data, target.params.embed.data);
+        assert_eq!(draft.params.layers[0].wq.data, target.params.layers[0].wq.data);
+        // rejects: zero / too-deep layer cuts, and a no-op spec
+        for bad in [0usize, 3] {
+            let err = SpecDraft {
+                local_radius: None,
+                n_layers: Some(bad),
+            }
+            .build(&target)
+            .unwrap_err();
+            assert!(err.contains("layer count"), "{err}");
+        }
+        let noop = SpecDraft {
+            local_radius: None,
+            n_layers: Some(2),
+        };
+        assert!(noop.build(&target).unwrap_err().contains("reproduces"));
+        // quantised targets get a quantised draft
+        let qtarget = Model::new(
+            ModelConfig {
+                quant_weights: true,
+                ..target.cfg.clone()
+            },
+            7,
+        )
+        .unwrap();
+        let qdraft = spec.build(&qtarget).unwrap();
+        assert!(qdraft.quant.is_some(), "draft should mirror target quantisation");
+    }
+
+    #[test]
+    fn decode_rows_is_bitwise_equal_to_single_token_steps() {
+        let model = tiny(AttnSpec::H1d { nr: 4 }, 32);
+        let mut rng = Rng::new(21);
+        let prompt: Vec<u32> = (0..9).map(|_| rng.below(29) as u32).collect();
+        let steps: Vec<u32> = (0..5).map(|_| rng.below(29) as u32).collect();
+        let pool = PagePool::new(4);
+        let mut batched = fresh_states(&model, &pool);
+        let mut single = fresh_states(&model, &pool);
+        let mut buf_b = SpecBuf::default();
+        let mut buf_s = SpecBuf::default();
+        decode_rows(&model, &mut batched, &prompt, 0, &mut buf_b, false);
+        decode_rows(&model, &mut single, &prompt, 0, &mut buf_s, false);
+        // one [5, D] pass vs five [1, D] passes: logits bitwise equal
+        decode_rows(&model, &mut batched, &steps, prompt.len(), &mut buf_b, true);
+        for (i, &t) in steps.iter().enumerate() {
+            decode_rows(&model, &mut single, &[t], prompt.len() + i, &mut buf_s, true);
+            assert_eq!(
+                buf_b.logits.row(i),
+                buf_s.logits.row(0),
+                "row {i} diverged from the sequential step"
+            );
+        }
+        assert_eq!(batched[0].len, single[0].len);
+    }
+
+    #[test]
+    fn greedy_spec_generate_matches_sequential_across_the_zoo() {
+        let cases = [
+            (AttnSpec::H1d { nr: 4 }, SpecDraft { local_radius: Some(4), n_layers: Some(1) }),
+            (AttnSpec::Full, SpecDraft { local_radius: Some(3), n_layers: Some(1) }),
+            (AttnSpec::Local { radius: 5 }, SpecDraft { local_radius: None, n_layers: Some(1) }),
+        ];
+        for (attn, spec) in cases {
+            let target = tiny(attn, 64);
+            let draft = spec.build(&target).unwrap();
+            let mut rng = Rng::new(3);
+            let prompt: Vec<u32> = (0..11).map(|_| rng.below(29) as u32).collect();
+            let want = sequential_generate(&target, &prompt, 17, 0.0, 99);
+            for k in [1usize, 3, 6] {
+                let mut grng = Rng::new(99);
+                let (got, totals) =
+                    generate(&target, &draft, k, &prompt, 17, 0.0, &mut grng).unwrap();
+                assert_eq!(got, want, "{} k={k} diverged", target.attention_name());
+                assert_eq!(totals.emitted, want.len() as u64 - 1, "accounting mismatch");
+                assert!(totals.accepted <= totals.proposed);
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_spec_generate_follows_the_sequential_rng_stream() {
+        // tokens are always sampled from the target's own logits in
+        // sequential RNG order, so sampled mode is deterministic and
+        // identical to non-speculative sampling at the same seed
+        let target = tiny(AttnSpec::H1d { nr: 4 }, 64);
+        let draft = SpecDraft {
+            local_radius: Some(4),
+            n_layers: Some(1),
+        }
+        .build(&target)
+        .unwrap();
+        let mut rng = Rng::new(5);
+        let prompt: Vec<u32> = (0..7).map(|_| rng.below(29) as u32).collect();
+        let want = sequential_generate(&target, &prompt, 21, 0.8, 1234);
+        let mut grng = Rng::new(1234);
+        let (got, _) = generate(&target, &draft, 4, &prompt, 21, 0.8, &mut grng).unwrap();
+        assert_eq!(got, want, "sampled speculative output diverged");
+    }
+
+    #[test]
+    fn k_zero_degenerates_to_plain_decode() {
+        let target = tiny(AttnSpec::H1d { nr: 4 }, 48);
+        let draft = SpecDraft {
+            local_radius: Some(2),
+            n_layers: Some(1),
+        }
+        .build(&target)
+        .unwrap();
+        let mut rng = Rng::new(8);
+        let prompt: Vec<u32> = (0..6).map(|_| rng.below(29) as u32).collect();
+        let want = sequential_generate(&target, &prompt, 12, 0.0, 7);
+        let mut grng = Rng::new(7);
+        let (got, totals) = generate(&target, &draft, 0, &prompt, 12, 0.0, &mut grng).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(totals.proposed, 0, "k=0 must never run the draft");
+        assert_eq!(totals.emitted, totals.rounds, "k=0 emits exactly one token per round");
+    }
+
+    #[test]
+    fn rounds_emit_at_least_one_token_and_release_rejected_pages() {
+        // zero-leak pin: after every round each cache holds exactly the
+        // pages its committed length needs, and the pool agrees
+        let target = tiny(AttnSpec::H1d { nr: 4 }, 64);
+        let draft = SpecDraft {
+            local_radius: Some(2),
+            n_layers: Some(1),
+        }
+        .build(&target)
+        .unwrap();
+        let pool = PagePool::new(4);
+        let page_len = 4;
+        let tight = |pr: &PagedRows, rows: usize| {
+            assert_eq!(pr.rows(), rows, "committed rows out of sync");
+            assert_eq!(pr.n_pages(), rows.div_ceil(page_len), "pages beyond the committed rows");
+        };
+        let mut rng = Rng::new(13);
+        let prompt: Vec<u32> = (0..9).map(|_| rng.below(29) as u32).collect();
+        let mut states = fresh_states(&target, &pool);
+        let mut bufs = SpecBufs::default();
+        decode_rows(&target, &mut states, &prompt, 0, &mut bufs.target, true);
+        let first = sample_logits(bufs.target.logits.row(prompt.len() - 1), 0.0, &mut rng) as u32;
+        let mut tokens = vec![first];
+        let mut draft_states = Vec::new();
+        begin_draft(&draft, &mut draft_states, &pool);
+        let mut pos = prompt.len();
+        for round in 0..6 {
+            let mut slot = SpecSlot {
+                prompt: &prompt,
+                history: &tokens,
+                pos,
+                max_emit: 64,
+                temperature: 0.6,
+                rng: &mut rng,
+                states: &mut states,
+                draft_states: &mut draft_states,
+            };
+            let out = spec_round(&target, &draft, 3, &mut slot, &mut bufs);
+            assert_eq!(out.proposed, 3, "round {round}");
+            assert_eq!(out.emitted, out.accepted + 1, "round {round}");
+            assert!(out.emitted >= 1, "round {round} made no progress");
+            pos += out.emitted;
+            tokens.extend_from_slice(&bufs.emitted);
+            let mut held = 0usize;
+            for st in states.iter().chain(draft_states.iter()) {
+                tight(&st.k, st.len);
+                tight(&st.v, st.len);
+                if st.cache_q {
+                    tight(&st.q, st.len);
+                    held += st.q.n_pages();
+                }
+                held += st.k.n_pages() + st.v.n_pages();
+                for (i, lv) in st.levels.iter().enumerate().take(st.n_coarse) {
+                    let rows = st.len.div_ceil(1 << (i + 1));
+                    tight(&lv.qsum, rows);
+                    tight(&lv.ksum, rows);
+                    tight(&lv.vsum, rows);
+                    assert_eq!(lv.count.len(), rows);
+                    held += lv.qsum.n_pages() + lv.ksum.n_pages() + lv.vsum.n_pages();
+                }
+            }
+            assert_eq!(states[0].len, pos, "target cache out of sync");
+            assert!(draft_states[0].len <= pos, "draft ran ahead");
+            assert_eq!(pool.stats().live, held, "pool sees pages no cache holds");
+        }
+        assert_eq!(tokens.len(), pos - prompt.len() + 1);
+    }
+}

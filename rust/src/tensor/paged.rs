@@ -494,6 +494,47 @@ impl PagedRows {
         }
     }
 
+    /// Budgeted-page cost of appending `n` rows from the current
+    /// length — a multi-row [`PagedRows::stage_cost`]: the fresh pages
+    /// those appends would fault, plus one copy-on-write if the first
+    /// append lands in a shared tail page. The speculative-decode
+    /// scheduler sums this over a round's worst-case growth before
+    /// committing to the round.
+    pub fn append_cost(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let need = (self.len + n).div_ceil(self.page_len.max(1));
+        let mut cost = need.saturating_sub(self.pages.len());
+        let ti = self.len >> self.shift;
+        if ti < self.pages.len() && Arc::strong_count(&self.pages[ti]) > 1 {
+            cost += 1;
+        }
+        cost
+    }
+
+    /// Truncate to the first `rows` committed rows, returning pages
+    /// wholly beyond the new length to the pool (reverse table order,
+    /// like [`PagedRows::release_all`]). The boundary page is kept even
+    /// when partially filled — its stale tail slots are overwritten by
+    /// the next append. No-op when `rows >= len`. This is the
+    /// speculative-decode rollback path: rejected draft tokens release
+    /// exactly the pages they faulted.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        if rows >= self.len {
+            return;
+        }
+        let keep = rows.div_ceil(self.page_len.max(1));
+        if let Some(pool) = &self.pool {
+            for page in self.pages.drain(keep..).rev() {
+                pool.release(page);
+            }
+        } else {
+            self.pages.truncate(keep);
+        }
+        self.len = rows;
+    }
+
     /// Ensure the page table covers `rows` rows (allocating forward;
     /// never releases).
     pub fn reserve_rows(&mut self, rows: usize) {
@@ -780,6 +821,75 @@ mod tests {
         let mut e = PagedRows::default();
         a.clone_prefix_into(&mut e, 0);
         assert_eq!((e.rows(), e.n_pages()), (0, 0));
+    }
+
+    #[test]
+    fn truncate_rows_releases_tail_pages_and_reappends() {
+        let pool = PagePool::new(4);
+        let mut pr = filled(&pool, 2, 11); // 3 pages
+        assert_eq!(pool.stats().live, 3);
+        pr.truncate_rows(5); // keep rows 0..4 and the boundary page
+        assert_eq!((pr.rows(), pr.n_pages()), (5, 2));
+        assert_eq!(pool.stats().live, 2);
+        for i in 0..5 {
+            assert_eq!(pr.row(i), &[(i * 2) as f32, (i * 2 + 1) as f32]);
+        }
+        // appending after a truncate overwrites the stale tail slots
+        pr.push_row(&[100.0, 200.0]);
+        assert_eq!(pr.row(5), &[100.0, 200.0]);
+        // truncating to a page boundary keeps exactly the covering pages
+        pr.truncate_rows(4);
+        assert_eq!((pr.rows(), pr.n_pages()), (4, 1));
+        // no-op when rows >= len
+        pr.truncate_rows(10);
+        assert_eq!(pr.rows(), 4);
+        pr.truncate_rows(0);
+        assert_eq!((pr.rows(), pr.n_pages()), (0, 0));
+        assert_eq!(pool.stats().live, 0);
+        assert_eq!(pool.stats().free, 3, "released buffers recycle");
+    }
+
+    #[test]
+    fn truncate_rows_on_a_shared_view_leaves_the_donor_intact() {
+        let pool = PagePool::new(4);
+        let a = filled(&pool, 2, 10); // 3 pages
+        let mut b = PagedRows::default();
+        a.clone_shared_into(&mut b);
+        assert_eq!(pool.stats().live, 3);
+        b.truncate_rows(3); // drops b's refs on pages 1 and 2
+        assert_eq!(pool.stats().live, 3, "donor still holds every page");
+        assert_eq!((b.rows(), b.n_pages()), (3, 1));
+        for i in 0..10 {
+            assert_eq!(a.row(i), &[(i * 2) as f32, (i * 2 + 1) as f32]);
+        }
+        // b's next append COWs the still-shared boundary page
+        assert_eq!(b.stage_cost(), 1);
+        b.push_row(&[7.0, 8.0]);
+        assert_eq!(b.row(3), &[7.0, 8.0]);
+        assert_eq!(a.row(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn append_cost_generalises_stage_cost() {
+        let pool = PagePool::new(4);
+        let mut pr = filled(&pool, 2, 6); // 2 pages, tail half full
+        assert_eq!(pr.append_cost(0), 0);
+        assert_eq!(pr.append_cost(1), pr.stage_cost());
+        assert_eq!(pr.append_cost(2), 0, "two appends fit the private tail");
+        assert_eq!(pr.append_cost(3), 1, "the third append faults a page");
+        assert_eq!(pr.append_cost(7), 2);
+        // a shared tail charges one COW on top of the fresh pages
+        let mut b = PagedRows::default();
+        pr.clone_shared_into(&mut b);
+        assert_eq!(b.append_cost(1), 1, "shared tail must charge a COW");
+        assert_eq!(b.append_cost(1), b.stage_cost());
+        assert_eq!(b.append_cost(3), 2, "COW plus one fresh page");
+        drop(b);
+        // page-aligned views charge only fresh pages
+        pr.truncate_rows(4);
+        assert_eq!(pr.append_cost(1), 1);
+        assert_eq!(pr.append_cost(4), 1);
+        assert_eq!(pr.append_cost(5), 2);
     }
 
     #[test]
