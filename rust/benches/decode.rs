@@ -18,12 +18,28 @@
 //!
 //! Flags:
 //!   --smoke        tiny shapes (CI keep-alive; exercises every path)
+//!   --long         append the attention-level long-context tier
+//!                  (L = 8k/32k/128k) and assert the scaling exponents
 //!   --steps N      decode steps measured per cell (default 32)
 //!   --out PATH     where to write the JSON (default BENCH_decode.json)
+//!
+//! The `--long` tier is the linearity proof at lengths where a full
+//! model-level prefill would be O(L²)-infeasible: it drives a single
+//! attention head directly (`decode_load_prefix` is pure cache
+//! maintenance, O(L)), streams the whole session through a
+//! `decode_retire` window, and asserts the fitted scaling exponent
+//! alpha = ln(t_max/t_min)/ln(L_max/L_min): h1d must stay
+//! sub-square-root (its true growth is ~log L), full must grow
+//! ~linearly. A violated exponent fails the run — that is the
+//! regression this bench exists to catch. Long points carry
+//! `bootstrap: true` and `-long-` ids so the smoke-CI compare gate
+//! skips them (they only exist when the scheduled long job runs).
 
 use std::time::Instant;
 
+use htransformer::attention::{Attention, DecodeState, Full, H1d, LocalWindow};
 use htransformer::model::{AttnSpec, DecodeWorkspace, Model, ModelConfig};
+use htransformer::tensor::PagePool;
 use htransformer::util::bench::{commit_id, synthetic_prompt, Table};
 use htransformer::util::cli::Args;
 use htransformer::util::json::{num, obj, s, Json};
@@ -76,9 +92,67 @@ fn measure_step(spec: &AttnSpec, l: usize, steps: usize) -> f64 {
     t0.elapsed().as_secs_f64() / steps as f64
 }
 
+/// One long-tier cell: a single attention head streamed to context
+/// length `l` with a `window`-token retirement horizon, then `steps`
+/// timed incremental decode steps. Prefill goes through
+/// `decode_load_prefix` in page-aligned chunks with retirement between
+/// chunks, so `peak` is the high-water resident-page mark of the whole
+/// streamed session, not just the tail. Returns (µs/token, peak pages).
+fn measure_long(algo: &dyn Attention, l: usize, steps: usize, window: usize) -> (f64, usize) {
+    let (d, page_len, chunk_rows) = (64usize, 64usize, 1024usize);
+    let pool = PagePool::new(page_len);
+    let mut st = DecodeState::default();
+    st.attach_pool(&pool, false);
+    algo.decode_begin(&mut st, l + steps + 1, d);
+    let mut rng = Rng::new(l as u64);
+    // one shared buffer stands in for q, k and v — at 128k·64 floats
+    // the inputs dominate memory, and a perf bench does not care that
+    // the three projections coincide
+    let mut rows = vec![0.0f32; chunk_rows * d];
+    let mut peak = 0usize;
+    let mut loaded = 0usize;
+    while loaded < l {
+        let n = chunk_rows.min(l - loaded);
+        rng.fill_normal(&mut rows[..n * d], 0.5);
+        algo.decode_load_prefix(&mut st, &rows[..n * d], &rows[..n * d], &rows[..n * d]);
+        algo.decode_retire(&mut st, window);
+        peak = peak.max(st.resident_pages());
+        loaded += n;
+    }
+    let mut out = vec![0.0f32; d];
+    // one unmeasured step warms the per-step scratch
+    rng.fill_normal(&mut rows[..d], 0.5);
+    algo.decode_step(&mut st, &rows[..d], &rows[..d], &rows[..d], true, &mut out);
+    algo.decode_retire(&mut st, window);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        std::hint::black_box(algo.decode_step(
+            &mut st,
+            &rows[..d],
+            &rows[..d],
+            &rows[..d],
+            true,
+            &mut out,
+        ));
+        algo.decode_retire(&mut st, window);
+    }
+    let per_token_us = t0.elapsed().as_secs_f64() / steps as f64 * 1e6;
+    peak = peak.max(st.resident_pages());
+    (per_token_us, peak)
+}
+
+/// Fitted scaling exponent between the smallest and largest long-tier
+/// points: `t ~ L^alpha`.
+fn scaling_exponent(cells: &[(usize, f64, usize)]) -> f64 {
+    let (l0, t0, _) = cells[0];
+    let (l1, t1, _) = cells[cells.len() - 1];
+    (t1 / t0).ln() / (l1 as f64 / l0 as f64).ln()
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.bool("smoke");
+    let long = args.bool("long");
     let steps = args.usize_or("steps", if smoke { 4 } else { 32 });
     let out_path = args.str_or("out", "BENCH_decode.json");
     let nr = 16;
@@ -115,6 +189,59 @@ fn main() {
          ~linearly (O(L·d)); lowrank/blocksparse pay a full recompute per step."
     );
 
+    // long-context tier: per-algorithm {(L, µs/token, peak pages)}
+    let mut long_results: Vec<(&'static str, Vec<(usize, f64, usize)>)> = Vec::new();
+    if long {
+        let long_lens = [8192usize, 32768, 131072];
+        let long_steps = args.usize_or("long-steps", 64);
+        let window = 1024usize;
+        println!("\n### long-context tier: single head, streaming window {window} ###");
+        println!("(d=64, Nr={nr}, {long_steps} steps/cell, page_len 64)\n");
+        let algos: Vec<(&'static str, Box<dyn Attention>)> = vec![
+            ("h1d", Box::new(H1d::new(nr))),
+            ("full", Box::new(Full)),
+            ("local", Box::new(LocalWindow::new(nr))),
+        ];
+        let mut lt = Table::new(&["algo", "L", "per-token", "peak pages"]);
+        for (name, algo) in &algos {
+            let mut cells: Vec<(usize, f64, usize)> = Vec::new();
+            for &l in &long_lens {
+                let (us, peak) = measure_long(algo.as_ref(), l, long_steps, window);
+                lt.row(&[
+                    name.to_string(),
+                    l.to_string(),
+                    format!("{us:.1}µs"),
+                    peak.to_string(),
+                ]);
+                cells.push((l, us, peak));
+            }
+            long_results.push((*name, cells));
+        }
+        lt.print();
+        println!();
+        // the linearity proof: a broken exponent fails the run
+        for (name, cells) in &long_results {
+            let alpha = scaling_exponent(cells);
+            println!("{name}: fitted per-token scaling exponent alpha = {alpha:.3}");
+            let ok = match *name {
+                // true growth ~log L; 0.5 leaves huge margin over noise
+                "h1d" | "local" => alpha < 0.5,
+                // O(L·d) per step: anything flatter means the bench
+                // stopped exercising the full context
+                "full" => alpha > 0.6,
+                _ => true,
+            };
+            if !ok {
+                eprintln!(
+                    "error: {name} long-context scaling exponent {alpha:.3} breaks the \
+                     linearity contract (h1d/local ≲ log L ⇒ alpha < 0.5; full ~L ⇒ \
+                     alpha > 0.6)"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+
     // stable trajectory schema: flat points keyed by a unique id, the
     // shape tools/bench_compare.rs matches against the baseline
     let mut points: Vec<Json> = Vec::new();
@@ -125,6 +252,21 @@ fn main() {
                 ("attention", s(name)),
                 ("L", num(l as f64)),
                 ("per_token_us", num(us)),
+            ]));
+        }
+    }
+    // long-tier points: `-long-` ids mark them skippable for the smoke
+    // compare gate, `bootstrap` keeps the first scheduled run
+    // report-only until a baseline lands
+    for (name, cells) in &long_results {
+        for &(l, us, peak) in cells {
+            points.push(obj(vec![
+                ("id", s(&format!("decode/{name}-long-L{l}"))),
+                ("attention", s(name)),
+                ("L", num(l as f64)),
+                ("per_token_us", num(us)),
+                ("peak_resident_pages", num(peak as f64)),
+                ("bootstrap", Json::Bool(true)),
             ]));
         }
     }

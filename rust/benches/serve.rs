@@ -78,8 +78,21 @@
 //! (`serve/h1d/radix-{whole,chunked}` points carrying per-tick p50/p99
 //! scheduler latency) — chunking bounds the p99 inter-token stall.
 //!
+//! A seventh section (gated on `--long`, run by the scheduled
+//! long-bench job) pins the pyramid-aware streaming window end-to-end:
+//! h1d sessions generate thousands of tokens with and without a
+//! `--window` horizon. Retirement is exact, so the token streams must
+//! match bitwise; the windowed run's peak per-session residency must
+//! stay ~flat as the generation length quadruples (fine window + a
+//! coarse far-field residue of O(Nr·log L) pages) while the unwindowed
+//! run grows ~linearly. Its `serve/h1d-long-*` points carry
+//! `peak_session_pages` and `window_retired_pages` next to
+//! `per_token_us`, marked `bootstrap: true` so the smoke compare gate
+//! ignores them until a long baseline lands.
+//!
 //! Flags:
 //!   --smoke          small shapes (CI keep-alive; exercises every path)
+//!   --long           append the streaming-window long-generation tier
 //!   --threads N      worker threads (default: host parallelism)
 //!   --out PATH       where to write the JSON (default BENCH_serve.json)
 //!   --kv-dtype D     restrict the compressed-KV sweep to one page dtype
@@ -153,6 +166,7 @@ fn check_parity(name: &str, seq: &ServeReport, batched: &ServeReport) {
 fn main() {
     let args = Args::from_env();
     let smoke = args.bool("smoke");
+    let long = args.bool("long");
     let out_path = args.str_or("out", "BENCH_serve.json");
     let kv_flag = args.str_or("kv-dtype", "all");
     let kv_sweep: Vec<PageDtype> = if kv_flag == "all" {
@@ -897,6 +911,113 @@ fn main() {
          property measured end-to-end, and tokens/step > 1 means the target ran fewer \
          rounds than it emitted tokens."
     );
+
+    // ---- streaming-window long-generation tier (--long) -------------
+    // The bounded-memory proof at serving level: h1d sessions stream
+    // far past any sane residency budget, and the pyramid-aware window
+    // retires fine pages behind the horizon while the upper coarse
+    // levels stand in for the retired far field. Retirement is exact,
+    // so the plain and windowed runs must emit identical tokens — the
+    // only difference is how many pages each session pins.
+    if long {
+        let name = "h1d";
+        let win = 256usize;
+        let long_gens = [1024usize, 4096];
+        let long_prompt = 64usize;
+        let max_gen = *long_gens.iter().max().unwrap();
+        println!(
+            "\n### streaming window: long generations at a {win}-token horizon \
+             (4 requests x {long_prompt}-token prompts, page_len {page_len}) ###\n"
+        );
+        let mut t7 = Table::new(&[
+            "attention", "mode", "L", "tokens/s", "per-token", "peak session pages", "retired",
+        ]);
+        let cfg = ModelConfig {
+            vocab_size: 1024,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 512,
+            max_len: long_prompt + max_gen + 1,
+            causal: true,
+            attention: AttnSpec::H1d { nr: 16 },
+            quant_weights: false,
+        };
+        let model = Arc::new(Model::new(cfg, 1).expect("valid bench config"));
+        // per generation length: (plain peak pages, windowed peak pages)
+        let mut peaks: Vec<(usize, usize)> = Vec::new();
+        for &gen in &long_gens {
+            let requests = synthetic_workload(4, &[long_prompt], gen, 1024, 0.0, 67);
+            let l = long_prompt + gen;
+            let mut reps = Vec::new();
+            for (mode, window) in [("stream-plain", 0usize), ("stream-window", win)] {
+                let mut engine = ServeEngine::new(
+                    Arc::clone(&model),
+                    ServeConfig {
+                        max_batch: 4,
+                        max_tokens: usize::MAX,
+                        page_len,
+                        prefix_cache: 0,
+                        threads,
+                        window,
+                        ..ServeConfig::default()
+                    },
+                )
+                .expect("engine");
+                let rep = engine.run(requests.clone()).expect("long streaming run");
+                t7.row(&[
+                    name.to_string(),
+                    mode.to_string(),
+                    l.to_string(),
+                    format!("{:.0}", rep.stats.tokens_per_sec()),
+                    format!("{:.1}µs", rep.stats.per_token_us()),
+                    rep.stats.peak_session_pages.to_string(),
+                    rep.stats.window_retired_pages.to_string(),
+                ]);
+                points.push(obj(vec![
+                    ("id", s(&format!("serve/{name}-long-{mode}-L{l}"))),
+                    ("attention", s(name)),
+                    ("mode", s(mode)),
+                    ("L", num(l as f64)),
+                    ("per_token_us", num(rep.stats.per_token_us())),
+                    ("tokens_per_sec", num(rep.stats.tokens_per_sec())),
+                    ("peak_session_pages", num(rep.stats.peak_session_pages as f64)),
+                    (
+                        "window_retired_pages",
+                        num(rep.stats.window_retired_pages as f64),
+                    ),
+                    ("bootstrap", Json::Bool(true)),
+                ]));
+                reps.push(rep);
+            }
+            // retirement is exact: the windowed stream must be bitwise
+            // the plain stream
+            assert_eq!(
+                reps[0].tokens_by_id(),
+                reps[1].tokens_by_id(),
+                "{name} L={l}: streaming window changed generated tokens"
+            );
+            peaks.push((reps[0].stats.peak_session_pages, reps[1].stats.peak_session_pages));
+        }
+        t7.print();
+        let (plain_max, win_max) = peaks[peaks.len() - 1];
+        let (_, win_min) = peaks[0];
+        assert!(
+            2 * win_max < plain_max,
+            "streaming window must bound residency: windowed peak {win_max} pages vs \
+             unwindowed {plain_max} at the longest generation"
+        );
+        assert!(
+            win_max < 2 * win_min,
+            "windowed residency must stay ~flat as L quadruples (fine window + \
+             O(Nr·log L) coarse residue): peak went {win_min} -> {win_max} pages"
+        );
+        println!(
+            "\nwindowed sessions emitted bitwise-identical tokens while pinning \
+             {win_max} peak pages vs {plain_max} unwindowed — the retired far field \
+             survives as the coarse pyramid residue."
+        );
+    }
 
     let doc = obj(vec![
         ("bench", s("serve")),

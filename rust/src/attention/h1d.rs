@@ -29,6 +29,12 @@ pub struct H1d {
     /// levels — kept as an ablation knob (bench `ablation_nr` shows the
     /// approximation-quality cost of removing them).
     pub overlap_masks: bool,
+    /// Pad the forward to a power-of-two block count instead of the
+    /// exact ragged pyramid — the historical reference path, kept only
+    /// so the bitwise ragged-vs-padded parity contract stays testable.
+    /// Up to 2x wasted compute and scratch near block-count boundaries;
+    /// never enable it outside tests.
+    pub pow2_pad: bool,
 }
 
 impl H1d {
@@ -44,25 +50,34 @@ impl H1d {
         Self {
             nr,
             overlap_masks: true,
+            pow2_pad: false,
         }
     }
 
     /// Ablation variant without the overlap-quadrant masks (double counts).
     pub fn without_overlap_masks(nr: usize) -> Self {
-        assert!(
-            nr >= 2 && nr % 2 == 0,
-            "Nr must be an even block size >= 2 (got {nr})"
-        );
         Self {
-            nr,
             overlap_masks: false,
+            ..Self::new(nr)
+        }
+    }
+
+    /// Reference variant padding to a power-of-two block count (the
+    /// pre-ragged behaviour); see [`H1d::pow2_pad`].
+    pub fn with_pow2_pad(nr: usize) -> Self {
+        Self {
+            pow2_pad: true,
+            ..Self::new(nr)
         }
     }
 }
 
-fn padded_len(l: usize, nr: usize) -> usize {
+/// Working length of the level-0 pyramid: the sequence rounded up to
+/// whole `nr` blocks (exact ragged mode), or to a power-of-two block
+/// count (the reference `pow2_pad` mode).
+fn padded_len(l: usize, nr: usize, pow2_pad: bool) -> usize {
     let nb = l.div_ceil(nr).max(1);
-    nr * nb.next_power_of_two()
+    nr * if pow2_pad { nb.next_power_of_two() } else { nb }
 }
 
 /// Coarse pyramid levels a decode cache must maintain for contexts up
@@ -198,16 +213,40 @@ pub(crate) fn h1d_decode_step(
 /// The full hierarchical forward for one head, out of scratch buffers:
 /// reads `qin`/`kin`/`vin`, leaves `[L, d]` in `out`. Buffer roles are
 /// documented on [`HeadScratch`].
-pub(crate) fn h1d_head(nr: usize, overlap_masks: bool, causal: bool, s: &mut HeadScratch) {
+///
+/// The pyramid is **ragged**: level 0 pads only to whole `nr` blocks,
+/// and each coarsening halves the previous level then re-pads to a
+/// whole block, so level `j` holds `ceil(nb0 / 2^j)` blocks and the
+/// tail block carries real-token counts for exactly the rows it covers
+/// — total work O(L·Nr·d), proportional to the actual length. The loop
+/// stops once a level would hold a single block: a lone coarse block
+/// has no banded neighbours, so (as the counts mask every padded key
+/// and the recombination weight of an empty level underflows to zero)
+/// deeper levels contribute exactly nothing — which is also why the
+/// ragged path is *bitwise* identical to the `pow2_pad` reference that
+/// keeps coarsening zero-padded halves all the way down (pinned by
+/// `ragged_forward_is_bitwise_the_pow2_padded_reference`).
+pub(crate) fn h1d_head(
+    nr: usize,
+    overlap_masks: bool,
+    pow2_pad: bool,
+    causal: bool,
+    s: &mut HeadScratch,
+) {
     let (l, d) = (s.qin.rows, s.qin.cols);
     debug_assert_eq!(s.kin.rows, l);
     debug_assert_eq!(s.vin.rows, l);
-    let lp = padded_len(l, nr);
+    let lp = padded_len(l, nr, pow2_pad);
     let nb0 = lp / nr;
-    let levels = if nb0 > 1 {
-        (nb0.trailing_zeros() as usize) + 1
-    } else {
-        1
+    // levels with >= 2 blocks at this length: nb_j = ceil(nb0 / 2^j)
+    let levels = {
+        let mut n = 1usize;
+        let mut nb = nb0;
+        while nb.div_ceil(2) >= 2 {
+            nb = nb.div_ceil(2);
+            n += 1;
+        }
+        n
     };
     debug_assert!(levels == 1 || nr % 2 == 0);
 
@@ -231,14 +270,19 @@ pub(crate) fn h1d_head(nr: usize, overlap_masks: bool, causal: bool, s: &mut Hea
 
     for level in 0..levels {
         if level > 0 {
-            // coarsen: Q average, K/V masked sums, counts sum
-            let lc = s.sa.rows / 2;
+            // coarsen: Q average, K/V masked sums, counts sum. The
+            // child count is re-padded to a whole number of blocks —
+            // rows beyond `half` stay zero with count 0 (a ragged tail
+            // block), exactly the values the pow2 envelope would have
+            // coarsened out of its zero padding.
+            let half = s.sa.rows / 2;
+            let lc = half.div_ceil(nr) * nr;
             s.ta.reset(lc, d);
             s.tb.reset(lc, d);
             s.tc.reset(lc, d);
             s.f2.clear();
             s.f2.resize(lc, 0.0);
-            for i in 0..lc {
+            for i in 0..half {
                 for t in 0..d {
                     *s.ta.at_mut(i, t) = 0.5 * (s.sa.at(2 * i, t) + s.sa.at(2 * i + 1, t));
                     *s.tb.at_mut(i, t) = s.sb.at(2 * i, t) + s.sb.at(2 * i + 1, t);
@@ -314,18 +358,18 @@ impl Attention for H1d {
         assert_eq!(v.rows, l);
         let mut s = HeadScratch::default();
         s.load_mats(q, k, v);
-        h1d_head(self.nr, self.overlap_masks, causal, &mut s);
+        h1d_head(self.nr, self.overlap_masks, self.pow2_pad, causal, &mut s);
         s.out
     }
 
     fn forward_batch(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool) -> Batch {
-        let (nr, overlap_masks) = (self.nr, self.overlap_masks);
-        ws.run_heads(qkv, move |s| h1d_head(nr, overlap_masks, causal, s))
+        let (nr, overlap_masks, pow2_pad) = (self.nr, self.overlap_masks, self.pow2_pad);
+        ws.run_heads(qkv, move |s| h1d_head(nr, overlap_masks, pow2_pad, causal, s))
     }
 
     fn forward_batch_into(&self, ws: &mut AttnWorkspace, qkv: &Qkv, causal: bool, out: &mut Batch) {
-        let (nr, overlap_masks) = (self.nr, self.overlap_masks);
-        ws.run_heads_into(qkv, out, move |s| h1d_head(nr, overlap_masks, causal, s))
+        let (nr, overlap_masks, pow2_pad) = (self.nr, self.overlap_masks, self.pow2_pad);
+        ws.run_heads_into(qkv, out, move |s| h1d_head(nr, overlap_masks, pow2_pad, causal, s))
     }
 
     fn decode_begin(&self, state: &mut DecodeState, max_len: usize, d: usize) {
@@ -344,6 +388,49 @@ impl Attention for H1d {
         out: &mut [f32],
     ) {
         h1d_decode_step(self.nr, self.overlap_masks, state, q_row, k_row, v_row, out)
+    }
+
+    /// Pyramid-aware streaming-window retirement (the Fast Multipole
+    /// "far-field residue" rule). A future step at context length
+    /// `t >= len` reads, at the fine level, only rows from the previous
+    /// block boundary of the current block onward; at coarse level `l`
+    /// it reads the query row `t >> l` and the key/value band of the
+    /// block left of `(t >> l) / nr`. Everything before those
+    /// boundaries is dead to the algorithm, so releasing its pages is
+    /// *exact* — decode stays bitwise identical (pinned by
+    /// `windowed_decode_is_bitwise_unwindowed_and_bounds_pages`). The
+    /// `window` argument only slows the fine retirement down: the last
+    /// `window` fine tokens stay resident even when the algorithm no
+    /// longer reads them (page-granular), for operators that want a
+    /// recent-history floor.
+    fn decode_retire(&self, state: &mut DecodeState, window: usize) -> usize {
+        let len = state.len;
+        if len == 0 {
+            return 0;
+        }
+        let nr = self.nr;
+        // fine level: the next step (t = len) attends from block
+        // (t/nr)-1 onward, and t only grows
+        let need_fine = (len / nr).saturating_sub(1) * nr;
+        let keep_fine = need_fine.min(len.saturating_sub(window));
+        let mut released = state.k.release_prefix(keep_fine);
+        released += state.v.release_prefix(keep_fine);
+        if state.cache_q {
+            released += state.q.release_prefix(keep_fine);
+        }
+        for (i, lv) in state.levels.iter_mut().enumerate().take(state.n_coarse) {
+            let sh = i + 1;
+            // future query rows start at len >> sh (also the lowest
+            // index the pyramid accumulation can still add into)
+            let cfloor = len >> sh;
+            // the banded K/V read covers the block left of cfloor's
+            let need_kv = ((cfloor / nr).saturating_sub(1)) * nr;
+            released += lv.qsum.release_prefix(cfloor);
+            released += lv.ksum.release_prefix(need_kv.min(cfloor));
+            released += lv.vsum.release_prefix(need_kv.min(cfloor));
+            // counts stay dense: a few floats per page of fine tokens
+        }
+        released
     }
 
     fn prefix_share_align(&self, lcp: usize) -> usize {
@@ -682,6 +769,93 @@ mod tests {
                 assert!((z.at(i, 0) - 1.0).abs() < 1e-4, "L={l} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn ragged_forward_is_bitwise_the_pow2_padded_reference() {
+        // the tentpole parity contract: dropping the power-of-two
+        // envelope changes no output bit at any length — padded keys
+        // are count-masked, padded query rows are never read back, and
+        // the recombination weight of a dropped all-padding level
+        // underflows to exactly zero
+        let mut rng = Rng::new(31);
+        for &l in &[5usize, 17, 31, 33, 70, 100, 255, 257, 1000] {
+            let q = rand_mat(&mut rng, l, 4);
+            let k = rand_mat(&mut rng, l, 4);
+            let v = rand_mat(&mut rng, l, 4);
+            for nr in [2usize, 4, 8] {
+                for causal in [false, true] {
+                    let ragged = H1d::new(nr).forward(&q, &k, &v, causal);
+                    let padded = H1d::with_pow2_pad(nr).forward(&q, &k, &v, causal);
+                    assert_eq!(ragged, padded, "L={l} Nr={nr} causal={causal}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_scratch_sizes_to_the_actual_length_not_the_pow2_envelope() {
+        // L=257, Nr=4: 65 blocks -> 260 working rows (the pow2 envelope
+        // would hold 128 blocks = 512 rows); a second call at the same
+        // shape reuses every buffer
+        let mut rng = Rng::new(32);
+        let (l, nr, d) = (257usize, 4usize, 4usize);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let mut s = HeadScratch::default();
+        s.load_mats(&q, &k, &v);
+        h1d_head(nr, true, false, true, &mut s);
+        assert_eq!(s.levels[0].y.rows, 260, "level 0 must size to ceil(L/Nr)*Nr");
+        assert!(
+            s.sa.data.capacity() < 512 * d,
+            "scratch grew to the pow2 envelope: {} slots",
+            s.sa.data.capacity()
+        );
+        let snap = s.buffer_snapshot();
+        s.load_mats(&q, &k, &v);
+        h1d_head(nr, true, false, true, &mut s);
+        assert_eq!(s.buffer_snapshot(), snap, "ragged re-run must not allocate");
+    }
+
+    #[test]
+    fn windowed_decode_is_bitwise_unwindowed_and_bounds_resident_pages() {
+        // retiring after every step must change no output bit (the
+        // far-field of every future read survives in the coarse levels)
+        // while the session's resident pages stay bounded instead of
+        // growing with the context
+        let algo = H1d::new(4);
+        let (l, d) = (600usize, 4usize);
+        let mut rng = Rng::new(91);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let pool = crate::tensor::PagePool::new(8);
+        let mut plain = DecodeState::default();
+        algo.decode_begin(&mut plain, l, d);
+        let mut windowed = DecodeState::default();
+        windowed.attach_pool(&pool, false);
+        algo.decode_begin(&mut windowed, l, d);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        let mut peak = 0usize;
+        let mut released = 0usize;
+        for t in 0..l {
+            algo.decode_step(&mut plain, q.row(t), k.row(t), v.row(t), true, &mut a);
+            algo.decode_step(&mut windowed, q.row(t), k.row(t), v.row(t), true, &mut b);
+            assert_eq!(a, b, "step {t} diverged after retirement");
+            released += algo.decode_retire(&mut windowed, 32);
+            peak = peak.max(windowed.resident_pages());
+        }
+        assert!(released > 0, "a 600-token session must retire pages");
+        assert_eq!(pool.stats().live, windowed.resident_pages());
+        // window (32 fine rows) + banded fine/coarse residue, all
+        // page-granular — far below the unwindowed session's footprint
+        assert!(
+            4 * peak < plain.resident_pages(),
+            "peak {peak} resident pages vs unwindowed {}",
+            plain.resident_pages()
+        );
     }
 
     #[test]

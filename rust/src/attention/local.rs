@@ -99,6 +99,14 @@ impl Attention for LocalWindow {
         }
     }
 
+    /// Exact streaming retirement: a future step at length `t >= len`
+    /// reads fine rows `t - radius ..= t` only, so everything behind
+    /// `len - max(radius, window)` is dead (page-granular).
+    fn decode_retire(&self, state: &mut DecodeState, window: usize) -> usize {
+        let keep = state.len.saturating_sub(self.radius.max(window));
+        state.k.release_prefix(keep) + state.v.release_prefix(keep)
+    }
+
     fn prefix_share_align(&self, lcp: usize) -> usize {
         // the causal window reads rows i-radius..=i — strictly causal,
         // so any split point is prefix-pure

@@ -188,6 +188,27 @@ pub trait Attention {
         }
     }
 
+    /// Retire cached pages the algorithm can no longer read, keeping at
+    /// least the last `window` fine tokens resident — the
+    /// streaming-sliding-window hook. Returns how many pages this state
+    /// released back to its pool.
+    ///
+    /// Contract: retirement must be **exact** — every subsequent
+    /// [`Attention::decode_step`] (and pyramid append) on the state
+    /// must produce bitwise the output it would have produced without
+    /// the retirement. Algorithms whose steps re-read arbitrarily old
+    /// history (`full`, and the cached-recompute fallback of
+    /// `lowrank`/`blocksparse`) therefore keep this default no-op:
+    /// for them a bounded-memory window would *change* outputs, which
+    /// is a model change, not a memory optimisation. `local` retires
+    /// everything behind its radius; `h1d` retires fine and per-level
+    /// coarse blocks behind the banded reads, keeping the upper pyramid
+    /// levels as the far-field summary of the retired history.
+    fn decode_retire(&self, state: &mut DecodeState, window: usize) -> usize {
+        let _ = (state, window);
+        0
+    }
+
     /// Largest prefix length `p <= lcp` at which this algorithm's
     /// causal prefill is *prefix-pure*: every fine Q/K/V row `< p` (and
     /// the residual stream feeding it at every layer) is a bitwise-pure

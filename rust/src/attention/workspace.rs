@@ -736,6 +736,20 @@ impl DecodeState {
         self.max_len - self.len
     }
 
+    /// Pages this state currently holds references to, fine caches and
+    /// pyramid levels included — the per-session memory gauge the
+    /// streaming window bounds ([`Attention::decode_retire`]
+    /// (crate::attention::Attention::decode_retire) shrinks it; shared
+    /// prefix pages are counted here even though the pool counts them
+    /// once globally).
+    pub fn resident_pages(&self) -> usize {
+        let mut n = self.q.n_pages() + self.k.n_pages() + self.v.n_pages();
+        for lv in self.levels.iter().take(self.n_coarse) {
+            n += lv.qsum.n_pages() + lv.ksum.n_pages() + lv.vsum.n_pages();
+        }
+        n
+    }
+
     /// `(pointer, capacity)` of every heap buffer this state owns —
     /// scratch, page tables and the pages they currently reference.
     /// Stable across `append`/`decode_step` calls within a reserved

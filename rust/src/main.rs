@@ -25,7 +25,13 @@
 //!                             per round and the target verifies them
 //!                             in one batched pass — same tokens as
 //!                             plain decoding (greedy: bitwise), fewer
-//!                             target passes
+//!                             target passes. --window N retires KV
+//!                             pages behind an N-token streaming
+//!                             horizon after every step (exact: h1d
+//!                             keeps its coarse pyramid as the far
+//!                             field; logits stay bitwise identical)
+//!                             and reports pages retired / peak
+//!                             resident
 //!   serve-bench               continuous-batching throughput: a
 //!                             closed-loop synthetic workload
 //!                             (--requests, --prompt-mix, --gen; or
@@ -55,7 +61,12 @@
 //!                             through int8 per-row quantised weights;
 //!                             --spec-k / --spec-draft run every decode
 //!                             round speculatively (acceptance rate and
-//!                             effective tokens/step are reported)
+//!                             effective tokens/step are reported);
+//!                             --window N retires each session's KV
+//!                             pages behind an N-token streaming
+//!                             horizon after every round (output-exact;
+//!                             peak per-session residency and retired
+//!                             pages are reported)
 //!   serve --listen ADDR       HTTP/1.1 serving front end over the
 //!                             continuous-batching engine: POST
 //!                             /generate with token-id prompts streams
@@ -70,7 +81,7 @@
 //!                             (--max-batch, --max-tokens, --page-len,
 //!                             --prefix-cache, --prefill-chunk,
 //!                             --reserve, --kv-dtype, --quant-weights,
-//!                             --worker-threads, --spec-k /
+//!                             --worker-threads, --window, --spec-k /
 //!                             --spec-draft);
 //!                             front-end knobs: --max-queue (503
 //!                             backpressure cap), --read-timeout-ms /
@@ -317,8 +328,16 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let temperature = args.f64_or("temperature", 0.0) as f32;
     let threads = args.usize_or("threads", 0); // 0 = host parallelism
     let spec_k = args.usize_or("spec-k", 0); // 0 = plain decoding
+    let window = args.usize_or("window", 0); // 0 = keep the whole history
     if args.get("spec-draft").is_some() && spec_k == 0 {
         return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
+    }
+    if window > 0 && spec_k > 0 {
+        return Err(
+            "--window cannot combine with --spec-k: speculative rollback replays fine \
+             history the window may already have retired"
+                .to_string(),
+        );
     }
     if prompt_len == 0 {
         return Err("--prompt-len must be >= 1".to_string());
@@ -417,6 +436,8 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let mut next = sample_logits(session.logits().row(0), temperature, &mut rng) as u32;
     let mut step_total = 0.0f64;
     let mut step_min = f64::INFINITY;
+    let mut retired_pages = 0usize;
+    let mut peak_resident = 0usize;
     for _ in 0..n_gen {
         out_tokens.push(next);
         let t1 = std::time::Instant::now();
@@ -425,6 +446,10 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
         step_total += dt;
         step_min = step_min.min(dt);
         next = sample_logits(logits.row(0), temperature, &mut rng) as u32;
+        if window > 0 {
+            retired_pages += session.retire_window(window);
+            peak_resident = peak_resident.max(session.resident_pages());
+        }
     }
     println!(
         "sampled {n_gen} tokens ({}, seed {seed}):",
@@ -444,6 +469,14 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
             n_gen as f64 / step_total,
             prompt_len,
             session.pos()
+        );
+    }
+    if window > 0 {
+        println!(
+            "streaming window {window}: {retired_pages} page(s) retired, peak {} resident \
+             page(s) (now {})",
+            peak_resident.max(session.resident_pages()),
+            session.resident_pages()
         );
     }
     Ok(())
@@ -479,6 +512,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
     let reserve = args.bool("reserve"); // contiguous-reservation baseline
     let prefix_cache = args.usize_or("prefix-cache", 8);
     let prefill_chunk = args.usize_or("prefill-chunk", 0); // 0 = whole-prompt prefill
+    let window = args.usize_or("window", 0); // 0 = keep whole histories
     let spec_k = args.usize_or("spec-k", 0); // 0 = plain decode rounds
     if args.get("spec-draft").is_some() && spec_k == 0 {
         return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
@@ -600,6 +634,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         prefill_chunk,
         threads: workers,
         kv_dtype,
+        window,
         spec_draft: spec_draft.clone(),
         spec_k,
     };
@@ -643,6 +678,18 @@ fn cmd_serve_bench(args: &Args) -> Result<(), String> {
         batched.stats.prefix_hits,
         batched.stats.prefix_lookups,
         batched.stats.evictions
+    );
+    println!(
+        "session residency: peak {} page(s) in any one session{}",
+        batched.stats.peak_session_pages,
+        if window > 0 {
+            format!(
+                ", streaming window {window}: {} page(s) retired to the pool",
+                batched.stats.window_retired_pages
+            )
+        } else {
+            String::new()
+        }
     );
     let total_prompt = batched.stats.prefill_tokens + batched.stats.prefill_tokens_saved;
     println!(
@@ -736,6 +783,7 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
     let reserve = args.bool("reserve");
     let prefix_cache = args.usize_or("prefix-cache", 8);
     let prefill_chunk = args.usize_or("prefill-chunk", 0);
+    let window = args.usize_or("window", 0); // 0 = keep whole histories
     let spec_k = args.usize_or("spec-k", 0); // 0 = plain decode rounds
     if args.get("spec-draft").is_some() && spec_k == 0 {
         return Err("--spec-draft needs --spec-k >= 1 to turn speculation on".to_string());
@@ -780,6 +828,7 @@ fn cmd_serve_net(args: &Args) -> Result<(), String> {
             prefill_chunk,
             threads: worker_threads,
             kv_dtype,
+            window,
             spec_draft: spec_draft.clone(),
             spec_k,
         },

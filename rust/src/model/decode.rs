@@ -284,6 +284,31 @@ impl<'m> DecodeSession<'m> {
         self.ws
     }
 
+    /// Retire KV pages behind a `window`-token streaming horizon in
+    /// every `(layer, head)` cache
+    /// ([`crate::attention::Attention::decode_retire`]) — exact by
+    /// contract, so subsequent steps are bitwise unaffected: `h1d`
+    /// keeps its coarse pyramid as the far-field summary and frees the
+    /// dead fine pages, `local` keeps `max(radius, window)` rows, and
+    /// algorithms that need their whole history retire nothing. The
+    /// `htx generate --window` loop calls this after every step.
+    /// Returns the pages released back to the workspace pool.
+    pub fn retire_window(&mut self, window: usize) -> usize {
+        let n_states = self.model.cfg.n_layers * self.model.cfg.n_heads;
+        let mut released = 0;
+        for st in &mut self.ws.states[..n_states] {
+            released += self.model.algo.decode_retire(st, window);
+        }
+        released
+    }
+
+    /// KV pages currently resident across every cache stream — the
+    /// gauge `--window` keeps bounded as the context grows.
+    pub fn resident_pages(&self) -> usize {
+        let n_states = self.model.cfg.n_layers * self.model.cfg.n_heads;
+        self.ws.states[..n_states].iter().map(|s| s.resident_pages()).sum()
+    }
+
     /// Feed one token and return the `[1, vocab]` logits for it — the
     /// incremental equivalent of appending the token and re-running
     /// `Model::forward` (exact for prefix-stable algorithms; online
@@ -485,6 +510,27 @@ mod tests {
         let mut session2 = model.prefill_with(ws, &tokens).unwrap();
         session2.step(3).unwrap();
         assert_eq!(session2.capacity_snapshot(), snap, "recycled arena re-grew");
+    }
+
+    #[test]
+    fn windowed_session_steps_match_and_release_pages() {
+        // retire_window after every step: logits stay bitwise the
+        // unwindowed session's while the retired session holds fewer
+        // resident pages than the fully-reserved one
+        let model = tiny_model(AttnSpec::H1d { nr: 2 }, true, 64);
+        let mut rng = Rng::new(8);
+        let tokens: Vec<u32> = (0..6).map(|_| rng.below(29) as u32).collect();
+        let mut plain = model.prefill(&tokens).unwrap();
+        let mut windowed = model.prefill(&tokens).unwrap();
+        let mut released = 0usize;
+        for t in 0..40u32 {
+            let a = plain.step(t % 29).unwrap().clone();
+            let b = windowed.step(t % 29).unwrap();
+            assert_eq!(&a, b, "step {t} diverged after retirement");
+            released += windowed.retire_window(8);
+        }
+        assert!(released > 0, "a long session must retire pages");
+        assert!(windowed.resident_pages() < plain.resident_pages());
     }
 
     #[test]

@@ -146,6 +146,11 @@ struct WorkerGauges {
     spec_rounds: AtomicUsize,
     draft_proposed: AtomicUsize,
     draft_accepted: AtomicUsize,
+    /// Streaming-window counters (zero when `window` is off): KV pages
+    /// retired behind the horizon, and the worker's high-water mark of
+    /// resident pages in any single session.
+    window_retired_pages: AtomicUsize,
+    peak_session_pages: AtomicUsize,
 }
 
 impl WorkerGauges {
@@ -230,6 +235,7 @@ impl Shared {
             (0usize, 0usize, 0usize, 0usize, 0usize);
         let (mut prefilled, mut saved, mut cache_tokens) = (0usize, 0usize, 0usize);
         let (mut spec_rounds, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
+        let (mut window_retired, mut peak_session) = (0usize, 0usize);
         for (i, w) in self.workers.iter().enumerate() {
             let g = &w.gauges;
             let (wq, wa) = (g.queued.load(Ordering::Relaxed), g.active.load(Ordering::Relaxed));
@@ -250,6 +256,8 @@ impl Shared {
             spec_rounds += g.spec_rounds.load(Ordering::Relaxed);
             proposed += g.draft_proposed.load(Ordering::Relaxed);
             accepted += g.draft_accepted.load(Ordering::Relaxed);
+            window_retired += g.window_retired_pages.load(Ordering::Relaxed);
+            peak_session = peak_session.max(g.peak_session_pages.load(Ordering::Relaxed));
             workers.push(obj(vec![
                 ("worker", num(i as f64)),
                 ("queued", num(wq as f64)),
@@ -289,6 +297,8 @@ impl Shared {
             ("draft_accepted_total", num(accepted as f64)),
             ("spec_acceptance_rate", num(spec_accept)),
             ("spec_tokens_per_step", num(spec_tps)),
+            ("window_retired_pages_total", num(window_retired as f64)),
+            ("peak_session_pages", num(peak_session as f64)),
             (
                 "latency_ms",
                 obj(vec![
@@ -449,6 +459,8 @@ fn publish_gauges(engine: &ServeEngine, gauges: &WorkerGauges) {
     gauges.spec_rounds.store(st.spec_rounds, Ordering::Relaxed);
     gauges.draft_proposed.store(st.draft_proposed, Ordering::Relaxed);
     gauges.draft_accepted.store(st.draft_accepted, Ordering::Relaxed);
+    gauges.window_retired_pages.store(st.window_retired_pages, Ordering::Relaxed);
+    gauges.peak_session_pages.store(st.peak_session_pages, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------

@@ -190,6 +190,22 @@ pub struct ServeConfig {
     /// against `max_tokens` — compressed caches admit more concurrent
     /// sessions under the same budget, at bounded decode drift.
     pub kv_dtype: PageDtype,
+    /// Streaming sliding-window budget in fine context tokens
+    /// (0 = unbounded, the default). When a decoding session's fine
+    /// history exceeds the window, each round ends by retiring the
+    /// pages behind it back to the pool through
+    /// [`crate::attention::Attention::decode_retire`]: `h1d` keeps its
+    /// coarse pyramid levels as the far-field summary and releases the
+    /// dead fine K/V/Q pages (plus completed coarse-band prefixes), so
+    /// outputs stay **bitwise** the unwindowed session's while resident
+    /// pages stay bounded; `local` keeps `max(radius, window)` fine
+    /// rows; exact algorithms (`full`, `lowrank`, `blocksparse`) keep
+    /// everything — their `decode_retire` is a no-op, because
+    /// retirement would change their outputs. Incompatible with
+    /// `reserve` (the contiguous baseline pre-pays its whole horizon)
+    /// and with `spec_draft` (rollback replays fine history the window
+    /// may have retired).
+    pub window: usize,
     /// Speculative-decoding draft spec (`None` disables speculation).
     /// The draft model is built once, at engine construction, from the
     /// target's own weights ([`SpecDraft::build`]); every session then
@@ -217,6 +233,7 @@ impl Default for ServeConfig {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: PageDtype::F32,
+            window: 0,
             spec_draft: None,
             spec_k: 0,
         }
@@ -309,6 +326,17 @@ pub struct ServeStats {
     /// Peak unique KV pages alive in the pool, all streams (fine K/V,
     /// Q history, pyramid levels).
     pub peak_pages: usize,
+    /// Pages returned to the pool by the streaming window
+    /// ([`ServeConfig::window`]) across all sessions — cumulative
+    /// retirement volume; 0 when no window is configured or the
+    /// algorithm retires nothing (`full`/`lowrank`/`blocksparse`).
+    pub window_retired_pages: usize,
+    /// Peak resident pages of any single decoding session (all its
+    /// per-`(layer, head)` streams summed), sampled at the end of each
+    /// round. With a window this stays bounded as contexts grow — the
+    /// gauge the `--long` streaming bench asserts on; without one it
+    /// tracks the longest context.
+    pub peak_session_pages: usize,
     /// Speculative rounds executed — one per active session per decode
     /// round when a draft is configured. Work counters: rounds whose
     /// tokens were later discarded by an eviction still count (the
@@ -770,6 +798,20 @@ impl ServeEngine {
                 "page_len must be a power of two >= 1 (got {})",
                 cfg.page_len
             ));
+        }
+        if cfg.window > 0 && cfg.reserve {
+            return Err(
+                "a streaming window needs demand-grown paging: reserve mode pre-pays \
+                 the whole contiguous horizon, so there is nothing to retire"
+                    .to_string(),
+            );
+        }
+        if cfg.window > 0 && cfg.spec_draft.is_some() {
+            return Err(
+                "speculative decoding cannot run with a streaming window: rejected-tail \
+                 rollback replays fine history the window may already have retired"
+                    .to_string(),
+            );
         }
         let threads = cfg.threads.max(1);
         let kv_page_cost = cfg.kv_dtype.page_ctx_cost(cfg.page_len, model.cfg.d_head());
@@ -1642,6 +1684,24 @@ impl ServeEngine {
                     i += 1;
                 }
             }
+            // streaming window: behind-the-window fine pages go back to
+            // the pool, page-granular and output-exact (h1d keeps its
+            // coarse pyramid as the far-field summary; exact algorithms
+            // retire nothing)
+            if self.cfg.window > 0 {
+                let window = self.cfg.window;
+                for slot in &mut self.active {
+                    for st in &mut slot.states[..n_states] {
+                        self.stats.window_retired_pages +=
+                            self.model.algo.decode_retire(st, window);
+                    }
+                }
+            }
+            let mut peak = 0usize;
+            for slot in &self.active {
+                peak = peak.max(slot.states[..n_states].iter().map(|s| s.resident_pages()).sum());
+            }
+            self.stats.peak_session_pages = self.stats.peak_session_pages.max(peak);
         }
         self.stats.wall_s += t0.elapsed().as_secs_f64();
         !self.active.is_empty() || !self.prefilling.is_empty() || !self.pending.is_empty()
@@ -2080,6 +2140,66 @@ mod tests {
         let rr = reserved.run(reqs).unwrap();
         assert_eq!(rp.tokens_by_id(), rr.tokens_by_id());
         assert_eq!(rr.stats.prefix_lookups, 0, "reserve mode disables the cache");
+    }
+
+    #[test]
+    fn windowed_serving_matches_unwindowed_and_retires_pages() {
+        // streaming window: h1d retirement is output-exact (the coarse
+        // pyramid keeps the far field), so a windowed run's tokens are
+        // bitwise the unwindowed engine's and the sequential oracle's —
+        // while dead fine pages stream back to the pool mid-generation
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 2 }, 96));
+        let mk = |window: usize| ServeConfig {
+            max_batch: 2,
+            page_len: 4,
+            threads: 1,
+            window,
+            ..ServeConfig::default()
+        };
+        let reqs = synthetic_workload(3, &[7, 12], 48, 29, 0.0, 61);
+        let mut plain = ServeEngine::new(Arc::clone(&model), mk(0)).unwrap();
+        let rp = plain.run(reqs.clone()).unwrap();
+        let mut windowed = ServeEngine::new(Arc::clone(&model), mk(16)).unwrap();
+        let rw = windowed.run(reqs.clone()).unwrap();
+        assert_eq!(rp.tokens_by_id(), rw.tokens_by_id(), "the window changed tokens");
+        let seq = run_sequential(&model, &reqs).unwrap();
+        assert_eq!(seq.tokens_by_id(), rw.tokens_by_id());
+        assert_eq!(rp.stats.window_retired_pages, 0, "no window, no retirement");
+        assert!(rw.stats.window_retired_pages > 0, "long streams must retire pages");
+        assert!(
+            rw.stats.peak_session_pages < rp.stats.peak_session_pages,
+            "windowed sessions must hold fewer resident pages: {} vs {}",
+            rw.stats.peak_session_pages,
+            rp.stats.peak_session_pages
+        );
+    }
+
+    #[test]
+    fn window_config_gates_surface_at_construction() {
+        let model = Arc::new(tiny_model(AttnSpec::H1d { nr: 4 }, 24));
+        // reserve mode pre-pays its contiguous horizon: nothing to retire
+        let err = ServeEngine::new(
+            Arc::clone(&model),
+            ServeConfig {
+                window: 8,
+                reserve: true,
+                ..ServeConfig::default()
+            },
+        )
+        .err()
+        .expect("window + reserve must be rejected");
+        assert!(err.contains("reserve"), "{err}");
+        // speculation rolls back through fine history the window retires
+        let err = ServeEngine::new(
+            model,
+            ServeConfig {
+                window: 8,
+                ..spec_cfg("local:2,layers:1", 2, 1)
+            },
+        )
+        .err()
+        .expect("window + speculation must be rejected");
+        assert!(err.contains("window"), "{err}");
     }
 
     #[test]

@@ -299,6 +299,11 @@ pub struct PagedRows {
     dtype: PageDtype,
     /// New pages this view allocates are charged to the context budget.
     budgeted: bool,
+    /// Logical page index of `pages[0]`: pages below it were retired by
+    /// [`PagedRows::release_prefix`] (the streaming-window path). Rows
+    /// `0..base * page_len` are no longer addressable; `len` stays the
+    /// logical total, so append indices keep their absolute meaning.
+    base: usize,
     /// Page table. May hold one staged page beyond the committed rows
     /// (pre-faulted by [`PagedRows::stage_append`] so worker-thread
     /// appends never touch the pool).
@@ -324,6 +329,10 @@ impl PagedRows {
             self.mask = pool.page_len() - 1;
             self.cols = cols;
             self.stride = stride;
+        } else if self.base != 0 {
+            // a retired (windowed) view cannot re-begin in place: its
+            // surviving pages sit at a logical offset
+            self.release_all();
         }
         self.len = 0;
     }
@@ -394,21 +403,30 @@ impl PagedRows {
         self.page_len
     }
 
-    /// Pages in the table (staged spares included).
+    /// Pages in the table (staged spares included) — after prefix
+    /// retirement, the *resident* page count, which is what the
+    /// streaming-window memory bound is about.
     pub fn n_pages(&self) -> usize {
         self.pages.len()
+    }
+
+    /// First logical row still resident (0 unless
+    /// [`PagedRows::release_prefix`] retired a prefix).
+    pub fn retired_rows(&self) -> usize {
+        self.base << self.shift
     }
 
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        debug_assert!(i >> self.shift >= self.base, "row {i} was retired");
         debug_assert_eq!(
             self.dtype,
             PageDtype::F32,
             "row() reads raw f32 rows; compressed views go through \
              row_slots()/decode_row_into() or the dequantising kernels"
         );
-        let data = &self.pages[i >> self.shift].data;
+        let data = &self.pages[(i >> self.shift) - self.base].data;
         let off = (i & self.mask) * self.stride;
         &data[off..off + self.stride]
     }
@@ -418,7 +436,8 @@ impl PagedRows {
     #[inline]
     pub fn row_slots(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len, "row {i} out of {} committed rows", self.len);
-        let data = &self.pages[i >> self.shift].data;
+        debug_assert!(i >> self.shift >= self.base, "row {i} was retired");
+        let data = &self.pages[(i >> self.shift) - self.base].data;
         let off = (i & self.mask) * self.stride;
         &data[off..off + self.stride]
     }
@@ -447,9 +466,10 @@ impl PagedRows {
     /// dot/axpy entry points dequantise on the fly.
     pub fn spans<F: FnMut(&[f32])>(&self, lo: usize, hi: usize, mut f: F) {
         debug_assert!(lo <= hi && hi < self.len);
+        debug_assert!(lo >> self.shift >= self.base, "span starts in retired rows");
         let mut r = lo;
         while r <= hi {
-            let ti = r >> self.shift;
+            let ti = (r >> self.shift) - self.base;
             let o = r & self.mask;
             let rows = (hi + 1 - r).min(self.page_len - o);
             let data = &self.pages[ti].data;
@@ -464,7 +484,7 @@ impl PagedRows {
     /// lock nor any shared page — the serve engine stages every active
     /// session on the scheduler thread, then appends from workers.
     pub fn stage_append(&mut self) {
-        let ti = self.len >> self.shift;
+        let ti = (self.len >> self.shift) - self.base;
         if ti == self.pages.len() {
             let pool = self.pool.as_ref().expect("PagedRows used before begin");
             let page = pool.alloc(self.stride, self.alloc_ctx_cost());
@@ -478,7 +498,8 @@ impl PagedRows {
     /// if its page is shared).
     pub fn stage_update(&mut self, i: usize) {
         debug_assert!(i < self.len);
-        self.make_private(i >> self.shift);
+        debug_assert!(i >> self.shift >= self.base, "update into retired rows");
+        self.make_private((i >> self.shift) - self.base);
     }
 
     /// Budgeted-page cost of the next [`PagedRows::stage_append`]:
@@ -486,7 +507,7 @@ impl PagedRows {
     /// one, else 0. The serve scheduler sums this over active sessions
     /// to decide whether a decode round fits the context budget.
     pub fn stage_cost(&self) -> usize {
-        let ti = self.len >> self.shift;
+        let ti = (self.len >> self.shift) - self.base;
         if ti == self.pages.len() || Arc::strong_count(&self.pages[ti]) > 1 {
             1
         } else {
@@ -504,9 +525,9 @@ impl PagedRows {
         if n == 0 {
             return 0;
         }
-        let need = (self.len + n).div_ceil(self.page_len.max(1));
+        let need = (self.len + n).div_ceil(self.page_len.max(1)) - self.base;
         let mut cost = need.saturating_sub(self.pages.len());
-        let ti = self.len >> self.shift;
+        let ti = (self.len >> self.shift) - self.base;
         if ti < self.pages.len() && Arc::strong_count(&self.pages[ti]) > 1 {
             cost += 1;
         }
@@ -525,6 +546,13 @@ impl PagedRows {
             return;
         }
         let keep = rows.div_ceil(self.page_len.max(1));
+        assert!(
+            keep >= self.base,
+            "truncate to {rows} rows would reach into the retired prefix \
+             (first resident row {})",
+            self.retired_rows()
+        );
+        let keep = keep - self.base;
         if let Some(pool) = &self.pool {
             for page in self.pages.drain(keep..).rev() {
                 pool.release(page);
@@ -535,10 +563,37 @@ impl PagedRows {
         self.len = rows;
     }
 
+    /// Retire every page wholly below row `keep_from` back to the pool
+    /// (front of the table; refcount drops, so pages still shared with
+    /// a cache entry survive there), returning how many pages this view
+    /// let go. Rounds *down* to a page boundary — rows stay resident
+    /// until their whole page is retirable — and never touches the page
+    /// holding `keep_from` or anything after it, so every row `>=
+    /// keep_from` reads back bitwise unchanged. The streaming-window
+    /// primitive: `len` keeps counting retired rows, appends continue
+    /// at the same absolute indices, only `row(i)` for retired `i`
+    /// becomes unaddressable.
+    pub fn release_prefix(&mut self, keep_from: usize) -> usize {
+        let first = (keep_from.min(self.len)) >> self.shift;
+        if first <= self.base {
+            return 0;
+        }
+        let n = first - self.base;
+        if let Some(pool) = &self.pool {
+            for page in self.pages.drain(..n) {
+                pool.release(page);
+            }
+        } else {
+            self.pages.drain(..n);
+        }
+        self.base = first;
+        n
+    }
+
     /// Ensure the page table covers `rows` rows (allocating forward;
     /// never releases).
     pub fn reserve_rows(&mut self, rows: usize) {
-        let need = rows.div_ceil(self.page_len.max(1));
+        let need = rows.div_ceil(self.page_len.max(1)).saturating_sub(self.base);
         while self.pages.len() < need {
             let pool = self.pool.as_ref().expect("PagedRows used before begin");
             let page = pool.alloc(self.stride, self.alloc_ctx_cost());
@@ -551,7 +606,7 @@ impl PagedRows {
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.cols, "push_row width mismatch");
         self.stage_append();
-        let ti = self.len >> self.shift;
+        let ti = (self.len >> self.shift) - self.base;
         let off = (self.len & self.mask) * self.stride;
         let stride = self.stride;
         let dtype = self.dtype;
@@ -572,12 +627,13 @@ impl PagedRows {
     pub fn add_into_row(&mut self, i: usize, src: &[f32]) {
         assert_eq!(src.len(), self.cols, "add_into_row width mismatch");
         assert!(i < self.len, "row {i} out of {} committed rows", self.len);
+        assert!(i >> self.shift >= self.base, "row {i} was retired");
         debug_assert_eq!(
             self.dtype,
             PageDtype::F32,
             "in-place accumulation needs raw f32 rows (pyramid sums stay F32)"
         );
-        let ti = i >> self.shift;
+        let ti = (i >> self.shift) - self.base;
         self.make_private(ti);
         let off = (i & self.mask) * self.cols;
         let page = Arc::get_mut(&mut self.pages[ti]).expect("private page");
@@ -612,6 +668,7 @@ impl PagedRows {
             self.pages.clear();
         }
         self.len = 0;
+        self.base = 0;
     }
 
     /// Share this view's pages into `dst` read-only (refcount bumps —
@@ -628,6 +685,7 @@ impl PagedRows {
         dst.stride = self.stride;
         dst.dtype = self.dtype;
         dst.budgeted = self.budgeted;
+        dst.base = self.base;
         dst.pages.extend(self.pages.iter().cloned());
         dst.len = self.len;
     }
@@ -643,6 +701,11 @@ impl PagedRows {
             rows <= self.len,
             "prefix of {rows} rows from a view holding {}",
             self.len
+        );
+        assert_eq!(
+            self.base, 0,
+            "prefix sharing from a window-retired view (cache entries \
+             hold their own page refs and are never retired)"
         );
         dst.release_all();
         dst.pool = self.pool.clone();
@@ -662,6 +725,7 @@ impl PagedRows {
     /// (page-span copies) — the cached-recompute decode fallback reads
     /// its history through this.
     pub fn copy_to_mat(&self, m: &mut Mat) {
+        debug_assert_eq!(self.base, 0, "cannot materialise a window-retired view");
         m.reset_for_overwrite(self.len, self.cols);
         if self.dtype == PageDtype::F32 {
             let mut r = 0usize;
@@ -867,6 +931,59 @@ mod tests {
         b.push_row(&[7.0, 8.0]);
         assert_eq!(b.row(3), &[7.0, 8.0]);
         assert_eq!(a.row(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn release_prefix_retires_whole_pages_and_keeps_the_tail_readable() {
+        let pool = PagePool::new(4);
+        let mut pr = filled(&pool, 2, 11); // 3 pages: rows 0..4, 4..8, 8..11
+        assert_eq!(pool.stats().live, 3);
+        // keep from row 6: only page 0 (rows 0..4) is wholly below
+        assert_eq!(pr.release_prefix(6), 1);
+        assert_eq!((pr.rows(), pr.n_pages(), pr.retired_rows()), (11, 2, 4));
+        assert_eq!(pool.stats().live, 2);
+        for i in 4..11 {
+            assert_eq!(pr.row(i), &[(i * 2) as f32, (i * 2 + 1) as f32]);
+        }
+        // spans over the resident suffix still walk in order
+        let mut got: Vec<f32> = Vec::new();
+        pr.spans(5, 10, |chunk| got.extend_from_slice(chunk));
+        let want: Vec<f32> = (5 * 2..11 * 2).map(|x| x as f32).collect();
+        assert_eq!(got, want);
+        // appends continue at the same absolute row indices
+        assert_eq!(pr.append_cost(1), 0, "tail page is private and half full");
+        pr.push_row(&[100.0, 200.0]);
+        assert_eq!(pr.rows(), 12);
+        assert_eq!(pr.row(11), &[100.0, 200.0]);
+        // idempotent at or below the current retirement point
+        assert_eq!(pr.release_prefix(4), 0);
+        assert_eq!(pr.release_prefix(0), 0);
+        // retire up to the last committed row: its page must survive
+        assert_eq!(pr.release_prefix(11), 1);
+        assert_eq!((pr.n_pages(), pr.retired_rows()), (1, 8));
+        assert_eq!(pr.row(11), &[100.0, 200.0]);
+        // release_all resets the offset for reuse
+        pr.release_all();
+        assert_eq!((pr.rows(), pr.retired_rows()), (0, 0));
+        assert_eq!(pool.stats().live, 0);
+        assert_eq!(pool.stats().free, 3, "retired buffers recycle");
+    }
+
+    #[test]
+    fn release_prefix_on_a_shared_view_leaves_the_donor_intact() {
+        let pool = PagePool::new(4);
+        let a = filled(&pool, 2, 10); // 3 pages
+        let mut b = PagedRows::default();
+        a.clone_shared_into(&mut b);
+        assert_eq!(pool.stats().live, 3);
+        assert_eq!(b.release_prefix(8), 2);
+        assert_eq!(pool.stats().live, 3, "donor still holds every page");
+        for i in 0..10 {
+            assert_eq!(a.row(i), &[(i * 2) as f32, (i * 2 + 1) as f32]);
+        }
+        assert_eq!(b.row(9), a.row(9));
+        drop(a);
+        assert_eq!(pool.stats().live, 1, "only b's resident page survives");
     }
 
     #[test]

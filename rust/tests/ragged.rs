@@ -1,0 +1,151 @@
+//! Integration suite for the ragged-pyramid tentpole.
+//!
+//! Contracts pinned here:
+//!  1. **non-pow2 forward, whole zoo** — every attention operator
+//!     produces finite, shaped output at awkward lengths (31, 33, 255,
+//!     257, 1000: one off either side of block and pow2 boundaries,
+//!     plus a long non-round tail), and h1d's ragged pyramid is
+//!     *bitwise* the pow2-padded reference at each of them.
+//!  2. **non-pow2 decode, whole zoo** — a session prefilled to L-1 via
+//!     `decode_load_prefix` and stepped once matches the last row of a
+//!     from-scratch forward over all L rows (the prefix-parity
+//!     contract), at every sweep length, for all five algorithms.
+//!  3. **streaming window at serving level** — h1d sessions that retire
+//!     fine KV pages behind a window mid-stream ("retired, then
+//!     continued") emit exactly the tokens of an unwindowed engine and
+//!     of the sequential oracle, while pinning strictly fewer pages.
+
+use std::sync::Arc;
+
+use htransformer::attention::{
+    Attention, BlockSparse, DecodeState, Full, H1d, LocalWindow, LowRank,
+};
+use htransformer::model::{
+    run_sequential, synthetic_workload, AttnSpec, Model, ModelConfig, ServeConfig, ServeEngine,
+};
+use htransformer::tensor::Mat;
+use htransformer::util::Rng;
+
+/// One off either side of the Nr=4 block boundary, one off either side
+/// of a pow2 level count, and a long non-round length.
+const SWEEP: [usize; 5] = [31, 33, 255, 257, 1000];
+
+/// The zoo with per-algorithm causal flags (lowrank's projection has
+/// no causal form and runs in encoder mode).
+fn zoo() -> Vec<(&'static str, Box<dyn Attention>, bool)> {
+    vec![
+        ("full", Box::new(Full), true),
+        ("h1d", Box::new(H1d::new(4)), true),
+        ("local", Box::new(LocalWindow::new(3)), true),
+        ("lowrank", Box::new(LowRank::new(6, 5)), false),
+        ("blocksparse", Box::new(BlockSparse::new(2, 2, 2, 5)), true),
+    ]
+}
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal_f32())
+}
+
+#[test]
+fn zoo_forward_is_finite_at_non_pow2_lengths_and_h1d_is_bitwise_ragged() {
+    let d = 8usize;
+    for &l in &SWEEP {
+        let mut rng = Rng::new(l as u64);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        for (name, algo, causal) in zoo() {
+            let z = algo.forward(&q, &k, &v, causal);
+            assert_eq!((z.rows, z.cols), (l, d), "{name} L={l}: bad output shape");
+            assert!(
+                z.data.iter().all(|x| x.is_finite()),
+                "{name} L={l}: non-finite output"
+            );
+        }
+        // the tentpole pin: exact ragged pyramids change the work done,
+        // not the numbers — bitwise against the pow2-padded reference
+        for nr in [2usize, 4, 8] {
+            for causal in [true, false] {
+                let ragged = H1d::new(nr).forward(&q, &k, &v, causal);
+                let padded = H1d::with_pow2_pad(nr).forward(&q, &k, &v, causal);
+                assert_eq!(ragged, padded, "h1d L={l} Nr={nr} causal={causal}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_decode_matches_prefix_forward_at_non_pow2_lengths() {
+    let d = 8usize;
+    for &l in &SWEEP {
+        let mut rng = Rng::new(1000 + l as u64);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        for (name, algo, causal) in zoo() {
+            let mut st = DecodeState::default();
+            algo.decode_begin(&mut st, l, d);
+            let head = (l - 1) * d;
+            algo.decode_load_prefix(&mut st, &q.data[..head], &k.data[..head], &v.data[..head]);
+            let mut out = vec![0.0f32; d];
+            algo.decode_step(&mut st, q.row(l - 1), k.row(l - 1), v.row(l - 1), causal, &mut out);
+            let want = algo.forward(&q, &k, &v, causal);
+            for j in 0..d {
+                let w = want.at(l - 1, j);
+                assert!(
+                    (out[j] - w).abs() < 1e-4 * w.abs().max(1.0),
+                    "{name} L={l} col {j}: decode {} vs forward {w}",
+                    out[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn windowed_engine_matches_unwindowed_and_oracle_at_non_pow2_lengths() {
+    // non-pow2 everywhere: prompts 23/41 tokens, 57 generated, so the
+    // per-session context crosses several block boundaries mid-stream
+    let cfg = ModelConfig {
+        vocab_size: 29,
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 24,
+        max_len: 41 + 57 + 1,
+        causal: true,
+        attention: AttnSpec::H1d { nr: 4 },
+        quant_weights: false,
+    };
+    let model = Arc::new(Model::new(cfg, 1).expect("valid model"));
+    let requests = synthetic_workload(4, &[23, 41], 57, 29, 0.0, 77);
+    let oracle = run_sequential(&model, &requests).expect("sequential oracle");
+    let mk = |window: usize| ServeConfig {
+        max_batch: 2,
+        max_tokens: usize::MAX,
+        page_len: 4,
+        prefix_cache: 0,
+        threads: 1,
+        window,
+        ..ServeConfig::default()
+    };
+    let mut plain_engine = ServeEngine::new(Arc::clone(&model), mk(0)).expect("engine");
+    let plain = plain_engine.run(requests.clone()).expect("unwindowed run");
+    let mut windowed_engine = ServeEngine::new(Arc::clone(&model), mk(12)).expect("engine");
+    let windowed = windowed_engine.run(requests).expect("windowed run");
+    // sessions retired pages mid-stream and kept decoding — the
+    // continued tokens must be bitwise the unwindowed (and oracle) ones
+    assert_eq!(oracle.tokens_by_id(), plain.tokens_by_id());
+    assert_eq!(plain.tokens_by_id(), windowed.tokens_by_id());
+    assert!(
+        windowed.stats.window_retired_pages > 0,
+        "a 12-token window over ~100-token sessions must retire pages"
+    );
+    assert_eq!(plain.stats.window_retired_pages, 0);
+    assert!(
+        windowed.stats.peak_session_pages < plain.stats.peak_session_pages,
+        "windowed sessions must pin fewer pages (windowed {} vs plain {})",
+        windowed.stats.peak_session_pages,
+        plain.stats.peak_session_pages
+    );
+}

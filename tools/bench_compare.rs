@@ -35,6 +35,11 @@
 //! `BENCH_baseline.json` to ratchet). Points present in the baseline
 //! but missing from the current runs fail the gate: if a PR changes
 //! the bench matrix, it must update the baseline in the same change.
+//! The one exception is the long-context tier: baseline ids containing
+//! `-long-` only exist when the scheduled `long-bench` job runs its
+//! `--long` sweeps, so a smoke run that lacks them reports "skipped"
+//! instead of failing, and `--write-merged` carries the baseline's
+//! long points forward untouched so the seeds survive the ratchet.
 
 use htransformer::util::bench::Table;
 use htransformer::util::cli::Args;
@@ -121,6 +126,7 @@ fn run() -> Result<i32, String> {
     // match by id; collect raw ratios for the median normaliser
     let mut matched: Vec<(String, f64, f64, bool)> = Vec::new(); // (id, base, cur, seed)
     let mut missing: Vec<String> = Vec::new();
+    let mut long_skipped: Vec<String> = Vec::new();
     for (id, base_us, raw) in &base_points {
         // a per-point bootstrap marker: the baseline value is a seed
         // estimate, not a measurement — report, never fail, and keep
@@ -128,6 +134,9 @@ fn run() -> Result<i32, String> {
         let seed = raw.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
         match cur_points.iter().find(|(i, _, _)| i == id) {
             Some((_, cur_us, _)) => matched.push((id.clone(), *base_us, *cur_us, seed)),
+            // long-tier points only exist when the scheduled job ran
+            // the `--long` sweeps — absence from a smoke run is expected
+            None if id.contains("-long-") => long_skipped.push(id.clone()),
             None => missing.push(id.clone()),
         }
     }
@@ -190,6 +199,16 @@ fn run() -> Result<i32, String> {
             "FAIL".to_string(),
         ]);
     }
+    for id in &long_skipped {
+        t.row(&[
+            id.clone(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "skipped (long tier)".to_string(),
+        ]);
+    }
     for id in &fresh {
         t.row(&[
             (*id).clone(),
@@ -203,15 +222,21 @@ fn run() -> Result<i32, String> {
     t.print();
 
     if let Some(path) = args.get("write-merged") {
+        // a smoke run has no long-tier measurements; keep the
+        // baseline's long seeds alive across the ratchet
+        let mut merged_points: Vec<Json> =
+            cur_points.iter().map(|(_, _, raw)| raw.clone()).collect();
+        for (id, _, raw) in &base_points {
+            if long_skipped.contains(id) {
+                merged_points.push(raw.clone());
+            }
+        }
         let merged = obj(vec![
             ("bench", s("baseline")),
             ("commit", s(&cur_commit)),
             ("bootstrap", Json::Bool(false)),
             ("threshold", num(threshold)),
-            (
-                "points",
-                Json::Arr(cur_points.iter().map(|(_, _, raw)| raw.clone()).collect()),
-            ),
+            ("points", Json::Arr(merged_points)),
         ]);
         std::fs::write(path, merged.to_string()).map_err(|e| format!("{path}: {e}"))?;
         println!("wrote candidate baseline {path} (commit {cur_commit})");
